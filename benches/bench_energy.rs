@@ -1,0 +1,67 @@
+//! Energy-substrate benchmarks: harvester stepping, capacitor charge/draw,
+//! η estimation (the offline characterization cost), and the capacitor-
+//! sweep / CHRT experiments at bench scale (Fig. 21 / Table 5 shape).
+
+use zygarde::energy::capacitor::Capacitor;
+use zygarde::energy::events::eta_factor;
+use zygarde::energy::harvester::{Harvester, HarvesterKind};
+use zygarde::exp::{capacitor_sweep, chrt_cmp};
+use zygarde::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher::default();
+
+    let mut h = Harvester::markov(HarvesterKind::Rf, 80.0, 0.9, 0.6, 1000.0, 3);
+    b.run_throughput("harvester/markov-step", 1.0, "steps/s", || h.step(7.5))
+        .report();
+
+    let mut cap = Capacitor::standard();
+    cap.charge(1e9, 1000.0);
+    b.run_throughput("capacitor/charge+draw", 1.0, "ops/s", || {
+        cap.charge(80.0, 7.5);
+        cap.draw(0.6)
+    })
+    .report();
+
+    // η estimation over a 30k-window trace (the calibration inner loop).
+    let trace = {
+        let mut h = Harvester::markov(HarvesterKind::Solar, 500.0, 0.92, 0.6, 1000.0, 9);
+        h.event_trace(30_000, 150.0)
+    };
+    b.run(&format!("eta/estimate ({} windows)", trace.len()), || {
+        eta_factor(&trace, 20, 0).eta
+    })
+    .report();
+
+    if !zygarde::artifacts_root().join("cifar100/meta.json").exists() {
+        eprintln!("artifacts missing — skipping experiment benches");
+        return;
+    }
+
+    // Fig. 21 at bench scale: per-capacitor simulated-seconds throughput.
+    let t0 = std::time::Instant::now();
+    let cells = capacitor_sweep::run(30, 5);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "bench fig21/capacitor-sweep: 4 sizes x 30 jobs in {dt:.2}s — rates {:?}",
+        cells
+            .iter()
+            .map(|c| format!("{}mF={:.2}", c.c_mf, c.metrics.event_scheduled_rate()))
+            .collect::<Vec<_>>()
+    );
+
+    // Table 5 at bench scale.
+    let t0 = std::time::Instant::now();
+    let rows = chrt_cmp::run(150, 5);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "bench table5/chrt: 3 systems x 2 clocks x 150 jobs in {dt:.2}s — losses {:?}",
+        rows.iter()
+            .map(|r| format!(
+                "S{}:{:+}",
+                r.system_id,
+                r.scheduled_rtc as i64 - r.scheduled_chrt as i64
+            ))
+            .collect::<Vec<_>>()
+    );
+}

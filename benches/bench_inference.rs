@@ -1,0 +1,100 @@
+//! Inference-path benchmarks: the per-unit hot path both natively (the
+//! trace precomputation / simulation path) and through PJRT (the serving
+//! path executing the AOT Pallas-bearing HLO), plus the k-means classify
+//! and centroid-adaptation micro-costs the paper's Fig. 14 reasons about.
+
+use zygarde::dnn::kmeans::Scratch;
+use zygarde::dnn::network::Network;
+use zygarde::dnn::trace::compute_traces;
+use zygarde::runtime::Runtime;
+use zygarde::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher::default();
+    let root = zygarde::artifacts_root();
+    if !root.join("mnist/meta.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    for ds in ["mnist", "esc10", "cifar100", "vww"] {
+        let net = Network::load(&root.join(ds)).unwrap();
+        let mut scratch = Scratch::default();
+        let sample = net.test.sample(0).to_vec();
+
+        // Native per-unit forward (unit 0 = the heaviest conv).
+        b.run(&format!("native/{ds}/unit0"), || {
+            net.run_unit_native(0, &sample, &mut scratch).1.pred
+        })
+        .report();
+
+        // Native whole-network early-exit inference.
+        b.run(&format!("native/{ds}/infer"), || {
+            net.infer_native(&sample, &mut scratch)
+        })
+        .report();
+
+        // k-means classify on the final embedding (the multiplication-free
+        // exit test — paper: 14x cheaper than the DNN).
+        let flat = net.meta.flat_dim(net.meta.n_layers - 1);
+        let act = vec![0.25f32; flat];
+        let li = net.meta.n_layers - 1;
+        b.run_throughput(
+            &format!("classify/{ds}/k{}xF{}", net.classifiers[li].k, net.classifiers[li].n_features),
+            (net.classifiers[li].k * net.classifiers[li].n_features) as f64,
+            "dist-ops/s",
+            || net.classifiers[li].classify(&act, &mut scratch).pred,
+        )
+        .report();
+
+        // Trace precomputation over the whole test set (what the scheduler
+        // sweeps amortize).
+        b.run_throughput(
+            &format!("traces/{ds}/{}samples", net.test.len()),
+            net.test.len() as f64,
+            "samples/s",
+            || compute_traces(&net, None).len(),
+        )
+        .report();
+    }
+
+    // PJRT serving path (mnist): per-unit execute and full early-exit
+    // inference through the AOT artifacts.
+    let ds = "mnist";
+    let net = Network::load(&root.join(ds)).unwrap();
+    let mut rt = Runtime::cpu().expect("PJRT");
+    rt.load_network(&root.join(ds), &net.meta).unwrap();
+    let sample = net.test.sample(0).to_vec();
+    b.run(&format!("pjrt/{ds}/unit0"), || {
+        rt.execute_unit(ds, 0, &sample, &net.classifiers[0].centroids).unwrap().1[0]
+    })
+    .report();
+    b.run(&format!("pjrt/{ds}/infer-early-exit"), || {
+        let mut act = sample.clone();
+        let mut pred = 0;
+        for li in 0..net.meta.n_layers {
+            let (next, dists) =
+                rt.execute_unit(ds, li, &act, &net.classifiers[li].centroids).unwrap();
+            let res = net.classifiers[li].classify_from_dists(&dists);
+            pred = res.pred;
+            if res.exit {
+                break;
+            }
+            act = next;
+        }
+        pred
+    })
+    .report();
+
+    // Centroid adaptation (runtime update + deep propagation).
+    let mut net2 = Network::load(&root.join(ds)).unwrap();
+    let feat = vec![0.5f32; net2.classifiers[0].n_features];
+    b.run("adapt/mnist/centroid-update", || {
+        net2.classifiers[0].adapt(0, &feat);
+    })
+    .report();
+    b.run("adapt/mnist/deep-propagation", || {
+        zygarde::dnn::adapt::propagate_centroid(&mut net2, 0, 0);
+    })
+    .report();
+}

@@ -1,0 +1,92 @@
+//! Benchmarks for the scheduler experiments (Figs. 17–20) and the L3 hot
+//! path: one end-to-end simulation bench per dataset×scheduler plus the
+//! micro-benchmarks the §Perf log tracks (priority evaluation, queue pick,
+//! k-means classify, engine fragment throughput).
+//!
+//! Run with `cargo bench` (budget via BENCH_BUDGET_MS, default 700 ms per
+//! benchmark). Each end-to-end bench also regenerates the figure's rows.
+
+use std::sync::Arc;
+
+use zygarde::coordinator::priority::{zeta_intermittent, EnergyView, PriorityParams};
+use zygarde::coordinator::sched::{Scheduler, SchedulerKind};
+use zygarde::coordinator::task::Job;
+use zygarde::dnn::network::Network;
+use zygarde::dnn::trace::compute_traces;
+use zygarde::exp::schedule;
+use zygarde::sim::workload::task_from_network;
+use zygarde::util::bench::Bencher;
+use zygarde::util::rng::Pcg32;
+
+fn main() {
+    let b = Bencher::default();
+    if !zygarde::artifacts_root().join("mnist/meta.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // --- micro: priority function -------------------------------------
+    let net = Network::load(&zygarde::artifacts_root().join("mnist")).unwrap();
+    let traces = Arc::new(compute_traces(&net, None));
+    let task = task_from_network(0, &net, 3000.0, 6000.0, Some(traces.clone()));
+    let params = PriorityParams::new(6000.0, 30.0);
+    let mut rng = Pcg32::seeded(1);
+    let jobs: Vec<Job> = (0..64)
+        .map(|i| {
+            let mut j = Job::new(&task, i, rng.f64() * 1000.0, i as usize % task.traces.len());
+            j.utility = rng.f32() * 20.0;
+            j
+        })
+        .collect();
+    let view = EnergyView { e_curr_mj: 120.0, e_opt_mj: 127.0, e_man_mj: 0.8, eta: 0.71 };
+    b.run_throughput("priority/zeta_I (64 jobs)", 64.0, "evals/s", || {
+        let mut acc = 0f64;
+        for j in &jobs {
+            acc += zeta_intermittent(j, 500.0, params, &view);
+        }
+        acc
+    })
+    .report();
+
+    // --- micro: scheduler pick over a full queue ----------------------
+    for kind in [SchedulerKind::Zygarde, SchedulerKind::Edf, SchedulerKind::EdfMandatory] {
+        let mut sched = Scheduler::new(kind, params);
+        let queue = jobs[..3.min(jobs.len())].to_vec(); // paper's queue size
+        b.run(&format!("pick/{} (queue=3)", kind.name()), || {
+            sched.pick(&queue, 500.0, &view)
+        })
+        .report();
+    }
+
+    // --- end-to-end: one cell per dataset x scheduler ------------------
+    // Fig. 17-20 shape at bench-scale job counts; throughput = simulated
+    // jobs per wall-clock second (the §Perf headline for L3).
+    for ds in ["mnist", "esc10", "cifar100", "vww"] {
+        for kind in schedule::SCHEDULERS {
+            let n_jobs = 40u64;
+            let r = b.run_throughput(
+                &format!("sim/{ds}/{}/S6 ({n_jobs} jobs)", kind.name()),
+                n_jobs as f64,
+                "jobs/s",
+                || {
+                    let cells = schedule::run(ds, &[6], Some(n_jobs), 99);
+                    cells.into_iter().next().unwrap().metrics.scheduled
+                },
+            );
+            r.report();
+        }
+    }
+
+    // --- end-to-end: the VWW 40k-job figure at full scale, once --------
+    let t0 = std::time::Instant::now();
+    let cells = schedule::run("vww", &[6], Some(4000), 7);
+    let dt = t0.elapsed().as_secs_f64();
+    let m = &cells.iter().find(|c| c.scheduler == SchedulerKind::Zygarde).unwrap().metrics;
+    println!(
+        "bench sim/vww/zygarde/S6 full-scale-slice: 3x4000 jobs in {dt:.2}s \
+         ({:.0} jobs/s; scheduled {:.1}%, fragments {})",
+        3.0 * 4000.0 / dt,
+        100.0 * m.event_scheduled_rate(),
+        m.fragments
+    );
+}

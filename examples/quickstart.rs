@@ -1,0 +1,74 @@
+//! Quickstart: the minimal Zygarde serving loop.
+//!
+//! Loads the MNIST agile DNN's AOT-compiled per-unit HLO artifacts
+//! (`make artifacts` must have run), executes them unit-by-unit through
+//! the XLA PJRT runtime with the utility-test early exit, and adapts the
+//! k-means centroids online — the full three-layer stack with Python
+//! nowhere on the path.
+//!
+//!     cargo run --release --example quickstart -- [--dataset mnist] [--samples 40]
+
+use zygarde::dnn::network::Network;
+use zygarde::runtime::Runtime;
+use zygarde::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let ds = args.str_or("dataset", "mnist").to_string();
+    let n_samples = args.usize_or("samples", 40);
+
+    let dir = zygarde::artifacts_root().join(&ds);
+    let mut net = Network::load(&dir).map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::cpu()?;
+    rt.load_network(&dir, &net.meta)?;
+    println!(
+        "zygarde quickstart: `{ds}` ({} units) on {} — utility thresholds {:?}",
+        net.meta.n_layers,
+        rt.platform(),
+        net.meta.layers.iter().map(|l| l.threshold).collect::<Vec<_>>()
+    );
+
+    let n = n_samples.min(net.test.len());
+    let mut correct = 0usize;
+    let mut exits = vec![0usize; net.meta.n_layers];
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let mut act = net.test.sample(i).to_vec();
+        let (mut pred, mut exit_at) = (0i32, net.meta.n_layers - 1);
+        for li in 0..net.meta.n_layers {
+            let (next, dists) =
+                rt.execute_unit(&ds, li, &act, &net.classifiers[li].centroids)?;
+            let res = net.classifiers[li].classify_from_dists(&dists);
+            pred = res.pred;
+            if res.exit || li == net.meta.n_layers - 1 {
+                exit_at = li;
+                // Online semi-supervised adaptation on confident exits.
+                if res.exit {
+                    let mut feat = Vec::new();
+                    net.classifiers[li].gather(&next, &mut feat);
+                    let feat = feat.clone();
+                    net.classifiers[li].adapt(res.best, &feat);
+                }
+                break;
+            }
+            act = next;
+        }
+        exits[exit_at] += 1;
+        let ok = pred == net.test.y[i];
+        correct += ok as usize;
+        if i < 10 {
+            println!(
+                "  sample {i:>3}: label {} -> pred {pred} ({}) exited after unit {}",
+                net.test.y[i],
+                if ok { "ok" } else { "WRONG" },
+                exit_at + 1
+            );
+        }
+    }
+    println!(
+        "\n{n} samples  accuracy {:.1}%  mean PJRT latency {:.2} ms  exit histogram {exits:?}",
+        100.0 * correct as f64 / n as f64,
+        t0.elapsed().as_secs_f64() * 1e3 / n as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,184 @@
+"""AOT compile path: train → build classifiers → lower units → artifacts/.
+
+This is the only place Python touches the system. `make artifacts` runs it
+once; afterwards the Rust binary is self-contained. Per dataset it emits:
+
+    artifacts/<name>/unit<i>.hlo.txt   # (act_in, centroids) -> (act_out, dists)
+    artifacts/<name>/meta.json         # specs, costs, thresholds, curves
+    artifacts/<name>/tensors.bin       # ZYGT: weights, centroids, test set
+
+HLO **text** is the interchange format: the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized HloModuleProtos (64-bit instruction ids); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Loss-ablation artifacts (Fig. 15) are exported for MNIST and ESC-10 under
+``artifacts/ablation_<loss>_<name>/`` with weights + classifiers only (the
+Rust native forward regenerates their traces; no HLO is needed there).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import binfmt, costs, datasets, kmeans, model as M, train as T
+
+# Datasets whose units are lowered to HLO (the PJRT serving path).
+HLO_DATASETS = ("mnist", "esc10", "cifar100", "vww", "sign", "shape")
+ABLATION = (("mnist", "cross_entropy"), ("mnist", "contrastive"),
+            ("esc10", "cross_entropy"), ("esc10", "contrastive"))
+
+# Per-dataset training hyper-parameters (the paper's "exhaustive search for
+# hyper-parameter tuning" distilled to what matters on the synthetic data:
+# ESC-10's no-pool middle layers need the longer schedule).
+TRAIN_OVERRIDES: Dict[str, Dict] = {
+    "esc10": {"steps": 700, "batch": 48, "margin": 1.5},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple()).
+
+    GOTCHA: ``comp.as_hlo_text()`` ELIDES large constants (printing
+    ``constant({...})``), which the downstream text parser silently reads
+    back as zeros — the baked network weights would vanish from the
+    artifact. Print through HloPrintOptions with print_large_constants=True
+    instead.
+    """
+    from jaxlib import _jax
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = _jax.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax >= 0.8 emits `source_end_line` etc. in metadata, which the
+    # xla_extension 0.5.1 text parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_unit(spec: M.NetSpec, params, li: int, clf, act_in_shape) -> str:
+    fn = M.unit_fn(spec, params, li, clf.feat_idx, use_pallas=True)
+    act_spec = jax.ShapeDtypeStruct(tuple(act_in_shape), jnp.float32)
+    cen_spec = jax.ShapeDtypeStruct(clf.centroids.shape, jnp.float32)
+    lowered = jax.jit(fn).lower(act_spec, cen_spec)
+    return to_hlo_text(lowered)
+
+
+def export_dataset(name: str, out_root: str, loss: str = "layer_aware",
+                   with_hlo: bool = True, seed: int = 0,
+                   dirname: str | None = None) -> Dict:
+    t0 = time.time()
+    spec = M.NETWORKS[name]
+    train_x, train_y, test_x, test_y, test_d = datasets.generate(name, seed=7)
+
+    cfg = T.TrainConfig(loss=loss, seed=seed, **TRAIN_OVERRIDES.get(name, {}))
+    params, history = T.train(spec, train_x, train_y, cfg)
+    clfs = kmeans.build_classifiers(spec, params, train_x, train_y)
+    cm = costs.build_cost_model(spec)
+    shapes = M.layer_shapes(spec)
+
+    dirname = dirname or name
+    out_dir = os.path.join(out_root, dirname)
+    os.makedirs(out_dir, exist_ok=True)
+
+    tensors: Dict[str, np.ndarray] = {
+        "test_x": test_x, "test_y": test_y, "test_d": test_d,
+        "train_y_hist": np.bincount(train_y, minlength=spec.n_classes).astype(np.int32),
+    }
+    layers_meta: List[Dict] = []
+    for li, (layer, clf, uc) in enumerate(zip(spec.layers, clfs, cm.units)):
+        tensors[f"layer{li}_w"] = params[li]["w"]
+        tensors[f"layer{li}_b"] = params[li]["b"]
+        tensors[f"layer{li}_centroids"] = clf.centroids
+        tensors[f"layer{li}_feat_idx"] = clf.feat_idx
+        tensors[f"layer{li}_centroid_label"] = clf.centroid_label
+        layers_meta.append({
+            "kind": layer.kind, "out": layer.out, "pool": layer.pool,
+            "relu": layer.relu, "act_shape": list(shapes[li]),
+            "k": int(clf.centroids.shape[0]),
+            "n_features": int(clf.centroids.shape[1]),
+            "threshold": clf.threshold,
+            "curve": [[float(a), float(b), float(c)] for a, b, c in clf.curve],
+            "macs": uc.macs, "adds": uc.adds,
+            "time_ms": uc.time_ms, "energy_mj": uc.energy_mj,
+            "n_fragments": uc.n_fragments, "fragment_ms": uc.fragment_ms,
+            "fragment_energy_mj": uc.fragment_energy_mj,
+        })
+        if with_hlo:
+            act_in = spec.input_shape if li == 0 else shapes[li - 1]
+            hlo = lower_unit(spec, params, li, clf, act_in)
+            with open(os.path.join(out_dir, f"unit{li}.hlo.txt"), "w") as f:
+                f.write(hlo)
+
+    # Fig. 24: the ESC-10 test split "re-recorded" in two more environments.
+    if name == "esc10":
+        tensors["env1_x"] = datasets.environment_shift(test_x, 1)
+        tensors["env2_x"] = datasets.environment_shift(test_x, 2)
+
+    binfmt.write_archive(os.path.join(out_dir, "tensors.bin"), tensors)
+    meta = {
+        "name": name, "loss": loss,
+        "input_shape": list(spec.input_shape),
+        "n_classes": spec.n_classes, "n_layers": spec.n_layers,
+        "n_features": spec.n_features,
+        "n_test": int(len(test_x)),
+        "layers": layers_meta,
+        "with_hlo": with_hlo,
+        "final_train_loss": float(np.mean(history[-20:])),
+        "cost_model": {
+            "scale": cm.scale, "e_man_mj": cm.e_man_mj,
+            "total_time_ms": cm.total_time_ms,
+            "total_energy_mj": cm.total_energy_mj,
+            "job_generator_ms": cm.job_generator_ms,
+            "job_generator_energy_mj": cm.job_generator_energy_mj,
+            "scheduler_overhead_ms": cm.scheduler_overhead_ms,
+            "scheduler_overhead_mj": cm.scheduler_overhead_mj,
+        },
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] {dirname}: loss={loss} "
+          f"train_loss={meta['final_train_loss']:.4f} "
+          f"total={cm.total_time_ms:.0f}ms hlo={with_hlo} "
+          f"({time.time() - t0:.1f}s)", flush=True)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact root")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated dataset subset (debugging)")
+    ap.add_argument("--skip-ablation", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = args.only.split(",") if args.only else HLO_DATASETS
+    for name in names:
+        export_dataset(name, args.out, with_hlo=True)
+    if not args.skip_ablation and not args.only:
+        for name, loss in ABLATION:
+            export_dataset(name, args.out, loss=loss, with_hlo=False,
+                           dirname=f"ablation_{loss}_{name}")
+    # Stamp for the Makefile's freshness check.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

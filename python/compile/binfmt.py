@@ -1,0 +1,77 @@
+"""ZYGT — the tiny tensor-archive format shared between the Python compile
+path and the Rust runtime.
+
+The session image has no serde on the Rust side and no need for npz/npy
+compatibility, so we define the simplest self-describing container that a
+few hundred lines of Rust can parse:
+
+    magic   : 4 bytes  b"ZYGT"
+    version : u32 LE   (currently 1)
+    count   : u32 LE   number of entries
+    entry*  :
+        name_len : u32 LE
+        name     : utf-8 bytes
+        dtype    : u8   (0 = f32, 1 = i32)
+        ndim     : u32 LE
+        dims     : ndim * u64 LE
+        data     : prod(dims) * 4 bytes LE
+
+Everything is little-endian. Entries are looked up by name on the Rust
+side (`rust/src/util/binfmt.rs`).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"ZYGT"
+VERSION = 1
+_DTYPE_CODE = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+_CODE_DTYPE = {0: np.float32, 1: np.int32}
+
+
+def write_archive(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a name->tensor mapping to `path` in ZYGT format."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPE_CODE:
+                if np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _DTYPE_CODE[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read_archive(path: str) -> Dict[str, np.ndarray]:
+    """Read a ZYGT archive back (used by the pytest round-trip checks)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (name_len,) = struct.unpack("<I", f.read(4))
+            name = f.read(name_len).decode("utf-8")
+            (code,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            n = int(np.prod(dims)) if ndim else 1
+            dtype = _CODE_DTYPE[code]
+            data = np.frombuffer(f.read(4 * n), dtype=dtype)
+            out[name] = data.reshape(dims)
+    return out

@@ -1,0 +1,159 @@
+"""Compile-time MSP430 cost model (the EnergyTrace++ substitute).
+
+The paper sets E_man by measuring, with EnergyTrace++, the maximum energy
+any atomic fragment consumes, and reasons about unit execution times from
+on-device profiling (Fig. 14). This module derives the same quantities from
+an operation-count model of the MSP430FR5994:
+
+  * 16 MHz core clock; software-pipelined MAC via the HW multiplier costs
+    ~4x an add (the paper's own 4x claim, refs [4, 13]);
+  * per-cycle active energy calibrated so a full ESC-10 inference lands at
+    the paper's reported ~3 s / tens of mJ magnitude;
+  * SONIC-style fragments: a unit is split into fixed-cycle-budget atomic
+    fragments, each paying a FRAM commit overhead; re-executing a fragment
+    after a power failure is idempotent (handled by the Rust engine).
+
+Because our networks are channel-scaled versions of Table 3, absolute MACs
+are lower than the paper's; a per-network calibration factor rescales total
+inference time to the paper's reported magnitude so the *scheduling*
+problem (ratios of unit cost to period, deadline, and capacitor energy) is
+faithful. DESIGN.md §1 records this substitution.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from . import model as M
+
+__all__ = ["CostModel", "build_cost_model"]
+
+CPU_HZ = 16_000_000.0
+ADD_CYCLES = 6.0          # add/sub/abs on FRAM operands
+MAC_CYCLES = 4.0 * ADD_CYCLES  # the paper's 4x multiply-to-add ratio
+# Active energy per (scaled) cycle. Chosen so full-throttle compute draws
+# ~110 mW — between the Table 4 RF average (58–80 mW) and solar average
+# (310–600 mW). This reproduces the paper's operating regime: solar systems
+# stay net-positive while computing, RF systems duty-cycle (their Table 5
+# power-on time is 65–77 % even for solar), and burst gaps genuinely
+# exhaust the 272 mJ capacitor — i.e. intermittency has teeth in the
+# scheduler experiments. The absolute value is a testbed calibration, not
+# an MSP430 datasheet number (DESIGN.md §1).
+ENERGY_PER_CYCLE_NJ = 6.9
+FRAGMENT_CYCLES = 120_000      # SONIC task budget (~7.5 ms per fragment)
+FRAGMENT_COMMIT_OVERHEAD = 0.06  # FRAM double-buffer commit per fragment
+
+# Paper-magnitude full-inference times (ms). Fig. 14 / §9.1: ESC-10 whole
+# model ~3 s; MNIST task set is run with U > 1 at T = 3 s (C > T); CIFAR
+# nets are the largest; VWW smallest per Table 3 parameter counts.
+TARGET_TOTAL_MS: Dict[str, float] = {
+    "mnist": 3600.0,
+    "esc10": 3000.0,
+    "cifar100": 5200.0,
+    "vww": 2400.0,
+    "sign": 2000.0,
+    "shape": 1000.0,
+}
+
+
+@dataclass
+class UnitCost:
+    macs: int
+    adds: int            # classifier adds (k-means + utility test)
+    cycles: float        # total incl. fragment commit overhead
+    time_ms: float
+    energy_mj: float
+    n_fragments: int
+    fragment_ms: float
+    fragment_energy_mj: float
+
+
+@dataclass
+class CostModel:
+    units: List[UnitCost]
+    scale: float                 # calibration multiplier applied to cycles
+    e_man_mj: float              # max fragment energy == paper's E_man
+    job_generator_ms: float      # sensor read + FFT + FRAM write (Fig. 14)
+    job_generator_energy_mj: float
+    scheduler_overhead_ms: float  # per scheduler invocation (Fig. 14)
+    scheduler_overhead_mj: float
+
+    @property
+    def total_time_ms(self) -> float:
+        return sum(u.time_ms for u in self.units)
+
+    @property
+    def total_energy_mj(self) -> float:
+        return sum(u.energy_mj for u in self.units)
+
+
+def _layer_macs(spec: M.NetSpec) -> List[int]:
+    macs = []
+    cur = spec.input_shape
+    for layer in spec.layers:
+        if layer.kind == "conv":
+            h, w, cin = cur
+            oh, ow = h - M.KSIZE + 1, w - M.KSIZE + 1
+            macs.append(oh * ow * M.KSIZE * M.KSIZE * cin * layer.out)
+            if layer.pool:
+                oh, ow = oh // 2, ow // 2
+            cur = (oh, ow, layer.out)
+        else:
+            fan_in = int(np.prod(cur))
+            macs.append(fan_in * layer.out)
+            cur = (layer.out,)
+    return macs
+
+
+def build_cost_model(spec: M.NetSpec) -> CostModel:
+    macs = _layer_macs(spec)
+    # Classifier cost per unit: k*F subs + abs + accumulate, plus the O(k)
+    # utility test — all adds.
+    k = spec.n_classes
+    clf_adds = 3 * k * spec.n_features + 4 * k
+
+    raw_cycles = [m * MAC_CYCLES + clf_adds * ADD_CYCLES for m in macs]
+    raw_total_ms = sum(raw_cycles) / CPU_HZ * 1e3
+    target = TARGET_TOTAL_MS.get(spec.name, raw_total_ms)
+    scale = target / raw_total_ms
+
+    units: List[UnitCost] = []
+    for m, rc in zip(macs, raw_cycles):
+        cycles = rc * scale
+        n_frag = max(1, int(np.ceil(cycles / FRAGMENT_CYCLES)))
+        cycles *= 1.0 + FRAGMENT_COMMIT_OVERHEAD
+        time_ms = cycles / CPU_HZ * 1e3
+        energy_mj = cycles * ENERGY_PER_CYCLE_NJ * 1e-6
+        units.append(
+            UnitCost(
+                macs=m,
+                adds=clf_adds,
+                cycles=cycles,
+                time_ms=time_ms,
+                energy_mj=energy_mj,
+                n_fragments=n_frag,
+                fragment_ms=time_ms / n_frag,
+                fragment_energy_mj=energy_mj / n_frag,
+            )
+        )
+
+    e_man = max(u.fragment_energy_mj for u in units)
+    # Fig. 14: job generator reads 1 s audio, FFTs via LEA, writes FRAM in
+    # 1.325 s. Image capture differs (Fig. 23) and is modeled in Rust.
+    jg_ms = 1325.0 if spec.input_shape[2] == 1 else 400.0
+    jg_mj = jg_ms * 1e-3 * CPU_HZ * ENERGY_PER_CYCLE_NJ * 1e-6 * 0.06  # DMA+LEA path, CPU asleep
+    # Fig. 14: scheduler = 3.72 ms / 636 uJ for 3 jobs over 4N invocations.
+    sched_ms = 3.72 / 12.0
+    sched_mj = 0.636 / 12.0
+    return CostModel(
+        units=units,
+        scale=scale,
+        e_man_mj=e_man,
+        job_generator_ms=jg_ms,
+        job_generator_energy_mj=jg_mj,
+        scheduler_overhead_ms=sched_ms,
+        scheduler_overhead_mj=sched_mj,
+    )

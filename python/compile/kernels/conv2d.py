@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: blocked matmul — the convolution/FC hot-spot.
+
+Zygarde's per-unit compute is dominated by one GEMM per layer (conv layers
+are lowered to im2col + GEMM, FC layers are GEMMs directly). This module
+provides that GEMM as a Pallas kernel so it lowers into the same HLO as the
+surrounding L2 graph and ships inside the per-unit artifacts.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles for
+the MSP430's 8 KB SRAM with FRAM<->SRAM DMA double-buffering; on TPU the
+analogous resources are VMEM and the 128x128 MXU. The BlockSpecs below
+express that schedule: A is blocked (bm, K), B is blocked (K, bn), the
+output tile (bm, bn) lives in VMEM for the whole contraction, and block
+sizes are clamped to multiples of the (8, 128) f32 register tile whenever
+the problem is large enough to warrant it.
+
+Kernels MUST run with ``interpret=True`` in this image: CPU PJRT cannot
+execute the Mosaic custom-call a real TPU lowering would emit. Interpret
+mode lowers to plain HLO which both jax-CPU and the Rust PJRT runtime
+execute; structure (not interpret-mode wallclock) is what we optimize.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["matmul", "conv2d", "MXU_TILE"]
+
+# f32 register tile on the TPU vector unit; MXU systolic array is 128x128.
+MXU_TILE = (8, 128)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest block <= pref that keeps the grid integral after padding."""
+    return min(_round_up(dim, 8), pref)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # One (bm, bn) output tile: full-K contraction while the tile is VMEM
+    # resident. `preferred_element_type` pins the MXU accumulator to f32.
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _matmul_pallas(a: jnp.ndarray, b: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    m, k = a.shape
+    _, n = b.shape
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    """`(M, K) @ (K, N)` with zero-padding to the block grid.
+
+    Padding with zeros is exact for matmul (padded rows/cols contribute 0
+    and are sliced off), so the Pallas path is numerically equivalent to
+    :func:`ref.matmul_ref` up to f32 reassociation.
+    """
+    if not use_pallas:
+        return ref.matmul_ref(a, b)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm = _pick_block(m, 64)
+    bn = _pick_block(n, 128)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    a_p = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, 0)))
+    b_p = jnp.pad(b.astype(jnp.float32), ((0, 0), (0, np_ - n)))
+    return _matmul_pallas(a_p, b_p, bm, bn)[:m, :n]
+
+
+def conv2d(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = True
+) -> jnp.ndarray:
+    """VALID conv via im2col + the Pallas GEMM. Shapes as :func:`ref.conv2d_ref`."""
+    if not use_pallas:
+        return ref.conv2d_ref(x, w, b)
+    kh, kw, cin, cout = w.shape
+    patches = ref.im2col(x, kh, kw)
+    out = matmul(patches, w.reshape(kh * kw * cin, cout)) + b
+    oh, ow = x.shape[0] - kh + 1, x.shape[1] - kw + 1
+    return out.reshape(oh, ow, cout)

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: multiplication-free k-means distance (the utility test).
+
+The paper's key micro-architectural insight is that the early-exit decision
+must be far cheaper than a DNN layer: it replaces the matmul-based auxiliary
+classifiers of anytime networks with L1 distances to k cluster centroids —
+additions and subtractions only, which are ~4x cheaper than MACs on the
+MSP430 (saving 27 750 cycles per inference).
+
+On TPU the analogous constraint is *stay off the MXU*: this kernel is pure
+element-wise + row-reduction work (abs-diff then sum), which maps onto the
+VPU's 8x128 lanes with no systolic-array occupancy. The centroid matrix
+(k, F) is tiny (k <= 10, F <= 150 in the paper) so a single VMEM block
+holds all centroids plus the feature vector; the grid is over centroid
+blocks only when k is padded above the 8-row register tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+__all__ = ["l1dist"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _l1_kernel(c_ref, x_ref, o_ref):
+    # abs-diff + row-sum: VPU-only, no dot. Keepdims=1 column so the output
+    # block stays 2-D (TPU-friendly layout even in interpret mode).
+    o_ref[...] = jnp.sum(jnp.abs(c_ref[...] - x_ref[...]), axis=1, keepdims=True)
+
+
+@jax.jit
+def _l1_pallas(c: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    k, f = c.shape
+    return pl.pallas_call(
+        _l1_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+            pl.BlockSpec((k, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        interpret=True,
+    )(c, x)
+
+
+def l1dist(
+    centroids: jnp.ndarray, feat: jnp.ndarray, use_pallas: bool = True
+) -> jnp.ndarray:
+    """L1 distance of `feat: (F,)` to each of `centroids: (k, F)` -> `(k,)`.
+
+    Rows are padded to the 8-row register tile; padded rows are sliced off
+    (their distances are garbage-free since padding copies row 0).
+    """
+    if not use_pallas:
+        return ref.l1dist_ref(centroids, feat)
+    k, f = centroids.shape
+    kp = _round_up(k, 8)
+    c_p = jnp.pad(centroids.astype(jnp.float32), ((0, kp - k), (0, 0)))
+    x_b = jnp.broadcast_to(feat.astype(jnp.float32)[None, :], (kp, f))
+    return _l1_pallas(c_p, x_b)[:k, 0]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but `jax.numpy` / `jax.lax` primitives. The pytest
+suite sweeps shapes and asserts `allclose(kernel, ref)`; the L2 model can
+also be built entirely on these references (``use_pallas=False``) which is
+what the training loop uses for speed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) @ (K, N) -> (M, N) in f32."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """Extract all valid (kh, kw) patches of `x: (H, W, C)`.
+
+    Returns `((H-kh+1)*(W-kw+1), kh*kw*C)` — the standard im2col layout so
+    a convolution becomes one matmul (which is the Pallas hot-spot).
+    """
+    h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(lax.dynamic_slice(x, (dy, dx, 0), (oh, ow, c)))
+    patches = jnp.stack(cols, axis=2)  # (oh, ow, kh*kw, c)
+    return patches.reshape(oh * ow, kh * kw * c)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """VALID 2-D convolution. x: (H, W, Cin); w: (kh, kw, Cin, Cout); b: (Cout,).
+
+    Implemented as im2col + matmul so it is bit-comparable with the Pallas
+    kernel path (same contraction, up to XLA reassociation).
+    """
+    kh, kw, cin, cout = w.shape
+    patches = im2col(x, kh, kw)  # (P, kh*kw*cin)
+    out = matmul_ref(patches, w.reshape(kh * kw * cin, cout)) + b
+    oh, ow = x.shape[0] - kh + 1, x.shape[1] - kw + 1
+    return out.reshape(oh, ow, cout)
+
+
+def maxpool2_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """2x2 max-pool with stride 2 (truncating odd edges). x: (H, W, C)."""
+    h, w, _ = x.shape
+    x = x[: h - h % 2, : w - w % 2, :]
+    return lax.reduce_window(x, -jnp.inf, lax.max, (2, 2, 1), (2, 2, 1), "VALID")
+
+
+def l1dist_ref(centroids: jnp.ndarray, feat: jnp.ndarray) -> jnp.ndarray:
+    """L1 distances from `feat: (F,)` to each row of `centroids: (k, F)`.
+
+    This is the paper's multiplication-free classifier: adds/subs only
+    (4x cheaper than MACs on the MSP430; VPU-only on TPU).
+    """
+    return jnp.sum(jnp.abs(centroids - feat[None, :]), axis=1)

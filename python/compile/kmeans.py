@@ -1,0 +1,160 @@
+"""Semi-supervised k-means classifier construction (paper §4.3).
+
+For every layer of a trained agile DNN we build one classifier:
+
+  1. run the training set through the network and collect the layer's
+     flattened activations;
+  2. select the top-F features by a class-separation score (the paper uses
+     SelectKBest + chi2; chi2 requires non-negative counts, so we use the
+     equivalent-for-our-purpose Fisher score: between-class variance over
+     within-class variance — both rank features by how well a 1-D split
+     separates classes);
+  3. seed k = n_classes centroids at the labeled class means (semi-
+     supervised seeding, Basu et al. [23]), run a few constrained Lloyd
+     iterations, and label each centroid by the majority class of its
+     members;
+  4. sweep the utility threshold (|d2 - d1| on L1 distances) on a held-out
+     split to produce the Fig. 8 trade-off curve, and pick the smallest
+     threshold whose exit-here accuracy is within `acc_tolerance` of the
+     best achievable (the paper's "desired minimum inference accuracy").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+__all__ = ["LayerClassifier", "build_classifiers", "collect_features",
+           "threshold_curve"]
+
+
+@dataclass
+class LayerClassifier:
+    """One per-layer semi-supervised k-means classifier."""
+
+    feat_idx: np.ndarray        # (F,) int32 — selected flat-activation indices
+    centroids: np.ndarray       # (k, F) f32
+    centroid_label: np.ndarray  # (k,) int32 — class label per centroid
+    threshold: float            # utility-test threshold on |d2 - d1|
+    # Fig. 8 curve: rows of (threshold, exit_rate, exit_accuracy)
+    curve: List[Tuple[float, float, float]] = field(default_factory=list)
+
+
+def collect_features(spec: M.NetSpec, params, x: np.ndarray,
+                     batch: int = 64) -> List[np.ndarray]:
+    """Per-layer flattened activations for every sample. Returns a list of
+    (N, flat_i) arrays, one per layer."""
+    fwd = jax.jit(
+        jax.vmap(lambda a: [o.reshape(-1) for o in
+                            M.forward_all_layers(spec, params, a)])
+    )
+    outs: List[List[np.ndarray]] = []
+    for s in range(0, len(x), batch):
+        chunk = fwd(jnp.asarray(x[s:s + batch]))
+        outs.append([np.asarray(c) for c in chunk])
+    return [np.concatenate([o[i] for o in outs]) for i in range(spec.n_layers)]
+
+
+def _fisher_scores(feats: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Between-class over within-class variance per feature."""
+    classes = np.unique(y)
+    overall = feats.mean(axis=0)
+    between = np.zeros(feats.shape[1], dtype=np.float64)
+    within = np.zeros(feats.shape[1], dtype=np.float64)
+    for c in classes:
+        fc = feats[y == c]
+        between += len(fc) * (fc.mean(axis=0) - overall) ** 2
+        within += ((fc - fc.mean(axis=0)) ** 2).sum(axis=0)
+    return (between / (within + 1e-9)).astype(np.float32)
+
+
+def _select_features(feats: np.ndarray, y: np.ndarray, n: int) -> np.ndarray:
+    n = min(n, feats.shape[1])
+    scores = _fisher_scores(feats, y)
+    return np.sort(np.argsort(-scores)[:n]).astype(np.int32)
+
+
+def _seeded_kmeans(feats: np.ndarray, y: np.ndarray, iters: int = 8
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """k-means with labeled seeding; k = number of classes. L1 metric
+    (matching the runtime classifier) => median update is the L1-optimal
+    centroid; we use the mean like the paper's runtime update rule does."""
+    classes = np.unique(y)
+    centroids = np.stack([feats[y == c].mean(axis=0) for c in classes])
+    for _ in range(iters):
+        d = np.abs(feats[:, None, :] - centroids[None, :, :]).sum(axis=2)
+        assign = d.argmin(axis=1)
+        for j in range(len(classes)):
+            members = feats[assign == j]
+            if len(members):
+                centroids[j] = members.mean(axis=0)
+    labels = np.empty(len(classes), dtype=np.int32)
+    d = np.abs(feats[:, None, :] - centroids[None, :, :]).sum(axis=2)
+    assign = d.argmin(axis=1)
+    for j in range(len(classes)):
+        members = y[assign == j]
+        labels[j] = np.bincount(members, minlength=classes.max() + 1).argmax() \
+            if len(members) else classes[j]
+    return centroids.astype(np.float32), labels
+
+
+def _classify(centroids: np.ndarray, labels: np.ndarray, feats: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized L1 classify; returns (predicted_class, |d2-d1| gap)."""
+    d = np.abs(feats[:, None, :] - centroids[None, :, :]).sum(axis=2)
+    order = np.argsort(d, axis=1)
+    top1 = d[np.arange(len(d)), order[:, 0]]
+    top2 = d[np.arange(len(d)), order[:, 1]] if d.shape[1] > 1 else top1
+    return labels[order[:, 0]], (top2 - top1).astype(np.float32)
+
+
+def threshold_curve(gap: np.ndarray, pred: np.ndarray, y: np.ndarray,
+                    n_points: int = 24) -> List[Tuple[float, float, float]]:
+    """(threshold, exit_rate, exit_accuracy) sweep — the Fig. 8 curve."""
+    qs = np.linspace(0.0, 1.0, n_points)
+    out = []
+    for q in qs:
+        thr = float(np.quantile(gap, q)) if len(gap) else 0.0
+        exits = gap >= thr
+        rate = float(exits.mean())
+        acc = float((pred[exits] == y[exits]).mean()) if exits.any() else 0.0
+        out.append((thr, rate, acc))
+    return out
+
+
+def build_classifiers(spec: M.NetSpec, params, train_x: np.ndarray,
+                      train_y: np.ndarray, acc_tolerance: float = 0.03,
+                      val_frac: float = 0.25, seed: int = 0
+                      ) -> List[LayerClassifier]:
+    """Construct one LayerClassifier per layer of the agile DNN."""
+    rng = np.random.default_rng(seed)
+    n = len(train_x)
+    perm = rng.permutation(n)
+    n_val = max(int(n * val_frac), spec.n_classes * 2)
+    val_i, fit_i = perm[:n_val], perm[n_val:]
+
+    all_feats = collect_features(spec, params, train_x)
+    classifiers: List[LayerClassifier] = []
+    for li in range(spec.n_layers):
+        flat = all_feats[li]
+        idx = _select_features(flat[fit_i], train_y[fit_i], spec.n_features)
+        fit_f = flat[np.ix_(fit_i, idx)]
+        val_f = flat[np.ix_(val_i, idx)]
+        centroids, labels = _seeded_kmeans(fit_f, train_y[fit_i])
+        pred, gap = _classify(centroids, labels, val_f)
+        curve = threshold_curve(gap, pred, train_y[val_i])
+        best_acc = max(a for _, _, a in curve)
+        thr = next(
+            (t for t, _, a in curve if a >= best_acc - acc_tolerance),
+            curve[-1][0],
+        )
+        classifiers.append(
+            LayerClassifier(idx, centroids, labels, float(thr), curve)
+        )
+    return classifiers

@@ -1,0 +1,197 @@
+"""L2: the agile DNN — per-layer JAX forward functions calling the L1 kernels.
+
+An *agile DNN* (paper §4.2) is a representation learner whose execution may
+terminate after any layer; the output of every layer is flattened, feature-
+selected, and classified by that layer's semi-supervised k-means classifier.
+Consequently the model here is defined as a sequence of independently
+lowerable *unit* functions rather than a single fused forward pass:
+
+    unit_i : (activation_in, centroids_i) -> (activation_out, l1_distances)
+
+which is exactly the granularity at which the Rust coordinator schedules
+(one unit == one schedulable imprecise-computing module).
+
+Architectures mirror the paper's Table 3 at reduced channel counts
+(DESIGN.md §7): conv layers are 3x3 VALID + ReLU + 2x2 max-pool; FC layers
+are matmul + bias (+ ReLU except the final embedding layer).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d as ck
+from .kernels import l1dist as lk
+from .kernels import ref
+
+__all__ = ["LayerSpec", "NetSpec", "NETWORKS", "init_params", "layer_forward",
+           "forward_all_layers", "unit_fn", "feature_vector", "layer_shapes"]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One agile-DNN layer (== one Zygarde unit's compute)."""
+
+    kind: str  # "conv" | "fc"
+    out: int  # Cout for conv, width for fc
+    pool: bool = True  # conv only: 2x2/2 max-pool after ReLU
+    relu: bool = True
+
+
+@dataclass(frozen=True)
+class NetSpec:
+    """A full agile DNN for one dataset (Table 3 structure, scaled)."""
+
+    name: str
+    input_shape: Tuple[int, int, int]
+    n_classes: int
+    layers: Tuple[LayerSpec, ...]
+    n_features: int = 64  # top-F selected features per layer (paper: <=150)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+
+# Table 3, channel-scaled. Layer *structure* (CONV/FC sequence) matches.
+NETWORKS: Dict[str, NetSpec] = {
+    "mnist": NetSpec(
+        "mnist", (16, 16, 1), 10,
+        (LayerSpec("conv", 8), LayerSpec("conv", 16),
+         LayerSpec("fc", 64), LayerSpec("fc", 32, relu=False)),
+    ),
+    "esc10": NetSpec(
+        "esc10", (16, 16, 1), 10,
+        (LayerSpec("conv", 8), LayerSpec("conv", 16, pool=False),
+         LayerSpec("conv", 16, pool=False), LayerSpec("fc", 32, relu=False)),
+    ),
+    "cifar100": NetSpec(
+        "cifar100", (16, 16, 3), 5,
+        (LayerSpec("conv", 16), LayerSpec("conv", 32),
+         LayerSpec("fc", 96), LayerSpec("fc", 48, relu=False)),
+    ),
+    "vww": NetSpec(
+        "vww", (16, 16, 3), 2,
+        (LayerSpec("conv", 8), LayerSpec("conv", 8, pool=False),
+         LayerSpec("conv", 16, pool=False), LayerSpec("conv", 16, pool=False),
+         LayerSpec("fc", 32, relu=False)),
+    ),
+    # Fig. 23 multi-task visual workload: sign (bigger) + shape (smaller).
+    "sign": NetSpec(
+        "sign", (16, 16, 3), 6,
+        (LayerSpec("conv", 8), LayerSpec("conv", 16),
+         LayerSpec("fc", 48), LayerSpec("fc", 24, relu=False)),
+    ),
+    "shape": NetSpec(
+        "shape", (16, 16, 3), 4,
+        (LayerSpec("conv", 4), LayerSpec("conv", 8),
+         LayerSpec("fc", 24), LayerSpec("fc", 16, relu=False)),
+    ),
+}
+
+KSIZE = 3  # all convs are 3x3 VALID
+
+
+def layer_shapes(spec: NetSpec) -> List[Tuple[int, ...]]:
+    """Activation shape *after* each layer (and pooling)."""
+    shapes: List[Tuple[int, ...]] = []
+    cur: Tuple[int, ...] = spec.input_shape
+    for layer in spec.layers:
+        if layer.kind == "conv":
+            h, w, _ = cur
+            oh, ow = h - KSIZE + 1, w - KSIZE + 1
+            if layer.pool:
+                oh, ow = oh // 2, ow // 2
+            cur = (oh, ow, layer.out)
+        else:
+            cur = (layer.out,)
+        shapes.append(cur)
+    return shapes
+
+
+def init_params(spec: NetSpec, seed: int = 0) -> List[Dict[str, np.ndarray]]:
+    """He-initialized parameters, one dict per layer: {"w": ..., "b": ...}."""
+    rng = np.random.default_rng(seed)
+    params: List[Dict[str, np.ndarray]] = []
+    cur = spec.input_shape
+    for layer in spec.layers:
+        if layer.kind == "conv":
+            cin = cur[2]
+            fan_in = KSIZE * KSIZE * cin
+            w = rng.standard_normal((KSIZE, KSIZE, cin, layer.out)) * np.sqrt(2.0 / fan_in)
+            h, ww, _ = cur
+            oh, ow = h - KSIZE + 1, ww - KSIZE + 1
+            if layer.pool:
+                oh, ow = oh // 2, ow // 2
+            cur = (oh, ow, layer.out)
+        else:
+            fan_in = int(np.prod(cur))
+            w = rng.standard_normal((fan_in, layer.out)) * np.sqrt(2.0 / fan_in)
+            cur = (layer.out,)
+        params.append({
+            "w": w.astype(np.float32),
+            "b": np.zeros(layer.out, dtype=np.float32),
+        })
+    return params
+
+
+def layer_forward(layer: LayerSpec, p, x, use_pallas: bool = False):
+    """Run one layer. `x` is the previous activation (3-D for conv, any for fc)."""
+    if layer.kind == "conv":
+        out = ck.conv2d(x, p["w"], p["b"], use_pallas=use_pallas)
+        if layer.relu:
+            out = jax.nn.relu(out)
+        if layer.pool:
+            out = ref.maxpool2_ref(out)
+        return out
+    flat = x.reshape(-1)
+    out = ck.matmul(flat[None, :], p["w"], use_pallas=use_pallas)[0] + p["b"]
+    if layer.relu:
+        out = jax.nn.relu(out)
+    return out
+
+
+def forward_all_layers(spec: NetSpec, params, x, use_pallas: bool = False):
+    """All per-layer activations for input `x` (training / trace path)."""
+    acts = []
+    cur = x
+    for layer, p in zip(spec.layers, params):
+        cur = layer_forward(layer, p, cur, use_pallas=use_pallas)
+        acts.append(cur)
+    return acts
+
+
+def feature_vector(act: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Flatten a layer activation and gather its selected top-F features."""
+    return act.reshape(-1)[idx]
+
+
+def unit_fn(spec: NetSpec, params, layer_idx: int, feat_idx: np.ndarray,
+            use_pallas: bool = True):
+    """Build the lowerable *unit* function for `layer_idx`.
+
+    Returns `f(act_in, centroids) -> (act_out, dists)` with the layer's
+    weights closed over as constants (they are immutable at runtime) and the
+    centroids left as a parameter (they are *mutated* at runtime by the
+    semi-supervised adaptation, so the Rust side feeds the current values).
+    The L1-distance computation is the Pallas `l1dist` kernel, so the exit
+    test lowers into the same HLO as the layer itself — one PJRT execute per
+    unit, no host round-trip between layer and classifier.
+    """
+    layer = spec.layers[layer_idx]
+    p = {"w": jnp.asarray(params[layer_idx]["w"]),
+         "b": jnp.asarray(params[layer_idx]["b"])}
+    idx = jnp.asarray(feat_idx, dtype=jnp.int32)
+
+    def f(act_in, centroids):
+        act_out = layer_forward(layer, p, act_in, use_pallas=use_pallas)
+        feat = feature_vector(act_out, idx)
+        dists = lk.l1dist(centroids, feat, use_pallas=use_pallas)
+        return act_out, dists
+
+    return f

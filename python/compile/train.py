@@ -1,0 +1,203 @@
+"""Offline training of agile DNNs (paper §4.2, Fig. 7).
+
+The agile DNN is trained as a siamese network: two weight-tied copies
+consume a pair of samples (50 % same-class, 50 % different-class pairs) and
+the loss pushes same-class representations together and different-class
+representations apart *at every layer*, so that an early exit at any depth
+still lands in a cluster-friendly feature space.
+
+Three losses are implemented because Fig. 15 compares them:
+
+  * ``layer_aware`` (Eq. 4)  — convex combination of per-layer contrastive
+    losses, coefficients a_i; this is Zygarde's proposal.
+  * ``contrastive``          — contrastive loss at the last layer only
+    (the SoundSemantics / Hadsell-style baseline [71]).
+  * ``cross_entropy``        — a softmax head on the final embedding
+    trained with CE [142]; hidden layers get no metric supervision.
+
+Optimization is a hand-written Adam (the image has no optax); everything is
+pure JAX on CPU and sized to train in seconds per network.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+__all__ = ["TrainConfig", "train", "LOSSES"]
+
+LOSSES = ("layer_aware", "contrastive", "cross_entropy")
+
+
+@dataclass
+class TrainConfig:
+    loss: str = "layer_aware"
+    steps: int = 300
+    batch: int = 32
+    lr: float = 2e-3
+    margin: float = 1.25  # Delta in Eq. 5
+    seed: int = 0
+    # Convex coefficients a_i (Eq. 4). None => uniform 1/L. The paper tunes
+    # these by exhaustive search; uniform is its reported starting point.
+    layer_coeffs: Tuple[float, ...] | None = None
+
+
+def _normalized_embedding(act: jnp.ndarray) -> jnp.ndarray:
+    """Flatten + L2-normalize a layer activation.
+
+    Normalization keeps per-layer distance scales comparable so one margin
+    works for every layer of the convex combination.
+    """
+    v = act.reshape(-1)
+    return v / (jnp.linalg.norm(v) + 1e-6)
+
+
+def _pair_contrastive(e1: jnp.ndarray, e2: jnp.ndarray, y: jnp.ndarray,
+                      margin: float) -> jnp.ndarray:
+    """Contrastive loss for one layer's embeddings of one pair.
+
+    y = 0 for same class, 1 for different (the paper's Eq. 5 convention).
+    """
+    d = jnp.linalg.norm(e1 - e2) + 1e-9
+    return 0.5 * (1.0 - y) * d**2 + 0.5 * y * jnp.maximum(0.0, margin - d) ** 2
+
+
+def _siamese_loss(params, spec: M.NetSpec, x1, x2, y, coeffs, margin):
+    """Batched layer-aware loss (Eq. 4). coeffs selects which layers count."""
+
+    def per_pair(a, b, yy):
+        acts1 = M.forward_all_layers(spec, params, a)
+        acts2 = M.forward_all_layers(spec, params, b)
+        total = 0.0
+        for i, (u, v) in enumerate(zip(acts1, acts2)):
+            if coeffs[i] == 0.0:
+                continue
+            total = total + coeffs[i] * _pair_contrastive(
+                _normalized_embedding(u), _normalized_embedding(v), yy, margin
+            )
+        return total
+
+    return jnp.mean(jax.vmap(per_pair)(x1, x2, y))
+
+
+def _ce_loss(params_and_head, spec: M.NetSpec, x, y):
+    params, head = params_and_head
+
+    def per_sample(a):
+        emb = M.forward_all_layers(spec, params, a)[-1].reshape(-1)
+        return emb @ head["w"] + head["b"]
+
+    logits = jax.vmap(per_sample)(x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def _adam_init(tree):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def _adam_step(tree, grads, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree_util.tree_map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda a: a / (1 - b2**t), v)
+    tree = jax.tree_util.tree_map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), tree, mh, vh
+    )
+    return tree, m, v
+
+
+def _sample_pairs(rng: np.random.Generator, x: np.ndarray, y: np.ndarray,
+                  batch: int):
+    """50 % same-class / 50 % different-class pairs (paper §4.2)."""
+    by_class: Dict[int, np.ndarray] = {
+        c: np.where(y == c)[0] for c in np.unique(y)
+    }
+    classes = [c for c, idx in by_class.items() if len(idx) >= 2]
+    i1 = np.empty(batch, np.int64)
+    i2 = np.empty(batch, np.int64)
+    yy = np.empty(batch, np.float32)
+    for b in range(batch):
+        if b % 2 == 0:  # same class
+            c = classes[rng.integers(len(classes))]
+            a, bb = rng.choice(by_class[c], 2, replace=False)
+            yy[b] = 0.0
+        else:  # different classes
+            c1, c2 = rng.choice(classes, 2, replace=False)
+            a = rng.choice(by_class[c1])
+            bb = rng.choice(by_class[c2])
+            yy[b] = 1.0
+        i1[b], i2[b] = a, bb
+    return x[i1], x[i2], yy
+
+
+def train(spec: M.NetSpec, train_x: np.ndarray, train_y: np.ndarray,
+          cfg: TrainConfig) -> Tuple[List[Dict[str, np.ndarray]], List[float]]:
+    """Train one agile DNN; returns (params, loss_history)."""
+    assert cfg.loss in LOSSES, cfg.loss
+    rng = np.random.default_rng(cfg.seed)
+    params = [
+        {k: jnp.asarray(v) for k, v in p.items()}
+        for p in M.init_params(spec, seed=cfg.seed)
+    ]
+
+    if cfg.loss == "cross_entropy":
+        emb_dim = int(np.prod(M.layer_shapes(spec)[-1]))
+        head = {
+            "w": jnp.asarray(
+                rng.standard_normal((emb_dim, spec.n_classes)).astype(np.float32)
+                * np.sqrt(1.0 / emb_dim)
+            ),
+            "b": jnp.zeros(spec.n_classes, dtype=jnp.float32),
+        }
+        state = (params, head)
+        loss_fn = jax.jit(lambda s, x, y: _ce_loss(s, spec, x, y))
+        grad_fn = jax.jit(jax.value_and_grad(lambda s, x, y: _ce_loss(s, spec, x, y)))
+        m, v = _adam_init(state)
+        history: List[float] = []
+        for t in range(1, cfg.steps + 1):
+            idx = rng.integers(0, len(train_x), size=cfg.batch)
+            bx = jnp.asarray(train_x[idx])
+            by = jnp.asarray(train_y[idx].astype(np.int32))
+            loss, grads = grad_fn(state, bx, by)
+            state, m, v = _adam_step(state, grads, m, v, t, cfg.lr)
+            history.append(float(loss))
+        params = state[0]
+        return [
+            {k: np.asarray(vv) for k, vv in p.items()} for p in params
+        ], history
+
+    if cfg.loss == "contrastive":
+        coeffs = tuple(0.0 for _ in spec.layers[:-1]) + (1.0,)
+    else:
+        # Depth-increasing coefficients (a_i ∝ i+1): the paper tunes a_i by
+        # exhaustive search and deeper layers carry the final accuracy, so
+        # they get the larger share; shallow layers still receive direct
+        # metric supervision (the whole point of the layer-aware loss).
+        if cfg.layer_coeffs is not None:
+            coeffs = cfg.layer_coeffs
+        else:
+            raw = tuple(float(i + 1) for i in range(spec.n_layers))
+            coeffs = tuple(c / sum(raw) for c in raw)
+    assert abs(sum(coeffs) - 1.0) < 1e-6, "Eq. 4 requires convex coefficients"
+
+    grad_fn = jax.jit(
+        jax.value_and_grad(
+            lambda p, a, b, yy: _siamese_loss(p, spec, a, b, yy, coeffs, cfg.margin)
+        )
+    )
+    m, v = _adam_init(params)
+    history = []
+    for t in range(1, cfg.steps + 1):
+        x1, x2, yy = _sample_pairs(rng, train_x, train_y, cfg.batch)
+        loss, grads = grad_fn(params, jnp.asarray(x1), jnp.asarray(x2), jnp.asarray(yy))
+        params, m, v = _adam_step(params, grads, m, v, t, cfg.lr)
+        history.append(float(loss))
+    return [{k: np.asarray(vv) for k, vv in p.items()} for p in params], history

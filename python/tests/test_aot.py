@@ -1,0 +1,98 @@
+"""AOT path: binfmt round-trip, HLO text export, jax re-execution of the
+lowered unit (the artifact the Rust runtime consumes)."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, binfmt, costs, datasets, kmeans, model as M, train as T
+
+
+def test_binfmt_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = {
+        "a": rng.standard_normal((3, 4, 5)).astype(np.float32),
+        "b": np.arange(7, dtype=np.int32),
+        "scalar_ish": np.array([3.5], dtype=np.float32),
+        "empty_name_ok": np.zeros((2, 2), np.float32),
+    }
+    p = str(tmp_path / "t.bin")
+    binfmt.write_archive(p, tensors)
+    back = binfmt.read_archive(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_binfmt_rejects_bad_magic(tmp_path):
+    p = str(tmp_path / "bad.bin")
+    with open(p, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError):
+        binfmt.read_archive(p)
+
+
+def test_cost_model_magnitudes():
+    for name in ("mnist", "esc10", "cifar100", "vww"):
+        cm = costs.build_cost_model(M.NETWORKS[name])
+        assert cm.total_time_ms == pytest.approx(
+            costs.TARGET_TOTAL_MS[name], rel=0.15
+        )
+        assert cm.e_man_mj > 0
+        for u in cm.units:
+            assert u.n_fragments >= 1
+            assert u.fragment_ms * u.n_fragments == pytest.approx(u.time_ms, rel=1e-6)
+        # first conv dominates FC layers (paper: 2.6-3.6x other layers)
+        assert cm.units[0].time_ms > cm.units[-1].time_ms
+
+
+def test_unit_hlo_text_parses_back():
+    """Lower unit 0 of the mnist net to HLO text and parse it back through
+    the XLA text parser — the exact entry point the Rust runtime uses
+    (`HloModuleProto::from_text_file`). Full execute-and-compare against
+    the jnp oracle happens in the Rust integration test
+    (`rust/tests/runtime_vs_native.rs`), which runs the real PJRT path."""
+    from jax._src.lib import xla_client as xc
+
+    spec = M.NETWORKS["mnist"]
+    tx, ty, *_ = datasets.generate("mnist")
+    params, _ = T.train(spec, tx, ty, T.TrainConfig(steps=30))
+    clfs = kmeans.build_classifiers(spec, params, tx[:300], ty[:300])
+    hlo = aot.lower_unit(spec, params, 0, clfs[0], spec.input_shape)
+    assert "ENTRY" in hlo
+
+    mod = xc._xla.hlo_module_from_text(hlo)
+    text2 = mod.to_string()
+    # the reparsed module preserves both parameters and the tuple root
+    assert "parameter(0)" in text2 and "parameter(1)" in text2
+    k, f = clfs[0].centroids.shape
+    assert f"f32[{k},{f}]" in text2.replace(" ", "")
+    # lowered with return_tuple=True -> root is a tuple of two arrays
+    assert "tuple(" in text2
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "artifacts", ".stamp")),
+    reason="artifacts not built yet (run `make artifacts`)",
+)
+def test_built_artifacts_complete():
+    import json
+
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    for name in aot.HLO_DATASETS:
+        d = os.path.join(root, name)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        assert meta["n_layers"] == len(meta["layers"])
+        tensors = binfmt.read_archive(os.path.join(d, "tensors.bin"))
+        for li in range(meta["n_layers"]):
+            assert os.path.exists(os.path.join(d, f"unit{li}.hlo.txt"))
+            assert f"layer{li}_w" in tensors
+            assert f"layer{li}_centroids" in tensors
+        assert "test_x" in tensors and "test_y" in tensors
+        assert len(tensors["test_x"]) == meta["n_test"]

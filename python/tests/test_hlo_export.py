@@ -1,0 +1,93 @@
+"""Regression tests for the HLO-text export path (aot.to_hlo_text).
+
+The nastiest failure mode we hit building this repo: XLA's default HLO
+printer ELIDES large constants (`constant({...})`), and the 0.5.1 text
+parser silently reads the elision back as zeros — the trained weights
+vanish from the artifact while everything still "works" (outputs become
+bias-only and input-independent). These tests pin the fix.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+
+
+def _lower(fn, *specs):
+    return jax.jit(fn).lower(*specs)
+
+
+def test_large_constants_are_printed():
+    w = np.arange(72.0, dtype=np.float32).reshape(9, 8) * 1.5
+    wj = jnp.asarray(w)
+
+    def f(x):
+        return (x @ wj,)
+
+    text = aot.to_hlo_text(_lower(f, jax.ShapeDtypeStruct((4, 9), jnp.float32)))
+    # The elided form must not appear, and a distinctive weight value must.
+    assert "constant({...})" not in text
+    assert "106.5" in text  # 71 * 1.5
+
+
+def test_metadata_stripped():
+    def f(x):
+        return (x * 2.0,)
+
+    text = aot.to_hlo_text(_lower(f, jax.ShapeDtypeStruct((4,), jnp.float32)))
+    # jax>=0.8 metadata attrs break the xla_extension 0.5.1 parser.
+    assert "source_end_line" not in text
+    assert "metadata=" not in text
+
+
+def test_exported_text_reparses():
+    from jax._src.lib import xla_client as xc
+
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((20, 12)), dtype=jnp.float32)
+
+    def f(x):
+        return (jax.nn.relu(x @ w),)
+
+    text = aot.to_hlo_text(_lower(f, jax.ShapeDtypeStruct((3, 20), jnp.float32)))
+    mod = xc._xla.hlo_module_from_text(text)  # must not raise
+    assert "parameter(0)" in mod.to_string()
+
+
+def test_output_is_input_dependent_after_roundtrip():
+    """End-to-end guard: lower -> text -> parse -> the weights survive.
+
+    We verify by checking that a distinctive trained-weight value is
+    present in the REPARSED module text (not just the printed one).
+    """
+    from jax._src.lib import xla_client as xc
+
+    w = np.full((10, 4), 7.125, dtype=np.float32)
+    w[3, 2] = -123.456
+    wj = jnp.asarray(w)
+
+    def f(x):
+        return (x @ wj,)
+
+    from jaxlib import _jax
+
+    text = aot.to_hlo_text(_lower(f, jax.ShapeDtypeStruct((2, 10), jnp.float32)))
+    opts = _jax.HloPrintOptions()
+    opts.print_large_constants = True  # default printing would elide again
+    reparsed = xc._xla.hlo_module_from_text(text).to_string(opts)
+    assert "-123.456" in reparsed, "weights lost in text round-trip"
+
+
+@pytest.mark.parametrize("ds", ["mnist", "vww"])
+def test_built_unit_hlo_contains_weights(ds):
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        ds, "unit0.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    text = open(path).read()
+    assert "constant({...})" not in text, "artifact has elided constants"
+    # unit0 bakes a (3,3,cin,cout) conv kernel: a large f32 constant exists.
+    assert text.count("constant(") >= 2

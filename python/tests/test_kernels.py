@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+A hypothesis-style seeded sweep over shapes (the image has no `hypothesis`
+package, so we enumerate a randomized-but-deterministic shape grid and a
+seeded value generator, which gives the same coverage reproducibly).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import conv2d as ck
+from compile.kernels import l1dist as lk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+# Randomized shape grid: awkward primes, tile multiples, degenerate dims.
+MATMUL_SHAPES = [(1, 1, 1), (1, 7, 3), (5, 5, 5), (8, 128, 8), (13, 27, 10),
+                 (64, 64, 64), (17, 19, 23), (128, 9, 130), (100, 150, 2),
+                 (196, 72, 16), (2, 301, 2)]
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+def test_matmul_matches_ref(m, k, n):
+    a = RNG.standard_normal((m, k)).astype(np.float32)
+    b = RNG.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(ck.matmul(jnp.array(a), jnp.array(b)))
+    want = np.asarray(ref.matmul_ref(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 4), (32, 16, 8)])
+def test_matmul_extreme_values(m, k, n):
+    # Large magnitudes + zeros: padding must stay exact.
+    a = (RNG.standard_normal((m, k)) * 1e3).astype(np.float32)
+    a[0, :] = 0.0
+    b = (RNG.standard_normal((k, n)) * 1e-3).astype(np.float32)
+    got = np.asarray(ck.matmul(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-3, atol=1e-3)
+    assert np.all(got[0, :] == 0.0)
+
+
+CONV_SHAPES = [(8, 8, 1, 4), (16, 16, 1, 8), (16, 16, 3, 16), (7, 9, 2, 5),
+               (5, 5, 4, 3)]
+
+
+@pytest.mark.parametrize("h,w,cin,cout", CONV_SHAPES)
+def test_conv2d_matches_ref(h, w, cin, cout):
+    x = RNG.standard_normal((h, w, cin)).astype(np.float32)
+    wgt = RNG.standard_normal((3, 3, cin, cout)).astype(np.float32)
+    b = RNG.standard_normal((cout,)).astype(np.float32)
+    got = np.asarray(ck.conv2d(jnp.array(x), jnp.array(wgt), jnp.array(b)))
+    want = np.asarray(ref.conv2d_ref(jnp.array(x), jnp.array(wgt), jnp.array(b)))
+    assert got.shape == (h - 2, w - 2, cout)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_naive_cross_check():
+    # Independent O(n^6) loop oracle — guards against a bug shared by the
+    # kernel and its im2col-based ref.
+    h, w, cin, cout = 6, 6, 2, 3
+    x = RNG.standard_normal((h, w, cin)).astype(np.float32)
+    wgt = RNG.standard_normal((3, 3, cin, cout)).astype(np.float32)
+    b = np.zeros(cout, np.float32)
+    want = np.zeros((h - 2, w - 2, cout), np.float32)
+    for i in range(h - 2):
+        for j in range(w - 2):
+            for co in range(cout):
+                want[i, j, co] = np.sum(x[i:i + 3, j:j + 3, :] * wgt[:, :, :, co])
+    got = np.asarray(ck.conv2d(jnp.array(x), jnp.array(wgt), jnp.array(b)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+L1_SHAPES = [(1, 1), (2, 5), (10, 64), (5, 150), (16, 37), (10, 128), (3, 257)]
+
+
+@pytest.mark.parametrize("k,f", L1_SHAPES)
+def test_l1dist_matches_ref(k, f):
+    c = RNG.standard_normal((k, f)).astype(np.float32)
+    x = RNG.standard_normal((f,)).astype(np.float32)
+    got = np.asarray(lk.l1dist(jnp.array(c), jnp.array(x)))
+    want = np.asarray(ref.l1dist_ref(jnp.array(c), jnp.array(x)))
+    assert got.shape == (k,)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_l1dist_properties():
+    # Metric sanity: d(x, x) = 0; symmetry in the abs; non-negativity.
+    c = RNG.standard_normal((4, 32)).astype(np.float32)
+    d_self = np.asarray(lk.l1dist(jnp.array(c), jnp.array(c[2])))
+    assert d_self[2] == pytest.approx(0.0, abs=1e-6)
+    assert np.all(d_self >= 0.0)
+
+
+def test_maxpool_ref():
+    x = np.arange(16, dtype=np.float32).reshape(4, 4, 1)
+    out = np.asarray(ref.maxpool2_ref(jnp.array(x)))
+    np.testing.assert_array_equal(out[..., 0], [[5, 7], [13, 15]])
+    # odd edge truncation
+    x5 = RNG.standard_normal((5, 5, 2)).astype(np.float32)
+    assert ref.maxpool2_ref(jnp.array(x5)).shape == (2, 2, 2)

@@ -1,0 +1,115 @@
+"""L2 model: shapes, pallas/jnp equivalence of whole units, training smoke."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import datasets, kmeans, model as M, train as T
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("name", list(M.NETWORKS))
+def test_layer_shapes_consistent(name):
+    spec = M.NETWORKS[name]
+    params = M.init_params(spec)
+    x = jnp.asarray(RNG.standard_normal(spec.input_shape).astype(np.float32))
+    acts = M.forward_all_layers(spec, params, x)
+    for act, shape in zip(acts, M.layer_shapes(spec)):
+        assert tuple(act.shape) == tuple(shape)
+    # final embedding is 1-D
+    assert acts[-1].ndim == 1
+
+
+@pytest.mark.parametrize("name", ["mnist", "vww"])
+def test_unit_fn_pallas_equals_jnp(name):
+    """The lowered unit (Pallas path) must equal the training path (jnp)."""
+    spec = M.NETWORKS[name]
+    params = M.init_params(spec, seed=3)
+    shapes = M.layer_shapes(spec)
+    for li in range(spec.n_layers):
+        in_shape = spec.input_shape if li == 0 else shapes[li - 1]
+        flat = int(np.prod(shapes[li]))
+        fidx = np.sort(RNG.choice(flat, size=min(16, flat), replace=False)).astype(np.int32)
+        cents = RNG.standard_normal((spec.n_classes, len(fidx))).astype(np.float32)
+        act_in = jnp.asarray(RNG.standard_normal(in_shape).astype(np.float32))
+        f_pl = M.unit_fn(spec, params, li, fidx, use_pallas=True)
+        f_np = M.unit_fn(spec, params, li, fidx, use_pallas=False)
+        a1, d1 = f_pl(act_in, jnp.asarray(cents))
+        a2, d2 = f_np(act_in, jnp.asarray(cents))
+        np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
+
+
+def test_dataset_determinism_and_shapes():
+    a = datasets.generate("mnist")
+    b = datasets.generate("mnist")
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    tx, ty, sx, sy, sd = a
+    spec = datasets.DATASETS["mnist"]
+    assert tx.shape == (spec.n_train, 16, 16, 1)
+    assert sx.shape == (spec.n_test, 16, 16, 1)
+    assert set(np.unique(ty)) <= set(range(spec.n_classes))
+    assert np.all((sd >= 0) & (sd <= 1))
+
+
+def test_environment_shift_identity_and_change():
+    _, _, sx, _, _ = datasets.generate("esc10")
+    assert datasets.environment_shift(sx, 0) is sx
+    e1 = datasets.environment_shift(sx, 1)
+    e2 = datasets.environment_shift(sx, 2)
+    assert e1.shape == sx.shape
+    # environments differ from the original and from each other
+    assert np.abs(e1 - sx).mean() > 0.05
+    assert np.abs(e2 - e1).mean() > 0.05
+
+
+def test_training_reduces_loss():
+    spec = M.NETWORKS["mnist"]
+    tx, ty, *_ = datasets.generate("mnist")
+    _, hist = T.train(spec, tx, ty, T.TrainConfig(steps=60, seed=1))
+    assert np.mean(hist[-10:]) < np.mean(hist[:10]) * 0.8
+
+
+def test_cross_entropy_training_runs():
+    spec = M.NETWORKS["mnist"]
+    tx, ty, *_ = datasets.generate("mnist")
+    params, hist = T.train(spec, tx, ty,
+                           T.TrainConfig(loss="cross_entropy", steps=40))
+    assert len(params) == spec.n_layers
+    assert np.isfinite(hist).all()
+
+
+def test_pair_sampling_balance():
+    rng = np.random.default_rng(0)
+    x = RNG.standard_normal((100, 4)).astype(np.float32)
+    y = np.repeat(np.arange(5), 20).astype(np.int32)
+    x1, x2, yy = T._sample_pairs(rng, x, y, 64)
+    assert yy.mean() == pytest.approx(0.5, abs=0.01)
+
+
+def test_kmeans_classifier_construction():
+    spec = M.NETWORKS["mnist"]
+    tx, ty, sx, sy, _ = datasets.generate("mnist")
+    params, _ = T.train(spec, tx, ty, T.TrainConfig(steps=120))
+    clfs = kmeans.build_classifiers(spec, params, tx, ty)
+    assert len(clfs) == spec.n_layers
+    shapes = M.layer_shapes(spec)
+    for clf, shape in zip(clfs, shapes):
+        k, f = clf.centroids.shape
+        assert k == spec.n_classes
+        assert f <= spec.n_features
+        assert np.all(clf.feat_idx < np.prod(shape))
+        assert np.all(np.diff(clf.feat_idx) > 0)  # sorted, unique
+        assert clf.threshold >= 0.0
+        assert len(clf.curve) > 0
+        # curve exit-rate must be monotonically non-increasing in threshold
+        rates = [r for _, r, _ in clf.curve]
+        assert all(a >= b - 1e-9 for a, b in zip(rates, rates[1:]))
+        # classifier must beat chance on its own training data
+        feats = kmeans.collect_features(spec, params, tx[:200])[0]
+        pred, _ = kmeans._classify(clf.centroids, clf.centroid_label,
+                                   feats[:, clf.feat_idx]) if clf is clfs[0] else (None, None)
+        if pred is not None:
+            assert (pred == ty[:200]).mean() > 1.5 / spec.n_classes

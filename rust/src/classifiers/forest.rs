@@ -1,0 +1,255 @@
+//! Random forest (bagged CART trees, Gini impurity, feature subsampling) —
+//! the "Random Forest" row of Table 7.
+
+use super::Baseline;
+use crate::util::rng::Pcg32;
+
+struct Node {
+    /// Leaf if `feature == usize::MAX`.
+    feature: usize,
+    threshold: f32,
+    left: usize,
+    right: usize,
+    label: i32,
+}
+
+struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict(&self, x: &[f32]) -> i32 {
+        let mut i = 0usize;
+        loop {
+            let n = &self.nodes[i];
+            if n.feature == usize::MAX {
+                return n.label;
+            }
+            i = if x[n.feature] <= n.threshold { n.left } else { n.right };
+        }
+    }
+}
+
+pub struct RandomForest {
+    trees: Vec<Tree>,
+    sample_len: usize,
+    n_classes: usize,
+}
+
+struct Builder<'a> {
+    xs: &'a [f32],
+    ys: &'a [i32],
+    sample_len: usize,
+    n_classes: usize,
+    max_depth: usize,
+    min_leaf: usize,
+    n_feat_try: usize,
+}
+
+impl<'a> Builder<'a> {
+    fn gini(&self, idx: &[usize]) -> f64 {
+        let mut counts = vec![0f64; self.n_classes];
+        for &i in idx {
+            counts[self.ys[i] as usize] += 1.0;
+        }
+        let n = idx.len() as f64;
+        1.0 - counts.iter().map(|c| (c / n) * (c / n)).sum::<f64>()
+    }
+
+    fn majority(&self, idx: &[usize]) -> i32 {
+        let mut counts = vec![0u32; self.n_classes];
+        for &i in idx {
+            counts[self.ys[i] as usize] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+
+    fn build(&self, idx: &mut Vec<usize>, depth: usize, rng: &mut Pcg32,
+             nodes: &mut Vec<Node>) -> usize {
+        let label = self.majority(idx);
+        let impurity = self.gini(idx);
+        if depth >= self.max_depth || idx.len() < 2 * self.min_leaf || impurity < 1e-9 {
+            nodes.push(Node { feature: usize::MAX, threshold: 0.0, left: 0, right: 0, label });
+            return nodes.len() - 1;
+        }
+        // Random feature subset; best threshold by Gini gain over a few
+        // sampled split points.
+        let mut best: Option<(usize, f32, f64)> = None;
+        for _ in 0..self.n_feat_try {
+            let f = rng.below(self.sample_len as u64) as usize;
+            for _ in 0..4 {
+                let pick = idx[rng.below(idx.len() as u64) as usize];
+                let thr = self.xs[pick * self.sample_len + f];
+                let (mut l, mut r) = (Vec::new(), Vec::new());
+                for &i in idx.iter() {
+                    if self.xs[i * self.sample_len + f] <= thr {
+                        l.push(i);
+                    } else {
+                        r.push(i);
+                    }
+                }
+                if l.len() < self.min_leaf || r.len() < self.min_leaf {
+                    continue;
+                }
+                let n = idx.len() as f64;
+                let w =
+                    self.gini(&l) * l.len() as f64 / n + self.gini(&r) * r.len() as f64 / n;
+                let gain = impurity - w;
+                if best.map(|(_, _, g)| gain > g).unwrap_or(gain > 1e-9) {
+                    best = Some((f, thr, gain));
+                }
+            }
+        }
+        let Some((f, thr, _)) = best else {
+            nodes.push(Node { feature: usize::MAX, threshold: 0.0, left: 0, right: 0, label });
+            return nodes.len() - 1;
+        };
+        let (mut l, mut r) = (Vec::new(), Vec::new());
+        for &i in idx.iter() {
+            if self.xs[i * self.sample_len + f] <= thr {
+                l.push(i);
+            } else {
+                r.push(i);
+            }
+        }
+        let left = self.build(&mut l, depth + 1, rng, nodes);
+        let right = self.build(&mut r, depth + 1, rng, nodes);
+        nodes.push(Node { feature: f, threshold: thr, left, right, label });
+        nodes.len() - 1
+    }
+}
+
+impl RandomForest {
+    pub fn fit(
+        xs: &[f32],
+        sample_len: usize,
+        ys: &[i32],
+        n_classes: usize,
+        n_trees: usize,
+        max_depth: usize,
+        seed: u64,
+    ) -> Self {
+        let n = ys.len();
+        let n_feat_try = ((sample_len as f64).sqrt() as usize).max(1) * 2;
+        let b = Builder {
+            xs,
+            ys,
+            sample_len,
+            n_classes,
+            max_depth,
+            min_leaf: 2,
+            n_feat_try,
+        };
+        let mut trees = Vec::with_capacity(n_trees);
+        let mut rng = Pcg32::seeded(seed);
+        for _ in 0..n_trees {
+            // Bootstrap sample.
+            let mut idx: Vec<usize> =
+                (0..n).map(|_| rng.below(n as u64) as usize).collect();
+            let mut nodes = Vec::new();
+            let root = b.build(&mut idx, 0, &mut rng, &mut nodes);
+            // Make the root index 0 by convention: rotate via wrapper.
+            if root != nodes.len() - 1 {
+                unreachable!("root is always pushed last");
+            }
+            // Store with root-last; prediction starts at last node.
+            nodes.reverse_root();
+            trees.push(Tree { nodes });
+        }
+        RandomForest { trees, sample_len, n_classes }
+    }
+}
+
+/// Helper: we built trees with the root as the LAST node; rewire indices so
+/// the root is node 0 (prediction loops start at 0).
+trait RootLast {
+    fn reverse_root(&mut self);
+}
+
+impl RootLast for Vec<Node> {
+    fn reverse_root(&mut self) {
+        let last = self.len() - 1;
+        if last == 0 {
+            return;
+        }
+        self.swap(0, last);
+        // Fix child indices that pointed at 0 or last.
+        for n in self.iter_mut() {
+            if n.feature != usize::MAX {
+                for c in [&mut n.left, &mut n.right] {
+                    if *c == last {
+                        *c = 0;
+                    } else if *c == 0 {
+                        *c = last;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Baseline for RandomForest {
+    fn name(&self) -> &'static str {
+        "forest"
+    }
+
+    fn predict(&self, sample: &[f32]) -> i32 {
+        debug_assert_eq!(sample.len(), self.sample_len);
+        let mut votes = vec![0u32; self.n_classes];
+        for t in &self.trees {
+            votes[t.predict(sample) as usize] += 1;
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn learns_axis_aligned_rule() {
+        // Class = (x0 > 0) as a simple axis split.
+        let mut rng = Pcg32::seeded(2);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..300 {
+            let v = rng.normal() as f32 * 2.0;
+            xs.push(v);
+            xs.push(rng.normal() as f32);
+            ys.push((v > 0.0) as i32);
+        }
+        let m = RandomForest::fit(&xs, 2, &ys, 2, 15, 6, 3);
+        let acc = super::super::accuracy(&m, &xs, 2, &ys);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn learns_xor_needs_depth() {
+        // XOR of signs: linear models fail; trees handle it.
+        let mut rng = Pcg32::seeded(4);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..400 {
+            let a = rng.normal() as f32;
+            let b = rng.normal() as f32;
+            xs.push(a);
+            xs.push(b);
+            ys.push(((a > 0.0) ^ (b > 0.0)) as i32);
+        }
+        let m = RandomForest::fit(&xs, 2, &ys, 2, 25, 8, 5);
+        let acc = super::super::accuracy(&m, &xs, 2, &ys);
+        assert!(acc > 0.8, "acc={acc}");
+    }
+}

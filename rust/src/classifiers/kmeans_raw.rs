@@ -1,0 +1,145 @@
+//! k-means on raw flattened inputs (Lloyd with labeled seeding) — the
+//! "k-means" row of Table 7. Unlike Zygarde's per-layer classifiers this
+//! sees no learned representation, which is the point of the comparison.
+
+use super::Baseline;
+
+pub struct KmeansRaw {
+    centroids: Vec<f32>,
+    sample_len: usize,
+    labels: Vec<i32>,
+}
+
+impl KmeansRaw {
+    pub fn fit(
+        xs: &[f32],
+        sample_len: usize,
+        ys: &[i32],
+        n_classes: usize,
+        iters: usize,
+    ) -> Self {
+        let n = ys.len();
+        // Seed at labeled class means.
+        let mut centroids = vec![0f32; n_classes * sample_len];
+        let mut counts = vec![0f32; n_classes];
+        for i in 0..n {
+            let c = ys[i] as usize;
+            counts[c] += 1.0;
+            let row = &xs[i * sample_len..(i + 1) * sample_len];
+            for (acc, &v) in centroids[c * sample_len..(c + 1) * sample_len]
+                .iter_mut()
+                .zip(row)
+            {
+                *acc += v;
+            }
+        }
+        for c in 0..n_classes {
+            let cnt = counts[c].max(1.0);
+            for v in &mut centroids[c * sample_len..(c + 1) * sample_len] {
+                *v /= cnt;
+            }
+        }
+        // Lloyd iterations.
+        let mut assign = vec![0usize; n];
+        for _ in 0..iters {
+            for i in 0..n {
+                let row = &xs[i * sample_len..(i + 1) * sample_len];
+                let mut best = (0usize, f32::INFINITY);
+                for c in 0..n_classes {
+                    let cent = &centroids[c * sample_len..(c + 1) * sample_len];
+                    let mut d = 0f32;
+                    for (a, b) in row.iter().zip(cent) {
+                        let x = a - b;
+                        d += x * x;
+                    }
+                    if d < best.1 {
+                        best = (c, d);
+                    }
+                }
+                assign[i] = best.0;
+            }
+            centroids.iter_mut().for_each(|v| *v = 0.0);
+            counts.iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1.0;
+                let row = &xs[i * sample_len..(i + 1) * sample_len];
+                for (acc, &v) in centroids[c * sample_len..(c + 1) * sample_len]
+                    .iter_mut()
+                    .zip(row)
+                {
+                    *acc += v;
+                }
+            }
+            for c in 0..n_classes {
+                let cnt = counts[c].max(1.0);
+                for v in &mut centroids[c * sample_len..(c + 1) * sample_len] {
+                    *v /= cnt;
+                }
+            }
+        }
+        // Majority label per cluster.
+        let mut labels = vec![0i32; n_classes];
+        for c in 0..n_classes {
+            let mut votes = vec![0u32; n_classes];
+            for i in 0..n {
+                if assign[i] == c {
+                    votes[ys[i] as usize] += 1;
+                }
+            }
+            labels[c] = votes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i as i32)
+                .unwrap_or(c as i32);
+        }
+        KmeansRaw { centroids, sample_len, labels }
+    }
+}
+
+impl Baseline for KmeansRaw {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn predict(&self, sample: &[f32]) -> i32 {
+        let k = self.labels.len();
+        let mut best = (0usize, f32::INFINITY);
+        for c in 0..k {
+            let cent = &self.centroids[c * self.sample_len..(c + 1) * self.sample_len];
+            let mut d = 0f32;
+            for (a, b) in sample.iter().zip(cent) {
+                let x = a - b;
+                d += x * x;
+            }
+            if d < best.1 {
+                best = (c, d);
+            }
+        }
+        self.labels[best.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn recovers_gaussian_blobs() {
+        let mut rng = Pcg32::seeded(5);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        let centers = [(-3.0, -3.0), (3.0, 3.0), (-3.0, 3.0)];
+        for _ in 0..120 {
+            let c = rng.below(3) as usize;
+            xs.push(centers[c].0 + 0.5 * rng.normal() as f32);
+            xs.push(centers[c].1 + 0.5 * rng.normal() as f32);
+            ys.push(c as i32);
+        }
+        let m = KmeansRaw::fit(&xs, 2, &ys, 3, 10);
+        let acc = super::super::accuracy(&m, &xs, 2, &ys);
+        assert!(acc > 0.95, "acc={acc}");
+    }
+}

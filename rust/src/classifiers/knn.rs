@@ -1,0 +1,93 @@
+//! k-nearest-neighbours on raw flattened inputs (L2 metric, majority vote).
+
+use super::Baseline;
+
+pub struct Knn {
+    pub k: usize,
+    train_x: Vec<f32>,
+    sample_len: usize,
+    train_y: Vec<i32>,
+    n_classes: usize,
+}
+
+impl Knn {
+    pub fn fit(k: usize, xs: &[f32], sample_len: usize, ys: &[i32], n_classes: usize) -> Self {
+        Knn {
+            k,
+            train_x: xs.to_vec(),
+            sample_len,
+            train_y: ys.to_vec(),
+            n_classes,
+        }
+    }
+}
+
+impl Baseline for Knn {
+    fn name(&self) -> &'static str {
+        "knn"
+    }
+
+    fn predict(&self, sample: &[f32]) -> i32 {
+        let n = self.train_y.len();
+        // Partial selection of the k nearest (k is tiny; linear scan).
+        let mut best: Vec<(f32, i32)> = Vec::with_capacity(self.k + 1);
+        for i in 0..n {
+            let row = &self.train_x[i * self.sample_len..(i + 1) * self.sample_len];
+            let mut d = 0f32;
+            for (a, b) in sample.iter().zip(row) {
+                let diff = a - b;
+                d += diff * diff;
+            }
+            if best.len() < self.k || d < best.last().unwrap().0 {
+                let pos = best.partition_point(|&(bd, _)| bd < d);
+                best.insert(pos, (d, self.train_y[i]));
+                if best.len() > self.k {
+                    best.pop();
+                }
+            }
+        }
+        let mut votes = vec![0u32; self.n_classes];
+        for &(_, y) in &best {
+            votes[y as usize] += 1;
+        }
+        votes
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separable_clusters_classified() {
+        // Two 2-D blobs.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..20 {
+            let o = (i % 5) as f32 * 0.01;
+            xs.extend([0.0 + o, 0.0 + o]);
+            ys.push(0);
+            xs.extend([5.0 + o, 5.0 + o]);
+            ys.push(1);
+            xs.extend([0.0, 0.0]); // keep interleaved layout honest
+            ys.push(0);
+        }
+        let m = Knn::fit(3, &xs, 2, &ys, 2);
+        assert_eq!(m.predict(&[0.2, -0.1]), 0);
+        assert_eq!(m.predict(&[4.9, 5.2]), 1);
+    }
+
+    #[test]
+    fn k_one_matches_nearest() {
+        let xs = vec![0.0, 0.0, 10.0, 10.0];
+        let ys = vec![3, 7];
+        let m = Knn::fit(1, &xs, 2, &ys, 8);
+        assert_eq!(m.predict(&[1.0, 1.0]), 3);
+        assert_eq!(m.predict(&[9.0, 9.0]), 7);
+    }
+}

@@ -1,0 +1,27 @@
+//! Traditional-classifier baselines for Table 7 (paper §11.1): KNN,
+//! k-means, linear SVM (one-vs-rest Pegasos), and a random forest —
+//! trained on raw pixels, exactly the comparison the paper makes to argue
+//! that DNN features are worth their cost on batteryless systems.
+
+pub mod forest;
+pub mod knn;
+pub mod kmeans_raw;
+pub mod svm;
+
+/// Common interface: fit on (x, y), predict a label per sample.
+pub trait Baseline {
+    fn name(&self) -> &'static str;
+    fn predict(&self, sample: &[f32]) -> i32;
+}
+
+/// Accuracy of a fitted baseline over a test set of flattened samples.
+pub fn accuracy(model: &dyn Baseline, xs: &[f32], sample_len: usize, ys: &[i32]) -> f64 {
+    let n = ys.len();
+    let mut correct = 0usize;
+    for i in 0..n {
+        if model.predict(&xs[i * sample_len..(i + 1) * sample_len]) == ys[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / n.max(1) as f64
+}

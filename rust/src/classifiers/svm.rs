@@ -1,0 +1,125 @@
+//! Linear one-vs-rest SVM trained with Pegasos (stochastic sub-gradient on
+//! the hinge loss) — the "SVM" row of Table 7.
+
+use super::Baseline;
+use crate::util::rng::Pcg32;
+
+pub struct LinearSvm {
+    /// (n_classes, sample_len + 1) weights incl. bias.
+    w: Vec<f32>,
+    sample_len: usize,
+    n_classes: usize,
+}
+
+impl LinearSvm {
+    pub fn fit(
+        xs: &[f32],
+        sample_len: usize,
+        ys: &[i32],
+        n_classes: usize,
+        epochs: usize,
+        lambda: f32,
+        seed: u64,
+    ) -> Self {
+        let n = ys.len();
+        let d = sample_len + 1;
+        let mut w = vec![0f32; n_classes * d];
+        let mut rng = Pcg32::seeded(seed);
+        let mut t = 0u64;
+        for _ in 0..epochs {
+            for _ in 0..n {
+                t += 1;
+                let i = rng.below(n as u64) as usize;
+                let x = &xs[i * sample_len..(i + 1) * sample_len];
+                let lr = 1.0 / (lambda * t as f32);
+                for c in 0..n_classes {
+                    let y = if ys[i] as usize == c { 1.0f32 } else { -1.0 };
+                    let wc = &mut w[c * d..(c + 1) * d];
+                    let margin = {
+                        let mut m = wc[sample_len]; // bias
+                        for (a, b) in x.iter().zip(wc.iter()) {
+                            m += a * b;
+                        }
+                        y * m
+                    };
+                    // w <- (1 - lr*lambda) w [+ lr*y*x if margin < 1]
+                    let shrink = 1.0 - lr * lambda;
+                    for v in wc.iter_mut() {
+                        *v *= shrink;
+                    }
+                    if margin < 1.0 {
+                        for (v, &xv) in wc.iter_mut().zip(x) {
+                            *v += lr * y * xv;
+                        }
+                        wc[sample_len] += lr * y;
+                    }
+                }
+            }
+        }
+        LinearSvm { w, sample_len, n_classes }
+    }
+}
+
+impl Baseline for LinearSvm {
+    fn name(&self) -> &'static str {
+        "svm"
+    }
+
+    fn predict(&self, sample: &[f32]) -> i32 {
+        let d = self.sample_len + 1;
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for c in 0..self.n_classes {
+            let wc = &self.w[c * d..(c + 1) * d];
+            let mut s = wc[self.sample_len];
+            for (a, b) in sample.iter().zip(wc.iter()) {
+                s += a * b;
+            }
+            if s > best.1 {
+                best = (c, s);
+            }
+        }
+        best.0 as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn separates_linear_blobs() {
+        let mut rng = Pcg32::seeded(11);
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..200 {
+            let c = rng.below(2) as usize;
+            let off = if c == 0 { -2.0 } else { 2.0 };
+            xs.push(off + 0.6 * rng.normal() as f32);
+            xs.push(off + 0.6 * rng.normal() as f32);
+            ys.push(c as i32);
+        }
+        let m = LinearSvm::fit(&xs, 2, &ys, 2, 8, 0.01, 1);
+        let acc = super::super::accuracy(&m, &xs, 2, &ys);
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn multiclass_one_vs_rest() {
+        // Three corner blobs in 2-D (each class linearly separable from
+        // the rest — the setting one-vs-rest handles).
+        let mut rng = Pcg32::seeded(3);
+        let centers = [(-4.0, -4.0), (4.0, -4.0), (0.0, 5.0)];
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..240 {
+            let c = rng.below(3) as usize;
+            xs.push(centers[c].0 + 0.5 * rng.normal() as f32);
+            xs.push(centers[c].1 + 0.5 * rng.normal() as f32);
+            ys.push(c as i32);
+        }
+        let m = LinearSvm::fit(&xs, 2, &ys, 3, 15, 0.005, 2);
+        let acc = super::super::accuracy(&m, &xs, 2, &ys);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+}

@@ -1,0 +1,148 @@
+//! Schedulability analysis (paper §5.3).
+//!
+//! For an imprecise scheduler, N sporadic tasks are schedulable when
+//! Σ C_i/T_i ≤ 1 with C_i counting only mandatory work. Intermittence is
+//! modeled as an extra highest-priority sporadic *energy task* whose
+//! execution time is the outage duration: Σ C_i/T_i + C_e/T_e ≤ 1, where
+//! E[C_e] = η/(1−η) (geometric state persistence). The necessary
+//! condition on the outage inter-arrival T_E follows:
+//!
+//! ```text
+//! T_E ≥ (η/(1−η)) / (1 − Σ C_i/T_i)
+//! ```
+
+use super::task::TaskSpec;
+use crate::energy::events::expected_outage_events;
+
+/// CPU utilization of the task set, counting only mandatory work when
+/// `mandatory_fraction` < 1 (the expected fraction of unit time that is
+/// mandatory under the dynamic partition — estimated from traces).
+pub fn utilization(tasks: &[&TaskSpec], mandatory_fraction: f64) -> f64 {
+    tasks
+        .iter()
+        .map(|t| t.wcet_ms() * mandatory_fraction / t.period_ms)
+        .sum()
+}
+
+/// Expected mandatory fraction of a task's WCET from its trace set: the
+/// mean over samples of (time of units 0..=exit) / (time of all units).
+pub fn mandatory_fraction(task: &TaskSpec) -> f64 {
+    if task.traces.is_empty() || !task.imprecise {
+        return 1.0;
+    }
+    let total: f64 = task.unit_time_ms.iter().sum();
+    let mut acc = 0.0;
+    for tr in task.traces.iter() {
+        let m: f64 = task.unit_time_ms[..=tr.exit_unit].iter().sum();
+        acc += m / total;
+    }
+    acc / task.traces.len() as f64
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Schedulability {
+    /// Σ C_i/T_i over mandatory work.
+    pub utilization: f64,
+    /// E[C_e] in energy-event units, η/(1−η).
+    pub expected_outage: f64,
+    /// Minimum outage inter-arrival T_E for the necessary condition.
+    pub min_energy_period: f64,
+    /// Whether the necessary condition can hold at all (utilization < 1).
+    pub feasible: bool,
+}
+
+/// The §5.3 necessary condition for N sporadic imprecise tasks on an
+/// intermittently-powered system with predictability η.
+pub fn analyze(tasks: &[&TaskSpec], eta: f64) -> Schedulability {
+    let mf: f64 = if tasks.is_empty() {
+        1.0
+    } else {
+        tasks.iter().map(|t| mandatory_fraction(t)).sum::<f64>() / tasks.len() as f64
+    };
+    let u = utilization(tasks, mf);
+    let ce = expected_outage_events(eta);
+    let feasible = u < 1.0;
+    let min_t_e = if feasible { ce / (1.0 - u) } else { f64::INFINITY };
+    Schedulability {
+        utilization: u,
+        expected_outage: ce,
+        min_energy_period: min_t_e,
+        feasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::trace::{SampleTrace, UnitOutcome};
+    use std::sync::Arc;
+
+    fn spec(period: f64, unit_ms: Vec<f64>, exit_units: &[usize]) -> TaskSpec {
+        let n = unit_ms.len();
+        let traces = exit_units
+            .iter()
+            .map(|&e| SampleTrace {
+                label: 0,
+                units: (0..n)
+                    .map(|i| UnitOutcome { gap: 0.0, pred: 0, exit: i == e, correct: true })
+                    .collect(),
+                exit_unit: e,
+                oracle_unit: None,
+            })
+            .collect();
+        TaskSpec {
+            id: 0,
+            name: "t".into(),
+            period_ms: period,
+            deadline_ms: period,
+            unit_energy_mj: vec![1.0; n],
+            unit_fragments: vec![1; n],
+            unit_time_ms: unit_ms,
+            release_energy_mj: 0.0,
+            traces: Arc::new(traces),
+            imprecise: true,
+        }
+    }
+
+    #[test]
+    fn mandatory_fraction_from_traces() {
+        // 2 units of 50 ms each; half the samples exit at unit 0, half at 1.
+        let t = spec(1000.0, vec![50.0, 50.0], &[0, 1]);
+        let mf = mandatory_fraction(&t);
+        assert!((mf - 0.75).abs() < 1e-12); // (0.5 + 1.0) / 2
+    }
+
+    #[test]
+    fn utilization_scales_with_mandatory_fraction() {
+        let t = spec(200.0, vec![50.0, 50.0], &[0]);
+        assert!((utilization(&[&t], 1.0) - 0.5).abs() < 1e-12);
+        assert!((utilization(&[&t], 0.5) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_energy_period_grows_with_eta_and_load() {
+        let light = spec(1000.0, vec![100.0], &[0]);
+        let a = analyze(&[&light], 0.5);
+        let b = analyze(&[&light], 0.9);
+        assert!(b.min_energy_period > a.min_energy_period);
+        let heavy = spec(125.0, vec![100.0], &[0]);
+        let c = analyze(&[&heavy], 0.5);
+        assert!(c.min_energy_period > a.min_energy_period);
+    }
+
+    #[test]
+    fn overload_is_infeasible() {
+        let t = spec(50.0, vec![100.0], &[0]);
+        let s = analyze(&[&t], 0.5);
+        assert!(!s.feasible);
+        assert!(s.min_energy_period.is_infinite());
+    }
+
+    #[test]
+    fn persistent_power_needs_no_energy_slack() {
+        let t = spec(1000.0, vec![100.0], &[0]);
+        let s = analyze(&[&t], 0.0);
+        assert_eq!(s.expected_outage, 0.0);
+        assert_eq!(s.min_energy_period, 0.0);
+    }
+}

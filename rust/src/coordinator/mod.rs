@@ -1,0 +1,13 @@
+//! The Zygarde coordinator (paper §4–5): imprecise sporadic task model,
+//! dynamic mandatory/optional partitioning, the priority functions ζ
+//! (Eq. 6) and ζ_I (Eq. 7), the online schedulers (Zygarde, EDF, EDF-M,
+//! RR), and the schedulability analysis of §5.3.
+
+pub mod analysis;
+pub mod priority;
+pub mod sched;
+pub mod task;
+
+pub use priority::{zeta, zeta_intermittent, EnergyView, PriorityParams};
+pub use sched::{ExitPolicy, Scheduler, SchedulerKind};
+pub use task::{Job, JobState, TaskSpec};

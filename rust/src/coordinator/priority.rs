@@ -1,0 +1,160 @@
+//! The priority functions ζ (Eq. 6) and ζ_I (Eq. 7).
+//!
+//!   ζ  = (1 − α(d − t_c)) + (1 − βΨ) + γ
+//!
+//! term 1: tighter remaining deadline ⇒ higher priority;
+//! term 2: lower utility Ψ (less confident classification) ⇒ higher
+//!         priority — uncertain jobs need more computation;
+//! term 3: γ = 1 if the unit under consideration is mandatory.
+//!
+//!   ζ_I = ζ                           when η·E_curr ≥ E_opt
+//!       = γ·(term1 + term2)           when η·E_curr <  E_opt
+//!
+//! i.e. under energy pressure only mandatory units score, and optional
+//! units score exactly 0 (never selected while any mandatory unit exists,
+//! and not selected at all by the engine's optional gate).
+
+use super::task::Job;
+
+/// Scaling parameters: α, β are "the inverse of the maximum deadline and
+/// utility, respectively" (paper §5.1).
+#[derive(Clone, Copy, Debug)]
+pub struct PriorityParams {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl PriorityParams {
+    pub fn new(max_deadline_ms: f64, max_utility: f64) -> Self {
+        PriorityParams {
+            alpha: 1.0 / max_deadline_ms.max(1e-9),
+            beta: 1.0 / max_utility.max(1e-9) as f64,
+        }
+    }
+}
+
+/// Scheduler-visible energy state (supplied by the EnergyManager).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyView {
+    pub e_curr_mj: f64,
+    pub e_opt_mj: f64,
+    pub e_man_mj: f64,
+    pub eta: f64,
+}
+
+impl EnergyView {
+    /// Persistent-power view (η = 1, storage unbounded).
+    pub fn persistent() -> Self {
+        EnergyView { e_curr_mj: f64::MAX, e_opt_mj: 0.0, e_man_mj: 0.0, eta: 1.0 }
+    }
+
+    pub fn optional_allowed(&self) -> bool {
+        self.eta * self.e_curr_mj >= self.e_opt_mj
+    }
+}
+
+/// Eq. 6 for the job's next unit at scheduler-believed time `t_c`.
+pub fn zeta(job: &Job, t_c_ms: f64, p: PriorityParams) -> f64 {
+    let term_deadline = 1.0 - p.alpha * (job.deadline_ms - t_c_ms);
+    let term_utility = 1.0 - p.beta * job.utility as f64;
+    let gamma = job.next_is_mandatory() as u8 as f64;
+    term_deadline + term_utility + gamma
+}
+
+/// Eq. 7.
+pub fn zeta_intermittent(job: &Job, t_c_ms: f64, p: PriorityParams, e: &EnergyView) -> f64 {
+    let term_deadline = 1.0 - p.alpha * (job.deadline_ms - t_c_ms);
+    let term_utility = 1.0 - p.beta * job.utility as f64;
+    let gamma = job.next_is_mandatory() as u8 as f64;
+    if e.optional_allowed() {
+        term_deadline + term_utility + gamma
+    } else {
+        gamma * (term_deadline + term_utility)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Job, JobState, TaskSpec};
+    use std::sync::Arc;
+
+    fn job(deadline: f64, utility: f32, mandatory: bool) -> Job {
+        let spec = TaskSpec {
+            id: 0,
+            name: "t".into(),
+            period_ms: 100.0,
+            deadline_ms: deadline,
+            unit_time_ms: vec![10.0],
+            unit_energy_mj: vec![1.0],
+            unit_fragments: vec![1],
+            release_energy_mj: 0.0,
+            traces: Arc::new(vec![]),
+            imprecise: true,
+        };
+        let mut j = Job::new(&spec, 0, 0.0, 0);
+        j.utility = utility;
+        if !mandatory {
+            j.state = JobState::Optional;
+        }
+        j
+    }
+
+    const P: PriorityParams = PriorityParams { alpha: 1.0 / 1000.0, beta: 1.0 / 10.0 };
+
+    #[test]
+    fn tighter_deadline_wins() {
+        let tight = job(100.0, 5.0, true);
+        let loose = job(900.0, 5.0, true);
+        assert!(zeta(&tight, 0.0, P) > zeta(&loose, 0.0, P));
+    }
+
+    #[test]
+    fn lower_utility_wins() {
+        let unsure = job(500.0, 1.0, true);
+        let confident = job(500.0, 9.0, true);
+        assert!(zeta(&unsure, 0.0, P) > zeta(&confident, 0.0, P));
+    }
+
+    #[test]
+    fn mandatory_beats_optional() {
+        let m = job(500.0, 5.0, true);
+        let o = job(500.0, 5.0, false);
+        assert!(zeta(&m, 0.0, P) > zeta(&o, 0.0, P));
+        // γ bonus (1.0) dominates any in-range utility/deadline spread here.
+        assert!((zeta(&m, 0.0, P) - zeta(&o, 0.0, P) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priority_rises_as_time_passes() {
+        let j = job(500.0, 5.0, true);
+        assert!(zeta(&j, 400.0, P) > zeta(&j, 0.0, P));
+    }
+
+    #[test]
+    fn zeta_i_zeroes_optional_under_pressure() {
+        let o = job(500.0, 5.0, false);
+        let m = job(500.0, 5.0, true);
+        let starved = EnergyView { e_curr_mj: 10.0, e_opt_mj: 100.0, e_man_mj: 0.1, eta: 0.5 };
+        assert_eq!(zeta_intermittent(&o, 0.0, P, &starved), 0.0);
+        assert!(zeta_intermittent(&m, 0.0, P, &starved) > 0.0);
+        // With plentiful predictable energy ζ_I == ζ.
+        let rich = EnergyView { e_curr_mj: 1000.0, e_opt_mj: 100.0, e_man_mj: 0.1, eta: 0.9 };
+        assert_eq!(zeta_intermittent(&o, 0.0, P, &rich), zeta(&o, 0.0, P));
+    }
+
+    #[test]
+    fn eta_gates_like_paper_cases() {
+        // (a) predictable + keeping charged; (b) medium-predictable + more
+        // than sufficient energy -> optional allowed.
+        let a = EnergyView { e_curr_mj: 100.0, e_opt_mj: 90.0, e_man_mj: 0.1, eta: 0.95 };
+        assert!(a.optional_allowed());
+        let b = EnergyView { e_curr_mj: 200.0, e_opt_mj: 90.0, e_man_mj: 0.1, eta: 0.5 };
+        assert!(b.optional_allowed());
+        // unpredictable, or predictable-but-insufficient -> blocked.
+        let c = EnergyView { e_curr_mj: 100.0, e_opt_mj: 90.0, e_man_mj: 0.1, eta: 0.1 };
+        assert!(!c.optional_allowed());
+        let d = EnergyView { e_curr_mj: 50.0, e_opt_mj: 90.0, e_man_mj: 0.1, eta: 0.95 };
+        assert!(!d.optional_allowed());
+    }
+}

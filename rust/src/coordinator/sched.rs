@@ -1,0 +1,258 @@
+//! Online schedulers: Zygarde (ζ_I), EDF, EDF-M, and round-robin.
+//!
+//! All schedulers run under *limited preemption* (paper §4.1): the engine
+//! invokes `pick` only at unit boundaries and at deadlines, and the chosen
+//! job executes exactly one unit (fragment-by-fragment) before returning
+//! to the queue.
+//!
+//! Early-termination policy is orthogonal to the picking order (the paper
+//! evaluates EDF without early exit, EDF-M and Zygarde with the utility
+//! test, and an oracle policy in Fig. 16), so it is a separate enum the
+//! engine applies when a unit completes.
+
+use super::priority::{zeta_intermittent, EnergyView, PriorityParams};
+use super::task::Job;
+
+/// What ends a job early (applied by the engine at unit completion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExitPolicy {
+    /// Run every unit (SONIC-style full execution).
+    None,
+    /// Exit once the utility test passes AND the scheduler decides not to
+    /// run optional units (Zygarde / EDF-M behaviour).
+    Utility,
+    /// Exit at the earliest unit whose prediction is already correct
+    /// (Fig. 16's oracle; needs ground truth).
+    Oracle,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Zygarde,
+    Edf,
+    /// EDF over mandatory parts only: optional units are never executed.
+    EdfMandatory,
+    /// Task-round-robin, *non-preemptive*: the picked job runs to
+    /// completion before the cursor advances (SONIC-RR baseline — SONIC
+    /// has no unit-boundary preemption).
+    RoundRobin,
+}
+
+impl SchedulerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::Zygarde => "zygarde",
+            SchedulerKind::Edf => "edf",
+            SchedulerKind::EdfMandatory => "edf-m",
+            SchedulerKind::RoundRobin => "rr",
+        }
+    }
+
+    /// Default exit policy the paper pairs with each scheduler (§8.5).
+    pub fn default_exit(self) -> ExitPolicy {
+        match self {
+            SchedulerKind::Zygarde | SchedulerKind::EdfMandatory => ExitPolicy::Utility,
+            SchedulerKind::Edf | SchedulerKind::RoundRobin => ExitPolicy::None,
+        }
+    }
+}
+
+/// Scheduler state (round-robin cursor; ζ parameters).
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    pub kind: SchedulerKind,
+    pub params: PriorityParams,
+    rr_cursor: usize,
+    /// RR's in-flight job (non-preemptive execution).
+    rr_current: Option<u64>,
+}
+
+impl Scheduler {
+    pub fn new(kind: SchedulerKind, params: PriorityParams) -> Self {
+        Scheduler { kind, params, rr_cursor: 0, rr_current: None }
+    }
+
+    /// Choose the queue index of the job whose next unit should run, or
+    /// None if nothing is eligible (e.g. only optional units under energy
+    /// pressure). `now_ms` is the *scheduler-believed* time.
+    pub fn pick(&mut self, queue: &[Job], now_ms: f64, energy: &EnergyView) -> Option<usize> {
+        if queue.is_empty() {
+            return None;
+        }
+        match self.kind {
+            SchedulerKind::Zygarde => {
+                let mut best: Option<(usize, f64)> = None;
+                for (i, j) in queue.iter().enumerate() {
+                    if j.finished() {
+                        continue;
+                    }
+                    // Under energy pressure optional units are ineligible
+                    // (their ζ_I is 0; treat as unschedulable, not merely
+                    // lowest — matches Table 2's reasoning at t2).
+                    if !j.next_is_mandatory() && !energy.optional_allowed() {
+                        continue;
+                    }
+                    let z = zeta_intermittent(j, now_ms, self.params, energy);
+                    if best.map(|(_, bz)| z > bz).unwrap_or(true) {
+                        best = Some((i, z));
+                    }
+                }
+                best.map(|(i, _)| i)
+            }
+            SchedulerKind::Edf => queue
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| !j.finished())
+                .min_by(|(_, a), (_, b)| a.deadline_ms.partial_cmp(&b.deadline_ms).unwrap())
+                .map(|(i, _)| i),
+            SchedulerKind::EdfMandatory => queue
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| !j.finished() && j.next_is_mandatory())
+                .min_by(|(_, a), (_, b)| a.deadline_ms.partial_cmp(&b.deadline_ms).unwrap())
+                .map(|(i, _)| i),
+            SchedulerKind::RoundRobin => {
+                // Non-preemptive: finish the in-flight job first.
+                if let Some(id) = self.rr_current {
+                    if let Some(i) =
+                        queue.iter().position(|j| j.id == id && !j.finished())
+                    {
+                        return Some(i);
+                    }
+                    self.rr_current = None;
+                }
+                // Rotate over task ids; within a task, oldest job first.
+                let tasks: Vec<usize> = {
+                    let mut t: Vec<usize> =
+                        queue.iter().filter(|j| !j.finished()).map(|j| j.task).collect();
+                    t.sort_unstable();
+                    t.dedup();
+                    t
+                };
+                if tasks.is_empty() {
+                    return None;
+                }
+                let task = tasks[self.rr_cursor % tasks.len()];
+                self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                let pick = queue
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, j)| !j.finished() && j.task == task)
+                    .min_by(|(_, a), (_, b)| {
+                        a.release_ms.partial_cmp(&b.release_ms).unwrap()
+                    })
+                    .map(|(i, _)| i);
+                self.rr_current = pick.map(|i| queue[i].id);
+                pick
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{Job, JobState, TaskSpec};
+    use std::sync::Arc;
+
+    fn spec(id: usize) -> TaskSpec {
+        TaskSpec {
+            id,
+            name: format!("t{id}"),
+            period_ms: 100.0,
+            deadline_ms: 1000.0,
+            unit_time_ms: vec![10.0, 10.0],
+            unit_energy_mj: vec![1.0, 1.0],
+            unit_fragments: vec![1, 1],
+            release_energy_mj: 0.0,
+            traces: Arc::new(vec![]),
+            imprecise: true,
+        }
+    }
+
+    fn params() -> PriorityParams {
+        PriorityParams::new(1000.0, 10.0)
+    }
+
+    #[test]
+    fn edf_picks_earliest_deadline() {
+        let s = spec(0);
+        let mut q = vec![Job::new(&s, 0, 0.0, 0), Job::new(&s, 1, 0.0, 0)];
+        q[1].deadline_ms = 10.0;
+        let mut sch = Scheduler::new(SchedulerKind::Edf, params());
+        assert_eq!(sch.pick(&q, 0.0, &EnergyView::persistent()), Some(1));
+    }
+
+    #[test]
+    fn edfm_skips_optional_jobs() {
+        let s = spec(0);
+        let mut q = vec![Job::new(&s, 0, 0.0, 0), Job::new(&s, 1, 0.0, 0)];
+        q[0].deadline_ms = 5.0;
+        q[0].state = JobState::Optional; // confident already
+        let mut sch = Scheduler::new(SchedulerKind::EdfMandatory, params());
+        assert_eq!(sch.pick(&q, 0.0, &EnergyView::persistent()), Some(1));
+        q[1].state = JobState::Optional;
+        assert_eq!(sch.pick(&q, 0.0, &EnergyView::persistent()), None);
+    }
+
+    #[test]
+    fn zygarde_prefers_mandatory_then_tight_deadline() {
+        let s = spec(0);
+        let mut q = vec![Job::new(&s, 0, 0.0, 0), Job::new(&s, 1, 0.0, 0), Job::new(&s, 2, 0.0, 0)];
+        q[0].state = JobState::Optional;
+        q[0].deadline_ms = 5.0; // tightest but optional
+        q[1].deadline_ms = 500.0;
+        q[2].deadline_ms = 100.0;
+        let mut sch = Scheduler::new(SchedulerKind::Zygarde, params());
+        // plentiful energy: mandatory γ bonus still wins over optional
+        assert_eq!(sch.pick(&q, 0.0, &EnergyView::persistent()), Some(2));
+    }
+
+    #[test]
+    fn zygarde_blocks_optional_under_pressure() {
+        let s = spec(0);
+        let mut q = vec![Job::new(&s, 0, 0.0, 0)];
+        q[0].state = JobState::Optional;
+        let starved = EnergyView { e_curr_mj: 1.0, e_opt_mj: 100.0, e_man_mj: 0.01, eta: 0.4 };
+        let mut sch = Scheduler::new(SchedulerKind::Zygarde, params());
+        assert_eq!(sch.pick(&q, 0.0, &starved), None);
+        let rich = EnergyView { e_curr_mj: 1000.0, e_opt_mj: 100.0, e_man_mj: 0.01, eta: 0.9 };
+        assert_eq!(sch.pick(&q, 0.0, &rich), Some(0));
+    }
+
+    #[test]
+    fn zygarde_picks_tighter_deadline_among_optionals() {
+        // Table 2, t6: only optional jobs remain and energy is plentiful —
+        // the tighter deadline wins.
+        let s = spec(0);
+        let mut q = vec![Job::new(&s, 0, 0.0, 0), Job::new(&s, 1, 0.0, 0)];
+        q[0].state = JobState::Optional;
+        q[0].deadline_ms = 900.0;
+        q[1].state = JobState::Optional;
+        q[1].deadline_ms = 200.0;
+        let mut sch = Scheduler::new(SchedulerKind::Zygarde, params());
+        assert_eq!(sch.pick(&q, 0.0, &EnergyView::persistent()), Some(1));
+    }
+
+    #[test]
+    fn round_robin_is_non_preemptive_then_rotates() {
+        let s0 = spec(0);
+        let s1 = spec(1);
+        let mut q = vec![Job::new(&s0, 0, 0.0, 0), Job::new(&s1, 1, 1.0, 0)];
+        let mut sch = Scheduler::new(SchedulerKind::RoundRobin, params());
+        let a = sch.pick(&q, 0.0, &EnergyView::persistent()).unwrap();
+        // SONIC-style: sticks with the same job until it completes.
+        let b = sch.pick(&q, 0.0, &EnergyView::persistent()).unwrap();
+        assert_eq!(a, b);
+        // Once the job finishes, the cursor rotates to the other task.
+        q[a].state = JobState::Exhausted;
+        let c = sch.pick(&q, 0.0, &EnergyView::persistent()).unwrap();
+        assert_ne!(q[a].task, q[c].task);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut sch = Scheduler::new(SchedulerKind::Zygarde, params());
+        assert_eq!(sch.pick(&[], 0.0, &EnergyView::persistent()), None);
+    }
+}

@@ -1,0 +1,232 @@
+//! Imprecise sporadic tasks, jobs, units, and fragments (paper §4.1).
+//!
+//! A *task* τ_i = (T_i, D_i, C_i) is the recurring processing of one
+//! sensor stream for one classification problem. A *job* is one instance:
+//! an ordered sequence of *units* (one DNN layer + its k-means classifier
+//! each), where the first M units are mandatory and M is discovered at
+//! runtime by the utility test. Units split into fixed-budget atomic
+//! *fragments* (SONIC-style) — the granularity of intermittent execution.
+
+use std::sync::Arc;
+
+use crate::dnn::trace::SampleTrace;
+
+/// Static description of one task. Unit costs come from the compile-time
+/// cost model (`meta.json`); traces supply the data-dependent behaviour.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub id: usize,
+    pub name: String,
+    /// Minimum inter-release separation T_i (ms).
+    pub period_ms: f64,
+    /// Relative deadline D_i (ms).
+    pub deadline_ms: f64,
+    pub unit_time_ms: Vec<f64>,
+    pub unit_energy_mj: Vec<f64>,
+    pub unit_fragments: Vec<usize>,
+    /// Sensor read + feature extraction cost at release (DMA/LEA path:
+    /// consumes energy but not CPU time; paper Fig. 14 job generator).
+    pub release_energy_mj: f64,
+    /// Per-sample unit traces this task's jobs sample from.
+    pub traces: Arc<Vec<SampleTrace>>,
+    /// Non-imprecise task support (paper §5.1): if false, every unit is
+    /// mandatory and Ψ is a constant.
+    pub imprecise: bool,
+}
+
+impl TaskSpec {
+    pub fn n_units(&self) -> usize {
+        self.unit_time_ms.len()
+    }
+
+    /// Worst-case execution time of the whole job (all units).
+    pub fn wcet_ms(&self) -> f64 {
+        self.unit_time_ms.iter().sum()
+    }
+
+    pub fn fragment_time_ms(&self, unit: usize) -> f64 {
+        self.unit_time_ms[unit] / self.unit_fragments[unit] as f64
+    }
+
+    pub fn fragment_energy_mj(&self, unit: usize) -> f64 {
+        self.unit_energy_mj[unit] / self.unit_fragments[unit] as f64
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// More mandatory units to run (utility test has not passed yet).
+    Mandatory,
+    /// Utility test passed: remaining units are optional refinements.
+    Optional,
+    /// All units executed.
+    Exhausted,
+}
+
+/// One job instance in the queue.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub task: usize,
+    pub id: u64,
+    pub release_ms: f64,
+    /// Absolute deadline (release + D_i).
+    pub deadline_ms: f64,
+    /// Index into the task's trace set (the data sample).
+    pub trace_idx: usize,
+    /// Next unit to execute.
+    pub next_unit: usize,
+    /// Fragments completed within the current unit.
+    pub fragments_done: usize,
+    pub state: JobState,
+    /// Utility score Ψ of the last completed unit (0 before any unit —
+    /// a brand-new job is maximally uncertain).
+    pub utility: f32,
+    /// Latest prediction (valid once ≥ 1 unit completed).
+    pub pred: Option<i32>,
+    /// True once the mandatory part finished before the deadline.
+    pub mandatory_done: bool,
+    /// Completion time of the mandatory part, if any.
+    pub mandatory_done_at: Option<f64>,
+    pub units_done: usize,
+}
+
+impl Job {
+    pub fn new(task: &TaskSpec, id: u64, release_ms: f64, trace_idx: usize) -> Job {
+        Job {
+            task: task.id,
+            id,
+            release_ms,
+            deadline_ms: release_ms + task.deadline_ms,
+            trace_idx,
+            next_unit: 0,
+            fragments_done: 0,
+            state: JobState::Mandatory,
+            utility: 0.0,
+            pred: None,
+            mandatory_done: false,
+            mandatory_done_at: None,
+            units_done: 0,
+        }
+    }
+
+    /// Is the *next* unit mandatory (γ = 1 in Eq. 6/7)?
+    pub fn next_is_mandatory(&self) -> bool {
+        self.state == JobState::Mandatory
+    }
+
+    pub fn finished(&self) -> bool {
+        self.state == JobState::Exhausted
+    }
+
+    /// Record completion of the current unit using the sample's trace.
+    /// `n_units` is the task's unit count. Returns true if the job just
+    /// became confident (utility test passed at this unit).
+    pub fn complete_unit(&mut self, trace: &SampleTrace, n_units: usize, now_ms: f64) -> bool {
+        let u = self.next_unit;
+        let outcome = &trace.units[u];
+        self.units_done += 1;
+        self.utility = outcome.gap;
+        self.pred = Some(outcome.pred);
+        self.fragments_done = 0;
+        self.next_unit += 1;
+        let mut just_confident = false;
+        if self.state == JobState::Mandatory && outcome.exit {
+            self.state = JobState::Optional;
+            self.mandatory_done = true;
+            self.mandatory_done_at = Some(now_ms);
+            just_confident = true;
+        }
+        if self.next_unit >= n_units {
+            if self.state == JobState::Mandatory {
+                // Ran every unit without a confident exit: the full job IS
+                // the mandatory part (the partition degenerates, §4.1).
+                self.mandatory_done = true;
+                self.mandatory_done_at = Some(now_ms);
+            }
+            self.state = JobState::Exhausted;
+        }
+        just_confident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::trace::{SampleTrace, UnitOutcome};
+
+    fn trace(exits: &[bool]) -> SampleTrace {
+        let units = exits
+            .iter()
+            .map(|&e| UnitOutcome { gap: if e { 9.0 } else { 0.5 }, pred: 1, exit: e, correct: true })
+            .collect::<Vec<_>>();
+        let exit_unit = exits.iter().position(|&e| e).unwrap_or(exits.len() - 1);
+        SampleTrace { label: 1, units, exit_unit, oracle_unit: Some(0) }
+    }
+
+    fn spec(n_units: usize) -> TaskSpec {
+        TaskSpec {
+            id: 0,
+            name: "t".into(),
+            period_ms: 1000.0,
+            deadline_ms: 2000.0,
+            unit_time_ms: vec![100.0; n_units],
+            unit_energy_mj: vec![1.0; n_units],
+            unit_fragments: vec![4; n_units],
+            release_energy_mj: 0.5,
+            traces: Arc::new(vec![]),
+            imprecise: true,
+        }
+    }
+
+    #[test]
+    fn dynamic_partition_via_utility() {
+        let s = spec(4);
+        let t = trace(&[false, true, false, false]);
+        let mut j = Job::new(&s, 0, 0.0, 0);
+        assert!(j.next_is_mandatory());
+        assert!(!j.complete_unit(&t, 4, 100.0)); // unit 0: no exit
+        assert!(j.next_is_mandatory());
+        assert!(!j.mandatory_done);
+        assert!(j.complete_unit(&t, 4, 200.0)); // unit 1: exit
+        assert!(!j.next_is_mandatory());
+        assert!(j.mandatory_done);
+        assert_eq!(j.mandatory_done_at, Some(200.0));
+        assert_eq!(j.state, JobState::Optional);
+        j.complete_unit(&t, 4, 300.0);
+        j.complete_unit(&t, 4, 400.0);
+        assert!(j.finished());
+    }
+
+    #[test]
+    fn never_confident_job_is_all_mandatory() {
+        let s = spec(3);
+        let t = trace(&[false, false, false]);
+        let mut j = Job::new(&s, 0, 0.0, 0);
+        j.complete_unit(&t, 3, 1.0);
+        j.complete_unit(&t, 3, 2.0);
+        assert!(!j.mandatory_done);
+        j.complete_unit(&t, 3, 3.0);
+        assert!(j.mandatory_done); // degenerate partition: M = L
+        assert!(j.finished());
+    }
+
+    #[test]
+    fn wcet_and_fragment_costs() {
+        let s = spec(4);
+        assert_eq!(s.wcet_ms(), 400.0);
+        assert_eq!(s.fragment_time_ms(0), 25.0);
+        assert_eq!(s.fragment_energy_mj(0), 0.25);
+    }
+
+    #[test]
+    fn utility_tracks_last_unit() {
+        let s = spec(2);
+        let t = trace(&[false, true]);
+        let mut j = Job::new(&s, 0, 0.0, 0);
+        assert_eq!(j.utility, 0.0);
+        j.complete_unit(&t, 2, 1.0);
+        assert_eq!(j.utility, 0.5);
+        j.complete_unit(&t, 2, 2.0);
+        assert_eq!(j.utility, 9.0);
+    }
+}

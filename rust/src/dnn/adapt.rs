@@ -1,0 +1,159 @@
+//! Centroid adaptation beyond the exit layer (paper §4.3, "Updating
+//! Centroids beyond Mandatory Layers").
+//!
+//! When a sample exits early at layer i, the deeper layers' classifiers
+//! never see it. The paper estimates the deeper centroids from the current
+//! layer's centroid instead of running the sample through:
+//!
+//! ```text
+//! c^{i+1} = (1/r) * sigma(W^{i+1} · r · c^i)
+//! ```
+//!
+//! i.e. push the (cluster-size-weighted) centroid itself through the next
+//! layer's affine map + ReLU, in O(1) per adaptation instead of O(r)
+//! forward passes.
+//!
+//! Our centroids live in a *selected-feature* subspace (top-F of the flat
+//! activation, exactly as in the paper's SelectKBest pipeline), so applying
+//! W^{i+1} requires a full activation. We scatter the centroid back into
+//! the flat activation (zeros elsewhere — the unselected coordinates were
+//! the low-information ones by construction), apply the real layer map,
+//! and gather the next layer's selected features. This follows the paper's
+//! formula including the sigma and the r-weighting, with the scatter step
+//! documented as the necessary inverse of feature selection.
+
+use super::forward;
+use super::network::Network;
+
+/// Propagate an adaptation of `cluster` at layer `li` into layer `li + 1`.
+/// No-op on the last layer.
+pub fn propagate_centroid(net: &mut Network, li: usize, cluster: usize) {
+    if li + 1 >= net.meta.n_layers {
+        return;
+    }
+    let f_i = net.classifiers[li].n_features;
+    let r = net.classifiers[li].cluster_size[cluster].max(1.0);
+
+    // Scatter c^i into a flat activation of layer i's output space.
+    let flat_dim = net.meta.flat_dim(li);
+    let mut act = vec![0f32; flat_dim];
+    {
+        let clf = &net.classifiers[li];
+        let row = &clf.centroids[cluster * f_i..(cluster + 1) * f_i];
+        for (&idx, &v) in clf.feat_idx.iter().zip(row) {
+            act[idx] = v * r; // the paper's r-scaling
+        }
+    }
+
+    // sigma(W^{i+1} (r c^i)): the real next-layer map (conv or fc) + ReLU.
+    // layer_forward applies the layer's own nonlinearity; the paper's
+    // sigma(x) = (x + |x|)/2 is exactly ReLU.
+    let in_shape = net.unit_in_shape(li + 1);
+    let mut next = forward::layer_forward(
+        &net.meta.layers[li + 1],
+        &net.weights[li + 1],
+        &act,
+        &in_shape,
+    );
+    if !net.meta.layers[li + 1].relu {
+        // Final embedding layers have no ReLU in the forward pass, but the
+        // paper's update rule always rectifies; follow the paper.
+        for v in next.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    // Gather layer i+1's selected features and blend into the matching
+    // cluster (same label) with the 1/r scale.
+    let label = net.classifiers[li].labels[cluster];
+    let clf_next = &mut net.classifiers[li + 1];
+    let Some(tgt) = clf_next.labels.iter().position(|&l| l == label) else {
+        return;
+    };
+    let f_n = clf_next.n_features;
+    let a = clf_next.adapt_rate;
+    let row = &mut clf_next.centroids[tgt * f_n..(tgt + 1) * f_n];
+    for (c, &idx) in row.iter_mut().zip(&clf_next.feat_idx) {
+        let est = next[idx] / r;
+        *c = (1.0 - a) * *c + a * est;
+    }
+}
+
+/// The paper's stated bound on the approximation error of estimating the
+/// next-layer centroid from the current one (§4.3): for cluster members
+/// X_1..X_r,  err <= (Σ|W x_k| - |W Σ x_k|) / (2r). Exposed for the
+/// analysis test, computed on explicit member activations.
+pub fn approximation_error_bound(members: &[Vec<f32>], w_row: &[f32]) -> f64 {
+    let r = members.len() as f64;
+    if r == 0.0 {
+        return 0.0;
+    }
+    let mut sum_abs = 0.0f64;
+    let mut sum_vec = vec![0f32; members[0].len()];
+    for m in members {
+        let dot: f32 = m.iter().zip(w_row).map(|(a, b)| a * b).sum();
+        sum_abs += dot.abs() as f64;
+        for (s, &v) in sum_vec.iter_mut().zip(m) {
+            *s += v;
+        }
+    }
+    let dot_sum: f32 = sum_vec.iter().zip(w_row).map(|(a, b)| a * b).sum();
+    (sum_abs - (dot_sum.abs() as f64)) / (2.0 * r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_bound_nonnegative_and_zero_for_aligned() {
+        // All members identical: |sum of dots| == sum of |dots| -> bound 0.
+        let members = vec![vec![1.0, 2.0]; 5];
+        let w = vec![0.5, -0.25];
+        assert!(approximation_error_bound(&members, &w).abs() < 1e-9);
+        // Opposing members create slack: bound strictly positive.
+        let members2 = vec![vec![1.0, 0.0], vec![-1.0, 0.0]];
+        assert!(approximation_error_bound(&members2, &w) > 0.0);
+    }
+
+    #[test]
+    fn propagation_moves_next_layer_centroid() {
+        let dir = crate::artifacts_root().join("mnist");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let mut net = Network::load(&dir).unwrap();
+        let before = net.classifiers[1].centroids.clone();
+        // Perturb layer-0 centroid 0 and propagate.
+        let f0 = net.classifiers[0].n_features;
+        for v in net.classifiers[0].centroids[..f0].iter_mut() {
+            *v += 0.5;
+        }
+        propagate_centroid(&mut net, 0, 0);
+        let after = &net.classifiers[1].centroids;
+        assert_ne!(&before, after, "propagation did not update layer 1");
+        // Only one row (the matching label) may change.
+        let f = net.classifiers[1].n_features;
+        let label0 = net.classifiers[0].labels[0];
+        let tgt = net.classifiers[1].labels.iter().position(|&l| l == label0).unwrap();
+        for row in 0..net.classifiers[1].k {
+            let changed = before[row * f..(row + 1) * f] != after[row * f..(row + 1) * f];
+            assert_eq!(changed, row == tgt, "row {row}");
+        }
+    }
+
+    #[test]
+    fn propagation_last_layer_is_noop() {
+        let dir = crate::artifacts_root().join("mnist");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let mut net = Network::load(&dir).unwrap();
+        let last = net.meta.n_layers - 1;
+        let before = net.classifiers[last].centroids.clone();
+        propagate_centroid(&mut net, last, 0);
+        assert_eq!(before, net.classifiers[last].centroids);
+    }
+}

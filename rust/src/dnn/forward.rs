@@ -1,0 +1,217 @@
+//! Pure-Rust reference forward pass for the agile DNN.
+//!
+//! Mirrors `python/compile/model.py` exactly (3x3 VALID conv + ReLU +
+//! optional 2x2/2 max-pool; FC = matmul + bias + optional ReLU) and is
+//! validated element-wise against the PJRT execution of the AOT artifacts
+//! in `rust/tests/runtime_vs_native.rs`. Used for fast trace precomputation
+//! and as the baseline in the §Perf log.
+
+use super::meta::{LayerKind, LayerMeta};
+
+/// Weights for one layer, loaded from the ZYGT archive.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    /// conv: (3, 3, cin, cout) row-major; fc: (in, out) row-major.
+    pub w: Vec<f32>,
+    pub w_dims: Vec<usize>,
+    pub b: Vec<f32>,
+}
+
+pub const KSIZE: usize = 3;
+
+/// VALID 3x3 convolution, x: (h, w, cin) row-major -> (h-2, w-2, cout).
+pub fn conv2d(x: &[f32], h: usize, w: usize, cin: usize, wt: &LayerWeights) -> Vec<f32> {
+    let cout = wt.w_dims[3];
+    debug_assert_eq!(wt.w_dims, vec![KSIZE, KSIZE, cin, cout]);
+    debug_assert_eq!(x.len(), h * w * cin);
+    let (oh, ow) = (h - KSIZE + 1, w - KSIZE + 1);
+    let mut out = vec![0f32; oh * ow * cout];
+    // Accumulate kernel-position-major to keep the inner loop over `cout`
+    // contiguous in both the weight and output layouts.
+    for i in 0..oh {
+        for j in 0..ow {
+            let o_base = (i * ow + j) * cout;
+            let acc = &mut out[o_base..o_base + cout];
+            acc.copy_from_slice(&wt.b);
+            for dy in 0..KSIZE {
+                for dx in 0..KSIZE {
+                    let x_base = ((i + dy) * w + (j + dx)) * cin;
+                    let w_base = (dy * KSIZE + dx) * cin * cout;
+                    for c in 0..cin {
+                        let xv = x[x_base + c];
+                        let wrow = &wt.w[w_base + c * cout..w_base + (c + 1) * cout];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// 2x2 stride-2 max-pool (truncating odd edges), x: (h, w, c).
+pub fn maxpool2(x: &[f32], h: usize, w: usize, c: usize) -> Vec<f32> {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = vec![f32::NEG_INFINITY; oh * ow * c];
+    for i in 0..oh {
+        for j in 0..ow {
+            let o_base = (i * ow + j) * c;
+            for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                let x_base = ((2 * i + dy) * w + (2 * j + dx)) * c;
+                for ch in 0..c {
+                    let v = x[x_base + ch];
+                    if v > out[o_base + ch] {
+                        out[o_base + ch] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fully connected: out[j] = b[j] + sum_i x[i] * w[i, j].
+pub fn fc(x: &[f32], wt: &LayerWeights) -> Vec<f32> {
+    let (n_in, n_out) = (wt.w_dims[0], wt.w_dims[1]);
+    debug_assert_eq!(x.len(), n_in);
+    let mut out = wt.b.clone();
+    for (i, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue; // post-ReLU activations are sparse
+        }
+        let row = &wt.w[i * n_out..(i + 1) * n_out];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xv * wv;
+        }
+    }
+    out
+}
+
+/// Run one full layer given its metadata; `in_shape` is (h, w, c) for conv
+/// input or the flat length for fc.
+pub fn layer_forward(
+    layer: &LayerMeta,
+    wt: &LayerWeights,
+    x: &[f32],
+    in_shape: &[usize],
+) -> Vec<f32> {
+    match layer.kind {
+        LayerKind::Conv => {
+            let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+            let mut out = conv2d(x, h, w, c, wt);
+            if layer.relu {
+                relu(&mut out);
+            }
+            if layer.pool {
+                out = maxpool2(&out, h - 2, w - 2, layer.out);
+            }
+            out
+        }
+        LayerKind::Fc => {
+            let mut out = fc(x, wt);
+            if layer.relu {
+                relu(&mut out);
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::meta::LayerKind;
+
+    fn lw(w: Vec<f32>, dims: Vec<usize>, b: Vec<f32>) -> LayerWeights {
+        LayerWeights { w, w_dims: dims, b }
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 4x4x1 input, kernel = center tap only -> output equals the 2x2
+        // interior of the input.
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut w = vec![0f32; 9];
+        w[4] = 1.0; // center of the 3x3
+        let out = conv2d(&x, 4, 4, 1, &lw(w, vec![3, 3, 1, 1], vec![0.0]));
+        assert_eq!(out, vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn conv_multi_channel_sum() {
+        // cin=2 with all-ones kernel and zero bias: each output = sum over
+        // the 3x3x2 window.
+        let x = vec![1f32; 3 * 3 * 2];
+        let w = vec![1f32; 9 * 2];
+        let out = conv2d(&x, 3, 3, 2, &lw(w, vec![3, 3, 2, 1], vec![0.5]));
+        assert_eq!(out, vec![18.5]);
+    }
+
+    #[test]
+    fn conv_bias_per_output_channel() {
+        let x = vec![0f32; 3 * 3 * 1];
+        let w = vec![0f32; 9 * 2];
+        let out = conv2d(&x, 3, 3, 1, &lw(w, vec![3, 3, 1, 2], vec![1.0, -2.0]));
+        assert_eq!(out, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn maxpool_truncates_odd() {
+        // 3x3x1 -> 1x1x1, max over top-left 2x2 block only.
+        let x = vec![1.0, 2.0, 9.0, 4.0, 3.0, 9.0, 9.0, 9.0, 9.0];
+        assert_eq!(maxpool2(&x, 3, 3, 1), vec![4.0]);
+    }
+
+    #[test]
+    fn fc_matches_manual() {
+        // w: (2, 3) row-major: [[1,2,3],[4,5,6]], x = [1, 2], b = [0.5, 0, -1]
+        let wt = lw(vec![1., 2., 3., 4., 5., 6.], vec![2, 3], vec![0.5, 0., -1.]);
+        assert_eq!(fc(&[1.0, 2.0], &wt), vec![9.5, 12.0, 14.0]);
+    }
+
+    #[test]
+    fn fc_skips_zeros_correctly() {
+        let wt = lw(vec![1., 2., 3., 4.], vec![2, 2], vec![0., 0.]);
+        assert_eq!(fc(&[0.0, 1.0], &wt), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn layer_forward_conv_relu_pool() {
+        let layer = LayerMeta {
+            kind: LayerKind::Conv,
+            out: 1,
+            pool: true,
+            relu: true,
+            act_shape: vec![1, 1, 1],
+            k: 2,
+            n_features: 1,
+            threshold: 0.0,
+            curve: vec![],
+            macs: 0,
+            adds: 0,
+            time_ms: 0.0,
+            energy_mj: 0.0,
+            n_fragments: 1,
+            fragment_ms: 0.0,
+            fragment_energy_mj: 0.0,
+        };
+        // 4x4 input, center-tap kernel, bias -6 => interior [5,6,9,10]-6 =
+        // [-1,0,3,4] -> relu [0,0,3,4] -> 2x2 pool -> [4]
+        let x: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let mut w = vec![0f32; 9];
+        w[4] = 1.0;
+        let out = layer_forward(&layer, &lw(w, vec![3, 3, 1, 1], vec![-6.0]), &x, &[4, 4, 1]);
+        assert_eq!(out, vec![4.0]);
+    }
+}

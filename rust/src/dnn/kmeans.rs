@@ -1,0 +1,235 @@
+//! Semi-supervised k-means classifier with the utility test (paper §4.1,
+//! §4.3) — the multiplication-free per-unit classifier.
+//!
+//! Classification: L1 distance from the unit's selected feature vector to
+//! each of k centroids; predicted class = nearest centroid's label.
+//! Utility test: exit iff |d2 - d1| >= unit threshold (Fig. 5) — the input
+//! is unambiguously close to exactly one mean.
+//! Adaptation: weighted-average centroid update on confident
+//! classifications (§4.3 "Updating Centroids at Run-Time").
+
+#[derive(Clone, Debug)]
+pub struct Classifier {
+    pub k: usize,
+    pub n_features: usize,
+    /// Flat-activation indices of the selected features (sorted).
+    pub feat_idx: Vec<usize>,
+    /// (k, F) row-major; mutable at runtime (adaptation).
+    pub centroids: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub threshold: f32,
+    /// Adaptation weight for the new example (paper: "more weights to the
+    /// current centroid" — gradual drift, outlier-robust).
+    pub adapt_rate: f32,
+    /// Running cluster sizes r (used by the deep-propagation rule).
+    pub cluster_size: Vec<f32>,
+}
+
+/// Outcome of running one unit's classifier.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassifyResult {
+    pub pred: i32,
+    pub best: usize,
+    /// |d2 - d1|: the utility score's raw gap.
+    pub gap: f32,
+    pub d1: f32,
+    /// Utility test passed => confident => the *next* unit is optional.
+    pub exit: bool,
+}
+
+impl Classifier {
+    pub fn new(
+        feat_idx: Vec<usize>,
+        centroids: Vec<f32>,
+        labels: Vec<i32>,
+        threshold: f32,
+        train_hist: &[i32],
+    ) -> Self {
+        let k = labels.len();
+        let n_features = feat_idx.len();
+        assert_eq!(centroids.len(), k * n_features);
+        // Initial cluster sizes from the training label histogram (each
+        // centroid was seeded from its class's members).
+        let cluster_size = labels
+            .iter()
+            .map(|&l| train_hist.get(l as usize).copied().unwrap_or(1).max(1) as f32)
+            .collect();
+        Classifier {
+            k,
+            n_features,
+            feat_idx,
+            centroids,
+            labels,
+            threshold,
+            adapt_rate: 0.05,
+            cluster_size,
+        }
+    }
+
+    /// Gather the unit's selected features from a flat activation.
+    pub fn gather<'a>(&self, act: &[f32], buf: &'a mut Vec<f32>) -> &'a [f32] {
+        buf.clear();
+        buf.extend(self.feat_idx.iter().map(|&i| act[i]));
+        buf
+    }
+
+    /// L1 distances to all centroids into `dists` (len k).
+    pub fn distances(&self, feat: &[f32], dists: &mut [f32]) {
+        debug_assert_eq!(feat.len(), self.n_features);
+        debug_assert_eq!(dists.len(), self.k);
+        for (c, d) in dists.iter_mut().enumerate() {
+            let row = &self.centroids[c * self.n_features..(c + 1) * self.n_features];
+            let mut acc = 0f32;
+            for (a, b) in feat.iter().zip(row) {
+                acc += (a - b).abs();
+            }
+            *d = acc;
+        }
+    }
+
+    /// Classify from a precomputed distance vector (as returned by the PJRT
+    /// unit executable or by `distances`).
+    pub fn classify_from_dists(&self, dists: &[f32]) -> ClassifyResult {
+        debug_assert_eq!(dists.len(), self.k);
+        let (mut b1, mut d1) = (0usize, f32::INFINITY);
+        let mut d2 = f32::INFINITY;
+        for (i, &d) in dists.iter().enumerate() {
+            if d < d1 {
+                d2 = d1;
+                d1 = d;
+                b1 = i;
+            } else if d < d2 {
+                d2 = d;
+            }
+        }
+        let gap = if self.k > 1 { d2 - d1 } else { f32::INFINITY };
+        ClassifyResult {
+            pred: self.labels[b1],
+            best: b1,
+            gap,
+            d1,
+            exit: gap >= self.threshold,
+        }
+    }
+
+    /// Full classify from a flat activation (native path).
+    pub fn classify(&self, act: &[f32], scratch: &mut Scratch) -> ClassifyResult {
+        let feat_len = self.n_features;
+        scratch.feat.clear();
+        scratch
+            .feat
+            .extend(self.feat_idx.iter().map(|&i| act[i]));
+        scratch.dists.resize(self.k, 0.0);
+        let (feat, dists) = (&scratch.feat[..feat_len], &mut scratch.dists[..]);
+        self.distances(feat, dists);
+        self.classify_from_dists(dists)
+    }
+
+    /// Runtime centroid update: weighted average of the current centroid
+    /// and the new example (only called when the utility test passed — the
+    /// semi-supervised "confident pseudo-label" rule).
+    pub fn adapt(&mut self, cluster: usize, feat: &[f32]) {
+        debug_assert_eq!(feat.len(), self.n_features);
+        let a = self.adapt_rate;
+        let row = &mut self.centroids[cluster * self.n_features..(cluster + 1) * self.n_features];
+        for (c, &f) in row.iter_mut().zip(feat) {
+            *c = (1.0 - a) * *c + a * f;
+        }
+        self.cluster_size[cluster] += 1.0;
+    }
+}
+
+/// Reusable buffers for the hot classify path (no allocation per call).
+#[derive(Default, Clone, Debug)]
+pub struct Scratch {
+    pub feat: Vec<f32>,
+    pub dists: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clf(threshold: f32) -> Classifier {
+        // Two centroids in 2-D: (0,0) labeled 7 and (10,10) labeled 3.
+        let mut hist = vec![0; 8];
+        hist[7] = 50;
+        hist[3] = 50;
+        Classifier::new(
+            vec![0, 1],
+            vec![0.0, 0.0, 10.0, 10.0],
+            vec![7, 3],
+            threshold,
+            &hist,
+        )
+    }
+
+    #[test]
+    fn classifies_nearest_l1() {
+        let c = clf(1.0);
+        let mut s = Scratch::default();
+        let r = c.classify(&[1.0, 1.0], &mut s);
+        assert_eq!(r.pred, 7);
+        assert_eq!(r.d1, 2.0);
+        assert_eq!(r.gap, 18.0 - 2.0);
+        assert!(r.exit);
+    }
+
+    #[test]
+    fn ambiguous_input_does_not_exit() {
+        let c = clf(1.0);
+        let mut s = Scratch::default();
+        // Equidistant point: gap 0 < threshold.
+        let r = c.classify(&[5.0, 5.0], &mut s);
+        assert!(!r.exit);
+        assert_eq!(r.gap, 0.0);
+    }
+
+    #[test]
+    fn threshold_controls_exit() {
+        let mut s = Scratch::default();
+        let r_tight = clf(100.0).classify(&[1.0, 1.0], &mut s);
+        assert!(!r_tight.exit);
+        let r_loose = clf(0.1).classify(&[1.0, 1.0], &mut s);
+        assert!(r_loose.exit);
+    }
+
+    #[test]
+    fn adapt_moves_centroid_gradually() {
+        let mut c = clf(1.0);
+        let before = c.centroids[..2].to_vec();
+        c.adapt(0, &[2.0, 2.0]);
+        let after = &c.centroids[..2];
+        assert!(after[0] > before[0] && after[0] < 2.0);
+        assert_eq!(c.cluster_size[0], 51.0);
+        // Repeated adaptation converges toward the new point.
+        for _ in 0..500 {
+            c.adapt(0, &[2.0, 2.0]);
+        }
+        assert!((c.centroids[0] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn outlier_barely_moves_centroid() {
+        let mut c = clf(1.0);
+        c.adapt(0, &[100.0, 100.0]);
+        // one outlier moves the centroid by adapt_rate fraction only
+        assert!((c.centroids[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_cluster_always_exits() {
+        let c = Classifier::new(vec![0], vec![0.0], vec![1], 5.0, &[10]);
+        let r = c.classify_from_dists(&[3.0]);
+        assert!(r.exit);
+        assert_eq!(r.pred, 1);
+    }
+
+    #[test]
+    fn dists_match_manual_l1() {
+        let c = clf(0.0);
+        let mut d = vec![0.0; 2];
+        c.distances(&[3.0, -1.0], &mut d);
+        assert_eq!(d, vec![4.0, 18.0]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Parsed form of `artifacts/<ds>/meta.json` (written by aot.py).
+
+use std::path::Path;
+
+use crate::util::json::Value;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+}
+
+/// Static description of one unit: layer topology + classifier geometry +
+/// the compile-time cost model (the EnergyTrace++ substitute).
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub kind: LayerKind,
+    pub out: usize,
+    pub pool: bool,
+    pub relu: bool,
+    /// Activation shape *after* this layer (post-pool).
+    pub act_shape: Vec<usize>,
+    pub k: usize,
+    pub n_features: usize,
+    /// Utility-test threshold on |d2 - d1| (offline-tuned, Fig. 8).
+    pub threshold: f64,
+    /// Fig. 8 trade-off curve: (threshold, exit_rate, exit_accuracy).
+    pub curve: Vec<(f64, f64, f64)>,
+    pub macs: u64,
+    pub adds: u64,
+    pub time_ms: f64,
+    pub energy_mj: f64,
+    pub n_fragments: usize,
+    pub fragment_ms: f64,
+    pub fragment_energy_mj: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CostMeta {
+    pub e_man_mj: f64,
+    pub total_time_ms: f64,
+    pub total_energy_mj: f64,
+    pub job_generator_ms: f64,
+    pub job_generator_energy_mj: f64,
+    pub scheduler_overhead_ms: f64,
+    pub scheduler_overhead_mj: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct NetMeta {
+    pub name: String,
+    pub loss: String,
+    pub input_shape: [usize; 3],
+    pub n_classes: usize,
+    pub n_layers: usize,
+    pub n_test: usize,
+    pub with_hlo: bool,
+    pub layers: Vec<LayerMeta>,
+    pub cost: CostMeta,
+}
+
+impl NetMeta {
+    pub fn load(dir: &Path) -> Result<NetMeta, String> {
+        let v = Value::parse_file(&dir.join("meta.json"))?;
+        Ok(Self::from_json(&v))
+    }
+
+    pub fn from_json(v: &Value) -> NetMeta {
+        let ishape: Vec<usize> = v.req("input_shape").arr().iter().map(|d| d.usize()).collect();
+        let layers = v
+            .req("layers")
+            .arr()
+            .iter()
+            .map(|l| LayerMeta {
+                kind: match l.req("kind").str() {
+                    "conv" => LayerKind::Conv,
+                    "fc" => LayerKind::Fc,
+                    k => panic!("unknown layer kind `{k}`"),
+                },
+                out: l.req("out").usize(),
+                pool: l.req("pool").as_bool().unwrap_or(false),
+                relu: l.req("relu").as_bool().unwrap_or(true),
+                act_shape: l.req("act_shape").arr().iter().map(|d| d.usize()).collect(),
+                k: l.req("k").usize(),
+                n_features: l.req("n_features").usize(),
+                threshold: l.req("threshold").f64(),
+                curve: l
+                    .req("curve")
+                    .arr()
+                    .iter()
+                    .map(|row| {
+                        let r = row.arr();
+                        (r[0].f64(), r[1].f64(), r[2].f64())
+                    })
+                    .collect(),
+                macs: l.req("macs").f64() as u64,
+                adds: l.req("adds").f64() as u64,
+                time_ms: l.req("time_ms").f64(),
+                energy_mj: l.req("energy_mj").f64(),
+                n_fragments: l.req("n_fragments").usize(),
+                fragment_ms: l.req("fragment_ms").f64(),
+                fragment_energy_mj: l.req("fragment_energy_mj").f64(),
+            })
+            .collect();
+        let c = v.req("cost_model");
+        NetMeta {
+            name: v.req("name").str().to_string(),
+            loss: v.req("loss").str().to_string(),
+            input_shape: [ishape[0], ishape[1], ishape[2]],
+            n_classes: v.req("n_classes").usize(),
+            n_layers: v.req("n_layers").usize(),
+            n_test: v.req("n_test").usize(),
+            with_hlo: v.req("with_hlo").as_bool().unwrap_or(false),
+            layers,
+            cost: CostMeta {
+                e_man_mj: c.req("e_man_mj").f64(),
+                total_time_ms: c.req("total_time_ms").f64(),
+                total_energy_mj: c.req("total_energy_mj").f64(),
+                job_generator_ms: c.req("job_generator_ms").f64(),
+                job_generator_energy_mj: c.req("job_generator_energy_mj").f64(),
+                scheduler_overhead_ms: c.req("scheduler_overhead_ms").f64(),
+                scheduler_overhead_mj: c.req("scheduler_overhead_mj").f64(),
+            },
+        }
+    }
+
+    /// Input shape of unit `li` as XLA dims (layer 0 sees the raw sample;
+    /// deeper units see the previous layer's activation).
+    pub fn unit_input_shape(&self, li: usize) -> Vec<i64> {
+        let s: Vec<usize> = if li == 0 {
+            self.input_shape.to_vec()
+        } else {
+            self.layers[li - 1].act_shape.clone()
+        };
+        s.into_iter().map(|d| d as i64).collect()
+    }
+
+    pub fn flat_dim(&self, li: usize) -> usize {
+        self.layers[li].act_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta() -> Value {
+        Value::parse(
+            r#"{
+          "name": "t", "loss": "layer_aware", "input_shape": [4, 4, 1],
+          "n_classes": 2, "n_layers": 2, "n_test": 10, "with_hlo": false,
+          "layers": [
+            {"kind": "conv", "out": 3, "pool": false, "relu": true,
+             "act_shape": [2, 2, 3], "k": 2, "n_features": 4,
+             "threshold": 0.5, "curve": [[0.0, 1.0, 0.6]], "macs": 100,
+             "adds": 20, "time_ms": 10.0, "energy_mj": 0.1,
+             "n_fragments": 2, "fragment_ms": 5.0, "fragment_energy_mj": 0.05},
+            {"kind": "fc", "out": 4, "pool": false, "relu": false,
+             "act_shape": [4], "k": 2, "n_features": 4, "threshold": 0.7,
+             "curve": [[0.0, 1.0, 0.8]], "macs": 48, "adds": 20,
+             "time_ms": 5.0, "energy_mj": 0.05, "n_fragments": 1,
+             "fragment_ms": 5.0, "fragment_energy_mj": 0.05}],
+          "cost_model": {"e_man_mj": 0.05, "total_time_ms": 15.0,
+            "total_energy_mj": 0.15, "job_generator_ms": 100.0,
+            "job_generator_energy_mj": 1.0, "scheduler_overhead_ms": 0.3,
+            "scheduler_overhead_mj": 0.05}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_shapes() {
+        let m = NetMeta::from_json(&fake_meta());
+        assert_eq!(m.n_layers, 2);
+        assert_eq!(m.unit_input_shape(0), vec![4, 4, 1]);
+        assert_eq!(m.unit_input_shape(1), vec![2, 2, 3]);
+        assert_eq!(m.flat_dim(0), 12);
+        assert_eq!(m.layers[0].kind, LayerKind::Conv);
+        assert_eq!(m.layers[1].kind, LayerKind::Fc);
+        assert!((m.cost.e_man_mj - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let root = crate::artifacts_root();
+        if !root.join("mnist/meta.json").exists() {
+            return;
+        }
+        let m = NetMeta::load(&root.join("mnist")).unwrap();
+        assert_eq!(m.name, "mnist");
+        assert_eq!(m.n_layers, m.layers.len());
+        assert_eq!(m.input_shape, [16, 16, 1]);
+        // per-layer invariants from the compile path
+        for l in &m.layers {
+            assert!(l.threshold >= 0.0);
+            assert!(l.n_fragments >= 1);
+            assert!((l.fragment_ms * l.n_fragments as f64 - l.time_ms).abs() / l.time_ms < 1e-6);
+            assert!(!l.curve.is_empty());
+        }
+        assert!(m.cost.e_man_mj > 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Agile DNN: artifact metadata, native forward pass, per-layer k-means
+//! classifiers with the utility test and online adaptation, and per-sample
+//! unit traces used by the scheduler experiments.
+//!
+//! Two execution paths exist for a unit:
+//!
+//! * [`crate::runtime`] — the PJRT path: executes the AOT-lowered HLO
+//!   artifact (which embeds the Pallas kernels). This is the serving path
+//!   used by the examples.
+//! * [`forward`] — a pure-Rust reference implementation, validated against
+//!   the PJRT path in `rust/tests/runtime_vs_native.rs`, used to
+//!   precompute the per-sample traces that drive the large scheduler
+//!   sweeps (Figs. 17–20 run up to 40 000 jobs; re-running XLA per job
+//!   would measure XLA, not the scheduler).
+
+pub mod adapt;
+pub mod forward;
+pub mod kmeans;
+pub mod meta;
+pub mod network;
+pub mod trace;
+pub mod utility;
+
+pub use kmeans::Classifier;
+pub use meta::{LayerKind, LayerMeta, NetMeta};
+pub use network::Network;
+pub use trace::{SampleTrace, UnitOutcome};

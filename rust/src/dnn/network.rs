@@ -1,0 +1,184 @@
+//! A fully-loaded agile DNN: metadata + weights + per-layer classifiers +
+//! the test set, read from one `artifacts/<name>/` directory.
+
+use std::path::{Path, PathBuf};
+
+use super::forward::{self, LayerWeights};
+use super::kmeans::{Classifier, ClassifyResult, Scratch};
+use super::meta::NetMeta;
+use crate::util::binfmt::Archive;
+
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    /// (n, h, w, c) flattened row-major.
+    pub x: Vec<f32>,
+    pub sample_len: usize,
+    pub y: Vec<i32>,
+    /// Per-sample generator difficulty (oracle analysis only).
+    pub difficulty: Vec<f32>,
+}
+
+impl TestSet {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+}
+
+pub struct Network {
+    pub dir: PathBuf,
+    pub meta: NetMeta,
+    pub weights: Vec<LayerWeights>,
+    pub classifiers: Vec<Classifier>,
+    pub test: TestSet,
+    /// Alternative-environment test inputs (Fig. 24; esc10 only).
+    pub env_x: Vec<Vec<f32>>,
+}
+
+impl Network {
+    pub fn load(dir: &Path) -> Result<Network, String> {
+        let meta = NetMeta::load(dir)?;
+        let arc = Archive::load(&dir.join("tensors.bin")).map_err(|e| e.to_string())?;
+        let hist = arc.get("train_y_hist").i32().to_vec();
+
+        let mut weights = Vec::with_capacity(meta.n_layers);
+        let mut classifiers = Vec::with_capacity(meta.n_layers);
+        for li in 0..meta.n_layers {
+            let w = arc.get(&format!("layer{li}_w"));
+            let b = arc.get(&format!("layer{li}_b"));
+            weights.push(LayerWeights {
+                w: w.f32().to_vec(),
+                w_dims: w.dims.clone(),
+                b: b.f32().to_vec(),
+            });
+            let cent = arc.get(&format!("layer{li}_centroids"));
+            let fidx = arc.get(&format!("layer{li}_feat_idx"));
+            let labels = arc.get(&format!("layer{li}_centroid_label"));
+            classifiers.push(Classifier::new(
+                fidx.i32().iter().map(|&i| i as usize).collect(),
+                cent.f32().to_vec(),
+                labels.i32().to_vec(),
+                meta.layers[li].threshold as f32,
+                &hist,
+            ));
+        }
+
+        let tx = arc.get("test_x");
+        let sample_len: usize = tx.dims[1..].iter().product();
+        let test = TestSet {
+            x: tx.f32().to_vec(),
+            sample_len,
+            y: arc.get("test_y").i32().to_vec(),
+            difficulty: arc.get("test_d").f32().to_vec(),
+        };
+        let mut env_x = Vec::new();
+        for e in 1.. {
+            match arc.try_get(&format!("env{e}_x")) {
+                Some(t) => env_x.push(t.f32().to_vec()),
+                None => break,
+            }
+        }
+        Ok(Network { dir: dir.to_path_buf(), meta, weights, classifiers, test, env_x })
+    }
+
+    /// Load `artifacts/<name>` relative to the artifact root.
+    pub fn load_named(name: &str) -> Result<Network, String> {
+        Self::load(&crate::artifacts_root().join(name))
+    }
+
+    /// Input shape (h, w, c) of unit `li`'s activation input.
+    pub fn unit_in_shape(&self, li: usize) -> Vec<usize> {
+        if li == 0 {
+            self.meta.input_shape.to_vec()
+        } else {
+            self.meta.layers[li - 1].act_shape.clone()
+        }
+    }
+
+    /// Native execution of unit `li`: layer forward + classify.
+    /// Returns (next activation, classify result).
+    pub fn run_unit_native(
+        &self,
+        li: usize,
+        act_in: &[f32],
+        scratch: &mut Scratch,
+    ) -> (Vec<f32>, ClassifyResult) {
+        let in_shape = self.unit_in_shape(li);
+        let act =
+            forward::layer_forward(&self.meta.layers[li], &self.weights[li], act_in, &in_shape);
+        let res = self.classifiers[li].classify(&act, scratch);
+        (act, res)
+    }
+
+    /// Run a sample through the whole network natively with the utility
+    /// test; returns (exit_layer, prediction).
+    pub fn infer_native(&self, sample: &[f32], scratch: &mut Scratch) -> (usize, i32) {
+        let mut act = sample.to_vec();
+        let mut last = 0i32;
+        for li in 0..self.meta.n_layers {
+            let (next, res) = self.run_unit_native(li, &act, scratch);
+            last = res.pred;
+            if res.exit {
+                return (li, res.pred);
+            }
+            act = next;
+        }
+        (self.meta.n_layers - 1, last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mnist() -> Option<Network> {
+        let dir = crate::artifacts_root().join("mnist");
+        dir.join("meta.json").exists().then(|| Network::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_real_network() {
+        let Some(net) = mnist() else { return };
+        assert_eq!(net.weights.len(), net.meta.n_layers);
+        assert_eq!(net.classifiers.len(), net.meta.n_layers);
+        assert_eq!(net.test.len(), net.meta.n_test);
+        assert_eq!(net.test.sample_len, 16 * 16);
+        // weight dims line up with the layer topology
+        assert_eq!(net.weights[0].w_dims, vec![3, 3, 1, net.meta.layers[0].out]);
+    }
+
+    #[test]
+    fn native_inference_beats_chance() {
+        let Some(net) = mnist() else { return };
+        let mut scratch = Scratch::default();
+        let mut correct = 0usize;
+        let n = net.test.len();
+        for i in 0..n {
+            let (_, pred) = net.infer_native(net.test.sample(i), &mut scratch);
+            if pred == net.test.y[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        assert!(acc > 0.6, "native inference accuracy {acc} too low");
+    }
+
+    #[test]
+    fn unit_activation_shapes_match_meta() {
+        let Some(net) = mnist() else { return };
+        let mut scratch = Scratch::default();
+        let mut act = net.test.sample(0).to_vec();
+        for li in 0..net.meta.n_layers {
+            let (next, _) = net.run_unit_native(li, &act, &mut scratch);
+            assert_eq!(next.len(), net.meta.flat_dim(li), "layer {li}");
+            act = next;
+        }
+    }
+}

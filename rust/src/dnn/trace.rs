@@ -1,0 +1,207 @@
+//! Per-sample unit traces.
+//!
+//! A trace records, for one test sample, the outcome of every unit had it
+//! executed: the utility gap, the predicted class, and whether the utility
+//! test would exit there. The discrete-event scheduler sweeps (Figs.
+//! 17–20: up to 40 000 jobs) sample jobs from these traces instead of
+//! re-running inference per job — inference happens once (natively or via
+//! PJRT), scheduling is measured separately. The oracle exit layer
+//! (earliest layer whose prediction is already correct, Fig. 16) is also
+//! recorded.
+
+use super::kmeans::Scratch;
+use super::network::Network;
+
+#[derive(Clone, Copy, Debug)]
+pub struct UnitOutcome {
+    pub gap: f32,
+    pub pred: i32,
+    pub exit: bool,
+    pub correct: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct SampleTrace {
+    pub label: i32,
+    pub units: Vec<UnitOutcome>,
+    /// First unit where the utility test passes (== number of mandatory
+    /// units - 1). If it never passes, the last unit.
+    pub exit_unit: usize,
+    /// Earliest unit whose prediction is correct; None if never correct.
+    pub oracle_unit: Option<usize>,
+}
+
+impl SampleTrace {
+    /// Prediction under utility-based early termination.
+    pub fn utility_pred(&self) -> i32 {
+        self.units[self.exit_unit].pred
+    }
+
+    pub fn utility_correct(&self) -> bool {
+        self.units[self.exit_unit].correct
+    }
+
+    /// Prediction with no early exit (full execution).
+    pub fn full_pred(&self) -> i32 {
+        self.units.last().unwrap().pred
+    }
+
+    /// Number of mandatory units under the dynamic partition: every unit
+    /// up to and including the first confident one.
+    pub fn mandatory_units(&self) -> usize {
+        self.exit_unit + 1
+    }
+}
+
+/// Compute traces for every test sample using the native forward path.
+/// `inputs` overrides the test inputs (used for the Fig. 24 environment
+/// shifts); defaults to the network's own test set.
+pub fn compute_traces(net: &Network, inputs: Option<&[f32]>) -> Vec<SampleTrace> {
+    let xs = inputs.unwrap_or(&net.test.x);
+    let n = net.test.len();
+    let slen = net.test.sample_len;
+    assert_eq!(xs.len(), n * slen, "input length mismatch");
+    let mut scratch = Scratch::default();
+    let mut traces = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = net.test.y[i];
+        let mut act = xs[i * slen..(i + 1) * slen].to_vec();
+        let mut units = Vec::with_capacity(net.meta.n_layers);
+        for li in 0..net.meta.n_layers {
+            let (next, res) = net.run_unit_native(li, &act, &mut scratch);
+            units.push(UnitOutcome {
+                gap: res.gap,
+                pred: res.pred,
+                exit: res.exit,
+                correct: res.pred == label,
+            });
+            act = next;
+        }
+        let exit_unit = units
+            .iter()
+            .position(|u| u.exit)
+            .unwrap_or(net.meta.n_layers - 1);
+        let oracle_unit = units.iter().position(|u| u.correct);
+        traces.push(SampleTrace { label, units, exit_unit, oracle_unit });
+    }
+    traces
+}
+
+/// Summary statistics over a trace set (drives Figs. 15/16 rows).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceSummary {
+    pub n: usize,
+    pub acc_full: f64,
+    pub acc_utility: f64,
+    pub acc_oracle: f64,
+    /// Mean inference time (ms) with / without early termination.
+    pub time_utility_ms: f64,
+    pub time_full_ms: f64,
+    pub time_oracle_ms: f64,
+    /// Fraction of samples that executed the final layer under utility exit.
+    pub final_layer_rate: f64,
+}
+
+pub fn summarize(net: &Network, traces: &[SampleTrace]) -> TraceSummary {
+    let n = traces.len();
+    let unit_ms: Vec<f64> = net.meta.layers.iter().map(|l| l.time_ms).collect();
+    let prefix_ms = |u: usize| unit_ms[..=u].iter().sum::<f64>();
+    let mut s = TraceSummary { n, ..Default::default() };
+    for t in traces {
+        s.acc_full += t.units.last().unwrap().correct as u8 as f64;
+        s.acc_utility += t.utility_correct() as u8 as f64;
+        let oracle_u = t.oracle_unit.unwrap_or(net.meta.n_layers - 1);
+        s.acc_oracle += t.oracle_unit.is_some() as u8 as f64;
+        s.time_utility_ms += prefix_ms(t.exit_unit);
+        s.time_full_ms += prefix_ms(net.meta.n_layers - 1);
+        s.time_oracle_ms += prefix_ms(oracle_u);
+        s.final_layer_rate += (t.exit_unit == net.meta.n_layers - 1) as u8 as f64;
+    }
+    for v in [
+        &mut s.acc_full,
+        &mut s.acc_utility,
+        &mut s.acc_oracle,
+        &mut s.time_utility_ms,
+        &mut s.time_full_ms,
+        &mut s.time_oracle_ms,
+        &mut s.final_layer_rate,
+    ] {
+        *v /= n as f64;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(name: &str) -> Option<Network> {
+        let dir = crate::artifacts_root().join(name);
+        dir.join("meta.json").exists().then(|| Network::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn traces_have_consistent_structure() {
+        let Some(net) = net("mnist") else { return };
+        let traces = compute_traces(&net, None);
+        assert_eq!(traces.len(), net.test.len());
+        for t in &traces {
+            assert_eq!(t.units.len(), net.meta.n_layers);
+            assert!(t.exit_unit < net.meta.n_layers);
+            // exit_unit is the first exiting unit
+            for u in &t.units[..t.exit_unit] {
+                assert!(!u.exit);
+            }
+            if let Some(o) = t.oracle_unit {
+                assert!(t.units[o].correct);
+                for u in &t.units[..o] {
+                    assert!(!u.correct);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn early_termination_saves_time_at_small_accuracy_cost() {
+        // The paper's headline: 5-26 % mean-time reduction, accuracy within
+        // 2.5 % of full execution (Figs. 15/16).
+        let Some(net) = net("mnist") else { return };
+        let traces = compute_traces(&net, None);
+        let s = summarize(&net, &traces);
+        assert!(s.time_utility_ms < s.time_full_ms, "no time saved");
+        assert!(
+            s.acc_full - s.acc_utility < 0.06,
+            "early exit lost too much accuracy: full={} utility={}",
+            s.acc_full,
+            s.acc_utility
+        );
+        // The oracle (minimum units for a *correct* result) upper-bounds
+        // accuracy; it is not a time lower bound because the utility test
+        // may exit even earlier with a wrong answer.
+        assert!(s.acc_oracle >= s.acc_utility - 1e-9);
+    }
+
+    #[test]
+    fn difficulty_correlates_with_exit_depth() {
+        // The generator's difficulty knob must drive the dynamic partition:
+        // easy samples exit earlier on average than hard ones.
+        let Some(net) = net("mnist") else { return };
+        let traces = compute_traces(&net, None);
+        let (mut easy_sum, mut easy_n, mut hard_sum, mut hard_n) = (0.0, 0, 0.0, 0);
+        for (t, &d) in traces.iter().zip(&net.test.difficulty) {
+            if d < 0.25 {
+                easy_sum += t.exit_unit as f64;
+                easy_n += 1;
+            } else if d > 0.6 {
+                hard_sum += t.exit_unit as f64;
+                hard_n += 1;
+            }
+        }
+        if easy_n > 10 && hard_n > 10 {
+            assert!(
+                easy_sum / easy_n as f64 <= hard_sum / hard_n as f64,
+                "easy samples exit later than hard ones"
+            );
+        }
+    }
+}

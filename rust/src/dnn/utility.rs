@@ -1,0 +1,178 @@
+//! Generic utility functions (paper §11.2).
+//!
+//! Zygarde's default utility test is the top-2 L1-distance gap of the
+//! k-means classifier. The paper sketches how the same *principle*
+//! (confidence at this unit decides whether deeper units are optional)
+//! extends to other classifier families:
+//!
+//! * distance-margin classifiers (SVM/KNN): distance to the decision
+//!   boundary / the neighbour-vote margin;
+//! * probabilistic classifiers (softmax heads, naive Bayes): the entropy
+//!   of the predictive distribution, U = −Σ pᵢ log₂ pᵢ — low entropy ⇒
+//!   concentrated mass ⇒ confident ⇒ exit.
+//!
+//! This module implements those alternatives behind one trait so a
+//! deployment can swap the exit test without touching the scheduler.
+
+/// A utility score plus the exit decision derived from it. Higher utility
+/// always means MORE confident (the scheduler's ζ gives low-utility jobs
+/// priority for further refinement).
+#[derive(Clone, Copy, Debug)]
+pub struct UtilityScore {
+    pub utility: f32,
+    pub exit: bool,
+}
+
+pub trait UtilityFn {
+    /// Score one unit's classifier evidence. The meaning of `evidence`
+    /// depends on the family: distances for margin-based, probabilities
+    /// for probabilistic classifiers.
+    fn score(&self, evidence: &[f32]) -> UtilityScore;
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's default: |d2 − d1| of the two smallest distances.
+#[derive(Clone, Copy, Debug)]
+pub struct DistanceGap {
+    pub threshold: f32,
+}
+
+impl UtilityFn for DistanceGap {
+    fn score(&self, dists: &[f32]) -> UtilityScore {
+        let (mut d1, mut d2) = (f32::INFINITY, f32::INFINITY);
+        for &d in dists {
+            if d < d1 {
+                d2 = d1;
+                d1 = d;
+            } else if d < d2 {
+                d2 = d;
+            }
+        }
+        let gap = if dists.len() > 1 { d2 - d1 } else { f32::INFINITY };
+        UtilityScore { utility: gap, exit: gap >= self.threshold }
+    }
+
+    fn name(&self) -> &'static str {
+        "distance-gap"
+    }
+}
+
+/// §11.2's recommendation for probability-output classifiers: exit when
+/// the predictive entropy is low. `evidence` is a probability vector;
+/// utility is reported as (max-entropy − entropy) so that higher is more
+/// confident, consistent with the gap-based score.
+#[derive(Clone, Copy, Debug)]
+pub struct EntropyUtility {
+    /// Exit when H(p) <= threshold_bits.
+    pub threshold_bits: f32,
+}
+
+impl EntropyUtility {
+    pub fn entropy_bits(p: &[f32]) -> f32 {
+        let mut h = 0f32;
+        for &x in p {
+            if x > 0.0 {
+                h -= x * x.log2();
+            }
+        }
+        h
+    }
+}
+
+impl UtilityFn for EntropyUtility {
+    fn score(&self, probs: &[f32]) -> UtilityScore {
+        debug_assert!(
+            (probs.iter().sum::<f32>() - 1.0).abs() < 1e-3,
+            "entropy utility expects a probability vector"
+        );
+        let h = Self::entropy_bits(probs);
+        let h_max = (probs.len() as f32).log2();
+        UtilityScore { utility: h_max - h, exit: h <= self.threshold_bits }
+    }
+
+    fn name(&self) -> &'static str {
+        "entropy"
+    }
+}
+
+/// Distances → pseudo-probabilities via a softmax over negative distances
+/// (temperature τ). Lets the entropy utility ride on the existing k-means
+/// evidence so the two tests are comparable on the same artifacts.
+pub fn dists_to_probs(dists: &[f32], tau: f32) -> Vec<f32> {
+    let m = dists.iter().cloned().fold(f32::INFINITY, f32::min);
+    let exps: Vec<f32> = dists.iter().map(|&d| (-(d - m) / tau).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gap_matches_classifier_semantics() {
+        let u = DistanceGap { threshold: 5.0 };
+        let confident = u.score(&[1.0, 10.0, 12.0]);
+        assert!(confident.exit);
+        assert_eq!(confident.utility, 9.0);
+        let ambiguous = u.score(&[1.0, 2.0, 12.0]);
+        assert!(!ambiguous.exit);
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        assert!(EntropyUtility::entropy_bits(&[1.0, 0.0, 0.0, 0.0]).abs() < 1e-6);
+        let uniform = EntropyUtility::entropy_bits(&[0.25; 4]);
+        assert!((uniform - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn entropy_exit_agrees_with_confidence() {
+        let u = EntropyUtility { threshold_bits: 0.5 };
+        assert!(u.score(&[0.97, 0.01, 0.01, 0.01]).exit);
+        assert!(!u.score(&[0.4, 0.3, 0.2, 0.1]).exit);
+        // more confident => higher utility
+        let a = u.score(&[0.97, 0.01, 0.01, 0.01]).utility;
+        let b = u.score(&[0.7, 0.1, 0.1, 0.1]).utility;
+        assert!(a > b);
+    }
+
+    #[test]
+    fn dists_to_probs_is_a_distribution_and_order_preserving() {
+        let p = dists_to_probs(&[1.0, 5.0, 2.0], 1.0);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[0] > p[2] && p[2] > p[1]);
+    }
+
+    #[test]
+    fn entropy_and_gap_agree_on_real_artifacts() {
+        // On the mnist artifacts, rank samples by both utilities at layer
+        // 0; confident-by-gap should be overwhelmingly confident-by-
+        // entropy as well (the tests measure the same ambiguity).
+        let dir = crate::artifacts_root().join("mnist");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let net = crate::dnn::network::Network::load(&dir).unwrap();
+        let mut scratch = crate::dnn::kmeans::Scratch::default();
+        let mut agree = 0usize;
+        let mut n = 0usize;
+        let gap = DistanceGap { threshold: net.classifiers[0].threshold };
+        let ent = EntropyUtility { threshold_bits: 2.4 };
+        for i in 0..net.test.len() {
+            let (_, res) = net.run_unit_native(0, net.test.sample(i), &mut scratch);
+            let _ = res;
+            let dists = scratch.dists.clone();
+            let g = gap.score(&dists);
+            let e = ent.score(&dists_to_probs(&dists, 8.0));
+            n += 1;
+            if g.exit == e.exit {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree as f64 / n as f64 > 0.6,
+            "utilities disagree too much: {agree}/{n}"
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! Supercapacitor energy-storage model.
+//!
+//! E = ½CV², charged by the harvester through an ideal regulator, drained
+//! by fragment execution. The MCU boots when the voltage crosses `v_on`
+//! and browns out below `v_off` (hysteresis, as in real intermittent
+//! platforms); the capacitor clamps at `v_max` — excess harvest is wasted,
+//! which is exactly the waste the ζ_I scheduler's optional-unit execution
+//! is designed to absorb (paper §5.2).
+
+#[derive(Clone, Debug)]
+pub struct Capacitor {
+    pub c_farads: f64,
+    pub v_max: f64,
+    pub v_on: f64,
+    pub v_off: f64,
+    /// Stored energy in millijoules.
+    energy_mj: f64,
+    mcu_on: bool,
+    /// Cumulative harvested energy that arrived while full (wasted).
+    pub wasted_mj: f64,
+}
+
+impl Capacitor {
+    /// The paper's default: 50 mF, 3.3 V rail, MSP430 thresholds.
+    pub fn standard() -> Self {
+        Self::new(0.050, 3.3, 2.8, 1.9)
+    }
+
+    pub fn new(c_farads: f64, v_max: f64, v_on: f64, v_off: f64) -> Self {
+        assert!(v_on > v_off && v_max >= v_on);
+        Capacitor {
+            c_farads,
+            v_max,
+            v_on,
+            v_off,
+            energy_mj: 0.0,
+            mcu_on: false,
+            wasted_mj: 0.0,
+        }
+    }
+
+    /// Maximum storable energy (mJ).
+    pub fn capacity_mj(&self) -> f64 {
+        0.5 * self.c_farads * self.v_max * self.v_max * 1e3
+    }
+
+    /// Energy at the brown-out threshold — unusable remnant.
+    pub fn floor_mj(&self) -> f64 {
+        0.5 * self.c_farads * self.v_off * self.v_off * 1e3
+    }
+
+    pub fn energy_mj(&self) -> f64 {
+        self.energy_mj
+    }
+
+    /// Usable energy above the brown-out floor (the scheduler's E_curr).
+    pub fn usable_mj(&self) -> f64 {
+        (self.energy_mj - self.floor_mj()).max(0.0)
+    }
+
+    pub fn voltage(&self) -> f64 {
+        (2.0 * self.energy_mj * 1e-3 / self.c_farads).sqrt()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.energy_mj >= self.capacity_mj() * (1.0 - 1e-9)
+    }
+
+    /// Add harvested energy over `dt_ms` at `power_mw`; update MCU state.
+    pub fn charge(&mut self, power_mw: f64, dt_ms: f64) {
+        // mW · ms = µJ; µJ · 1e-3 = mJ.
+        let add_mj = power_mw * dt_ms * 1e-3;
+        let cap = self.capacity_mj();
+        let new = self.energy_mj + add_mj;
+        if new > cap {
+            self.wasted_mj += new - cap;
+            self.energy_mj = cap;
+        } else {
+            self.energy_mj = new;
+        }
+        self.update_mcu();
+    }
+
+    /// Try to draw `e_mj` for computation. Fails (returns false, draws
+    /// nothing) if the MCU is off or the draw would brown out mid-way —
+    /// the caller then re-executes the fragment later (idempotent).
+    pub fn draw(&mut self, e_mj: f64) -> bool {
+        if !self.mcu_on {
+            return false;
+        }
+        if self.energy_mj - e_mj < self.floor_mj() {
+            // Brown-out: the energy is still spent (the fragment ran and
+            // died) but the work is lost, and the MCU powers off — it must
+            // recharge past v_on before executing again.
+            self.energy_mj = self.floor_mj();
+            self.mcu_on = false;
+            return false;
+        }
+        self.energy_mj -= e_mj;
+        self.update_mcu();
+        true
+    }
+
+    /// MCU baseline draw (sleep/idle current) over `dt_ms`.
+    pub fn idle_drain(&mut self, power_mw: f64, dt_ms: f64) {
+        if self.mcu_on {
+            // mW · ms · 1e-3 = mJ.
+            self.energy_mj = (self.energy_mj - power_mw * dt_ms * 1e-3).max(0.0);
+            self.update_mcu();
+        }
+    }
+
+    fn update_mcu(&mut self) {
+        let v = self.voltage();
+        if self.mcu_on {
+            if v < self.v_off {
+                self.mcu_on = false;
+            }
+        } else if v >= self.v_on {
+            self.mcu_on = true;
+        }
+    }
+
+    pub fn mcu_on(&self) -> bool {
+        self.mcu_on
+    }
+
+    /// The paper's §8.6 sizing rule: C = sqrt(2 P δT / V²) — returns the
+    /// "optimal" capacitance for average power P (mW), slack δT (ms), and
+    /// rail voltage V. (Kept in the paper's own algebraic form.)
+    pub fn optimal_capacitance(p_mw: f64, slack_ms: f64, v: f64) -> f64 {
+        (2.0 * (p_mw * 1e-3) * (slack_ms * 1e-3) / (v * v)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_matches_physics() {
+        let c = Capacitor::standard();
+        // ½ · 0.05 F · 3.3² V² = 272.25 mJ
+        assert!((c.capacity_mj() - 272.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn charges_until_full_then_wastes() {
+        let mut c = Capacitor::new(0.001, 2.0, 1.8, 1.0);
+        let cap = c.capacity_mj();
+        // Push far more energy than capacity.
+        for _ in 0..1000 {
+            c.charge(100.0, 100.0);
+        }
+        assert!(c.is_full());
+        assert!((c.energy_mj() - cap).abs() < 1e-9);
+        assert!(c.wasted_mj > 0.0);
+    }
+
+    #[test]
+    fn mcu_hysteresis() {
+        let mut c = Capacitor::new(0.001, 3.0, 2.5, 1.5);
+        assert!(!c.mcu_on());
+        // Charge until boot.
+        while !c.mcu_on() {
+            c.charge(50.0, 100.0);
+        }
+        assert!(c.voltage() >= 2.5);
+        // Drain: stays on until v_off.
+        while c.mcu_on() {
+            assert!(c.draw(0.1) || !c.mcu_on());
+        }
+        assert!(c.voltage() <= 1.5 + 1e-6);
+        // Must re-reach v_on (not v_off) to boot again.
+        c.charge(1.0, 1.0);
+        assert!(!c.mcu_on());
+    }
+
+    #[test]
+    fn draw_fails_when_off() {
+        let mut c = Capacitor::standard();
+        assert!(!c.draw(0.01));
+        assert_eq!(c.energy_mj(), 0.0);
+    }
+
+    #[test]
+    fn brownout_spends_energy_but_fails() {
+        let mut c = Capacitor::new(0.001, 3.0, 2.5, 1.5);
+        while !c.mcu_on() {
+            c.charge(50.0, 100.0);
+        }
+        let huge = c.capacity_mj(); // more than usable
+        assert!(!c.draw(huge));
+        assert!(!c.mcu_on());
+        assert!((c.energy_mj() - c.floor_mj()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn optimal_capacitance_formula() {
+        // C = sqrt(2·P·δT / V²): plug P=1 W, δT=1 s, V=3.3 V
+        let c = Capacitor::optimal_capacitance(1000.0, 1000.0, 3.3);
+        assert!((c - (2.0f64 / (3.3 * 3.3)).sqrt()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,280 @@
+//! Harvester process models (the hardware substitute, DESIGN.md §1).
+//!
+//! Each model produces instantaneous harvested power (mW) per simulation
+//! tick. The scheduler never sees these directly — only the capacitor
+//! state and the offline-estimated η-factor — so what matters is that the
+//! *energy-event statistics* match the paper's (bursty two-state processes
+//! with the h(N) shapes of Fig. 4). Four models:
+//!
+//! * `Persistent` — constant supply (System 1, η = 1).
+//! * `MarkovBurst` — symmetric-ish two-state Markov process; calibrated by
+//!   [`calibrate_markov`] to hit a target η. Used for the controlled solar
+//!   (bulb) and RF experiments (Systems 2–7, Table 4).
+//! * `Piezo` — footstep-driven: bounded walk bouts (the paper's subject
+//!   never walked > 100 min) with long idle gaps.
+//! * `SolarDiurnal` — day/night cycle plus cloud flicker for the two-month
+//!   Fig. 4(c) study: long on-runs (~5 h of light at a window), long
+//!   off-runs (~19 h until the sun returns).
+
+use crate::util::rng::Pcg32;
+
+use super::events::eta_factor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HarvesterKind {
+    Persistent,
+    Solar,
+    Rf,
+    Piezo,
+    SolarDiurnal,
+}
+
+#[derive(Clone, Debug)]
+pub struct Harvester {
+    pub kind: HarvesterKind,
+    pub name: String,
+    /// Average power while the source is ON (mW).
+    pub on_power_mw: f64,
+    /// Probability of staying in the current state per ΔT window.
+    pub p_stay_on: f64,
+    pub p_stay_off: f64,
+    /// ΔT in milliseconds (the energy-event window).
+    pub dt_ms: f64,
+    state_on: bool,
+    /// Time left in the current ΔT window (ms).
+    window_left_ms: f64,
+    rng: Pcg32,
+    // SolarDiurnal / Piezo internal clocks.
+    phase_ms: f64,
+}
+
+impl Harvester {
+    pub fn persistent(power_mw: f64) -> Self {
+        Harvester {
+            kind: HarvesterKind::Persistent,
+            name: "persistent".into(),
+            on_power_mw: power_mw,
+            p_stay_on: 1.0,
+            p_stay_off: 0.0,
+            dt_ms: 1000.0,
+            state_on: true,
+            window_left_ms: 1000.0,
+            rng: Pcg32::seeded(0),
+            phase_ms: 0.0,
+        }
+    }
+
+    /// Two-state Markov burst source with stay probability `q` for both
+    /// states (marginal duty ≈ duty, enforced by asymmetric stays).
+    pub fn markov(kind: HarvesterKind, on_power_mw: f64, q: f64, duty: f64,
+                  dt_ms: f64, seed: u64) -> Self {
+        // Asymmetric stay probabilities chosen so the stationary
+        // distribution has P(on) = duty while both states stay bursty:
+        //   P(on) = p01 / (p01 + p10), p10 = 1-q_on, p01 = 1-q_off.
+        let p10 = 1.0 - q;
+        let p01 = p10 * duty / (1.0 - duty).max(1e-6);
+        let name = match kind {
+            HarvesterKind::Solar => "solar",
+            HarvesterKind::Rf => "rf",
+            _ => "markov",
+        };
+        Harvester {
+            kind,
+            name: name.into(),
+            on_power_mw,
+            p_stay_on: q,
+            p_stay_off: (1.0 - p01).clamp(0.0, 1.0),
+            dt_ms,
+            state_on: true,
+            window_left_ms: dt_ms,
+            rng: Pcg32::seeded(seed),
+            phase_ms: 0.0,
+        }
+    }
+
+    pub fn piezo(seed: u64) -> Self {
+        Harvester {
+            kind: HarvesterKind::Piezo,
+            name: "piezo".into(),
+            on_power_mw: 20.0,
+            p_stay_on: 0.95,
+            p_stay_off: 0.985,
+            dt_ms: 5.0 * 60.0 * 1000.0, // ΔT = 5 min (Fig. 4)
+            state_on: false,
+            window_left_ms: 5.0 * 60.0 * 1000.0,
+            rng: Pcg32::seeded(seed),
+            phase_ms: 0.0,
+        }
+    }
+
+    pub fn solar_diurnal(seed: u64) -> Self {
+        Harvester {
+            kind: HarvesterKind::SolarDiurnal,
+            name: "solar-diurnal".into(),
+            on_power_mw: 500.0,
+            p_stay_on: 0.97, // cloud flicker within the lit window
+            p_stay_off: 1.0,
+            dt_ms: 5.0 * 60.0 * 1000.0,
+            state_on: false,
+            window_left_ms: 5.0 * 60.0 * 1000.0,
+            rng: Pcg32::seeded(seed),
+            phase_ms: 0.0,
+        }
+    }
+
+    /// Advance by `dt_ms` and return the average harvested power over the
+    /// step (mW). State transitions happen at ΔT window boundaries.
+    pub fn step(&mut self, dt_ms: f64) -> f64 {
+        self.phase_ms += dt_ms;
+        self.window_left_ms -= dt_ms;
+        while self.window_left_ms <= 0.0 {
+            self.window_left_ms += self.dt_ms;
+            self.transition();
+        }
+        if self.state_on {
+            // ±10 % power jitter models light-intensity / RF distance noise.
+            self.on_power_mw * (0.9 + 0.2 * self.rng.f64())
+        } else {
+            0.0
+        }
+    }
+
+    fn transition(&mut self) {
+        match self.kind {
+            HarvesterKind::Persistent => {}
+            HarvesterKind::SolarDiurnal => {
+                // 24 h cycle: a ~5 h lit window at this window's position
+                // (the paper's window stopped getting light after 5 h),
+                // modulated by cloud bursts.
+                const DAY_MS: f64 = 24.0 * 3600.0 * 1000.0;
+                let t = self.phase_ms % DAY_MS;
+                let lit = t > 7.0 * 3600.0 * 1000.0 && t < 12.0 * 3600.0 * 1000.0;
+                if !lit {
+                    self.state_on = false;
+                } else if self.state_on {
+                    self.state_on = self.rng.chance(self.p_stay_on);
+                } else {
+                    self.state_on = !self.rng.chance(0.6);
+                }
+            }
+            _ => {
+                let stay = if self.state_on { self.p_stay_on } else { self.p_stay_off };
+                if !self.rng.chance(stay) {
+                    self.state_on = !self.state_on;
+                }
+                // Piezo: cap walk bouts (never > ~100 min of walking).
+                if self.kind == HarvesterKind::Piezo && self.state_on {
+                    // handled statistically by p_stay_on < 1; no hard cap
+                    // needed for the h(N) shape beyond the Markov decay.
+                }
+            }
+        }
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.state_on
+    }
+
+    /// Generate an energy-event trace: one bool per ΔT window, true iff
+    /// the window harvested at least `dk_mj` millijoules.
+    pub fn event_trace(&mut self, windows: usize, dk_mj: f64) -> Vec<bool> {
+        let mut out = Vec::with_capacity(windows);
+        // Sample each ΔT window in 10 sub-steps for power jitter averaging.
+        let sub = self.dt_ms / 10.0;
+        for _ in 0..windows {
+            let mut e_mj = 0.0;
+            for _ in 0..10 {
+                e_mj += self.step(sub) * sub * 1e-3; // mW * ms = µJ; /1e3 = mJ
+            }
+            out.push(e_mj >= dk_mj);
+        }
+        out
+    }
+}
+
+/// Binary-search the Markov stay probability `q` so the simulated trace's
+/// estimated η matches `target` (the paper's Systems 2–7 use η ∈
+/// {0.38, 0.51, 0.71}). Returns (q, achieved η).
+pub fn calibrate_markov(
+    kind: HarvesterKind,
+    on_power_mw: f64,
+    duty: f64,
+    target: f64,
+    seed: u64,
+) -> (f64, f64) {
+    let eval = |q: f64| -> f64 {
+        let mut h = Harvester::markov(kind, on_power_mw, q, duty, 1000.0, seed);
+        // ΔK chosen as half the per-window on-energy so events track state.
+        let dk = on_power_mw * 1000.0 * 1e-3 * 0.5;
+        let trace = h.event_trace(30_000, dk);
+        eta_factor(&trace, 20, seed).eta
+    };
+    let (mut lo, mut hi) = (0.50, 0.999);
+    for _ in 0..18 {
+        let mid = 0.5 * (lo + hi);
+        if eval(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let q = 0.5 * (lo + hi);
+    (q, eval(q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn persistent_always_on() {
+        let mut h = Harvester::persistent(100.0);
+        for _ in 0..1000 {
+            assert!(h.step(100.0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn markov_duty_cycle_respected() {
+        let mut h = Harvester::markov(HarvesterKind::Rf, 80.0, 0.9, 0.6, 1000.0, 1);
+        let mut on = 0usize;
+        let n = 50_000;
+        for _ in 0..n {
+            if h.step(1000.0) > 0.0 {
+                on += 1;
+            }
+        }
+        let duty = on as f64 / n as f64;
+        assert!((duty - 0.6).abs() < 0.08, "duty={duty}");
+    }
+
+    #[test]
+    fn event_trace_tracks_state() {
+        let mut h = Harvester::markov(HarvesterKind::Solar, 400.0, 0.95, 0.5, 1000.0, 2);
+        let t = h.event_trace(5000, 200.0 * 0.5);
+        let rate = t.iter().filter(|&&e| e).count() as f64 / t.len() as f64;
+        assert!(rate > 0.3 && rate < 0.7, "rate={rate}");
+    }
+
+    #[test]
+    fn calibration_hits_targets() {
+        for &target in &[0.38, 0.51, 0.71] {
+            let (_q, achieved) =
+                calibrate_markov(HarvesterKind::Rf, 70.0, 0.55, target, 11);
+            assert!(
+                (achieved - target).abs() < 0.08,
+                "target {target} achieved {achieved}"
+            );
+        }
+    }
+
+    #[test]
+    fn diurnal_has_long_off_runs() {
+        let mut h = Harvester::solar_diurnal(3);
+        // Two simulated days at 5-minute windows.
+        let t = h.event_trace(2 * 288, 500.0 * 300.0 * 1e-3 * 0.25);
+        let on = t.iter().filter(|&&e| e).count();
+        // lit ~5 h of 24 h => on-rate well below half
+        assert!(on > 0 && (on as f64) < t.len() as f64 * 0.4, "on={on}/{}", t.len());
+    }
+}

@@ -1,0 +1,15 @@
+//! Intermittent-energy modeling (paper §3): energy events, the conditional
+//! event distribution h(N), the Kantorovich–Wasserstein distance to an
+//! ideal source, and the single-parameter η-factor; plus the harvester
+//! process models, the supercapacitor, and the runtime energy manager.
+
+pub mod capacitor;
+pub mod events;
+pub mod harvester;
+pub mod manager;
+pub mod online_eta;
+
+pub use capacitor::Capacitor;
+pub use events::{conditional_event_dist, eta_factor, EtaEstimate};
+pub use harvester::{calibrate_markov, Harvester, HarvesterKind};
+pub use manager::EnergyManager;

@@ -1,0 +1,108 @@
+//! Online η re-estimation (paper §11.4).
+//!
+//! The offline η can be wrong in the wild. The paper observes that η is
+//! *checkable* at runtime: the system predicts the next slot's energy
+//! state (the burst-persistence predictor η licenses) and immediately
+//! observes the truth, so the prediction error is measurable; η can then
+//! be nudged by ±δη proportional to the error. This module implements
+//! that estimator as an exponentially-weighted accuracy tracker whose
+//! output converges to the measured next-slot prediction accuracy — the
+//! quantity Fig. 25 shows η itself converges to.
+
+#[derive(Clone, Debug)]
+pub struct OnlineEta {
+    /// Current estimate, seeded from the offline study.
+    pub eta: f64,
+    /// Adaptation gain (δη per unit of prediction error).
+    pub gain: f64,
+    /// EWMA window for the measured accuracy.
+    pub alpha: f64,
+    acc_ewma: f64,
+    last_state: Option<bool>,
+    pub observations: u64,
+}
+
+impl OnlineEta {
+    pub fn new(offline_eta: f64) -> Self {
+        OnlineEta {
+            eta: offline_eta,
+            gain: 0.1,
+            alpha: 0.02,
+            acc_ewma: offline_eta,
+            last_state: None,
+            observations: 0,
+        }
+    }
+
+    /// Feed one energy-event observation (the ΔT-window state). The
+    /// persistence predictor forecasts state_t = state_{t-1}; its hit
+    /// rate is tracked and η is pulled toward it.
+    pub fn observe(&mut self, state: bool) {
+        if let Some(prev) = self.last_state {
+            let hit = (prev == state) as u8 as f64;
+            self.acc_ewma = (1.0 - self.alpha) * self.acc_ewma + self.alpha * hit;
+            let err = self.acc_ewma - self.eta;
+            self.eta = (self.eta + self.gain * err).clamp(0.0, 1.0);
+            self.observations += 1;
+        }
+        self.last_state = Some(state);
+    }
+
+    /// Measured next-slot prediction accuracy (EWMA).
+    pub fn measured_accuracy(&self) -> f64 {
+        self.acc_ewma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn feed_markov(est: &mut OnlineEta, q: f64, n: usize, seed: u64) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut s = true;
+        for _ in 0..n {
+            if !rng.chance(q) {
+                s = !s;
+            }
+            est.observe(s);
+        }
+    }
+
+    #[test]
+    fn converges_up_from_bad_seed() {
+        // Offline said 0.3 but the deployment is strongly bursty (q=0.95:
+        // persistence accuracy 0.95). The estimate must climb.
+        let mut est = OnlineEta::new(0.3);
+        feed_markov(&mut est, 0.95, 20_000, 1);
+        assert!(est.eta > 0.85, "eta={}", est.eta);
+        assert!((est.measured_accuracy() - 0.95).abs() < 0.05);
+    }
+
+    #[test]
+    fn converges_down_from_optimistic_seed() {
+        // Offline said 0.9 but the field source is memoryless (accuracy
+        // ~0.5): the estimate must fall toward 0.5.
+        let mut est = OnlineEta::new(0.9);
+        feed_markov(&mut est, 0.5, 20_000, 2);
+        assert!(est.eta < 0.6, "eta={}", est.eta);
+    }
+
+    #[test]
+    fn accurate_seed_stays_put() {
+        let mut est = OnlineEta::new(0.9);
+        feed_markov(&mut est, 0.9, 20_000, 3);
+        assert!((est.eta - 0.9).abs() < 0.07, "eta={}", est.eta);
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        let mut est = OnlineEta::new(1.0);
+        feed_markov(&mut est, 0.5, 5000, 4);
+        assert!((0.0..=1.0).contains(&est.eta));
+        let mut est0 = OnlineEta::new(0.0);
+        feed_markov(&mut est0, 0.99, 5000, 5);
+        assert!((0.0..=1.0).contains(&est0.eta));
+    }
+}

@@ -1,0 +1,193 @@
+//! Fig. 22 — six real-life acoustic event-detection applications, each a
+//! 10-minute deployment sampling audio every 2 s with a 3 s relative
+//! deadline (the ESC-10 agile DNN): car detector, dog monitor, and people
+//! detector on solar; baby, laundry, and printer monitors on RF. Each
+//! app's harvester reflects its Table 6 intermittence cause (passing
+//! clouds/pedestrians for solar, distance/interference for RF).
+
+use std::sync::Arc;
+
+use crate::coordinator::sched::{ExitPolicy, SchedulerKind};
+use crate::dnn::network::Network;
+use crate::dnn::trace::compute_traces;
+use crate::energy::capacitor::Capacitor;
+use crate::energy::harvester::{Harvester, HarvesterKind};
+use crate::energy::manager::EnergyManager;
+use crate::sim::metrics::Metrics;
+use crate::sim::workload::task_from_network;
+
+use super::common::{pct, print_header, print_row};
+
+#[derive(Clone, Debug)]
+pub struct AppSpec {
+    pub name: &'static str,
+    pub kind: HarvesterKind,
+    pub on_power_mw: f64,
+    /// Burst persistence / duty reflecting the app's intermittence cause.
+    pub q: f64,
+    pub duty: f64,
+}
+
+/// Table 6's six applications, ordered as in Fig. 22(a)-(f).
+pub const APPS: [AppSpec; 6] = [
+    // Car detector: roadside sun, effectively continuous harvest ("always
+    // harvests sufficient energy from the sun", §9.1).
+    AppSpec { name: "car-detector", kind: HarvesterKind::Solar, on_power_mw: 700.0, q: 0.999, duty: 0.99 },
+    // Dog monitor: people block the panel.
+    AppSpec { name: "dog-monitor", kind: HarvesterKind::Solar, on_power_mw: 550.0, q: 0.97, duty: 0.7 },
+    // People detector: window light.
+    AppSpec { name: "people-detector", kind: HarvesterKind::Solar, on_power_mw: 500.0, q: 0.98, duty: 0.8 },
+    // Baby monitor: RF at ~1 m.
+    AppSpec { name: "baby-monitor", kind: HarvesterKind::Rf, on_power_mw: 90.0, q: 0.97, duty: 0.75 },
+    // Laundry monitor: RF mid-distance.
+    AppSpec { name: "laundry-monitor", kind: HarvesterKind::Rf, on_power_mw: 75.0, q: 0.95, duty: 0.65 },
+    // Printer monitor: farthest / most interference — highest intermittence.
+    AppSpec { name: "printer-monitor", kind: HarvesterKind::Rf, on_power_mw: 60.0, q: 0.90, duty: 0.5 },
+];
+
+pub struct AppResult {
+    pub app: &'static str,
+    pub metrics: Metrics,
+    /// Downsampled (t_ms, volts) trace — Fig. 22's voltage plot.
+    pub voltage: Vec<(f64, f64)>,
+}
+
+pub fn run(duration_ms: f64, seed: u64) -> Vec<AppResult> {
+    let mut net = Network::load(&crate::artifacts_root().join("esc10")).unwrap();
+    // Deployment-specific utility thresholds: the sampling period (2 s) is
+    // tighter than the offline default thresholds' mean mandatory time, so
+    // the developer dials the per-layer thresholds down (the §4.3 knob —
+    // "a desired minimum inference accuracy as configured by the
+    // programmer") to favour earlier exits.
+    for clf in &mut net.classifiers {
+        clf.threshold *= 0.5;
+    }
+    let traces = Arc::new(compute_traces(&net, None));
+    APPS.iter()
+        .map(|app| {
+            // Audio every 2 s; D = 3 s = whole-model execution time (§9.1).
+            let mut task = task_from_network(0, &net, 2000.0, 3000.0, Some(traces.clone()));
+            // The Fig. 22 deployment uses a smaller net than Table 3's
+            // ESC-10 (one conv + two FC): execution ~1.7 s after the first
+            // unit, ~3 s for the whole model, against a 3 s deadline.
+            // Rescale the unit profile to that front-loaded shape
+            // (energies follow the 110 mW draw).
+            let profile = [0.553, 0.2, 0.14, 0.107]; // unit0 ≈ 1.55 s
+            let total_ms = 2800.0;
+            for (u, &p) in profile.iter().enumerate() {
+                task.unit_time_ms[u] = total_ms * p;
+                task.unit_energy_mj[u] = total_ms * p * 0.110; // 110 mW
+                task.unit_fragments[u] = ((total_ms * p) / 7.5).ceil() as usize;
+            }
+            let e_man = (0..task.n_units())
+                .map(|u| task.fragment_energy_mj(u))
+                .fold(0.0f64, f64::max);
+            let mut cap = Capacitor::standard();
+            cap.charge(1e9, 1000.0);
+            let h = if app.duty >= 0.99 {
+                Harvester::persistent(app.on_power_mw)
+            } else {
+                Harvester::markov(app.kind, app.on_power_mw, app.q, app.duty, 1000.0, seed)
+            };
+            // η per app estimated from its own trace statistics: use q as
+            // the deployment's offline estimate (monotone proxy).
+            let eta = 2.0 * app.q - 1.0;
+            let em = EnergyManager::new(cap, h, eta.clamp(0.0, 1.0), e_man);
+
+            let params = crate::coordinator::priority::PriorityParams::new(3000.0, 30.0);
+            let mut engine = crate::sim::engine::Engine::new(
+                crate::sim::engine::SimConfig {
+                    duration_ms,
+                    seed,
+                    ..Default::default()
+                },
+                vec![task],
+                crate::coordinator::sched::Scheduler::new(SchedulerKind::Zygarde, params),
+                ExitPolicy::Utility,
+                em,
+                Box::new(crate::clock::Rtc),
+            );
+            let log: std::rc::Rc<std::cell::RefCell<Vec<(f64, f64)>>> =
+                std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+            {
+                let log = log.clone();
+                let mut last = -1e18f64;
+                engine.probe = Some(Box::new(move |t, em, _| {
+                    if t - last >= 500.0 {
+                        last = t;
+                        log.borrow_mut().push((t, em.capacitor.voltage()));
+                    }
+                }));
+            }
+            let metrics = engine.run();
+            let voltage = log.borrow().clone();
+            AppResult { app: app.name, metrics, voltage }
+        })
+        .collect()
+}
+
+pub fn print(results: &[AppResult]) {
+    print_header(
+        "Fig. 22: real-life acoustic event detection (10-minute runs)",
+        &["app", "events", "missed-capture", "deadline-miss", "sched%", "accuracy"],
+    );
+    for r in results {
+        print_row(&[
+            r.app.into(),
+            (r.metrics.released + r.metrics.capture_missed).to_string(),
+            r.metrics.capture_missed.to_string(),
+            r.metrics.deadline_missed.to_string(),
+            pct(r.metrics.scheduled_rate()),
+            pct(r.metrics.accuracy()),
+        ]);
+    }
+    // Compact voltage sparkline per app (the Fig. 22 waveform).
+    for r in results {
+        let marks: String = r
+            .voltage
+            .iter()
+            .step_by((r.voltage.len() / 60).max(1))
+            .map(|&(_, v)| {
+                let lvl = ((v / 3.3) * 7.0).clamp(0.0, 7.0) as usize;
+                ['.', ':', '-', '=', '+', '*', '#', '@'][lvl]
+            })
+            .collect();
+        println!("{:<18} V(t): {marks}", r.app);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intermittence_ordering_matches_apps() {
+        if !crate::artifacts_root().join("esc10/meta.json").exists() {
+            return;
+        }
+        let results = run(600_000.0, 9); // the paper's 10 minutes
+        let get = |name: &str| results.iter().find(|r| r.app == name).unwrap();
+        // Car detector (always sunny): near-full scheduling. The workload
+        // is inherently tight (T = 2 s < mean mandatory time for hard
+        // samples), so allow the few utility-test-driven misses the paper
+        // itself reports.
+        let car = get("car-detector");
+        assert!(car.metrics.event_scheduled_rate() > 0.8, "car: {:?}", car.metrics.event_scheduled_rate());
+        // Printer monitor (highest intermittence): visibly worse than car.
+        let printer = get("printer-monitor");
+        assert!(
+            printer.metrics.event_scheduled_rate() < car.metrics.event_scheduled_rate(),
+            "printer {} vs car {}",
+            printer.metrics.event_scheduled_rate(),
+            car.metrics.event_scheduled_rate()
+        );
+        let trouble = printer.metrics.deadline_missed
+            + printer.metrics.capture_missed
+            + printer.metrics.refragments;
+        assert!(trouble > 0, "printer monitor should struggle");
+        // Voltage traces recorded for every app.
+        for r in &results {
+            assert!(r.voltage.len() > 100);
+        }
+    }
+}

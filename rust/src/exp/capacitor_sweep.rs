@@ -1,0 +1,133 @@
+//! Fig. 21 — effect of capacitor size. CIFAR-100 workload, RF η = 0.51,
+//! T = 9–11 s, D = 2T, capacitors {0.1, 1, 50, 470} mF. Small capacitors
+//! miss deadlines on re-executed fragments across outages; the 470 mF one
+//! misses them while charging. 50 mF is the sweet spot.
+
+use std::sync::Arc;
+
+use crate::coordinator::sched::SchedulerKind;
+use crate::dnn::network::Network;
+use crate::dnn::trace::compute_traces;
+use crate::energy::capacitor::Capacitor;
+use crate::sim::metrics::Metrics;
+use crate::sim::workload::task_from_network;
+
+use super::common::{pct, print_header, print_row, system, System};
+use crate::coordinator::priority::PriorityParams;
+use crate::coordinator::sched::{ExitPolicy, Scheduler};
+use crate::energy::harvester::HarvesterKind;
+use crate::energy::manager::EnergyManager;
+use crate::sim::engine::{Engine, SimConfig};
+
+pub struct CapacitorCell {
+    pub c_mf: f64,
+    pub metrics: Metrics,
+}
+
+pub const SIZES_MF: [f64; 4] = [0.1, 1.0, 50.0, 470.0];
+
+/// The paper's §8.6 setup "stress tests the system": the RF source at
+/// ~0.5 m is *nearly always on but weak* — its instantaneous power sits
+/// below the MCU's 110 mW active draw, so execution always drains the
+/// capacitor and the device duty-cycles through it. That is the regime
+/// where capacitor sizing matters: 0.1 mF cannot complete one fragment
+/// per boot, 1 mF thrashes on re-executions, 50 mF cycles fine-grained
+/// (every deadline window gets CPU time), 470 mF blanks whole deadline
+/// windows while recharging its 994 mJ hysteresis band.
+pub const STRESS_AVG_POWER_MW: f64 = 70.0;
+pub const STRESS_DUTY: f64 = 0.92;
+
+pub fn run(n_jobs: u64, seed: u64) -> Vec<CapacitorCell> {
+    let net = Network::load(&crate::artifacts_root().join("cifar100")).unwrap();
+    let traces = Arc::new(compute_traces(&net, None));
+    let stress_mw: f64 = std::env::var("CAP_POWER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(STRESS_AVG_POWER_MW);
+    let sys = System { id: 6, kind: HarvesterKind::Rf, eta: 0.51,
+                       avg_power_mw: stress_mw };
+    let _ = system(6); // documented anchor: same η as Table 4's System 6
+    let duration_ms = n_jobs as f64 * 10_000.0 * 1.06;
+    SIZES_MF
+        .iter()
+        .map(|&mf| {
+            // Period 9-11 s -> midpoint, with the engine's sporadic jitter.
+            let task = task_from_network(0, &net, 10_000.0, 20_000.0, Some(traces.clone()));
+            let e_man = (0..task.n_units())
+                .map(|u| task.fragment_energy_mj(u))
+                .fold(0.0f64, f64::max);
+            // Cold start (deployment begins with an empty capacitor): the
+            // 470 mF unit pays its long initial charge, as in the paper.
+            let cap = Capacitor::new(mf * 1e-3, 3.3, 2.8, 1.9);
+            let h = crate::energy::harvester::Harvester::markov(
+                HarvesterKind::Rf,
+                stress_mw / STRESS_DUTY,
+                0.75, // bursty at η ≈ 0.5 like Table 4's System 6
+                STRESS_DUTY,
+                1000.0,
+                seed,
+            );
+            let energy = EnergyManager::new(cap, h, sys.eta, e_man);
+            let params = PriorityParams::new(20_000.0, 30.0);
+            let engine = Engine::new(
+                SimConfig { duration_ms, seed, ..Default::default() },
+                vec![task],
+                Scheduler::new(SchedulerKind::Zygarde, params),
+                ExitPolicy::Utility,
+                energy,
+                Box::new(crate::clock::Rtc),
+            );
+            CapacitorCell { c_mf: mf, metrics: engine.run() }
+        })
+        .collect()
+}
+
+pub fn print(cells: &[CapacitorCell]) {
+    print_header(
+        "Fig. 21: effect of capacitor size (CIFAR-100, RF eta=0.51)",
+        &["C (mF)", "scheduled%", "missed", "re-frags", "reboots"],
+    );
+    for c in cells {
+        print_row(&[
+            format!("{}", c.c_mf),
+            pct(c.metrics.event_scheduled_rate()),
+            c.metrics.deadline_missed.to_string(),
+            c.metrics.refragments.to_string(),
+            c.metrics.reboots.to_string(),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifty_mf_is_the_sweet_spot() {
+        if !crate::artifacts_root().join("cifar100/meta.json").exists() {
+            return;
+        }
+        // Average over seeds: single-trace burst alignment is noisy.
+        let runs: Vec<_> = [3u64, 11, 29].iter().map(|&s| run(40, s)).collect();
+        let rate = |mf: f64| {
+            runs.iter()
+                .map(|cells| {
+                    cells.iter().find(|c| c.c_mf == mf).unwrap().metrics.event_scheduled_rate()
+                })
+                .sum::<f64>()
+                / runs.len() as f64
+        };
+        // 50 mF beats both extremes (the paper's Fig. 21 shape).
+        assert!(rate(50.0) >= rate(0.1), "50mF {} vs 0.1mF {}", rate(50.0), rate(0.1));
+        assert!(rate(50.0) >= rate(470.0) - 0.02, "50mF {} vs 470mF {}", rate(50.0), rate(470.0));
+        // The 0.1 mF capacitor cannot bank even one atomic fragment's
+        // energy (usable 0.36 mJ < ~0.8 mJ/fragment): E_man gates all
+        // execution, so nothing is ever scheduled — the left edge of the
+        // paper's U.
+        let tiny = &runs[0].iter().find(|c| c.c_mf == 0.1).unwrap().metrics;
+        assert_eq!(tiny.scheduled, 0, "0.1 mF should never complete a job");
+        // 1 mF makes *some* progress but with heavy re-execution overhead.
+        let one = &runs[0].iter().find(|c| c.c_mf == 1.0).unwrap().metrics;
+        assert!(one.refragments > 0 || one.reboots > 10, "1 mF should thrash");
+    }
+}

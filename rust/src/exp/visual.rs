@@ -1,0 +1,132 @@
+//! Fig. 23 — multi-task visual sensing: traffic-sign recognition + shape
+//! recognition on one solar-powered device with an OV2640 camera. Zygarde
+//! vs SONIC-EDF (EDF order, full execution) vs SONIC-RR (non-preemptive
+//! round-robin, full execution).
+//!
+//! The camera dominates the energy budget (the paper loses 37 % of events
+//! before they enter any system), so the sign task carries a large capture
+//! energy; the shape task reuses the captured frame.
+
+use std::sync::Arc;
+
+use crate::coordinator::sched::SchedulerKind;
+use crate::dnn::network::Network;
+use crate::dnn::trace::compute_traces;
+use crate::sim::metrics::Metrics;
+use crate::sim::workload::task_from_network;
+
+use super::common::{engine_for, pct, print_header, print_row, system};
+
+pub struct VisualCell {
+    pub scheduler: SchedulerKind,
+    pub metrics: Metrics,
+}
+
+/// Camera capture energy (mJ) charged to the sign task's release — an
+/// OV2640 burst at ~120 mA/3.3 V for the 4 s capture window, scaled to the
+/// repo's energy units so that a meaningful fraction of events is lost
+/// (the paper reports 37 %).
+pub const CAMERA_ENERGY_MJ: f64 = 60.0;
+
+pub fn run(duration_ms: f64, seed: u64) -> Vec<VisualCell> {
+    let sign = Network::load(&crate::artifacts_root().join("sign")).unwrap();
+    let shape = Network::load(&crate::artifacts_root().join("shape")).unwrap();
+    let sign_traces = Arc::new(compute_traces(&sign, None));
+    let shape_traces = Arc::new(compute_traces(&shape, None));
+
+    [SchedulerKind::Zygarde, SchedulerKind::Edf, SchedulerKind::RoundRobin]
+        .into_iter()
+        .map(|kind| {
+            // Camera frames every 4 s; sign deadline = its full exec time
+            // (~2 s), shape deadline roughly half (its net is ~2x smaller).
+            let mut sign_task =
+                task_from_network(0, &sign, 4000.0, sign.meta.cost.total_time_ms * 1.05,
+                                  Some(sign_traces.clone()));
+            sign_task.release_energy_mj = CAMERA_ENERGY_MJ;
+            let mut shape_task =
+                task_from_network(1, &shape, 4000.0, shape.meta.cost.total_time_ms * 1.15,
+                                  Some(shape_traces.clone()));
+            shape_task.release_energy_mj = 1.0; // reuses the frame
+
+            let engine = engine_for(
+                system(4), // solar, the weakest (η=0.38, 310 mW)
+                vec![sign_task, shape_task],
+                kind,
+                kind.default_exit(),
+                duration_ms,
+                None,
+                None,
+                seed,
+            );
+            VisualCell { scheduler: kind, metrics: engine.run() }
+        })
+        .collect()
+}
+
+pub fn print(cells: &[VisualCell]) {
+    print_header(
+        "Fig. 23: multi-task visual sensing (sign + shape, solar)",
+        &["scheduler", "entered%", "sched%", "sign%", "shape%", "sign-acc", "shape-acc"],
+    );
+    for c in cells {
+        let m = &c.metrics;
+        let entered = m.released as f64 / (m.released + m.capture_missed).max(1) as f64;
+        let name = match c.scheduler {
+            SchedulerKind::Zygarde => "zygarde",
+            SchedulerKind::Edf => "sonic-edf",
+            SchedulerKind::RoundRobin => "sonic-rr",
+            k => k.name(),
+        };
+        let task_rate = |t: usize| {
+            m.per_task_scheduled[t] as f64 / m.per_task_released[t].max(1) as f64
+        };
+        let task_acc = |t: usize| {
+            m.per_task_correct[t] as f64 / m.per_task_scheduled[t].max(1) as f64
+        };
+        print_row(&[
+            name.into(),
+            pct(entered),
+            pct(m.scheduled_rate()),
+            pct(task_rate(0)),
+            pct(task_rate(1)),
+            pct(task_acc(0)),
+            pct(task_acc(1)),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zygarde_schedules_more_and_fairer() {
+        if !crate::artifacts_root().join("sign/meta.json").exists() {
+            return;
+        }
+        let cells = run(400_000.0, 21);
+        let get = |k: SchedulerKind| &cells.iter().find(|c| c.scheduler == k).unwrap().metrics;
+        let zyg = get(SchedulerKind::Zygarde);
+        let edf = get(SchedulerKind::Edf);
+        let rr = get(SchedulerKind::RoundRobin);
+        // Paper: Zygarde 93 % >> SONIC-EDF 55 % >> SONIC-RR 11 %.
+        assert!(
+            zyg.scheduled_rate() > edf.scheduled_rate(),
+            "zygarde {} <= sonic-edf {}",
+            zyg.scheduled_rate(),
+            edf.scheduled_rate()
+        );
+        assert!(
+            edf.scheduled_rate() > rr.scheduled_rate(),
+            "sonic-edf {} <= sonic-rr {}",
+            edf.scheduled_rate(),
+            rr.scheduled_rate()
+        );
+        // Fairness: Zygarde schedules BOTH tasks substantially.
+        let zr0 = zyg.per_task_scheduled[0] as f64 / zyg.per_task_released[0].max(1) as f64;
+        let zr1 = zyg.per_task_scheduled[1] as f64 / zyg.per_task_released[1].max(1) as f64;
+        assert!(zr0 > 0.2 && zr1 > 0.2, "zygarde unfair: sign {zr0} shape {zr1}");
+        // Camera energy keeps some events out of every system.
+        assert!(zyg.capture_missed > 0, "camera cost should drop captures");
+    }
+}

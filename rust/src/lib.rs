@@ -1,0 +1,56 @@
+//! # Zygarde — time-sensitive on-device deep inference on intermittent power
+//!
+//! A full reproduction of *Zygarde: Time-Sensitive On-Device Deep Inference
+//! and Adaptation on Intermittently-Powered Systems* (Islam & Nirjon, IMWUT
+//! 2020) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3: the coordinator. It owns the imprecise-computing
+//! real-time scheduler (the paper's contribution), the intermittent-MCU
+//! simulation substrate (harvesters, capacitor, fragment-atomic execution,
+//! remanence clocks), the per-layer k-means classifiers with online
+//! adaptation, and a PJRT runtime that executes the AOT-compiled per-unit
+//! HLO artifacts produced by `python/compile/aot.py`. Python never runs on
+//! the request path.
+//!
+//! Module map (see DESIGN.md for the per-experiment index):
+//!
+//! * [`util`] — hand-rolled substrates: JSON, RNG, CLI, stats, ZYGT tensor
+//!   archive, property-test + bench harnesses (the image is offline; no
+//!   serde/clap/criterion/proptest).
+//! * [`runtime`] — XLA PJRT client; loads `artifacts/<ds>/unit<i>.hlo.txt`.
+//! * [`dnn`] — agile-DNN metadata, native forward (validated against PJRT),
+//!   k-means classifiers, utility test, centroid adaptation, unit traces.
+//! * [`energy`] — energy events, η-factor, harvester models, capacitor,
+//!   cost model, energy manager.
+//! * [`clock`] — RTC and CHRT remanence-clock models.
+//! * [`coordinator`] — tasks/jobs/units/fragments, job queue, priority
+//!   functions ζ and ζ_I, Zygarde/EDF/EDF-M/RR schedulers, schedulability.
+//! * [`sim`] — discrete-event intermittently-powered MCU simulator.
+//! * [`classifiers`] — KNN / k-means / SVM / random-forest baselines
+//!   (Table 7).
+//! * [`exp`] — one driver per paper table/figure.
+
+pub mod classifiers;
+pub mod clock;
+pub mod coordinator;
+pub mod dnn;
+pub mod energy;
+pub mod exp;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Root of the artifact tree produced by `make artifacts`.
+pub fn artifacts_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ZYGARDE_ARTIFACTS") {
+        return p.into();
+    }
+    // Works from the repo root (cargo run) and from target/ binaries.
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join(".stamp").exists() || p.join("mnist/meta.json").exists() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from("artifacts")
+}

@@ -1,0 +1,201 @@
+//! `zygarde` — the leader binary: runs any paper experiment from the CLI.
+//!
+//! Usage: `zygarde <experiment> [--flags]`. Run with no arguments (or
+//! `help`) for the experiment list. `zygarde all` regenerates every table
+//! and figure in DESIGN.md §3 at the paper's full workload sizes.
+
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::dnn::network::Network;
+use zygarde::exp;
+use zygarde::util::cli::Args;
+
+const HELP: &str = "\
+zygarde — Zygarde (IMWUT 2020) reproduction driver
+
+experiments (DESIGN.md §3):
+  eta            Fig. 4 h(N) distributions + Fig. 25 eta validation
+  threshold      Fig. 8 utility-threshold trade-off     [--dataset cifar100 --layer 0]
+  overhead       Fig. 14 component overheads (ESC-10)
+  loss-compare   Fig. 15 loss functions under early exit
+  termination    Fig. 16 termination policies
+  schedule       Figs. 17-20 EDF / EDF-M / Zygarde      [--dataset mnist --jobs N --systems 1,2,...]
+  capacitor      Fig. 21 capacitor-size sweep           [--jobs N]
+  chrt           Table 5 RTC vs CHRT remanence clock    [--jobs N]
+  acoustic       Fig. 22 six acoustic applications      [--minutes 10]
+  visual         Fig. 23 multi-task visual sensing      [--minutes 10]
+  classifiers    Table 7 CNN vs traditional classifiers
+  adaptation     Fig. 24 semi-supervised adaptation
+  schedulability Sec. 5.3 necessary condition
+  infer          run PJRT inference over a test set     [--dataset mnist --samples N]
+  all            everything above at paper-scale sizes
+
+common flags: --seed N (default 7), --jobs N, --dataset NAME
+";
+
+fn main() {
+    let args = Args::from_env();
+    let seed = args.u64_or("seed", 7);
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        "eta" => {
+            let studies = exp::eta::run(args.usize_or("max-n", 20), seed);
+            exp::eta::print_figure4(&studies);
+            exp::eta::print_figure25(&studies);
+        }
+        "threshold" => {
+            let ds = args.str_or("dataset", "cifar100");
+            let net = Network::load(&zygarde::artifacts_root().join(ds)).expect("artifacts");
+            let layer = args.usize_or("layer", 0);
+            let pts = exp::threshold::sweep_layer(&net, layer, args.usize_or("points", 16));
+            exp::threshold::print(&net, layer, &pts);
+        }
+        "overhead" => {
+            let net = Network::load(&zygarde::artifacts_root().join("esc10")).expect("artifacts");
+            exp::overhead::print(&exp::overhead::run(&net));
+        }
+        "loss-compare" => {
+            exp::loss_compare::print(&exp::loss_compare::run(&["mnist", "esc10"]));
+        }
+        "termination" => {
+            exp::termination::print(&exp::termination::run(&[
+                "mnist", "esc10", "cifar100", "vww",
+            ]));
+        }
+        "schedule" => {
+            let ds = args.str_or("dataset", "mnist").to_string();
+            let systems: Vec<usize> = args
+                .opt_str("systems")
+                .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+                .unwrap_or_else(|| (1..=7).collect());
+            let jobs = args.opt_str("jobs").map(|j| j.parse().unwrap());
+            let cells = exp::schedule::run(&ds, &systems, jobs, seed);
+            exp::schedule::print(&ds, &cells);
+        }
+        "capacitor" => {
+            let cells = exp::capacitor_sweep::run(args.u64_or("jobs", 200), seed);
+            exp::capacitor_sweep::print(&cells);
+        }
+        "chrt" => {
+            let rows = exp::chrt_cmp::run(args.u64_or("jobs", 2000), seed);
+            exp::chrt_cmp::print(&rows);
+        }
+        "acoustic" => {
+            let mins = args.f64_or("minutes", 10.0);
+            let results = exp::acoustic::run(mins * 60_000.0, seed);
+            exp::acoustic::print(&results);
+        }
+        "visual" => {
+            let mins = args.f64_or("minutes", 10.0);
+            let cells = exp::visual::run(mins * 60_000.0, seed);
+            exp::visual::print(&cells);
+        }
+        "classifiers" => {
+            exp::classifiers_cmp::print(&exp::classifiers_cmp::run(&[
+                "mnist", "esc10", "cifar100", "vww",
+            ]));
+        }
+        "adaptation" => {
+            exp::adaptation::print(&exp::adaptation::run());
+        }
+        "schedulability" => {
+            let rows = exp::schedulability::run(
+                &["mnist", "esc10", "cifar100", "vww"],
+                &[0.38, 0.51, 0.71, 0.9],
+            );
+            exp::schedulability::print(&rows);
+        }
+        "infer" => run_infer(&args),
+        "all" => run_all(seed, &args),
+        other => {
+            eprintln!("unknown experiment `{other}`\n");
+            print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// End-to-end PJRT inference: load the AOT per-unit HLO artifacts, run the
+/// agile DNN with early exit over test samples, report accuracy + exit
+/// histogram + latency. This is the serving path (Python never runs).
+fn run_infer(args: &Args) {
+    let ds = args.str_or("dataset", "mnist");
+    let n = args.usize_or("samples", 50);
+    let dir = zygarde::artifacts_root().join(ds);
+    let net = Network::load(&dir).expect("artifacts");
+    let mut rt = zygarde::runtime::Runtime::cpu().expect("PJRT client");
+    rt.load_network(&dir, &net.meta).expect("load units");
+    println!(
+        "loaded {} units of `{ds}` on {} (PJRT)",
+        rt.loaded_units(),
+        rt.platform()
+    );
+
+    let mut exit_hist = vec![0usize; net.meta.n_layers];
+    let mut correct = 0usize;
+    let n = n.min(net.test.len());
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        let mut act = net.test.sample(i).to_vec();
+        let mut pred = None;
+        for li in 0..net.meta.n_layers {
+            let (next, dists) = rt
+                .execute_unit(ds, li, &act, &net.classifiers[li].centroids)
+                .expect("execute");
+            let res = net.classifiers[li].classify_from_dists(&dists);
+            pred = Some(res.pred);
+            if res.exit || li == net.meta.n_layers - 1 {
+                exit_hist[li] += 1;
+                break;
+            }
+            act = next;
+        }
+        if pred == Some(net.test.y[i]) {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{n} samples: accuracy {:.1}%  mean latency {:.2} ms  exit histogram {:?}",
+        100.0 * correct as f64 / n as f64,
+        dt.as_secs_f64() * 1e3 / n as f64,
+        exit_hist
+    );
+}
+
+fn run_all(seed: u64, args: &Args) {
+    let studies = exp::eta::run(20, seed);
+    exp::eta::print_figure4(&studies);
+    exp::eta::print_figure25(&studies);
+
+    let net = Network::load(&zygarde::artifacts_root().join("cifar100")).expect("artifacts");
+    let pts = exp::threshold::sweep_layer(&net, 0, 16);
+    exp::threshold::print(&net, 0, &pts);
+
+    let esc = Network::load(&zygarde::artifacts_root().join("esc10")).expect("artifacts");
+    exp::overhead::print(&exp::overhead::run(&esc));
+    exp::loss_compare::print(&exp::loss_compare::run(&["mnist", "esc10"]));
+    exp::termination::print(&exp::termination::run(&["mnist", "esc10", "cifar100", "vww"]));
+
+    for ds in ["mnist", "esc10", "cifar100", "vww"] {
+        let jobs = args.opt_str("jobs").map(|j| j.parse().unwrap());
+        let cells = exp::schedule::run(ds, &(1..=7).collect::<Vec<_>>(), jobs, seed);
+        exp::schedule::print(ds, &cells);
+    }
+
+    exp::capacitor_sweep::print(&exp::capacitor_sweep::run(args.u64_or("jobs", 200), seed));
+    exp::chrt_cmp::print(&exp::chrt_cmp::run(args.u64_or("chrt-jobs", 2000), seed));
+    exp::acoustic::print(&exp::acoustic::run(600_000.0, seed));
+    exp::visual::print(&exp::visual::run(600_000.0, seed));
+    exp::classifiers_cmp::print(&exp::classifiers_cmp::run(&[
+        "mnist", "esc10", "cifar100", "vww",
+    ]));
+    exp::adaptation::print(&exp::adaptation::run());
+    exp::schedulability::print(&exp::schedulability::run(
+        &["mnist", "esc10", "cifar100", "vww"],
+        &[0.38, 0.51, 0.71, 0.9],
+    ));
+
+    // Cross-check SchedulerKind exposure for the CLI docs.
+    let _ = SchedulerKind::Zygarde.name();
+}

@@ -1,0 +1,84 @@
+//! Simulation outcome counters — the quantities the paper's evaluation
+//! figures report (jobs scheduled, correct results, deadline misses,
+//! optional units executed, energy accounting).
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Jobs released by the job generator (entered the system).
+    pub released: u64,
+    /// Sensor events missed because the capacitor could not pay the
+    /// sensor-read energy (never entered the system; Fig. 22/23).
+    pub capture_missed: u64,
+    /// Jobs dropped because the queue was full (queue size 3, §8).
+    pub queue_dropped: u64,
+    /// Jobs whose mandatory part completed before the deadline
+    /// ("scheduled" in §8.5's sense).
+    pub scheduled: u64,
+    /// Scheduled jobs whose final prediction was correct.
+    pub correct: u64,
+    /// Jobs discarded at their deadline with incomplete mandatory work.
+    pub deadline_missed: u64,
+    /// Units executed, split mandatory/optional.
+    pub mandatory_units: u64,
+    pub optional_units: u64,
+    /// Fragments re-executed due to power failure mid-fragment.
+    pub refragments: u64,
+    pub fragments: u64,
+    /// Per-task scheduled counts (multi-task fairness, Fig. 23).
+    pub per_task_released: Vec<u64>,
+    pub per_task_scheduled: Vec<u64>,
+    pub per_task_correct: Vec<u64>,
+    /// Mean latency of scheduled jobs (release -> mandatory done), ms.
+    pub latency_sum_ms: f64,
+    /// Total simulated time (ms) and MCU-on time (ms).
+    pub sim_time_ms: f64,
+    pub on_time_ms: f64,
+    pub reboots: u64,
+    pub harvested_mj: f64,
+    pub wasted_mj: f64,
+}
+
+impl Metrics {
+    pub fn new(n_tasks: usize) -> Self {
+        Metrics {
+            per_task_released: vec![0; n_tasks],
+            per_task_scheduled: vec![0; n_tasks],
+            per_task_correct: vec![0; n_tasks],
+            ..Default::default()
+        }
+    }
+
+    pub fn scheduled_rate(&self) -> f64 {
+        self.scheduled as f64 / self.released.max(1) as f64
+    }
+
+    pub fn correct_rate(&self) -> f64 {
+        self.correct as f64 / self.released.max(1) as f64
+    }
+
+    /// Scheduled / all sensor events (released + capture-missed). The
+    /// event stream is identical across schedulers for a given seed, so
+    /// this is the apples-to-apples denominator for Figs. 17–20 — a
+    /// scheduler that burns energy on optional units and then cannot pay
+    /// for the next sensor read must not look *better* for it.
+    pub fn event_scheduled_rate(&self) -> f64 {
+        self.scheduled as f64 / (self.released + self.capture_missed).max(1) as f64
+    }
+
+    pub fn event_correct_rate(&self) -> f64 {
+        self.correct as f64 / (self.released + self.capture_missed).max(1) as f64
+    }
+
+    /// Accuracy among scheduled jobs.
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.scheduled.max(1) as f64
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latency_sum_ms / self.scheduled.max(1) as f64
+    }
+
+    pub fn on_fraction(&self) -> f64 {
+        self.on_time_ms / self.sim_time_ms.max(1e-9)
+    }
+}

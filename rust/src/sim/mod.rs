@@ -1,0 +1,12 @@
+//! Discrete-event simulation of an intermittently-powered MCU running the
+//! Zygarde runtime: harvester → capacitor → fragment-atomic execution with
+//! idempotent re-execution across power failures, limited-preemption
+//! scheduling at unit boundaries, deadline discard, and clock error.
+
+pub mod engine;
+pub mod metrics;
+pub mod workload;
+
+pub use engine::{Engine, SimConfig};
+pub use metrics::Metrics;
+pub use workload::{task_from_network, WorkloadBuilder};

@@ -1,0 +1,107 @@
+//! Workload construction: turn a loaded [`Network`] (artifact bundle) into
+//! a [`TaskSpec`] whose unit costs come from the compile-time cost model
+//! and whose data-dependent behaviour comes from precomputed unit traces.
+
+use std::sync::Arc;
+
+use crate::coordinator::task::TaskSpec;
+use crate::dnn::network::Network;
+use crate::dnn::trace::{compute_traces, SampleTrace};
+
+/// Build a task for `net` with period T and relative deadline D (ms).
+/// Traces default to the network's own test set.
+pub fn task_from_network(
+    id: usize,
+    net: &Network,
+    period_ms: f64,
+    deadline_ms: f64,
+    traces: Option<Arc<Vec<SampleTrace>>>,
+) -> TaskSpec {
+    let traces = traces.unwrap_or_else(|| Arc::new(compute_traces(net, None)));
+    TaskSpec {
+        id,
+        name: net.meta.name.clone(),
+        period_ms,
+        deadline_ms,
+        unit_time_ms: net.meta.layers.iter().map(|l| l.time_ms).collect(),
+        unit_energy_mj: net.meta.layers.iter().map(|l| l.energy_mj).collect(),
+        unit_fragments: net.meta.layers.iter().map(|l| l.n_fragments).collect(),
+        release_energy_mj: net.meta.cost.job_generator_energy_mj,
+        traces,
+        imprecise: true,
+    }
+}
+
+/// Fluent builder for multi-task workloads (Fig. 23 uses two tasks).
+pub struct WorkloadBuilder {
+    tasks: Vec<TaskSpec>,
+}
+
+impl WorkloadBuilder {
+    pub fn new() -> Self {
+        WorkloadBuilder { tasks: Vec::new() }
+    }
+
+    pub fn add_network(
+        mut self,
+        net: &Network,
+        period_ms: f64,
+        deadline_ms: f64,
+    ) -> Self {
+        let id = self.tasks.len();
+        self.tasks.push(task_from_network(id, net, period_ms, deadline_ms, None));
+        self
+    }
+
+    pub fn add_task(mut self, mut spec: TaskSpec) -> Self {
+        spec.id = self.tasks.len();
+        self.tasks.push(spec);
+        self
+    }
+
+    pub fn build(self) -> Vec<TaskSpec> {
+        assert!(!self.tasks.is_empty(), "workload needs at least one task");
+        self.tasks
+    }
+}
+
+impl Default for WorkloadBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_task_from_real_network() {
+        let dir = crate::artifacts_root().join("mnist");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let net = Network::load(&dir).unwrap();
+        let t = task_from_network(0, &net, 3000.0, 6000.0, None);
+        assert_eq!(t.n_units(), net.meta.n_layers);
+        assert_eq!(t.traces.len(), net.test.len());
+        assert!(t.wcet_ms() > 0.0);
+        // cost model total matches the meta total
+        assert!((t.wcet_ms() - net.meta.cost.total_time_ms).abs() / t.wcet_ms() < 1e-6);
+    }
+
+    #[test]
+    fn builder_assigns_sequential_ids() {
+        let dir = crate::artifacts_root().join("mnist");
+        if !dir.join("meta.json").exists() {
+            return;
+        }
+        let net = Network::load(&dir).unwrap();
+        let tasks = WorkloadBuilder::new()
+            .add_network(&net, 3000.0, 6000.0)
+            .add_network(&net, 5000.0, 10_000.0)
+            .build();
+        assert_eq!(tasks[0].id, 0);
+        assert_eq!(tasks[1].id, 1);
+    }
+}

@@ -1,0 +1,153 @@
+//! Criterion-style micro/macro bench harness (criterion is not available
+//! offline). Used by the `benches/` targets via `harness = false`.
+//!
+//! Auto-calibrates iteration counts to a target measurement time, reports
+//! mean / p50 / p99 per iteration, and can compare against a recorded
+//! baseline (for the §Perf before/after log).
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// Optional throughput annotation, e.g. simulated-fragments/sec.
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let t = match self.throughput {
+            Some((v, unit)) => format!("  ({} {unit})", human(v)),
+            None => String::new(),
+        };
+        println!(
+            "bench {:<44} {:>12}/iter  p50 {:>10}  p99 {:>10}  ({} iters){t}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters,
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn human(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+pub struct Bencher {
+    /// Target total measurement time per benchmark.
+    pub budget: Duration,
+    /// Number of measurement batches (each batch = iters/batches runs).
+    pub batches: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Overridable so `cargo bench` can run quickly in CI-style runs.
+        let ms = std::env::var("BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(700u64);
+        Bencher { budget: Duration::from_millis(ms), batches: 20 }
+    }
+}
+
+impl Bencher {
+    /// Benchmark `f`, which performs ONE logical iteration per call and
+    /// returns a value (kept alive to prevent dead-code elimination).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + calibration: find iters/batch for ~budget/batches each.
+        let cal_start = Instant::now();
+        let mut cal_iters = 0u64;
+        while cal_start.elapsed() < self.budget / 10 {
+            std::hint::black_box(f());
+            cal_iters += 1;
+            if cal_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = (self.budget.as_nanos() as f64 / 10.0) / cal_iters as f64;
+        let batch_ns = self.budget.as_nanos() as f64 / self.batches as f64;
+        let iters_per_batch = ((batch_ns / per_iter) as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.batches);
+        let mut total_iters = 0u64;
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters_per_batch as f64;
+            samples.push(dt);
+            total_iters += iters_per_batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: samples[samples.len() / 2],
+            p99_ns: samples[((samples.len() as f64 * 0.99) as usize).min(samples.len() - 1)],
+            throughput: None,
+        }
+    }
+
+    /// As `run`, but annotate throughput: `items_per_iter` logical items
+    /// are processed by each call to `f`.
+    pub fn run_throughput<T>(
+        &self,
+        name: &str,
+        items_per_iter: f64,
+        unit: &'static str,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let mut r = self.run(name, f);
+        r.throughput = Some((items_per_iter * 1e9 / r.mean_ns, unit));
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bencher { budget: Duration::from_millis(30), batches: 5 };
+        let r = b.run("noop-ish", || std::hint::black_box(2u64).wrapping_mul(3));
+        assert!(r.mean_ns > 0.0 && r.mean_ns < 1e6, "{}", r.mean_ns);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert_eq!(fmt_ns(12_300.0), "12.30 µs");
+        assert!(fmt_ns(3.2e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,223 @@
+//! Reader for the ZYGT tensor-archive format written by
+//! `python/compile/binfmt.py` (see that file for the byte layout).
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// Row-major 2-D view helper: element (i, j) of a (rows, cols) tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let cols = *self.dims.last().expect("row() on 0-d tensor");
+        &self.f32()[i * cols..(i + 1) * cols]
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Archive {
+    pub tensors: HashMap<String, Tensor>,
+}
+
+#[derive(Debug)]
+pub struct BinError(pub String);
+
+impl std::fmt::Display for BinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ZYGT: {}", self.0)
+    }
+}
+
+impl std::error::Error for BinError {}
+
+fn rd_u32(b: &[u8], pos: &mut usize) -> Result<u32, BinError> {
+    let s = b
+        .get(*pos..*pos + 4)
+        .ok_or_else(|| BinError("truncated u32".into()))?;
+    *pos += 4;
+    Ok(u32::from_le_bytes(s.try_into().unwrap()))
+}
+
+fn rd_u64(b: &[u8], pos: &mut usize) -> Result<u64, BinError> {
+    let s = b
+        .get(*pos..*pos + 8)
+        .ok_or_else(|| BinError("truncated u64".into()))?;
+    *pos += 8;
+    Ok(u64::from_le_bytes(s.try_into().unwrap()))
+}
+
+impl Archive {
+    pub fn load(path: &Path) -> Result<Archive, BinError> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .map_err(|e| BinError(format!("{}: {e}", path.display())))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(b: &[u8]) -> Result<Archive, BinError> {
+        if b.get(0..4) != Some(&b"ZYGT"[..]) {
+            return Err(BinError("bad magic".into()));
+        }
+        let mut pos = 4usize;
+        let version = rd_u32(b, &mut pos)?;
+        if version != 1 {
+            return Err(BinError(format!("unsupported version {version}")));
+        }
+        let count = rd_u32(b, &mut pos)? as usize;
+        let mut tensors = HashMap::with_capacity(count);
+        for _ in 0..count {
+            let name_len = rd_u32(b, &mut pos)? as usize;
+            let name = std::str::from_utf8(
+                b.get(pos..pos + name_len)
+                    .ok_or_else(|| BinError("truncated name".into()))?,
+            )
+            .map_err(|_| BinError("name not utf-8".into()))?
+            .to_string();
+            pos += name_len;
+            let dtype = *b
+                .get(pos)
+                .ok_or_else(|| BinError("truncated dtype".into()))?;
+            pos += 1;
+            let ndim = rd_u32(b, &mut pos)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(rd_u64(b, &mut pos)? as usize);
+            }
+            let n: usize = dims.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+            let raw = b
+                .get(pos..pos + 4 * n)
+                .ok_or_else(|| BinError(format!("truncated data for `{name}`")))?;
+            pos += 4 * n;
+            let data = match dtype {
+                0 => TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                1 => TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                d => return Err(BinError(format!("unknown dtype {d}"))),
+            };
+            tensors.insert(name, Tensor { dims, data });
+        }
+        Ok(Archive { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("archive missing tensor `{name}`"))
+    }
+
+    pub fn try_get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a small archive byte-for-byte per the format spec.
+    fn sample() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend(b"ZYGT");
+        b.extend(1u32.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        // entry "a": f32 (2,3)
+        b.extend(1u32.to_le_bytes());
+        b.extend(b"a");
+        b.push(0);
+        b.extend(2u32.to_le_bytes());
+        b.extend(2u64.to_le_bytes());
+        b.extend(3u64.to_le_bytes());
+        for i in 0..6 {
+            b.extend((i as f32 * 0.5).to_le_bytes());
+        }
+        // entry "idx": i32 (4,)
+        b.extend(3u32.to_le_bytes());
+        b.extend(b"idx");
+        b.push(1);
+        b.extend(1u32.to_le_bytes());
+        b.extend(4u64.to_le_bytes());
+        for i in [7i32, -1, 0, 42] {
+            b.extend(i.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parses_archive() {
+        let a = Archive::parse(&sample()).unwrap();
+        let t = a.get("a");
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.row(1), &[1.5, 2.0, 2.5]);
+        assert_eq!(a.get("idx").i32(), &[7, -1, 0, 42]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        assert!(Archive::parse(b"NOPE").is_err());
+        let mut b = sample();
+        b.truncate(b.len() - 3); // truncated payload
+        assert!(Archive::parse(&b).is_err());
+        let mut b2 = sample();
+        b2[4] = 9; // bad version
+        assert!(Archive::parse(&b2).is_err());
+    }
+
+    #[test]
+    fn reads_real_artifact_if_present() {
+        let root = crate::artifacts_root().join("mnist/tensors.bin");
+        if !root.exists() {
+            return; // artifacts not built in this environment
+        }
+        let a = Archive::load(&root).unwrap();
+        let tx = a.get("test_x");
+        assert_eq!(tx.dims.len(), 4);
+        assert_eq!(tx.dims[1..], [16, 16, 1]);
+        assert_eq!(a.get("test_y").dims[0], tx.dims[0]);
+        let c0 = a.get("layer0_centroids");
+        assert_eq!(c0.dims[0], 10); // k = n_classes
+    }
+}

@@ -1,0 +1,168 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Grammar: `zygarde <subcommand> [--key value | --flag] [positional...]`.
+//! Unknown flags are an error — experiments should fail loudly on typos.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags the program declared; used for `--help` and typo detection.
+    known: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: expected a number, got `{v}`")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: expected an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.usize_or(key, default as usize) as u64
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key}: expected a bool, got `{v}`"),
+        }
+    }
+
+    /// Declare a known flag (for --help output and typo checking).
+    pub fn declare(&mut self, key: &str, help: &str) -> &mut Self {
+        self.known.push((key.to_string(), help.to_string()));
+        self
+    }
+
+    /// After declaring flags, error out on unknown ones.
+    pub fn check_unknown(&self) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !self.known.iter().any(|(n, _)| n == k) {
+                let hint = self
+                    .known
+                    .iter()
+                    .map(|(n, _)| n.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", --");
+                return Err(format!("unknown flag --{k} (known: --{hint})"));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = String::new();
+        for (k, h) in &self.known {
+            s.push_str(&format!("  --{k:<18} {h}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        // NB: a bare `--flag` greedily takes the next non-flag token as its
+        // value; use `--flag=true` (or put the flag last) before positionals.
+        let a = parse("schedule pos1 --dataset mnist --eta 0.71 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("schedule"));
+        assert_eq!(a.str_or("dataset", "x"), "mnist");
+        assert!((a.f64_or("eta", 0.0) - 0.71).abs() < 1e-12);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("run --n=17 --name=abc");
+        assert_eq!(a.usize_or("n", 0), 17);
+        assert_eq!(a.str_or("name", ""), "abc");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("n", 5), 5);
+        assert!(!a.bool_or("flag", false));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let mut a = parse("run --oops 1");
+        a.declare("n", "count");
+        assert!(a.check_unknown().is_err());
+        let mut b = parse("run --n 1");
+        b.declare("n", "count");
+        assert!(b.check_unknown().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "expected a number")]
+    fn bad_number_panics() {
+        let a = parse("run --eta abc");
+        a.f64_or("eta", 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Hand-rolled substrates.
+//!
+//! The build image is fully offline and only the `xla` crate's dependency
+//! closure is vendored, so the usual ecosystem crates (serde, clap, rand,
+//! criterion, proptest) are unavailable. Everything the coordinator needs
+//! from them is implemented here from scratch — which doubles as the
+//! "build every substrate" requirement of this reproduction.
+
+pub mod bench;
+pub mod binfmt;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,121 @@
+//! Seeded property-testing harness (proptest is not available offline).
+//!
+//! `forall` runs a property over `iters` generated cases. On failure it
+//! retries the failing case against progressively "shrunk" variants
+//! produced by the generator at smaller size hints, then reports the seed
+//! and case so the failure is reproducible with `PROP_SEED=<n>`.
+
+use super::rng::Pcg32;
+
+/// Size hint passed to generators: starts small and grows, so early
+/// iterations explore degenerate cases (empty queues, single jobs).
+#[derive(Clone, Copy, Debug)]
+pub struct Size(pub usize);
+
+pub struct Config {
+    pub iters: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5eed);
+        Config { iters: 256, seed, max_size: 64 }
+    }
+}
+
+/// Run `prop` over `iters` cases from `gen`. Panics with a reproducible
+/// report on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    cfg: Config,
+    mut gen: impl FnMut(&mut Pcg32, Size) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cfg.iters {
+        // Per-case stream so a failure reproduces independently of order.
+        let mut rng = Pcg32::new(cfg.seed, i as u64);
+        let size = Size(1 + (i * cfg.max_size) / cfg.iters.max(1));
+        let case = gen(&mut rng, size);
+        if let Err(msg) = prop(&case) {
+            // Shrink attempt: regenerate at smaller sizes from the same
+            // stream seed and keep the smallest still-failing case.
+            let mut smallest: Option<(usize, T, String)> = None;
+            for s in (1..size.0).rev() {
+                let mut r2 = Pcg32::new(cfg.seed, i as u64);
+                let c2 = gen(&mut r2, Size(s));
+                if let Err(m2) = prop(&c2) {
+                    smallest = Some((s, c2, m2));
+                }
+            }
+            match smallest {
+                Some((s, c2, m2)) => panic!(
+                    "property `{name}` failed (seed={} case={} shrunk to size {s}):\n  {m2}\n  case: {c2:#?}",
+                    cfg.seed, i
+                ),
+                None => panic!(
+                    "property `{name}` failed (seed={} case={} size={}):\n  {msg}\n  case: {case:#?}",
+                    cfg.seed, i, size.0
+                ),
+            }
+        }
+    }
+}
+
+/// Common generator: a vec of f64 in [lo, hi) with size-driven length.
+pub fn vec_f64(rng: &mut Pcg32, size: Size, lo: f64, hi: f64) -> Vec<f64> {
+    let n = rng.below(size.0 as u64 + 1) as usize;
+    (0..n).map(|_| rng.range_f64(lo, hi)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall(
+            "reverse-reverse-identity",
+            Config { iters: 64, ..Default::default() },
+            |rng, size| vec_f64(rng, size, -1.0, 1.0),
+            |xs| {
+                let mut r = xs.clone();
+                r.reverse();
+                r.reverse();
+                if r == *xs {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed the vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `sorted-is-identity` failed")]
+    fn failing_property_reports() {
+        forall(
+            "sorted-is-identity",
+            Config { iters: 64, ..Default::default() },
+            |rng, size| {
+                let mut v = vec_f64(rng, Size(size.0 + 2), 0.0, 1.0);
+                v.push(0.0); // guarantee an unsorted case exists
+                v.push(1.0);
+                v
+            },
+            |xs| {
+                let mut s = xs.clone();
+                s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                if s == *xs {
+                    Ok(())
+                } else {
+                    Err("input was not sorted".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,160 @@
+//! Descriptive statistics used across the experiment drivers and the bench
+//! harness: Welford online moments, percentiles, histograms, and the
+//! Kantorovich–Wasserstein distance on empirical CDFs (paper Eq. 2).
+
+/// Online mean/variance (Welford). Numerically stable for long streams.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// p-th percentile (0..=100) by linear interpolation; sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Kantorovich–Wasserstein-1 distance between two empirical distributions
+/// given as parallel (support, probability-mass) samples over the *same*
+/// support grid — the form used by the η-factor (Eq. 2): the L1 distance
+/// between the CDFs integrated over the support.
+pub fn kw_distance(support: &[f64], p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(support.len(), p.len());
+    assert_eq!(support.len(), q.len());
+    let (mut cp, mut cq, mut acc) = (0.0, 0.0, 0.0);
+    for i in 0..support.len() {
+        cp += p[i];
+        cq += q[i];
+        let width = if i + 1 < support.len() { support[i + 1] - support[i] } else { 1.0 };
+        acc += (cp - cq).abs() * width;
+    }
+    acc
+}
+
+/// Fixed-width histogram over [lo, hi); values outside clamp to edge bins.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<u64> {
+    let mut h = vec![0u64; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - 6.2).abs() < 1e-12);
+        let batch_var = xs.iter().map(|x| (x - 6.2) * (x - 6.2)).sum::<f64>() / 4.0;
+        assert!((o.var() - batch_var).abs() < 1e-9);
+        assert_eq!(o.min(), 1.0);
+        assert_eq!(o.max(), 16.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn kw_zero_for_identical() {
+        let s: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let p = vec![0.1; 10];
+        assert!(kw_distance(&s, &p, &p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kw_positive_and_monotone_in_shift() {
+        let s: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut p = vec![0.0; 10];
+        p[0] = 1.0;
+        let mut q1 = vec![0.0; 10];
+        q1[1] = 1.0;
+        let mut q5 = vec![0.0; 10];
+        q5[5] = 1.0;
+        let d1 = kw_distance(&s, &p, &q1);
+        let d5 = kw_distance(&s, &p, &q5);
+        assert!(d1 > 0.0 && d5 > d1, "{d1} {d5}");
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let h = histogram(&[-5.0, 0.1, 0.9, 99.0], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+}

@@ -1,0 +1,132 @@
+//! End-to-end: the full paper pipeline over real artifacts — headline
+//! claims as assertions. These mirror what EXPERIMENTS.md records at full
+//! scale, run here at reduced job counts to stay fast.
+
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::exp;
+
+fn ready() -> bool {
+    zygarde::artifacts_root().join("mnist/meta.json").exists()
+}
+
+#[test]
+fn headline_early_termination_savings() {
+    if !ready() {
+        return;
+    }
+    // Paper: 5-26 % execution-time reduction via early termination.
+    let rows = exp::termination::run(&["mnist", "esc10", "cifar100", "vww"]);
+    let mut savings = Vec::new();
+    for r in &rows {
+        let s = 1.0 - r.summary.time_utility_ms / r.summary.time_full_ms;
+        savings.push((r.dataset.clone(), s));
+    }
+    assert!(
+        savings.iter().any(|(_, s)| *s > 0.05),
+        "no dataset saved >5 %: {savings:?}"
+    );
+    for (ds, s) in &savings {
+        assert!(*s > 0.0, "{ds}: early termination saved nothing");
+        assert!(*s < 0.9, "{ds}: implausible saving {s}");
+    }
+}
+
+#[test]
+fn headline_scheduler_gains() {
+    if !ready() {
+        return;
+    }
+    // Paper: Zygarde/EDF-M schedule 9-34 % more jobs than EDF under
+    // intermittent power. Check on VWW (largest), system 6 (RF, η=.51).
+    let cells = exp::schedule::run("vww", &[6], Some(150), 17);
+    let get = |k: SchedulerKind| {
+        cells
+            .iter()
+            .find(|c| c.scheduler == k)
+            .unwrap()
+            .metrics
+            .event_scheduled_rate()
+    };
+    let edf = get(SchedulerKind::Edf);
+    let edfm = get(SchedulerKind::EdfMandatory);
+    let zyg = get(SchedulerKind::Zygarde);
+    assert!(
+        edfm > edf && zyg > edf,
+        "no gain over EDF: edf={edf} edfm={edfm} zyg={zyg}"
+    );
+    let gain = (zyg - edf) / edf.max(1e-9);
+    assert!(gain > 0.05, "gain only {:.1}%", gain * 100.0);
+}
+
+#[test]
+fn headline_solar_beats_rf_at_same_eta() {
+    if !ready() {
+        return;
+    }
+    // Paper §8.5: despite the same η, solar systems schedule 9-31 % more
+    // jobs than RF due to more available power. Compare S2 vs S5 (η=.71).
+    let cells = exp::schedule::run("cifar100", &[2, 5], Some(60), 23);
+    let rate = |sid: usize| {
+        cells
+            .iter()
+            .filter(|c| c.system.id == sid)
+            .map(|c| c.metrics.event_scheduled_rate())
+            .sum::<f64>()
+            / 3.0
+    };
+    let solar = rate(2);
+    let rf = rate(5);
+    assert!(solar > rf, "solar {solar} <= rf {rf}");
+}
+
+#[test]
+fn headline_zygarde_converges_to_edfm_at_low_eta() {
+    if !ready() {
+        return;
+    }
+    // Paper §8.5: "Zygarde increases the performance from EDF-M when η is
+    // high. With low η, the performance of Zygarde and EDF-M becomes
+    // similar as no optional units are executed." Verify the mechanism on
+    // solar: optional units run at η = .71 (S2) and not at η = .38 (S4),
+    // where Zygarde's metrics coincide with EDF-M's.
+    let cells = exp::schedule::run("vww", &[2, 4], Some(120), 31);
+    let get = |sid: usize, k: SchedulerKind| {
+        &cells
+            .iter()
+            .find(|c| c.system.id == sid && c.scheduler == k)
+            .unwrap()
+            .metrics
+    };
+    let zyg_hi = get(2, SchedulerKind::Zygarde);
+    let zyg_lo = get(4, SchedulerKind::Zygarde);
+    let edfm_lo = get(4, SchedulerKind::EdfMandatory);
+    assert!(zyg_hi.optional_units > 0, "no optional units at η=.71");
+    assert_eq!(zyg_lo.optional_units, 0, "optional units ran at η=.38");
+    let diff = (zyg_lo.event_scheduled_rate() - edfm_lo.event_scheduled_rate()).abs();
+    assert!(
+        diff < 0.05,
+        "at low η Zygarde should track EDF-M: zyg={} edfm={}",
+        zyg_lo.event_scheduled_rate(),
+        edfm_lo.event_scheduled_rate()
+    );
+}
+
+#[test]
+fn full_cli_smoke() {
+    if !ready() {
+        return;
+    }
+    // The CLI drivers that finish quickly, exercised end to end.
+    let studies = exp::eta::run(12, 5);
+    assert_eq!(studies.len(), 4);
+    let esc = zygarde::dnn::network::Network::load(
+        &zygarde::artifacts_root().join("esc10"),
+    )
+    .unwrap();
+    let rows = exp::overhead::run(&esc);
+    assert!(!rows.is_empty());
+    let sched = exp::schedulability::run(&["esc10"], &[0.5]);
+    assert!(sched[0].analysis.feasible);
+    let adapt = exp::adaptation::run();
+    assert_eq!(adapt.len(), 3);
+}

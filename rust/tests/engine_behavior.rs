@@ -1,0 +1,204 @@
+//! Focused behavioural tests for the intermittent engine: queue eviction,
+//! capture-miss accounting, CHRT-induced losses, multi-task fairness, and
+//! the optional-unit opportunism contract.
+
+use std::sync::Arc;
+
+use zygarde::clock::{Chrt, ChrtTier, Rtc};
+use zygarde::coordinator::priority::PriorityParams;
+use zygarde::coordinator::sched::{ExitPolicy, Scheduler, SchedulerKind};
+use zygarde::coordinator::task::TaskSpec;
+use zygarde::dnn::trace::{SampleTrace, UnitOutcome};
+use zygarde::energy::capacitor::Capacitor;
+use zygarde::energy::harvester::{Harvester, HarvesterKind};
+use zygarde::energy::manager::EnergyManager;
+use zygarde::sim::engine::{Engine, SimConfig};
+
+fn trace(exit_at: usize, n: usize) -> SampleTrace {
+    SampleTrace {
+        label: 1,
+        units: (0..n)
+            .map(|i| UnitOutcome { gap: if i >= exit_at { 9.0 } else { 0.1 }, pred: 1,
+                                   exit: i == exit_at, correct: true })
+            .collect(),
+        exit_unit: exit_at,
+        oracle_unit: Some(exit_at),
+    }
+}
+
+fn task(id: usize, period: f64, deadline: f64, exit_at: usize) -> TaskSpec {
+    TaskSpec {
+        id,
+        name: format!("t{id}"),
+        period_ms: period,
+        deadline_ms: deadline,
+        unit_time_ms: vec![30.0; 4],
+        unit_energy_mj: vec![3.3; 4], // 110 mW at 30 ms/unit
+        unit_fragments: vec![4; 4],
+        release_energy_mj: 0.1,
+        traces: Arc::new(vec![trace(exit_at, 4)]),
+        imprecise: true,
+    }
+}
+
+fn full_cap() -> Capacitor {
+    let mut c = Capacitor::standard();
+    c.charge(1e9, 1000.0);
+    c
+}
+
+fn engine(tasks: Vec<TaskSpec>, kind: SchedulerKind, exit: ExitPolicy,
+          harvester: Harvester, eta: f64, duration: f64, seed: u64) -> Engine {
+    let em = EnergyManager::new(full_cap(), harvester, eta, 0.9);
+    Engine::new(
+        SimConfig { duration_ms: duration, seed, ..Default::default() },
+        tasks,
+        Scheduler::new(kind, PriorityParams::new(2000.0, 10.0)),
+        exit,
+        em,
+        Box::new(Rtc),
+    )
+}
+
+#[test]
+fn confident_jobs_are_evicted_for_fresh_releases() {
+    // Early-exit task at unit 0 leaves confident jobs with 3 optional units
+    // each; at eta=1 with persistent power Zygarde keeps refining them.
+    // A flood of releases must not be dropped: confident jobs get evicted.
+    let t = task(0, 40.0, 2000.0, 0);
+    let m = engine(
+        vec![t],
+        SchedulerKind::Zygarde,
+        ExitPolicy::Utility,
+        Harvester::persistent(600.0),
+        1.0,
+        20_000.0,
+        3,
+    )
+    .run();
+    assert!(m.released > 100);
+    assert_eq!(m.queue_dropped, 0, "releases were dropped: {m:?}");
+    assert!(m.scheduled_rate() > 0.95, "{}", m.scheduled_rate());
+}
+
+#[test]
+fn captures_fail_only_when_energy_lacks() {
+    // Persistent power: zero capture misses. Dead harvester: all misses.
+    let alive = engine(
+        vec![task(0, 100.0, 500.0, 1)],
+        SchedulerKind::Zygarde,
+        ExitPolicy::Utility,
+        Harvester::persistent(400.0),
+        1.0,
+        10_000.0,
+        1,
+    )
+    .run();
+    assert_eq!(alive.capture_missed, 0);
+
+    let mut dead_engine = engine(
+        vec![task(0, 100.0, 500.0, 1)],
+        SchedulerKind::Zygarde,
+        ExitPolicy::Utility,
+        Harvester::markov(HarvesterKind::Rf, 0.001, 0.9, 0.01, 1000.0, 2),
+        0.3,
+        60_000.0,
+        1,
+    );
+    // Start with an empty capacitor for the dead case.
+    dead_engine.energy.capacitor = Capacitor::standard();
+    let dead = dead_engine.run();
+    assert_eq!(dead.released, 0, "released jobs with no energy: {dead:?}");
+    assert!(dead.capture_missed > 100);
+}
+
+#[test]
+fn chrt_positive_error_discards_early_sometimes() {
+    // With a feasible workload the CHRT clock's ±1-2 s error may cost a
+    // few jobs but never *gains* capacity (scheduled is judged on true
+    // deadlines).
+    let run_with = |chrt: bool| {
+        let t = task(0, 300.0, 1500.0, 1);
+        let clock: Box<dyn zygarde::clock::Clock> = if chrt {
+            Box::new(Chrt::new(ChrtTier::Tier3, 7))
+        } else {
+            Box::new(Rtc)
+        };
+        let h = Harvester::markov(HarvesterKind::Rf, 90.0, 0.9, 0.7, 1000.0, 5);
+        let em = EnergyManager::new(full_cap(), h, 0.6, 0.9);
+        Engine::new(
+            SimConfig { duration_ms: 120_000.0, seed: 5, ..Default::default() },
+            vec![t],
+            Scheduler::new(SchedulerKind::Zygarde, PriorityParams::new(1500.0, 10.0)),
+            ExitPolicy::Utility,
+            em,
+            clock,
+        )
+        .run()
+    };
+    let rtc = run_with(false);
+    let chrt = run_with(true);
+    // Loss bounded (paper: < 0.1 % at their scale; generous here).
+    let loss = (rtc.scheduled as f64 - chrt.scheduled as f64) / rtc.scheduled.max(1) as f64;
+    assert!(loss.abs() < 0.10, "CHRT loss {loss}: rtc={} chrt={}", rtc.scheduled, chrt.scheduled);
+}
+
+#[test]
+fn multitask_fairness_under_zygarde() {
+    // Two tasks, one with 2x the execution demand: Zygarde's unit-level
+    // interleaving must schedule a solid share of both.
+    // U = 240/400 + 30/200 = 0.75: feasible, so fairness (not shedding)
+    // is what is under test.
+    let mut heavy = task(0, 400.0, 800.0, 3); // never exits early
+    heavy.unit_time_ms = vec![60.0; 4];
+    heavy.unit_energy_mj = vec![6.6; 4];
+    let light = task(1, 200.0, 400.0, 0);
+    let m = engine(
+        vec![heavy, light],
+        SchedulerKind::Zygarde,
+        ExitPolicy::Utility,
+        Harvester::persistent(600.0),
+        1.0,
+        30_000.0,
+        9,
+    )
+    .run();
+    for t in 0..2 {
+        let r = m.per_task_scheduled[t] as f64 / m.per_task_released[t].max(1) as f64;
+        assert!(r > 0.5, "task {t} starved: {r} ({m:?})");
+    }
+}
+
+#[test]
+fn optional_units_never_run_for_edfm_even_at_full_energy() {
+    let t = task(0, 100.0, 500.0, 0);
+    let m = engine(
+        vec![t],
+        SchedulerKind::EdfMandatory,
+        ExitPolicy::Utility,
+        Harvester::persistent(600.0),
+        1.0,
+        15_000.0,
+        4,
+    )
+    .run();
+    assert_eq!(m.optional_units, 0);
+    assert!(m.scheduled > 0);
+}
+
+#[test]
+fn edf_runs_to_exhaustion() {
+    let t = task(0, 400.0, 2000.0, 0); // would exit at unit 0 if allowed
+    let m = engine(
+        vec![t],
+        SchedulerKind::Edf,
+        ExitPolicy::None,
+        Harvester::persistent(600.0),
+        1.0,
+        12_000.0,
+        4,
+    )
+    .run();
+    // Every scheduled job executed all 4 units.
+    assert_eq!(m.mandatory_units + m.optional_units, 4 * m.scheduled);
+}

@@ -1,0 +1,302 @@
+//! Property-based tests over the coordinator, energy, and simulator
+//! invariants, using the in-crate `util::prop` harness (seed overridable
+//! via PROP_SEED).
+
+use std::sync::Arc;
+
+use zygarde::clock::Rtc;
+use zygarde::coordinator::priority::{zeta, zeta_intermittent, EnergyView, PriorityParams};
+use zygarde::coordinator::sched::{ExitPolicy, Scheduler, SchedulerKind};
+use zygarde::coordinator::task::{Job, JobState, TaskSpec};
+use zygarde::dnn::trace::{SampleTrace, UnitOutcome};
+use zygarde::energy::capacitor::Capacitor;
+use zygarde::energy::events::eta_factor;
+use zygarde::energy::harvester::Harvester;
+use zygarde::energy::manager::EnergyManager;
+use zygarde::sim::engine::{Engine, SimConfig};
+use zygarde::util::prop::{forall, Config, Size};
+use zygarde::util::rng::Pcg32;
+
+fn rand_trace(rng: &mut Pcg32, n_units: usize) -> SampleTrace {
+    let exit_unit = rng.below(n_units as u64) as usize;
+    let units = (0..n_units)
+        .map(|i| UnitOutcome {
+            gap: rng.f32() * 10.0,
+            pred: rng.below(4) as i32,
+            exit: i == exit_unit,
+            correct: rng.chance(0.7),
+        })
+        .collect::<Vec<_>>();
+    let oracle_unit = units.iter().position(|u| u.correct);
+    SampleTrace { label: 0, units, exit_unit, oracle_unit }
+}
+
+fn rand_task(rng: &mut Pcg32, id: usize, size: Size) -> TaskSpec {
+    let n_units = 1 + rng.below(4) as usize;
+    let n_traces = 1 + rng.below(size.0 as u64 + 1) as usize;
+    TaskSpec {
+        id,
+        name: format!("t{id}"),
+        period_ms: 50.0 + rng.f64() * 500.0,
+        deadline_ms: 100.0 + rng.f64() * 1000.0,
+        unit_time_ms: (0..n_units).map(|_| 5.0 + rng.f64() * 50.0).collect(),
+        unit_energy_mj: (0..n_units).map(|_| 0.5 + rng.f64() * 5.0).collect(),
+        unit_fragments: (0..n_units).map(|_| 1 + rng.below(8) as usize).collect(),
+        release_energy_mj: rng.f64() * 2.0,
+        traces: Arc::new((0..n_traces).map(|_| rand_trace(rng, n_units)).collect()),
+        imprecise: true,
+    }
+}
+
+#[test]
+fn prop_priority_mandatory_dominates_under_pressure() {
+    // ζ_I of ANY optional unit is 0 under energy pressure; ζ_I of any
+    // mandatory unit is what ζ would give without the γ bonus — hence
+    // positive whenever the deadline has not absurdly receded.
+    forall(
+        "zeta-i-optional-zero-under-pressure",
+        Config::default(),
+        |rng, _size| {
+            let spec = rand_task(rng, 0, Size(4));
+            let mut j = Job::new(&spec, 0, rng.f64() * 100.0, 0);
+            j.utility = rng.f32() * 20.0;
+            if rng.chance(0.5) {
+                j.state = JobState::Optional;
+            }
+            let p = PriorityParams::new(1000.0, 20.0);
+            let e = EnergyView {
+                e_curr_mj: rng.f64() * 50.0,
+                e_opt_mj: 100.0,
+                e_man_mj: 0.1,
+                eta: rng.f64() * 0.9,
+            };
+            (j, p, e)
+        },
+        |(j, p, e)| {
+            assert!(!e.optional_allowed());
+            let z = zeta_intermittent(j, 0.0, *p, e);
+            if j.next_is_mandatory() {
+                if z == 0.0 {
+                    return Err("mandatory unit scored 0 under pressure".into());
+                }
+            } else if z != 0.0 {
+                return Err(format!("optional unit scored {z} under pressure"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_zeta_i_equals_zeta_when_energy_plentiful() {
+    forall(
+        "zeta-i-reduces-to-zeta",
+        Config::default(),
+        |rng, _| {
+            let spec = rand_task(rng, 0, Size(4));
+            let mut j = Job::new(&spec, 0, rng.f64() * 100.0, 0);
+            j.utility = rng.f32() * 20.0;
+            let p = PriorityParams::new(500.0 + rng.f64() * 1000.0, 5.0 + rng.f64() * 30.0);
+            (j, p, rng.f64() * 500.0)
+        },
+        |(j, p, t)| {
+            let e = EnergyView::persistent();
+            let a = zeta_intermittent(j, *t, *p, &e);
+            let b = zeta(j, *t, *p);
+            if (a - b).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("zeta_I={a} != zeta={b}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_capacitor_energy_bounded() {
+    forall(
+        "capacitor-bounds",
+        Config { iters: 128, ..Default::default() },
+        |rng, size| {
+            let c = 0.001 + rng.f64() * 0.1;
+            let ops: Vec<(bool, f64)> = (0..size.0 * 4)
+                .map(|_| (rng.chance(0.5), rng.f64() * 50.0))
+                .collect();
+            (c, ops)
+        },
+        |(c, ops)| {
+            let mut cap = Capacitor::new(*c, 3.3, 2.8, 1.9);
+            for &(is_charge, amt) in ops {
+                if is_charge {
+                    cap.charge(amt * 10.0, 100.0);
+                } else {
+                    let _ = cap.draw(amt);
+                }
+                let e = cap.energy_mj();
+                if e < -1e-9 || e > cap.capacity_mj() + 1e-9 {
+                    return Err(format!("energy {e} outside [0, {}]", cap.capacity_mj()));
+                }
+                if cap.mcu_on() && cap.voltage() < cap.v_off - 1e-9 {
+                    return Err("MCU on below brown-out voltage".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eta_in_unit_interval_any_trace() {
+    forall(
+        "eta-in-[0,1]",
+        Config { iters: 64, ..Default::default() },
+        |rng, size| {
+            let n = 200 + rng.below(2000) as usize;
+            let style = rng.below(3);
+            let mut state = true;
+            (0..n)
+                .map(|i| match style {
+                    0 => rng.chance(0.5),
+                    1 => {
+                        if !rng.chance(0.85 + 0.1 * (size.0 as f64 / 64.0)) {
+                            state = !state;
+                        }
+                        state
+                    }
+                    _ => i % (2 + rng.below(5) as usize) == 0,
+                })
+                .collect::<Vec<bool>>()
+        },
+        |trace| {
+            let e = eta_factor(trace, 15, 3);
+            if (0.0..=1.0).contains(&e.eta) && e.kw_harvester >= 0.0 && e.kw_random >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("eta={} kw_h={} kw_r={}", e.eta, e.kw_harvester, e.kw_random))
+            }
+        },
+    );
+}
+
+/// Engine-level invariants under randomized workloads, harvesters and
+/// schedulers: conservation of jobs, no negative counters, mandatory
+/// before optional counts, energy conservation within tolerance.
+#[test]
+fn prop_engine_invariants() {
+    forall(
+        "engine-invariants",
+        Config { iters: 48, max_size: 24, ..Default::default() },
+        |rng, size| {
+            let n_tasks = 1 + rng.below(3) as usize;
+            let tasks: Vec<TaskSpec> =
+                (0..n_tasks).map(|i| rand_task(rng, i, size)).collect();
+            let kind = *rng.choice(&[
+                SchedulerKind::Zygarde,
+                SchedulerKind::Edf,
+                SchedulerKind::EdfMandatory,
+                SchedulerKind::RoundRobin,
+            ]);
+            let exit = *rng.choice(&[ExitPolicy::None, ExitPolicy::Utility, ExitPolicy::Oracle]);
+            let power = 20.0 + rng.f64() * 300.0;
+            let seed = rng.next_u64();
+            (tasks, kind, exit, power, seed)
+        },
+        |(tasks, kind, exit, power, seed)| {
+            let mut cap = Capacitor::standard();
+            cap.charge(1e9, 1000.0);
+            let h = Harvester::markov(
+                zygarde::energy::harvester::HarvesterKind::Rf,
+                *power,
+                0.9,
+                0.6,
+                1000.0,
+                *seed,
+            );
+            let em = EnergyManager::new(cap, h, 0.6, 0.5);
+            let engine = Engine::new(
+                SimConfig { duration_ms: 20_000.0, seed: *seed, ..Default::default() },
+                tasks.clone(),
+                Scheduler::new(*kind, PriorityParams::new(1000.0, 20.0)),
+                *exit,
+                em,
+                Box::new(Rtc),
+            );
+            let m = engine.run();
+            // Conservation: scheduled + missed <= released (jobs still in
+            // queue at sim end are neither).
+            if m.scheduled + m.deadline_missed > m.released {
+                return Err(format!(
+                    "job conservation violated: {} + {} > {}",
+                    m.scheduled, m.deadline_missed, m.released
+                ));
+            }
+            if m.correct > m.scheduled {
+                return Err("more correct than scheduled".into());
+            }
+            let per_task: u64 = m.per_task_released.iter().sum();
+            if per_task != m.released {
+                return Err("per-task released does not sum".into());
+            }
+            if m.on_time_ms > m.sim_time_ms + 1e-6 {
+                return Err("on-time exceeds sim time".into());
+            }
+            // EDF-M never executes optional units.
+            if *kind == SchedulerKind::EdfMandatory && m.optional_units > 0 {
+                return Err("EDF-M ran optional units".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fragment idempotence: injecting power failures mid-unit never corrupts
+/// the unit sequence — a job's units complete in order, each exactly once.
+#[test]
+fn prop_failure_injection_preserves_unit_order() {
+    forall(
+        "unit-order-under-failures",
+        Config { iters: 48, max_size: 16, ..Default::default() },
+        |rng, size| {
+            let task = rand_task(rng, 0, size);
+            (task, rng.next_u64())
+        },
+        |(task, seed)| {
+            // Weak, very bursty harvester: frequent mid-fragment failures.
+            let mut cap = Capacitor::new(0.002, 3.3, 2.8, 1.9);
+            cap.charge(1e9, 1000.0);
+            let h = Harvester::markov(
+                zygarde::energy::harvester::HarvesterKind::Rf,
+                40.0,
+                0.7,
+                0.5,
+                200.0,
+                *seed,
+            );
+            let em = EnergyManager::new(cap, h, 0.3, 0.2);
+            let engine = Engine::new(
+                SimConfig { duration_ms: 15_000.0, seed: *seed, ..Default::default() },
+                vec![task.clone()],
+                Scheduler::new(SchedulerKind::Zygarde, PriorityParams::new(1000.0, 20.0)),
+                ExitPolicy::Utility,
+                em,
+                Box::new(Rtc),
+            );
+            let m = engine.run();
+            // Unit accounting: every completed unit belongs to some job and
+            // total units never exceeds released * n_units.
+            let max_units = m.released * task.n_units() as u64;
+            if m.mandatory_units + m.optional_units > max_units {
+                return Err(format!(
+                    "unit count {} exceeds possible {max_units}",
+                    m.mandatory_units + m.optional_units
+                ));
+            }
+            // Fragments: completed + re-executed >= fragments of completed
+            // units (sanity: counters are consistent).
+            if m.refragments > m.fragments {
+                return Err("more re-executions than fragment attempts".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,116 @@
+//! Integration: the PJRT execution of the AOT per-unit HLO artifacts
+//! (which embed the Pallas kernels) must agree element-wise with the
+//! pure-Rust native forward — this closes the loop across all three
+//! layers: Pallas kernel (L1) → jax unit (L2) → rust runtime (L3).
+
+use zygarde::dnn::kmeans::Scratch;
+use zygarde::dnn::network::Network;
+use zygarde::runtime::Runtime;
+
+fn ready(ds: &str) -> bool {
+    zygarde::artifacts_root().join(ds).join("unit0.hlo.txt").exists()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() / denom < tol,
+            "{what}[{i}]: pjrt={x} native={y}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_units_match_native_forward() {
+    // One shared CPU client across datasets (PJRT clients are heavy).
+    let mut rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => panic!("PJRT CPU client unavailable: {e}"),
+    };
+    let mut checked = 0;
+    for ds in ["mnist", "esc10", "cifar100", "vww", "sign", "shape"] {
+        if !ready(ds) {
+            continue;
+        }
+        let dir = zygarde::artifacts_root().join(ds);
+        let net = Network::load(&dir).unwrap();
+        rt.load_network(&dir, &net.meta).unwrap();
+        let mut scratch = Scratch::default();
+        // A handful of samples through every unit.
+        for s in 0..3.min(net.test.len()) {
+            let mut act = net.test.sample(s).to_vec();
+            for li in 0..net.meta.n_layers {
+                let (pjrt_act, pjrt_dists) = rt
+                    .execute_unit(ds, li, &act, &net.classifiers[li].centroids)
+                    .unwrap();
+                let (nat_act, _res) = net.run_unit_native(li, &act, &mut scratch);
+                let mut nat_dists = vec![0f32; net.classifiers[li].k];
+                let mut feat = Vec::new();
+                net.classifiers[li].gather(&nat_act, &mut feat);
+                net.classifiers[li].distances(&feat, &mut nat_dists);
+                assert_close(&pjrt_act, &nat_act, 2e-3, &format!("{ds} unit{li} act"));
+                assert_close(&pjrt_dists, &nat_dists, 2e-3, &format!("{ds} unit{li} dists"));
+                act = nat_act;
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked > 0, "no artifacts found — run `make artifacts`");
+}
+
+#[test]
+fn pjrt_early_exit_agrees_with_native() {
+    if !ready("mnist") {
+        return;
+    }
+    let dir = zygarde::artifacts_root().join("mnist");
+    let net = Network::load(&dir).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_network(&dir, &net.meta).unwrap();
+    let mut scratch = Scratch::default();
+    let mut agree = 0usize;
+    let n = 40.min(net.test.len());
+    for i in 0..n {
+        // PJRT path with utility exits.
+        let mut act = net.test.sample(i).to_vec();
+        let mut pjrt = (0usize, 0i32);
+        for li in 0..net.meta.n_layers {
+            let (next, dists) = rt
+                .execute_unit("mnist", li, &act, &net.classifiers[li].centroids)
+                .unwrap();
+            let res = net.classifiers[li].classify_from_dists(&dists);
+            pjrt = (li, res.pred);
+            if res.exit {
+                break;
+            }
+            act = next;
+        }
+        let native = net.infer_native(net.test.sample(i), &mut scratch);
+        if pjrt == native {
+            agree += 1;
+        }
+    }
+    // f32 reassociation can flip a razor-thin utility test on rare inputs.
+    assert!(agree >= n - 1, "agreement {agree}/{n}");
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    if !ready("mnist") {
+        return;
+    }
+    let dir = zygarde::artifacts_root().join("mnist");
+    let net = Network::load(&dir).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_unit(&dir, &net.meta, 0).unwrap();
+    // Wrong activation length.
+    let bad = vec![0f32; 7];
+    assert!(rt.execute_unit("mnist", 0, &bad, &net.classifiers[0].centroids).is_err());
+    // Wrong centroid length.
+    let x = net.test.sample(0).to_vec();
+    assert!(rt.execute_unit("mnist", 0, &x, &[0.0, 1.0]).is_err());
+    // Unknown unit.
+    assert!(rt.execute_unit("mnist", 99, &x, &net.classifiers[0].centroids).is_err());
+}
