@@ -59,32 +59,38 @@ fn main() {
     }
 
     // PJRT serving path (mnist): per-unit execute and full early-exit
-    // inference through the AOT artifacts.
+    // inference through the AOT artifacts. Skipped when the crate is built
+    // without the `pjrt` feature (the stub runtime reports unavailable).
     let ds = "mnist";
     let net = Network::load(&root.join(ds)).unwrap();
-    let mut rt = Runtime::cpu().expect("PJRT");
-    rt.load_network(&root.join(ds), &net.meta).unwrap();
-    let sample = net.test.sample(0).to_vec();
-    b.run(&format!("pjrt/{ds}/unit0"), || {
-        rt.execute_unit(ds, 0, &sample, &net.classifiers[0].centroids).unwrap().1[0]
-    })
-    .report();
-    b.run(&format!("pjrt/{ds}/infer-early-exit"), || {
-        let mut act = sample.clone();
-        let mut pred = 0;
-        for li in 0..net.meta.n_layers {
-            let (next, dists) =
-                rt.execute_unit(ds, li, &act, &net.classifiers[li].centroids).unwrap();
-            let res = net.classifiers[li].classify_from_dists(&dists);
-            pred = res.pred;
-            if res.exit {
-                break;
-            }
-            act = next;
+    match Runtime::cpu() {
+        Err(e) => eprintln!("skipping PJRT benches: {e}"),
+        Ok(mut rt) => {
+            rt.load_network(&root.join(ds), &net.meta).unwrap();
+            let sample = net.test.sample(0).to_vec();
+            b.run(&format!("pjrt/{ds}/unit0"), || {
+                rt.execute_unit(ds, 0, &sample, &net.classifiers[0].centroids).unwrap().1[0]
+            })
+            .report();
+            b.run(&format!("pjrt/{ds}/infer-early-exit"), || {
+                let mut act = sample.clone();
+                let mut pred = 0;
+                for li in 0..net.meta.n_layers {
+                    let (next, dists) = rt
+                        .execute_unit(ds, li, &act, &net.classifiers[li].centroids)
+                        .unwrap();
+                    let res = net.classifiers[li].classify_from_dists(&dists);
+                    pred = res.pred;
+                    if res.exit {
+                        break;
+                    }
+                    act = next;
+                }
+                pred
+            })
+            .report();
         }
-        pred
-    })
-    .report();
+    }
 
     // Centroid adaptation (runtime update + deep propagation).
     let mut net2 = Network::load(&root.join(ds)).unwrap();

@@ -1,0 +1,75 @@
+//! Sweep-engine throughput: scenarios/sec at 1, 2, 4, and 8 threads over
+//! a synthetic 96-scenario matrix (no artifacts needed), cross-checking
+//! that every thread count produces the byte-identical report.
+//!
+//! Run with `cargo bench --bench bench_sweep`. Scale the workload with
+//! SWEEP_BENCH_REPS (default 4 reps → 96 scenarios) and
+//! SWEEP_BENCH_DURATION_MS (default 20000 ms of simulated time per cell).
+
+use std::time::Instant;
+
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::energy::harvester::HarvesterKind;
+use zygarde::sim::sweep::{run_matrix, FaultPlan, HarvesterSpec, ScenarioMatrix, TaskMix};
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let reps = env_u64("SWEEP_BENCH_REPS", 4);
+    let duration_ms = env_u64("SWEEP_BENCH_DURATION_MS", 20_000) as f64;
+
+    // 2 harvesters × 1 cap × 3 schedulers × 2 faults × reps → 12·reps
+    // scenarios, plus a second mix doubling it: 24·reps (96 at default).
+    let matrix = ScenarioMatrix::new("bench-sweep", 0xB5EE9)
+        .mixes(vec![
+            TaskMix::synthetic("uni", 1, 3, 11),
+            TaskMix::synthetic("duo", 2, 3, 12),
+        ])
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 600.0 },
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 120.0,
+                q: 0.9,
+                duty: 0.6,
+                eta: 0.51,
+            },
+        ])
+        .schedulers(vec![
+            SchedulerKind::Zygarde,
+            SchedulerKind::EdfMandatory,
+            SchedulerKind::Edf,
+        ])
+        .faults(vec![
+            FaultPlan::none(),
+            FaultPlan::none().with_brownouts(2_000.0, 400.0, 250.0),
+        ])
+        .reps(reps)
+        .duration_ms(duration_ms);
+
+    let n = matrix.len();
+    println!("bench-sweep: {n} scenarios × {duration_ms} ms simulated each\n");
+
+    let mut runs: Vec<(usize, f64, String)> = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let report = run_matrix(&matrix, threads);
+        let dt = t0.elapsed().as_secs_f64();
+        let rate = n as f64 / dt;
+        let speedup = rate / runs.first().map(|(_, r1, _)| *r1).unwrap_or(rate);
+        println!(
+            "threads {threads}: {:>8.1} scenarios/s  ({dt:.3} s total, {speedup:.2}x vs 1 thread)",
+            rate
+        );
+        runs.push((threads, rate, report.json_string()));
+    }
+    let reference = &runs[0].2;
+    for (threads, _, json) in &runs[1..] {
+        assert_eq!(
+            reference, json,
+            "thread count {threads} changed the report — determinism broken"
+        );
+    }
+}

@@ -12,15 +12,21 @@ use zygarde::dnn::network::Network;
 use zygarde::runtime::Runtime;
 use zygarde::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let ds = args.str_or("dataset", "mnist").to_string();
     let n_samples = args.usize_or("samples", 40);
 
     let dir = zygarde::artifacts_root().join(&ds);
-    let mut net = Network::load(&dir).map_err(anyhow::Error::msg)?;
-    let mut rt = Runtime::cpu()?;
-    rt.load_network(&dir, &net.meta)?;
+    let mut net = Network::load(&dir).expect("artifacts — run `make artifacts` first");
+    let mut rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("quickstart needs the PJRT serving path: {e}");
+            std::process::exit(1);
+        }
+    };
+    rt.load_network(&dir, &net.meta).expect("loading AOT units");
     println!(
         "zygarde quickstart: `{ds}` ({} units) on {} — utility thresholds {:?}",
         net.meta.n_layers,
@@ -36,8 +42,9 @@ fn main() -> anyhow::Result<()> {
         let mut act = net.test.sample(i).to_vec();
         let (mut pred, mut exit_at) = (0i32, net.meta.n_layers - 1);
         for li in 0..net.meta.n_layers {
-            let (next, dists) =
-                rt.execute_unit(&ds, li, &act, &net.classifiers[li].centroids)?;
+            let (next, dists) = rt
+                .execute_unit(&ds, li, &act, &net.classifiers[li].centroids)
+                .expect("unit execution");
             let res = net.classifiers[li].classify_from_dists(&dists);
             pred = res.pred;
             if res.exit || li == net.meta.n_layers - 1 {
@@ -70,5 +77,4 @@ fn main() -> anyhow::Result<()> {
         100.0 * correct as f64 / n as f64,
         t0.elapsed().as_secs_f64() * 1e3 / n as f64
     );
-    Ok(())
 }

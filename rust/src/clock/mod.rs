@@ -21,6 +21,34 @@ pub trait Clock {
     fn name(&self) -> &'static str;
 }
 
+/// Declarative clock choice for scenario specs (`sim::sweep`): a plain
+/// value that can be stored in a matrix cell and built into a boxed
+/// [`Clock`] per scenario. The CHRT variants inject post-reboot clock skew
+/// through the existing remanence-clock error models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockSpec {
+    Rtc,
+    Chrt(ChrtTier),
+}
+
+impl ClockSpec {
+    pub fn build(self, seed: u64) -> Box<dyn Clock> {
+        match self {
+            ClockSpec::Rtc => Box::new(Rtc),
+            ClockSpec::Chrt(tier) => Box::new(Chrt::new(tier, seed)),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ClockSpec::Rtc => "rtc",
+            ClockSpec::Chrt(ChrtTier::Tier1) => "chrt-t1",
+            ClockSpec::Chrt(ChrtTier::Tier2) => "chrt-t2",
+            ClockSpec::Chrt(ChrtTier::Tier3) => "chrt-t3",
+        }
+    }
+}
+
 /// Battery-backed real-time clock: exact.
 #[derive(Default, Clone, Debug)]
 pub struct Rtc;

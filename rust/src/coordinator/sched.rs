@@ -26,6 +26,16 @@ pub enum ExitPolicy {
     Oracle,
 }
 
+impl ExitPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExitPolicy::None => "none",
+            ExitPolicy::Utility => "utility",
+            ExitPolicy::Oracle => "oracle",
+        }
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SchedulerKind {
     Zygarde,

@@ -5,19 +5,14 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::sched::SchedulerKind;
 use crate::dnn::network::Network;
 use crate::dnn::trace::compute_traces;
-use crate::energy::capacitor::Capacitor;
+use crate::energy::harvester::HarvesterKind;
 use crate::sim::metrics::Metrics;
+use crate::sim::sweep::{self, HarvesterSpec, ScenarioMatrix, SeedPolicy, TaskMix};
 use crate::sim::workload::task_from_network;
 
-use super::common::{pct, print_header, print_row, system, System};
-use crate::coordinator::priority::PriorityParams;
-use crate::coordinator::sched::{ExitPolicy, Scheduler};
-use crate::energy::harvester::HarvesterKind;
-use crate::energy::manager::EnergyManager;
-use crate::sim::engine::{Engine, SimConfig};
+use super::common::{pct, print_header, print_row};
 
 pub struct CapacitorCell {
     pub c_mf: f64,
@@ -37,6 +32,10 @@ pub const SIZES_MF: [f64; 4] = [0.1, 1.0, 50.0, 470.0];
 pub const STRESS_AVG_POWER_MW: f64 = 70.0;
 pub const STRESS_DUTY: f64 = 0.92;
 
+/// One capacitor-size scenario per matrix cell, run in parallel on the
+/// sweep engine. Cold start (`precharge(false)`): the deployment begins
+/// with an empty capacitor, so the 470 mF unit pays its long initial
+/// charge, as in the paper.
 pub fn run(n_jobs: u64, seed: u64) -> Vec<CapacitorCell> {
     let net = Network::load(&crate::artifacts_root().join("cifar100")).unwrap();
     let traces = Arc::new(compute_traces(&net, None));
@@ -44,41 +43,30 @@ pub fn run(n_jobs: u64, seed: u64) -> Vec<CapacitorCell> {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(STRESS_AVG_POWER_MW);
-    let sys = System { id: 6, kind: HarvesterKind::Rf, eta: 0.51,
-                       avg_power_mw: stress_mw };
-    let _ = system(6); // documented anchor: same η as Table 4's System 6
     let duration_ms = n_jobs as f64 * 10_000.0 * 1.06;
-    SIZES_MF
+    // Period 9-11 s -> midpoint, with the engine's sporadic jitter.
+    let task = task_from_network(0, &net, 10_000.0, 20_000.0, Some(traces));
+
+    let matrix = ScenarioMatrix::new("capacitor-sweep", seed)
+        .mixes(vec![TaskMix::from_tasks("cifar100", vec![task])])
+        .harvesters(vec![HarvesterSpec::Markov {
+            kind: HarvesterKind::Rf,
+            on_power_mw: stress_mw / STRESS_DUTY,
+            q: 0.75, // bursty at η ≈ 0.5 like Table 4's System 6
+            duty: STRESS_DUTY,
+            eta: 0.51, // same offline-estimated η as system(6)
+        }])
+        .capacitors_mf(SIZES_MF.to_vec())
+        .precharge(false)
+        .duration_ms(duration_ms)
+        .seed_policy(SeedPolicy::PairedEnvironment);
+    let scenarios = matrix.expand();
+    let cells = sweep::run_scenarios(&scenarios, sweep::default_threads());
+
+    scenarios
         .iter()
-        .map(|&mf| {
-            // Period 9-11 s -> midpoint, with the engine's sporadic jitter.
-            let task = task_from_network(0, &net, 10_000.0, 20_000.0, Some(traces.clone()));
-            let e_man = (0..task.n_units())
-                .map(|u| task.fragment_energy_mj(u))
-                .fold(0.0f64, f64::max);
-            // Cold start (deployment begins with an empty capacitor): the
-            // 470 mF unit pays its long initial charge, as in the paper.
-            let cap = Capacitor::new(mf * 1e-3, 3.3, 2.8, 1.9);
-            let h = crate::energy::harvester::Harvester::markov(
-                HarvesterKind::Rf,
-                stress_mw / STRESS_DUTY,
-                0.75, // bursty at η ≈ 0.5 like Table 4's System 6
-                STRESS_DUTY,
-                1000.0,
-                seed,
-            );
-            let energy = EnergyManager::new(cap, h, sys.eta, e_man);
-            let params = PriorityParams::new(20_000.0, 30.0);
-            let engine = Engine::new(
-                SimConfig { duration_ms, seed, ..Default::default() },
-                vec![task],
-                Scheduler::new(SchedulerKind::Zygarde, params),
-                ExitPolicy::Utility,
-                energy,
-                Box::new(crate::clock::Rtc),
-            );
-            CapacitorCell { c_mf: mf, metrics: engine.run() }
-        })
+        .zip(cells)
+        .map(|(sc, cell)| CapacitorCell { c_mf: sc.capacitor_mf, metrics: cell.metrics })
         .collect()
 }
 

@@ -5,14 +5,13 @@
 
 use std::sync::Arc;
 
-use crate::clock::{Chrt, ChrtTier, Rtc};
-use crate::coordinator::sched::SchedulerKind;
+use crate::clock::{ChrtTier, ClockSpec};
 use crate::dnn::network::Network;
 use crate::dnn::trace::compute_traces;
-use crate::sim::metrics::Metrics;
+use crate::sim::sweep::{self, FaultPlan, HarvesterSpec, ScenarioMatrix, SeedPolicy, TaskMix};
 use crate::sim::workload::task_from_network;
 
-use super::common::{engine_for, print_header, print_row, system};
+use super::common::{print_header, print_row};
 
 pub struct ChrtRow {
     pub system_id: usize,
@@ -22,7 +21,13 @@ pub struct ChrtRow {
     pub scheduled_chrt: u64,
 }
 
-fn run_one(sid: usize, n_jobs: u64, chrt: bool, seed: u64) -> Metrics {
+const SYSTEM_IDS: [usize; 3] = [2, 3, 4];
+
+/// One matrix: (Systems 2–4) × (RTC, CHRT tier-3) on the sweep engine.
+/// Paired environment seeds mean both clock variants of a system replay
+/// the *same* harvest and release streams — the only difference between
+/// the paired cells is the clock error, exactly Table 5's contrast.
+pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
     let net = Network::load(&crate::artifacts_root().join("vww")).unwrap();
     let traces = Arc::new(compute_traces(&net, None));
     // Table 5's deployments schedule ~99.9 % of tasks (29 989 / ~30 000),
@@ -31,30 +36,26 @@ fn run_one(sid: usize, n_jobs: u64, chrt: bool, seed: u64) -> Metrics {
     // overloaded VWW configuration is exercised by Figs. 17–20 instead.
     let task = task_from_network(0, &net, 6000.0, 12_000.0, Some(traces));
     let duration_ms = n_jobs as f64 * 6000.0 * 1.06;
-    let clock: Box<dyn crate::clock::Clock> = if chrt {
-        Box::new(Chrt::new(ChrtTier::Tier3, seed))
-    } else {
-        Box::new(Rtc)
-    };
-    engine_for(
-        system(sid),
-        vec![task],
-        SchedulerKind::Zygarde,
-        crate::coordinator::sched::ExitPolicy::Utility,
-        duration_ms,
-        None,
-        Some(clock),
-        seed,
-    )
-    .run()
-}
 
-pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
-    [2usize, 3, 4]
+    let matrix = ScenarioMatrix::new("chrt-cmp", seed)
+        .mixes(vec![TaskMix::from_tasks("vww", vec![task])])
+        .harvesters(SYSTEM_IDS.iter().map(|&sid| HarvesterSpec::System(sid)).collect())
+        .faults(vec![
+            FaultPlan::none(),
+            FaultPlan::none().with_clock(ClockSpec::Chrt(ChrtTier::Tier3)),
+        ])
+        .duration_ms(duration_ms)
+        .seed_policy(SeedPolicy::PairedEnvironment);
+    let report = sweep::run_matrix(&matrix, sweep::default_threads());
+
+    // Expansion order: harvesters outer, faults inner → cells[2i] is the
+    // RTC run of SYSTEM_IDS[i] and cells[2i+1] its CHRT twin.
+    SYSTEM_IDS
         .iter()
-        .map(|&sid| {
-            let rtc = run_one(sid, n_jobs, false, seed);
-            let chrt = run_one(sid, n_jobs, true, seed);
+        .enumerate()
+        .map(|(i, &sid)| {
+            let rtc = &report.cells[2 * i].metrics;
+            let chrt = &report.cells[2 * i + 1].metrics;
             ChrtRow {
                 system_id: sid,
                 reboots: rtc.reboots,

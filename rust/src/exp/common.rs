@@ -1,73 +1,20 @@
 //! Shared experiment plumbing: the Table 4 evaluation systems, calibrated
 //! harvester construction, engine assembly, and table formatting.
 
-use std::collections::HashMap;
-use std::sync::Mutex;
-
 use crate::clock::{Clock, Rtc};
 use crate::coordinator::priority::PriorityParams;
 use crate::coordinator::sched::{ExitPolicy, Scheduler, SchedulerKind};
 use crate::coordinator::task::TaskSpec;
 use crate::energy::capacitor::Capacitor;
-use crate::energy::harvester::{calibrate_markov, Harvester, HarvesterKind};
 use crate::energy::manager::EnergyManager;
 use crate::sim::engine::{Engine, SimConfig};
 use crate::sim::metrics::Metrics;
 
-/// One row of Table 4: the seven controlled evaluation systems.
-#[derive(Clone, Copy, Debug)]
-pub struct System {
-    pub id: usize,
-    pub kind: HarvesterKind,
-    pub eta: f64,
-    pub avg_power_mw: f64,
-}
-
-pub const SYSTEMS: [System; 7] = [
-    System { id: 1, kind: HarvesterKind::Persistent, eta: 1.0, avg_power_mw: 600.0 },
-    System { id: 2, kind: HarvesterKind::Solar, eta: 0.71, avg_power_mw: 600.0 },
-    System { id: 3, kind: HarvesterKind::Solar, eta: 0.51, avg_power_mw: 420.0 },
-    System { id: 4, kind: HarvesterKind::Solar, eta: 0.38, avg_power_mw: 310.0 },
-    System { id: 5, kind: HarvesterKind::Rf, eta: 0.71, avg_power_mw: 58.0 },
-    System { id: 6, kind: HarvesterKind::Rf, eta: 0.51, avg_power_mw: 71.0 },
-    System { id: 7, kind: HarvesterKind::Rf, eta: 0.38, avg_power_mw: 80.0 },
-];
-
-pub fn system(id: usize) -> System {
-    SYSTEMS[id - 1]
-}
-
-/// Harvester duty cycle used by the controlled experiments: the paper
-/// varies bulb intensity / RF distance; we fix the duty and scale the
-/// on-power to hit the average.
-pub const DUTY: f64 = 0.6;
-
-// Calibration is deterministic but not free; memoize q per (kind, η).
-static CALIBRATION: Mutex<Option<HashMap<(u8, u64), f64>>> = Mutex::new(None);
-
-fn calibrated_q(kind: HarvesterKind, eta: f64, on_power: f64) -> f64 {
-    let key = (kind as u8, (eta * 1000.0) as u64);
-    let mut guard = CALIBRATION.lock().unwrap();
-    let map = guard.get_or_insert_with(HashMap::new);
-    if let Some(&q) = map.get(&key) {
-        return q;
-    }
-    let (q, _achieved) = calibrate_markov(kind, on_power, DUTY, eta, 0xCA11B);
-    map.insert(key, q);
-    q
-}
-
-/// Build the harvester for a Table 4 system (seeded per run).
-pub fn harvester_for(sys: System, seed: u64) -> Harvester {
-    match sys.kind {
-        HarvesterKind::Persistent => Harvester::persistent(sys.avg_power_mw),
-        kind => {
-            let on_power = sys.avg_power_mw / DUTY;
-            let q = calibrated_q(kind, sys.eta, on_power);
-            Harvester::markov(kind, on_power, q, DUTY, 1000.0, seed)
-        }
-    }
-}
+// The Table 4 system descriptions (and their memoized harvester
+// calibration) moved into `energy::harvester` so the sweep engine can use
+// them without depending on the experiment drivers; re-exported here to
+// keep the historical import paths working.
+pub use crate::energy::harvester::{harvester_for, system, HarvesterKind, System, DUTY, SYSTEMS};
 
 /// Assemble an EnergyManager for a system with the given E_man and an
 /// optionally non-standard capacitor. The capacitor starts full (the

@@ -14,9 +14,12 @@ use crate::coordinator::sched::SchedulerKind;
 use crate::dnn::network::Network;
 use crate::dnn::trace::compute_traces;
 use crate::sim::metrics::Metrics;
+use crate::sim::sweep::{
+    self, HarvesterSpec, ScenarioMatrix, SeedPolicy, TaskMix,
+};
 use crate::sim::workload::task_from_network;
 
-use super::common::{pct, print_header, print_row, run_cell, system, System};
+use super::common::{pct, print_header, print_row, system, System};
 
 #[derive(Clone, Debug)]
 pub struct WorkloadParams {
@@ -50,6 +53,11 @@ pub struct ScheduleCell {
 pub const SCHEDULERS: [SchedulerKind; 3] =
     [SchedulerKind::Edf, SchedulerKind::EdfMandatory, SchedulerKind::Zygarde];
 
+/// Build the (systems × schedulers) matrix and run it on the sweep
+/// engine: one scenario per cell, executed in parallel, with paired
+/// environment seeds so every scheduler sees the same release and
+/// harvest streams within a system (the apples-to-apples comparison the
+/// figures need).
 pub fn run(
     dataset: &str,
     systems: &[usize],
@@ -62,18 +70,28 @@ pub fn run(
     // Release jitter averages ~5 %; pad the horizon so n_jobs release.
     let duration_ms = n_jobs as f64 * p.period_ms * 1.06;
     let traces = Arc::new(compute_traces(&net, None));
+    let task = task_from_network(0, &net, p.period_ms, p.deadline_ms, Some(traces));
 
-    let mut out = Vec::new();
-    for &sid in systems {
-        let sys = system(sid);
-        for kind in SCHEDULERS {
-            let task = task_from_network(0, &net, p.period_ms, p.deadline_ms,
-                                         Some(traces.clone()));
-            let metrics = run_cell(sys, vec![task], kind, duration_ms, seed ^ sid as u64);
-            out.push(ScheduleCell { system: sys, scheduler: kind, metrics });
-        }
-    }
-    out
+    let matrix = ScenarioMatrix::new(format!("schedule-{dataset}"), seed)
+        .mixes(vec![TaskMix::from_tasks(dataset, vec![task])])
+        .harvesters(systems.iter().map(|&sid| HarvesterSpec::System(sid)).collect())
+        .schedulers(SCHEDULERS.to_vec())
+        .duration_ms(duration_ms)
+        .seed_policy(SeedPolicy::PairedEnvironment);
+    let scenarios = matrix.expand();
+    let cells = sweep::run_scenarios(&scenarios, sweep::default_threads());
+
+    scenarios
+        .iter()
+        .zip(cells)
+        .map(|(sc, cell)| {
+            let sid = match sc.harvester {
+                HarvesterSpec::System(id) => id,
+                _ => unreachable!("schedule matrix only uses Table 4 systems"),
+            };
+            ScheduleCell { system: system(sid), scheduler: sc.scheduler, metrics: cell.metrics }
+        })
+        .collect()
 }
 
 pub fn print(dataset: &str, cells: &[ScheduleCell]) {

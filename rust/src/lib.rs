@@ -25,10 +25,50 @@
 //! * [`clock`] — RTC and CHRT remanence-clock models.
 //! * [`coordinator`] — tasks/jobs/units/fragments, job queue, priority
 //!   functions ζ and ζ_I, Zygarde/EDF/EDF-M/RR schedulers, schedulability.
-//! * [`sim`] — discrete-event intermittently-powered MCU simulator.
+//! * [`sim`] — discrete-event intermittently-powered MCU simulator, plus
+//!   the deterministic parallel scenario-sweep engine ([`sim::sweep`]).
 //! * [`classifiers`] — KNN / k-means / SVM / random-forest baselines
 //!   (Table 7).
-//! * [`exp`] — one driver per paper table/figure.
+//! * [`exp`] — one driver per paper table/figure (the scheduler,
+//!   capacitor, and clock comparisons run on the sweep engine).
+//!
+//! # Deterministic simulation & sweeps
+//!
+//! The evaluation grid — harvester profiles × capacitor sizes ×
+//! schedulers × exit policies × task mixes × seeds — is declared as a
+//! [`sim::sweep::ScenarioMatrix`] and executed by a multi-threaded runner
+//! whose output is **bitwise identical at any thread count**: every
+//! scenario derives its RNG streams from `(matrix_seed, scenario_index)`
+//! and shares no mutable state. Failure injection (brownout bursts,
+//! post-reboot CHRT clock skew) is part of the scenario spec, so a
+//! failing seed replays exactly and becomes a regression test.
+//!
+//! ```no_run
+//! use zygarde::coordinator::sched::SchedulerKind;
+//! use zygarde::sim::sweep::{run_matrix, FaultPlan, HarvesterSpec, ScenarioMatrix, TaskMix};
+//!
+//! let matrix = ScenarioMatrix::new("quick", 7)
+//!     .mixes(vec![TaskMix::synthetic("demo", 2, 3, 42)])
+//!     .harvesters(vec![
+//!         HarvesterSpec::System(6), // Table 4: RF, η = 0.51
+//!         HarvesterSpec::Persistent { power_mw: 600.0 },
+//!     ])
+//!     .capacitors_mf(vec![5.0, 50.0])
+//!     .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+//!     .faults(vec![
+//!         FaultPlan::none(),
+//!         FaultPlan::none().with_brownouts(2_000.0, 400.0, 0.0),
+//!     ])
+//!     .reps(4);
+//! let report = run_matrix(&matrix, 8);
+//! report.print();
+//! println!("{}", report.json_string());
+//! ```
+//!
+//! To replay one cell from a report, re-expand the same matrix and run
+//! its scenario index alone — `sim::sweep::run_scenario` is a pure
+//! function of the scenario, so the isolated replay matches the sweep
+//! cell byte-for-byte (`rust/tests/sweep_determinism.rs` enforces this).
 
 pub mod classifiers;
 pub mod clock;

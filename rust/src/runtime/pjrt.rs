@@ -1,0 +1,129 @@
+//! PJRT runtime: loads the AOT-compiled per-unit HLO artifacts and executes
+//! them on the XLA CPU client. This is the only place the `xla` crate is
+//! touched; everything above deals in plain `Vec<f32>` activations.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
+//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
+//! instruction ids), while the text parser reassigns ids — see
+//! /opt/xla-example/README.md and DESIGN.md §2.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::dnn::meta::NetMeta;
+
+/// One compiled per-unit executable: `(act_in, centroids) -> (act_out, dists)`.
+pub struct UnitExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub act_in_len: usize,
+    pub act_in_dims: Vec<i64>,
+    pub k: usize,
+    pub n_features: usize,
+}
+
+/// A PJRT client plus the executable cache for one or more networks.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    units: HashMap<(String, usize), UnitExe>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, units: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile every unit of a network from `dir` (e.g. `artifacts/mnist`).
+    pub fn load_network(&mut self, dir: &Path, meta: &NetMeta) -> Result<()> {
+        for li in 0..meta.n_layers {
+            self.load_unit(dir, meta, li)?;
+        }
+        Ok(())
+    }
+
+    pub fn load_unit(&mut self, dir: &Path, meta: &NetMeta, li: usize) -> Result<()> {
+        let key = (meta.name.clone(), li);
+        if self.units.contains_key(&key) {
+            return Ok(());
+        }
+        let path: PathBuf = dir.join(format!("unit{li}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let in_dims = meta.unit_input_shape(li);
+        self.units.insert(
+            key,
+            UnitExe {
+                exe,
+                act_in_len: in_dims.iter().product::<i64>() as usize,
+                act_in_dims: in_dims,
+                k: meta.layers[li].k,
+                n_features: meta.layers[li].n_features,
+            },
+        );
+        Ok(())
+    }
+
+    pub fn has_unit(&self, net: &str, li: usize) -> bool {
+        self.units.contains_key(&(net.to_string(), li))
+    }
+
+    /// Execute one unit: feed the previous activation (flattened) and the
+    /// *current* centroids (they evolve at runtime via adaptation), get the
+    /// next activation and the k L1 distances.
+    pub fn execute_unit(
+        &self,
+        net: &str,
+        li: usize,
+        act_in: &[f32],
+        centroids: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let unit = self
+            .units
+            .get(&(net.to_string(), li))
+            .with_context(|| format!("unit {net}/{li} not loaded"))?;
+        anyhow::ensure!(
+            act_in.len() == unit.act_in_len,
+            "unit {net}/{li}: activation len {} != expected {}",
+            act_in.len(),
+            unit.act_in_len
+        );
+        anyhow::ensure!(
+            centroids.len() == unit.k * unit.n_features,
+            "unit {net}/{li}: centroid len {} != {}x{}",
+            centroids.len(),
+            unit.k,
+            unit.n_features
+        );
+        let x = xla::Literal::vec1(act_in).reshape(&unit.act_in_dims)?;
+        let c = xla::Literal::vec1(centroids)
+            .reshape(&[unit.k as i64, unit.n_features as i64])?;
+        let result = unit.exe.execute::<xla::Literal>(&[x, c])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: root is (act_out, dists).
+        let (act_out, dists) = result.to_tuple2()?;
+        Ok((act_out.to_vec::<f32>()?, dists.to_vec::<f32>()?))
+    }
+
+    pub fn loaded_units(&self) -> usize {
+        self.units.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT tests live in rust/tests/runtime_vs_native.rs (integration):
+    // they need built artifacts and the shared CPU client.
+}

@@ -1,0 +1,77 @@
+//! Stub runtime compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the public surface of [`super::pjrt`] so callers compile
+//! unchanged; every operation fails with [`RuntimeUnavailable`]. The
+//! native forward path (`dnn::forward`, used by the simulator and the
+//! trace precomputation) does not go through here and keeps working.
+
+use std::path::Path;
+
+use crate::dnn::meta::NetMeta;
+
+/// Error returned by every stub operation.
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeUnavailable;
+
+impl std::fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (rebuild with `--features pjrt` on an image that vendors the \
+             `xla` crate)"
+        )
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+/// Placeholder with the same API as the PJRT-backed runtime.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load_network(
+        &mut self,
+        _dir: &Path,
+        _meta: &NetMeta,
+    ) -> Result<(), RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn load_unit(
+        &mut self,
+        _dir: &Path,
+        _meta: &NetMeta,
+        _li: usize,
+    ) -> Result<(), RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn has_unit(&self, _net: &str, _li: usize) -> bool {
+        false
+    }
+
+    pub fn execute_unit(
+        &self,
+        _net: &str,
+        _li: usize,
+        _act_in: &[f32],
+        _centroids: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>), RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn loaded_units(&self) -> usize {
+        0
+    }
+}

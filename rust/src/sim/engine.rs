@@ -38,6 +38,10 @@ pub struct SimConfig {
     pub seed: u64,
     /// Release jitter fraction of the period (sporadic, not periodic).
     pub release_jitter: f64,
+    /// Record a [`JobRecord`] for every job that leaves the system
+    /// (invariant audits in the sweep tests). Off by default: the log is
+    /// O(jobs) memory the figure-scale sweeps do not need.
+    pub log_jobs: bool,
 }
 
 impl Default for SimConfig {
@@ -49,6 +53,7 @@ impl Default for SimConfig {
             idle_power_mw: 0.3,
             seed: 1,
             release_jitter: 0.1,
+            log_jobs: false,
         }
     }
 }
@@ -247,6 +252,16 @@ impl Engine {
             .mandatory_done_at
             .map(|at| at <= job.deadline_ms)
             .unwrap_or(false);
+        if self.cfg.log_jobs {
+            self.metrics.job_log.push(crate::sim::metrics::JobRecord {
+                task: t,
+                release_ms: job.release_ms,
+                deadline_ms: job.deadline_ms,
+                mandatory_done_at: job.mandatory_done_at,
+                units_done: job.units_done,
+                counted_scheduled: job.mandatory_done && in_time,
+            });
+        }
         if job.mandatory_done && in_time {
             self.metrics.scheduled += 1;
             self.metrics.per_task_scheduled[t] += 1;

@@ -2,6 +2,24 @@
 //! figures report (jobs scheduled, correct results, deadline misses,
 //! optional units executed, energy accounting).
 
+use crate::util::json::Value;
+
+/// Audit record for one job leaving the system (deadline discard, queue
+/// eviction, or completion). Collected only when `SimConfig::log_jobs` is
+/// set; the sweep invariant tests check these against the counters.
+#[derive(Clone, Copy, Debug)]
+pub struct JobRecord {
+    pub task: usize,
+    pub release_ms: f64,
+    /// Absolute (true-time) deadline.
+    pub deadline_ms: f64,
+    /// Completion time of the mandatory part, if it ever completed.
+    pub mandatory_done_at: Option<f64>,
+    pub units_done: usize,
+    /// Whether this job was counted in [`Metrics::scheduled`].
+    pub counted_scheduled: bool,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     /// Jobs released by the job generator (entered the system).
@@ -36,6 +54,8 @@ pub struct Metrics {
     pub reboots: u64,
     pub harvested_mj: f64,
     pub wasted_mj: f64,
+    /// Per-job audit trail; empty unless `SimConfig::log_jobs` was set.
+    pub job_log: Vec<JobRecord>,
 }
 
 impl Metrics {
@@ -80,5 +100,36 @@ impl Metrics {
 
     pub fn on_fraction(&self) -> f64 {
         self.on_time_ms / self.sim_time_ms.max(1e-9)
+    }
+
+    /// Machine-readable summary for `sim::sweep` reports. Every field that
+    /// feeds an evaluation figure is included; the `job_log` audit trail
+    /// is not (it is an in-memory debugging aid, not a result).
+    pub fn to_json(&self) -> Value {
+        fn num(m: &mut std::collections::BTreeMap<String, Value>, k: &str, v: f64) {
+            m.insert(k.to_string(), Value::Num(v));
+        }
+        let mut m = std::collections::BTreeMap::new();
+        num(&mut m, "released", self.released as f64);
+        num(&mut m, "capture_missed", self.capture_missed as f64);
+        num(&mut m, "queue_dropped", self.queue_dropped as f64);
+        num(&mut m, "scheduled", self.scheduled as f64);
+        num(&mut m, "correct", self.correct as f64);
+        num(&mut m, "deadline_missed", self.deadline_missed as f64);
+        num(&mut m, "mandatory_units", self.mandatory_units as f64);
+        num(&mut m, "optional_units", self.optional_units as f64);
+        num(&mut m, "refragments", self.refragments as f64);
+        num(&mut m, "fragments", self.fragments as f64);
+        num(&mut m, "latency_sum_ms", self.latency_sum_ms);
+        num(&mut m, "sim_time_ms", self.sim_time_ms);
+        num(&mut m, "on_time_ms", self.on_time_ms);
+        num(&mut m, "reboots", self.reboots as f64);
+        num(&mut m, "harvested_mj", self.harvested_mj);
+        num(&mut m, "wasted_mj", self.wasted_mj);
+        let arr = |xs: &[u64]| Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect());
+        m.insert("per_task_released".to_string(), arr(&self.per_task_released));
+        m.insert("per_task_scheduled".to_string(), arr(&self.per_task_scheduled));
+        m.insert("per_task_correct".to_string(), arr(&self.per_task_correct));
+        Value::Obj(m)
     }
 }

@@ -2,11 +2,17 @@
 //! Zygarde runtime: harvester → capacitor → fragment-atomic execution with
 //! idempotent re-execution across power failures, limited-preemption
 //! scheduling at unit boundaries, deadline discard, and clock error.
+//!
+//! [`sweep`] layers a deterministic parallel scenario-sweep engine on top:
+//! declarative scenario matrices, seeded per-scenario RNG streams, fault
+//! injection, and thread-count-independent aggregated reports.
 
 pub mod engine;
 pub mod metrics;
+pub mod sweep;
 pub mod workload;
 
 pub use engine::{Engine, SimConfig};
 pub use metrics::Metrics;
-pub use workload::{task_from_network, WorkloadBuilder};
+pub use sweep::{Scenario, ScenarioMatrix, SweepReport};
+pub use workload::{synthetic_task, task_from_network, WorkloadBuilder};

@@ -1,0 +1,79 @@
+//! Per-scenario failure injection.
+//!
+//! Two fault channels, both riding on existing substrate models so a
+//! faulted scenario stays bitwise comparable to its baseline:
+//!
+//! * **Brownout bursts** — periodic forced-dark windows masked onto the
+//!   harvester output ([`BlackoutWindows`]): the capacitor drains through
+//!   them, forcing mid-fragment power failures and SONIC-style
+//!   re-execution.
+//! * **Post-reboot clock skew** — the scheduler reads a CHRT remanence
+//!   clock ([`ClockSpec::Chrt`]) whose per-outage read error follows the
+//!   published §8.7 distribution, instead of a perfect RTC.
+
+use crate::clock::ClockSpec;
+use crate::energy::harvester::BlackoutWindows;
+
+/// What goes wrong in one scenario. [`FaultPlan::none`] is the clean
+/// baseline (RTC, no bursts).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// Periodic brownout bursts masked onto the harvester, if any.
+    pub brownout: Option<BlackoutWindows>,
+    /// The clock the scheduler consults (skew source across reboots).
+    pub clock: ClockSpec,
+}
+
+impl FaultPlan {
+    /// Clean baseline: perfect clock, no injected outages.
+    pub fn none() -> Self {
+        FaultPlan { brownout: None, clock: ClockSpec::Rtc }
+    }
+
+    /// Add periodic brownout bursts: `duration_ms` of darkness every
+    /// `period_ms`, starting `offset_ms` into each period.
+    pub fn with_brownouts(mut self, period_ms: f64, duration_ms: f64, offset_ms: f64) -> Self {
+        self.brownout = Some(BlackoutWindows { period_ms, duration_ms, offset_ms });
+        self
+    }
+
+    /// Replace the scheduler's clock (post-reboot skew injection).
+    pub fn with_clock(mut self, clock: ClockSpec) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Short human label for report rows.
+    pub fn label(&self) -> String {
+        match self.brownout {
+            None => self.clock.name().to_string(),
+            Some(w) => format!(
+                "{}+burst{}of{}ms",
+                self.clock.name(),
+                w.duration_ms,
+                w.period_ms
+            ),
+        }
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clock::ChrtTier;
+
+    #[test]
+    fn labels_are_descriptive() {
+        assert_eq!(FaultPlan::none().label(), "rtc");
+        let f = FaultPlan::none()
+            .with_brownouts(1000.0, 250.0, 0.0)
+            .with_clock(ClockSpec::Chrt(ChrtTier::Tier3));
+        assert_eq!(f.label(), "chrt-t3+burst250of1000ms");
+    }
+}

@@ -1,0 +1,460 @@
+//! Deterministic parallel scenario sweeps.
+//!
+//! The paper's evaluation is a grid of intermittent-power scenarios —
+//! harvester profiles × capacitor sizes × schedulers × exit policies ×
+//! task mixes × seeds (§8, Tables 5–7). This module turns that grid into
+//! a first-class object:
+//!
+//! * [`ScenarioMatrix`] — a declarative cartesian product over the sweep
+//!   dimensions, expanded into self-contained [`Scenario`] specs.
+//! * [`runner::run_matrix`] — a multi-threaded runner (plain
+//!   `std::thread` chunked work queue, no external deps). Every scenario
+//!   derives its own RNG streams from `(matrix_seed, scenario_index)`, so
+//!   the resulting [`SweepReport`] is **bitwise identical regardless of
+//!   thread count or execution order** — a failing seed replays exactly
+//!   and becomes a regression test (see `rust/tests/sweep_determinism.rs`).
+//! * [`FaultPlan`] — per-scenario failure injection: brownout bursts
+//!   masked onto the harvester and post-reboot clock skew via the CHRT
+//!   remanence-clock models.
+//! * [`SweepReport`] — per-cell metrics plus aggregate summary statistics
+//!   (`util::stats`), serialized with `util::json`.
+//!
+//! Seed discipline: by default every scenario's engine seed is an
+//! independent function of `(matrix_seed, scenario_index)`
+//! ([`SeedPolicy::PerScenario`]). Comparison sweeps (scheduler A vs B on
+//! the *same* energy trace, RTC vs CHRT on the same outage pattern) use
+//! [`SeedPolicy::PairedEnvironment`]: the engine seed then depends only on
+//! the stream-generating dimensions (task mix, harvester, rep), so cells
+//! that differ only in scheduler / exit policy / fault plan / capacitor
+//! size see identical release and harvest streams.
+
+pub mod faults;
+pub mod report;
+pub mod runner;
+
+pub use faults::FaultPlan;
+pub use report::{CellResult, SummaryStats, SweepReport};
+pub use runner::{build_engine, default_threads, run_matrix, run_scenario, run_scenarios};
+
+use crate::coordinator::sched::{ExitPolicy, SchedulerKind};
+use crate::coordinator::task::TaskSpec;
+use crate::energy::harvester::{harvester_for, system, Harvester, HarvesterKind};
+use crate::sim::workload::synthetic_task;
+use crate::util::rng::Pcg32;
+
+/// Declarative harvester choice — a plain value a matrix can hold, built
+/// into a seeded [`Harvester`] per scenario.
+#[derive(Clone, Copy, Debug)]
+pub enum HarvesterSpec {
+    /// A Table 4 evaluation system (1–7): η-calibrated Markov burst
+    /// source (memoized calibration) or the persistent System 1.
+    System(usize),
+    /// Constant supply at the given power (η = 1).
+    Persistent { power_mw: f64 },
+    /// Explicit two-state Markov burst source with an offline-estimated η
+    /// (the deployment's `eta` the scheduler is told, not re-measured).
+    Markov { kind: HarvesterKind, on_power_mw: f64, q: f64, duty: f64, eta: f64 },
+}
+
+impl HarvesterSpec {
+    /// Build the seeded harvester and the η the energy manager reports.
+    pub fn build(&self, seed: u64) -> (Harvester, f64) {
+        match *self {
+            HarvesterSpec::System(id) => {
+                let sys = system(id);
+                (harvester_for(sys, seed), sys.eta)
+            }
+            HarvesterSpec::Persistent { power_mw } => (Harvester::persistent(power_mw), 1.0),
+            HarvesterSpec::Markov { kind, on_power_mw, q, duty, eta } => {
+                (Harvester::markov(kind, on_power_mw, q, duty, 1000.0, seed), eta)
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            HarvesterSpec::System(id) => format!("S{id}"),
+            HarvesterSpec::Persistent { power_mw } => format!("persistent{power_mw}mW"),
+            HarvesterSpec::Markov { kind, on_power_mw, duty, .. } => {
+                format!("{kind:?}{on_power_mw}mW@{duty}")
+            }
+        }
+    }
+}
+
+/// A named workload: the tasks one scenario simulates. Task ids are
+/// re-assigned to queue order on construction (the engine indexes
+/// per-task metrics by id).
+#[derive(Clone, Debug)]
+pub struct TaskMix {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl TaskMix {
+    pub fn from_tasks(name: impl Into<String>, mut tasks: Vec<TaskSpec>) -> Self {
+        assert!(!tasks.is_empty(), "task mix needs at least one task");
+        for (i, t) in tasks.iter_mut().enumerate() {
+            t.id = i;
+        }
+        TaskMix { name: name.into(), tasks }
+    }
+
+    /// Synthetic mix (no `artifacts/` required): `n_tasks` tasks of
+    /// `n_units` units each, with staggered periods (300, 500, 700, … ms)
+    /// and D = 2T, traces generated from `seed`.
+    pub fn synthetic(name: impl Into<String>, n_tasks: usize, n_units: usize, seed: u64) -> Self {
+        let tasks = (0..n_tasks)
+            .map(|i| {
+                let period_ms = 300.0 + 200.0 * i as f64;
+                synthetic_task(i, n_units, period_ms, 2.0 * period_ms, 40, seed)
+            })
+            .collect();
+        TaskMix::from_tasks(name, tasks)
+    }
+}
+
+/// How engine seeds are derived at expansion time (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedPolicy {
+    /// Seed = f(matrix_seed, scenario_index): every cell independent.
+    PerScenario,
+    /// Seed = f(matrix_seed, mix, harvester, rep): cells that differ only
+    /// in scheduler / exit policy / fault plan / capacitor size share
+    /// their environment's release and harvest streams (paired
+    /// comparisons — storage size changes what can be banked, not what
+    /// arrives).
+    PairedEnvironment,
+}
+
+/// One self-contained cell of a sweep: everything needed to build and run
+/// an engine, with no shared mutable state — the unit of parallelism.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Position in the matrix expansion (also this scenario's RNG stream).
+    pub index: usize,
+    pub matrix_seed: u64,
+    pub harvester: HarvesterSpec,
+    pub capacitor_mf: f64,
+    /// Start with a full capacitor (deployment harvesting before t = 0) or
+    /// cold (the Fig. 21 regime where the 470 mF unit pays its charge).
+    pub precharge: bool,
+    pub scheduler: SchedulerKind,
+    pub exit: ExitPolicy,
+    pub mix: TaskMix,
+    /// Index within the matrix's seed range.
+    pub rep: u64,
+    pub fault: FaultPlan,
+    pub duration_ms: f64,
+    pub queue_size: usize,
+    pub release_jitter: f64,
+    pub log_jobs: bool,
+    /// Derived per [`SeedPolicy`]; seeds the engine, harvester, and task
+    /// release jitter.
+    pub engine_seed: u64,
+}
+
+impl Scenario {
+    /// The scenario's own deterministic RNG stream, derived from
+    /// `(matrix_seed, scenario_index)`: identical no matter which thread
+    /// runs the scenario, or in what order.
+    pub fn stream(&self) -> Pcg32 {
+        Pcg32::new(self.matrix_seed, self.index as u64)
+    }
+
+    /// Human-readable cell label (stable across runs; used in reports).
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}mF/{}/{}/{}/r{}",
+            self.mix.name,
+            self.harvester.label(),
+            self.capacitor_mf,
+            self.scheduler.name(),
+            self.exit.name(),
+            self.fault.label(),
+            self.rep
+        )
+    }
+}
+
+/// Declarative cartesian product over sweep dimensions. Build with
+/// [`ScenarioMatrix::new`] plus the fluent setters, then [`expand`] or
+/// hand it to [`runner::run_matrix`].
+///
+/// Expansion order (outermost first): task mixes → harvesters →
+/// capacitors → schedulers → exit policies → fault plans → reps. The
+/// order is part of the format: scenario indices (and thus per-scenario
+/// RNG streams) depend on it.
+///
+/// [`expand`]: ScenarioMatrix::expand
+#[derive(Clone, Debug)]
+pub struct ScenarioMatrix {
+    pub name: String,
+    pub seed: u64,
+    pub harvesters: Vec<HarvesterSpec>,
+    pub capacitors_mf: Vec<f64>,
+    pub precharge: bool,
+    pub schedulers: Vec<SchedulerKind>,
+    /// `None` = the scheduler's paper-default exit policy.
+    pub exits: Vec<Option<ExitPolicy>>,
+    pub mixes: Vec<TaskMix>,
+    pub faults: Vec<FaultPlan>,
+    /// Seed range: reps 0..n_reps.
+    pub n_reps: u64,
+    pub duration_ms: f64,
+    pub queue_size: usize,
+    pub release_jitter: f64,
+    pub log_jobs: bool,
+    pub seed_policy: SeedPolicy,
+}
+
+impl ScenarioMatrix {
+    pub fn new(name: impl Into<String>, seed: u64) -> Self {
+        ScenarioMatrix {
+            name: name.into(),
+            seed,
+            harvesters: vec![HarvesterSpec::Persistent { power_mw: 600.0 }],
+            capacitors_mf: vec![50.0],
+            precharge: true,
+            schedulers: vec![SchedulerKind::Zygarde],
+            exits: vec![None],
+            mixes: vec![TaskMix::synthetic("default", 1, 3, seed)],
+            faults: vec![FaultPlan::none()],
+            n_reps: 1,
+            duration_ms: 30_000.0,
+            queue_size: 3,
+            release_jitter: 0.1,
+            log_jobs: false,
+            seed_policy: SeedPolicy::PerScenario,
+        }
+    }
+
+    pub fn harvesters(mut self, v: Vec<HarvesterSpec>) -> Self {
+        assert!(!v.is_empty());
+        self.harvesters = v;
+        self
+    }
+
+    pub fn capacitors_mf(mut self, v: Vec<f64>) -> Self {
+        assert!(!v.is_empty());
+        self.capacitors_mf = v;
+        self
+    }
+
+    pub fn precharge(mut self, yes: bool) -> Self {
+        self.precharge = yes;
+        self
+    }
+
+    pub fn schedulers(mut self, v: Vec<SchedulerKind>) -> Self {
+        assert!(!v.is_empty());
+        self.schedulers = v;
+        self
+    }
+
+    /// Fix explicit exit policies (one scenario per entry). The default
+    /// (`vec![None]`) uses each scheduler's paper-default policy.
+    pub fn exits(mut self, v: Vec<ExitPolicy>) -> Self {
+        assert!(!v.is_empty());
+        self.exits = v.into_iter().map(Some).collect();
+        self
+    }
+
+    pub fn mixes(mut self, v: Vec<TaskMix>) -> Self {
+        assert!(!v.is_empty());
+        self.mixes = v;
+        self
+    }
+
+    pub fn faults(mut self, v: Vec<FaultPlan>) -> Self {
+        assert!(!v.is_empty());
+        self.faults = v;
+        self
+    }
+
+    pub fn reps(mut self, n: u64) -> Self {
+        assert!(n > 0);
+        self.n_reps = n;
+        self
+    }
+
+    pub fn duration_ms(mut self, ms: f64) -> Self {
+        self.duration_ms = ms;
+        self
+    }
+
+    pub fn queue_size(mut self, n: usize) -> Self {
+        self.queue_size = n;
+        self
+    }
+
+    pub fn release_jitter(mut self, j: f64) -> Self {
+        self.release_jitter = j;
+        self
+    }
+
+    pub fn log_jobs(mut self, yes: bool) -> Self {
+        self.log_jobs = yes;
+        self
+    }
+
+    pub fn seed_policy(mut self, p: SeedPolicy) -> Self {
+        self.seed_policy = p;
+        self
+    }
+
+    /// Number of scenarios the matrix expands to.
+    pub fn len(&self) -> usize {
+        self.mixes.len()
+            * self.harvesters.len()
+            * self.capacitors_mf.len()
+            * self.schedulers.len()
+            * self.exits.len()
+            * self.faults.len()
+            * self.n_reps as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand into self-contained scenarios (documented dimension order).
+    pub fn expand(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut index = 0usize;
+        for (mix_i, mix) in self.mixes.iter().enumerate() {
+            for (h_i, harvester) in self.harvesters.iter().enumerate() {
+                for (c_i, &capacitor_mf) in self.capacitors_mf.iter().enumerate() {
+                    for &scheduler in &self.schedulers {
+                        for &exit_choice in &self.exits {
+                            for &fault in &self.faults {
+                                for rep in 0..self.n_reps {
+                                    let engine_seed = match self.seed_policy {
+                                        SeedPolicy::PerScenario => {
+                                            Pcg32::new(self.seed, index as u64).next_u64()
+                                        }
+                                        SeedPolicy::PairedEnvironment => {
+                                            // Only the stream-generating
+                                            // dims (mix, harvester, rep):
+                                            // identical harvest + release
+                                            // streams across scheduler /
+                                            // exit / fault / capacitor.
+                                            // Storage size does not alter
+                                            // what arrives, only what can
+                                            // be banked — so capacitor
+                                            // cells stay paired too.
+                                            let env = (mix_i * self.harvesters.len()
+                                                + h_i)
+                                                as u64
+                                                * self.n_reps
+                                                + rep;
+                                            Pcg32::new(self.seed, env).next_u64()
+                                        }
+                                    };
+                                    out.push(Scenario {
+                                        index,
+                                        matrix_seed: self.seed,
+                                        harvester: *harvester,
+                                        capacitor_mf,
+                                        precharge: self.precharge,
+                                        scheduler,
+                                        exit: exit_choice
+                                            .unwrap_or_else(|| scheduler.default_exit()),
+                                        mix: mix.clone(),
+                                        rep,
+                                        fault,
+                                        duration_ms: self.duration_ms,
+                                        queue_size: self.queue_size,
+                                        release_jitter: self.release_jitter,
+                                        log_jobs: self.log_jobs,
+                                        engine_seed,
+                                    });
+                                    index += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_by_two() -> ScenarioMatrix {
+        ScenarioMatrix::new("t", 99)
+            .harvesters(vec![
+                HarvesterSpec::Persistent { power_mw: 600.0 },
+                HarvesterSpec::Persistent { power_mw: 100.0 },
+            ])
+            .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+            .reps(3)
+    }
+
+    #[test]
+    fn expansion_counts_and_indices() {
+        let m = two_by_two();
+        assert_eq!(m.len(), 2 * 2 * 3);
+        let sc = m.expand();
+        assert_eq!(sc.len(), 12);
+        for (i, s) in sc.iter().enumerate() {
+            assert_eq!(s.index, i);
+        }
+        // Labels are unique across the expansion.
+        let mut labels: Vec<String> = sc.iter().map(|s| s.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 12);
+    }
+
+    #[test]
+    fn per_scenario_seeds_differ() {
+        let sc = two_by_two().expand();
+        let mut seeds: Vec<u64> = sc.iter().map(|s| s.engine_seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 12, "independent cells must not share seeds");
+    }
+
+    #[test]
+    fn paired_environment_shares_seeds_across_schedulers() {
+        let sc = two_by_two().seed_policy(SeedPolicy::PairedEnvironment).expand();
+        // Same (harvester, rep), different scheduler → same engine seed.
+        for s in &sc {
+            let twin = sc
+                .iter()
+                .find(|o| {
+                    o.index != s.index
+                        && o.rep == s.rep
+                        && o.harvester.label() == s.harvester.label()
+                })
+                .expect("each cell has a scheduler twin");
+            assert_eq!(twin.engine_seed, s.engine_seed);
+        }
+        // Different rep → different seed.
+        assert_ne!(sc[0].engine_seed, sc[1].engine_seed);
+    }
+
+    #[test]
+    fn scenario_streams_are_index_stable() {
+        let sc = two_by_two().expand();
+        let mut a = sc[5].stream();
+        let mut b = sc[5].clone().stream();
+        assert_eq!(a.next_u64(), b.next_u64());
+        let mut c = sc[6].stream();
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn exit_defaults_follow_scheduler() {
+        let sc = ScenarioMatrix::new("d", 1)
+            .schedulers(vec![SchedulerKind::Edf, SchedulerKind::Zygarde])
+            .expand();
+        assert_eq!(sc[0].exit, ExitPolicy::None);
+        assert_eq!(sc[1].exit, ExitPolicy::Utility);
+    }
+}

@@ -1,0 +1,189 @@
+//! Aggregated sweep results: per-cell metrics plus summary statistics,
+//! serializable with the in-crate JSON writer.
+//!
+//! The JSON form is the determinism contract: two runs of the same matrix
+//! must produce byte-identical [`SweepReport::json_string`] output no
+//! matter the thread count. Seeds are serialized as decimal *strings*
+//! (u64 does not fit f64's exact-integer range).
+
+use std::collections::BTreeMap;
+
+use crate::sim::metrics::Metrics;
+use crate::util::json::Value;
+use crate::util::stats::Online;
+
+/// One executed scenario's outcome.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Scenario index in the matrix expansion.
+    pub index: usize,
+    /// Stable human-readable cell label (mix/harvester/cap/sched/…).
+    pub label: String,
+    pub engine_seed: u64,
+    pub metrics: Metrics,
+}
+
+impl CellResult {
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("index".to_string(), Value::Num(self.index as f64));
+        m.insert("label".to_string(), Value::Str(self.label.clone()));
+        m.insert("engine_seed".to_string(), Value::Str(self.engine_seed.to_string()));
+        m.insert("metrics".to_string(), self.metrics.to_json());
+        Value::Obj(m)
+    }
+}
+
+/// Aggregate statistics over every cell (totals for counters; Welford
+/// moments over the per-cell rates via `util::stats::Online`).
+#[derive(Clone, Debug, Default)]
+pub struct SummaryStats {
+    pub released: u64,
+    pub capture_missed: u64,
+    pub queue_dropped: u64,
+    pub scheduled: u64,
+    pub correct: u64,
+    pub deadline_missed: u64,
+    pub reboots: u64,
+    pub refragments: u64,
+    pub harvested_mj: f64,
+    pub wasted_mj: f64,
+    pub scheduled_rate_mean: f64,
+    pub scheduled_rate_std: f64,
+    pub scheduled_rate_min: f64,
+    pub scheduled_rate_max: f64,
+    pub accuracy_mean: f64,
+}
+
+impl SummaryStats {
+    fn from_cells(cells: &[CellResult]) -> Self {
+        let mut s = SummaryStats::default();
+        let mut rate = Online::new();
+        let mut acc = Online::new();
+        for c in cells {
+            let m = &c.metrics;
+            s.released += m.released;
+            s.capture_missed += m.capture_missed;
+            s.queue_dropped += m.queue_dropped;
+            s.scheduled += m.scheduled;
+            s.correct += m.correct;
+            s.deadline_missed += m.deadline_missed;
+            s.reboots += m.reboots;
+            s.refragments += m.refragments;
+            s.harvested_mj += m.harvested_mj;
+            s.wasted_mj += m.wasted_mj;
+            rate.push(m.event_scheduled_rate());
+            acc.push(m.accuracy());
+        }
+        if rate.count() > 0 {
+            s.scheduled_rate_mean = rate.mean();
+            s.scheduled_rate_std = rate.std();
+            s.scheduled_rate_min = rate.min();
+            s.scheduled_rate_max = rate.max();
+            s.accuracy_mean = acc.mean();
+        }
+        s
+    }
+
+    fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Value::Num(v));
+        };
+        num("released", self.released as f64);
+        num("capture_missed", self.capture_missed as f64);
+        num("queue_dropped", self.queue_dropped as f64);
+        num("scheduled", self.scheduled as f64);
+        num("correct", self.correct as f64);
+        num("deadline_missed", self.deadline_missed as f64);
+        num("reboots", self.reboots as f64);
+        num("refragments", self.refragments as f64);
+        num("harvested_mj", self.harvested_mj);
+        num("wasted_mj", self.wasted_mj);
+        num("scheduled_rate_mean", self.scheduled_rate_mean);
+        num("scheduled_rate_std", self.scheduled_rate_std);
+        num("scheduled_rate_min", self.scheduled_rate_min);
+        num("scheduled_rate_max", self.scheduled_rate_max);
+        num("accuracy_mean", self.accuracy_mean);
+        Value::Obj(m)
+    }
+}
+
+/// The result of running a whole [`super::ScenarioMatrix`].
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub matrix_name: String,
+    pub matrix_seed: u64,
+    pub n_scenarios: usize,
+    /// In matrix-expansion order (sorted by scenario index), regardless of
+    /// which thread finished which cell first.
+    pub cells: Vec<CellResult>,
+    pub summary: SummaryStats,
+}
+
+impl SweepReport {
+    pub fn new(matrix_name: &str, matrix_seed: u64, cells: Vec<CellResult>) -> Self {
+        debug_assert!(cells.windows(2).all(|w| w[0].index < w[1].index));
+        let summary = SummaryStats::from_cells(&cells);
+        SweepReport {
+            matrix_name: matrix_name.to_string(),
+            matrix_seed,
+            n_scenarios: cells.len(),
+            cells,
+            summary,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("matrix".to_string(), Value::Str(self.matrix_name.clone()));
+        m.insert("matrix_seed".to_string(), Value::Str(self.matrix_seed.to_string()));
+        m.insert("n_scenarios".to_string(), Value::Num(self.n_scenarios as f64));
+        m.insert(
+            "cells".to_string(),
+            Value::Arr(self.cells.iter().map(|c| c.to_json()).collect()),
+        );
+        m.insert("summary".to_string(), self.summary.to_json());
+        Value::Obj(m)
+    }
+
+    /// Canonical serialized form — the byte string the determinism tests
+    /// compare across thread counts.
+    pub fn json_string(&self) -> String {
+        self.to_json().to_json()
+    }
+
+    /// Console table, one row per cell.
+    pub fn print(&self) {
+        println!(
+            "\n== sweep `{}` (seed {}, {} scenarios) ==",
+            self.matrix_name, self.matrix_seed, self.n_scenarios
+        );
+        println!(
+            "{:<52} {:>9} {:>9} {:>9} {:>8} {:>8}",
+            "scenario", "released", "sched%", "correct%", "missed", "reboots"
+        );
+        for c in &self.cells {
+            let m = &c.metrics;
+            println!(
+                "{:<52} {:>9} {:>8.1}% {:>8.1}% {:>8} {:>8}",
+                c.label,
+                m.released,
+                100.0 * m.event_scheduled_rate(),
+                100.0 * m.event_correct_rate(),
+                m.deadline_missed,
+                m.reboots
+            );
+        }
+        println!(
+            "summary: scheduled {}/{} (rate mean {:.3} ± {:.3}, min {:.3}, max {:.3}), accuracy mean {:.3}",
+            self.summary.scheduled,
+            self.summary.released,
+            self.summary.scheduled_rate_mean,
+            self.summary.scheduled_rate_std,
+            self.summary.scheduled_rate_min,
+            self.summary.scheduled_rate_max,
+            self.summary.accuracy_mean
+        );
+    }
+}

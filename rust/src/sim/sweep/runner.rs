@@ -1,0 +1,182 @@
+//! Multi-threaded sweep execution.
+//!
+//! Plain `std::thread::scope` workers pulling fixed-size chunks off an
+//! atomic work-queue cursor. Determinism does not depend on scheduling:
+//! each [`Scenario`] is self-contained (own engine, own RNG streams
+//! derived from `(matrix_seed, scenario_index)`), results are written back
+//! by scenario index, and the only cross-thread state — the harvester
+//! calibration memo — caches a pure function.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::priority::PriorityParams;
+use crate::coordinator::sched::Scheduler;
+use crate::energy::capacitor::Capacitor;
+use crate::energy::manager::EnergyManager;
+use crate::sim::engine::{Engine, SimConfig};
+
+use super::report::{CellResult, SweepReport};
+use super::{Scenario, ScenarioMatrix};
+
+/// Scenarios per work-queue grab: big enough to amortize the atomic,
+/// small enough to load-balance uneven cells (a 470 mF cold-start cell
+/// can run 10× longer than a 1 mF one).
+const CHUNK: usize = 4;
+
+/// Worker count to use when the caller has no preference.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Assemble the engine for one scenario. Public so tests can attach a
+/// probe or inspect the configuration before running; sweep execution
+/// goes through [`run_scenario`].
+pub fn build_engine(sc: &Scenario) -> Engine {
+    // Scenario-local stream: consumed only for per-scenario derived seeds,
+    // never shared across cells. The first draw is skipped — under
+    // SeedPolicy::PerScenario it IS the engine seed, and the clock must
+    // not replay the same random sequence as the harvester and engine.
+    let mut stream = sc.stream();
+    let _engine_seed_draw = stream.next_u64();
+    let clock_seed = stream.next_u64();
+
+    let (harvester, eta) = sc.harvester.build(sc.engine_seed);
+    let harvester = match sc.fault.brownout {
+        Some(w) => harvester.with_blackouts(w),
+        None => harvester,
+    };
+
+    let mut cap = Capacitor::new(sc.capacitor_mf * 1e-3, 3.3, 2.8, 1.9);
+    if sc.precharge {
+        cap.charge(1e9, 1000.0);
+    }
+
+    let tasks = sc.mix.tasks.clone();
+    // E_man: the largest atomic fragment's energy (same rule as
+    // exp::common::engine_for). Scale parameters for ζ come from the mix.
+    let e_man = tasks
+        .iter()
+        .flat_map(|t| (0..t.n_units()).map(|u| t.fragment_energy_mj(u)))
+        .fold(0.0f64, f64::max);
+    let max_deadline = tasks.iter().map(|t| t.deadline_ms).fold(0.0f64, f64::max);
+    let max_utility = tasks
+        .iter()
+        .flat_map(|t| t.traces.iter())
+        .flat_map(|tr| tr.units.iter().map(|u| u.gap as f64))
+        .fold(1.0f64, f64::max);
+
+    let energy = EnergyManager::new(cap, harvester, eta, e_man);
+    let params = PriorityParams::new(max_deadline, max_utility);
+    Engine::new(
+        SimConfig {
+            duration_ms: sc.duration_ms,
+            queue_size: sc.queue_size,
+            seed: sc.engine_seed,
+            release_jitter: sc.release_jitter,
+            log_jobs: sc.log_jobs,
+            ..Default::default()
+        },
+        tasks,
+        Scheduler::new(sc.scheduler, params),
+        sc.exit,
+        energy,
+        sc.fault.clock.build(clock_seed),
+    )
+}
+
+/// Run one scenario to completion (a pure function of the scenario).
+pub fn run_scenario(sc: &Scenario) -> CellResult {
+    let metrics = build_engine(sc).run();
+    CellResult {
+        index: sc.index,
+        label: sc.label(),
+        engine_seed: sc.engine_seed,
+        metrics,
+    }
+}
+
+/// Run a scenario list on `threads` workers; results come back in
+/// scenario-index order regardless of completion order.
+pub fn run_scenarios(scenarios: &[Scenario], threads: usize) -> Vec<CellResult> {
+    let threads = threads.max(1).min(scenarios.len().max(1));
+    if threads <= 1 {
+        return scenarios.iter().map(run_scenario).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<CellResult>> = (0..scenarios.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let start = next.fetch_add(CHUNK, Ordering::Relaxed);
+                        if start >= scenarios.len() {
+                            break;
+                        }
+                        let end = (start + CHUNK).min(scenarios.len());
+                        for i in start..end {
+                            local.push((i, run_scenario(&scenarios[i])));
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("sweep worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|c| c.expect("work queue covered every scenario"))
+        .collect()
+}
+
+/// Expand and run a whole matrix.
+pub fn run_matrix(matrix: &ScenarioMatrix, threads: usize) -> SweepReport {
+    let scenarios = matrix.expand();
+    let cells = run_scenarios(&scenarios, threads);
+    SweepReport::new(&matrix.name, matrix.seed, cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::sweep::{HarvesterSpec, ScenarioMatrix};
+    use crate::coordinator::sched::SchedulerKind;
+
+    fn tiny_matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new("runner-test", 0xBEEF)
+            .harvesters(vec![HarvesterSpec::Persistent { power_mw: 600.0 }])
+            .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+            .reps(2)
+            .duration_ms(5_000.0)
+    }
+
+    #[test]
+    fn single_thread_runs_all_cells() {
+        let r = run_matrix(&tiny_matrix(), 1);
+        assert_eq!(r.n_scenarios, 4);
+        assert!(r.summary.released > 0);
+        for c in &r.cells {
+            assert!(c.metrics.released > 0, "{}: nothing released", c.label);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let m = tiny_matrix();
+        let a = run_matrix(&m, 1).json_string();
+        let b = run_matrix(&m, 3).json_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn more_threads_than_scenarios_is_fine() {
+        let r = run_matrix(&tiny_matrix(), 64);
+        assert_eq!(r.cells.len(), 4);
+    }
+}

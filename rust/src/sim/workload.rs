@@ -6,7 +6,8 @@ use std::sync::Arc;
 
 use crate::coordinator::task::TaskSpec;
 use crate::dnn::network::Network;
-use crate::dnn::trace::{compute_traces, SampleTrace};
+use crate::dnn::trace::{compute_traces, SampleTrace, UnitOutcome};
+use crate::util::rng::Pcg32;
 
 /// Build a task for `net` with period T and relative deadline D (ms).
 /// Traces default to the network's own test set.
@@ -28,6 +29,61 @@ pub fn task_from_network(
         unit_fragments: net.meta.layers.iter().map(|l| l.n_fragments).collect(),
         release_energy_mj: net.meta.cost.job_generator_energy_mj,
         traces,
+        imprecise: true,
+    }
+}
+
+/// Synthetic [`TaskSpec`] fallback: an L-unit agile DNN whose unit traces
+/// are generated from a seeded [`Pcg32`] instead of a compiled network, so
+/// the sweep engine and its tests run without `artifacts/`. Deterministic
+/// in `(seed, id)`. The trace model mirrors the real networks' shape:
+/// per-sample difficulty drives the exit depth (easy samples pass the
+/// utility test early), exited units predict well (92 % correct), and
+/// pre-exit units are barely better than chance.
+pub fn synthetic_task(
+    id: usize,
+    n_units: usize,
+    period_ms: f64,
+    deadline_ms: f64,
+    n_traces: usize,
+    seed: u64,
+) -> TaskSpec {
+    assert!(n_units > 0 && n_traces > 0);
+    let mut rng = Pcg32::new(seed, id as u64);
+    let n_classes = 4i32;
+    let mut traces = Vec::with_capacity(n_traces);
+    for _ in 0..n_traces {
+        let label = rng.below(n_classes as u64) as i32;
+        let difficulty = rng.f64();
+        let exit_unit = ((difficulty * n_units as f64) as usize).min(n_units - 1);
+        let units: Vec<UnitOutcome> = (0..n_units)
+            .map(|u| {
+                let exited = u >= exit_unit;
+                let correct = if exited { rng.chance(0.92) } else { rng.chance(0.55) };
+                UnitOutcome {
+                    gap: if exited { 5.0 + 5.0 * rng.f32() } else { 2.0 * rng.f32() },
+                    pred: if correct { label } else { (label + 1) % n_classes },
+                    exit: u == exit_unit,
+                    correct,
+                }
+            })
+            .collect();
+        let oracle_unit = units.iter().position(|u| u.correct);
+        traces.push(SampleTrace { label, units, exit_unit, oracle_unit });
+    }
+    TaskSpec {
+        id,
+        name: format!("synthetic{id}"),
+        period_ms,
+        deadline_ms,
+        // 20 ms / 2 mJ units in 4 fragments: a 100 mW active draw, the
+        // same scale the engine unit tests use, so intermittency bites
+        // under the weak harvesters.
+        unit_time_ms: vec![20.0; n_units],
+        unit_energy_mj: vec![2.0; n_units],
+        unit_fragments: vec![4; n_units],
+        release_energy_mj: 0.05,
+        traces: Arc::new(traces),
         imprecise: true,
     }
 }
@@ -74,6 +130,38 @@ impl Default for WorkloadBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_task_is_deterministic_and_well_formed() {
+        let a = synthetic_task(0, 3, 300.0, 600.0, 40, 42);
+        let b = synthetic_task(0, 3, 300.0, 600.0, 40, 42);
+        assert_eq!(a.traces.len(), 40);
+        for (ta, tb) in a.traces.iter().zip(b.traces.iter()) {
+            assert_eq!(ta.label, tb.label);
+            assert_eq!(ta.exit_unit, tb.exit_unit);
+            for (ua, ub) in ta.units.iter().zip(tb.units.iter()) {
+                assert_eq!(ua.pred, ub.pred);
+                assert_eq!(ua.exit, ub.exit);
+                assert_eq!(ua.gap, ub.gap);
+            }
+        }
+        let c = synthetic_task(0, 3, 300.0, 600.0, 40, 43);
+        assert!(
+            a.traces.iter().zip(c.traces.iter()).any(|(x, y)| x.label != y.label
+                || x.exit_unit != y.exit_unit),
+            "different seeds should give different traces"
+        );
+        for t in a.traces.iter() {
+            assert_eq!(t.units.len(), 3);
+            assert_eq!(t.units.iter().filter(|u| u.exit).count(), 1);
+            assert_eq!(t.units[t.exit_unit].exit, true);
+            for u in &t.units {
+                // `correct` is consistent with pred-vs-label.
+                assert_eq!(u.correct, u.pred == t.label);
+            }
+        }
+        assert!(a.wcet_ms() == 60.0);
+    }
 
     #[test]
     fn builds_task_from_real_network() {

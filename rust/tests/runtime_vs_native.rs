@@ -2,6 +2,10 @@
 //! (which embed the Pallas kernels) must agree element-wise with the
 //! pure-Rust native forward — this closes the loop across all three
 //! layers: Pallas kernel (L1) → jax unit (L2) → rust runtime (L3).
+//!
+//! Gated on the `pjrt` feature: without it `runtime::Runtime` is a stub
+//! and there is nothing to cross-check.
+#![cfg(feature = "pjrt")]
 
 use zygarde::dnn::kmeans::Scratch;
 use zygarde::dnn::network::Network;

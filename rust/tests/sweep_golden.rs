@@ -1,0 +1,115 @@
+//! Golden-output integration test: a fixed-seed synthetic workload (no
+//! `artifacts/` required) whose summary metrics are checked against
+//! expected values derived *independently* from the workload's own traces
+//! — released/scheduled counts, correctness, latency sums, and unit
+//! split are all computable by hand for this configuration — plus a
+//! bless-style JSON snapshot for full-precision regression coverage.
+//!
+//! The configuration is chosen so the arithmetic is exact: persistent
+//! power (never browns out), zero release jitter (releases at t = 300k ms
+//! exactly), EDF with no early exit (every unit of every job runs), and a
+//! 30 s horizon → exactly 100 jobs, each executing 3 × 20 ms units
+//! back-to-back starting at its release.
+
+use zygarde::coordinator::sched::{ExitPolicy, SchedulerKind};
+use zygarde::sim::sweep::{run_matrix, HarvesterSpec, ScenarioMatrix, TaskMix};
+use zygarde::sim::workload::synthetic_task;
+
+const GOLDEN_SEED: u64 = 0x601D;
+const N_TRACES: usize = 40;
+const N_JOBS: usize = 100;
+
+fn golden_matrix() -> (zygarde::coordinator::task::TaskSpec, ScenarioMatrix) {
+    // 3 units × 20 ms × 2 mJ in 4 fragments; T = 300 ms, D = 600 ms.
+    let task = synthetic_task(0, 3, 300.0, 600.0, N_TRACES, GOLDEN_SEED);
+    let matrix = ScenarioMatrix::new("golden-small", GOLDEN_SEED)
+        .mixes(vec![TaskMix::from_tasks("golden", vec![task.clone()])])
+        .harvesters(vec![HarvesterSpec::Persistent { power_mw: 600.0 }])
+        .capacitors_mf(vec![50.0])
+        .schedulers(vec![SchedulerKind::Edf])
+        .exits(vec![ExitPolicy::None])
+        .release_jitter(0.0)
+        .duration_ms(30_000.0);
+    (task, matrix)
+}
+
+#[test]
+fn golden_summary_matches_first_principles() {
+    let (task, matrix) = golden_matrix();
+    let report = run_matrix(&matrix, 2);
+    assert_eq!(report.n_scenarios, 1);
+    let m = &report.cells[0].metrics;
+
+    // Releases at t = 0, 300, …, 29 700: exactly 100 jobs, all of which
+    // finish 60 ms after release — far inside D = 600 ms — on a supply
+    // that never fails.
+    assert_eq!(m.released, N_JOBS as u64);
+    assert_eq!(m.scheduled, N_JOBS as u64);
+    assert_eq!(m.deadline_missed, 0);
+    assert_eq!(m.capture_missed, 0);
+    assert_eq!(m.queue_dropped, 0);
+    assert_eq!(m.reboots, 1, "persistent supply boots once and stays up");
+
+    // EDF + ExitPolicy::None runs every unit of every job: job k uses
+    // trace k mod 40 (the engine cycles traces round-robin).
+    assert_eq!(m.mandatory_units + m.optional_units, 3 * N_JOBS as u64);
+    assert_eq!(m.fragments, 4 * 3 * N_JOBS as u64);
+    assert_eq!(m.refragments, 0);
+
+    // Independent derivations from the trace set -----------------------
+
+    // Final prediction = last unit's prediction (all units execute).
+    let expected_correct = (0..N_JOBS)
+        .filter(|k| task.traces[k % N_TRACES].units.last().unwrap().correct)
+        .count() as u64;
+    assert_eq!(m.correct, expected_correct);
+
+    // The mandatory part of job k spans units 0..=exit_unit, so its
+    // latency (release → mandatory done) is 20 ms × (exit_unit + 1) and
+    // units at indices > exit_unit execute as optional refinements.
+    let expected_latency: f64 = (0..N_JOBS)
+        .map(|k| 20.0 * (task.traces[k % N_TRACES].exit_unit as f64 + 1.0))
+        .sum();
+    assert!(
+        (m.latency_sum_ms - expected_latency).abs() < 1e-6,
+        "latency {} != expected {expected_latency}",
+        m.latency_sum_ms
+    );
+    let expected_mandatory: u64 = (0..N_JOBS)
+        .map(|k| task.traces[k % N_TRACES].exit_unit as u64 + 1)
+        .sum();
+    assert_eq!(m.mandatory_units, expected_mandatory);
+    assert_eq!(m.optional_units, 3 * N_JOBS as u64 - expected_mandatory);
+
+    // Sanity on the derived quantities themselves: the synthetic trace
+    // generator is deterministic, so these are fixed for GOLDEN_SEED.
+    assert!(expected_correct >= (N_JOBS / 2) as u64, "traces mostly correct");
+    assert!((m.sim_time_ms - 30_000.0).abs() < 1e-9);
+}
+
+/// Full-precision snapshot (bless pattern): the first run writes
+/// `rust/tests/golden/sweep_small.json`; later runs must reproduce it
+/// byte-for-byte. Delete the file (or set UPDATE_GOLDEN=1) to re-bless
+/// after an intentional engine change — and say so in the commit.
+#[test]
+fn golden_json_snapshot_is_stable() {
+    let (_task, matrix) = golden_matrix();
+    let json = run_matrix(&matrix, 1).json_string();
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/sweep_small.json");
+    let bless = std::env::var("UPDATE_GOLDEN").as_deref() == Ok("1") || !path.exists();
+    if bless {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &json).unwrap();
+        eprintln!("blessed golden snapshot at {}", path.display());
+        return;
+    }
+    let recorded = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        recorded, json,
+        "sweep output drifted from the blessed snapshot at {} — if the \
+         engine change is intentional, re-bless with UPDATE_GOLDEN=1",
+        path.display()
+    );
+}

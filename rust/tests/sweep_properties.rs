@@ -1,0 +1,166 @@
+//! Property-based tests over sweep invariants, using the in-crate
+//! `util::prop` harness (seed overridable via PROP_SEED). Each case is a
+//! randomly generated single-scenario matrix — random harvester, capacitor,
+//! scheduler, queue size, fault plan — run to completion:
+//!
+//! 1. capacitor energy never goes negative (and never exceeds capacity),
+//! 2. no job is counted as scheduled after its deadline,
+//! 3. fragment re-execution never double-counts completed work.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::energy::harvester::HarvesterKind;
+use zygarde::sim::sweep::{
+    build_engine, FaultPlan, HarvesterSpec, Scenario, ScenarioMatrix, TaskMix,
+};
+use zygarde::util::prop::{forall, Config, Size};
+use zygarde::util::rng::Pcg32;
+
+/// Fragments per unit in `synthetic_task` workloads (its cost model).
+const FRAGS_PER_UNIT: u64 = 4;
+
+fn random_scenario(rng: &mut Pcg32, size: Size) -> Scenario {
+    let n_tasks = 1 + rng.below(2) as usize;
+    let n_units = 1 + rng.below(3) as usize;
+    let scheduler = *rng.choice(&[
+        SchedulerKind::Zygarde,
+        SchedulerKind::Edf,
+        SchedulerKind::EdfMandatory,
+        SchedulerKind::RoundRobin,
+    ]);
+    let capacitor_mf = *rng.choice(&[1.0, 5.0, 50.0]);
+    let harvester = if rng.chance(0.3) {
+        HarvesterSpec::Persistent { power_mw: 200.0 + rng.f64() * 400.0 }
+    } else {
+        HarvesterSpec::Markov {
+            kind: HarvesterKind::Rf,
+            on_power_mw: 40.0 + rng.f64() * 160.0,
+            q: 0.7 + rng.f64() * 0.25,
+            duty: 0.3 + rng.f64() * 0.6,
+            eta: 0.3 + rng.f64() * 0.6,
+        }
+    };
+    let fault = if rng.chance(0.5) {
+        FaultPlan::none()
+    } else {
+        FaultPlan::none().with_brownouts(
+            500.0 + rng.f64() * 2000.0,
+            rng.f64() * 500.0,
+            rng.f64() * 300.0,
+        )
+    };
+    ScenarioMatrix::new("prop", rng.next_u64())
+        .mixes(vec![TaskMix::synthetic("m", n_tasks, n_units, rng.next_u64())])
+        .harvesters(vec![harvester])
+        .capacitors_mf(vec![capacitor_mf])
+        .schedulers(vec![scheduler])
+        .faults(vec![fault])
+        .precharge(rng.chance(0.7))
+        .queue_size(1 + rng.below(3) as usize)
+        .duration_ms(2_000.0 + 1_000.0 * size.0.min(6) as f64)
+        .log_jobs(true)
+        .expand()
+        .pop()
+        .unwrap()
+}
+
+fn cfg() -> Config {
+    Config { iters: 48, ..Default::default() }
+}
+
+#[test]
+fn capacitor_energy_never_negative() {
+    forall("capacitor-energy-in-bounds", cfg(), random_scenario, |sc| {
+        let mut engine = build_engine(sc);
+        let cap_mj = engine.energy.capacitor.capacity_mj();
+        let min_seen = Rc::new(Cell::new(f64::INFINITY));
+        let over_cap = Rc::new(Cell::new(false));
+        {
+            let min_seen = min_seen.clone();
+            let over_cap = over_cap.clone();
+            engine.probe = Some(Box::new(move |_t, em, _m| {
+                let e = em.capacitor.energy_mj();
+                if e < min_seen.get() {
+                    min_seen.set(e);
+                }
+                if e > cap_mj * (1.0 + 1e-9) {
+                    over_cap.set(true);
+                }
+            }));
+        }
+        let _ = engine.run();
+        if min_seen.get() < -1e-9 {
+            return Err(format!("capacitor energy went negative: {}", min_seen.get()));
+        }
+        if over_cap.get() {
+            return Err("capacitor energy exceeded capacity".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn no_job_counted_scheduled_after_deadline() {
+    forall("scheduled-implies-on-time", cfg(), random_scenario, |sc| {
+        let m = build_engine(sc).run();
+        for r in &m.job_log {
+            if r.counted_scheduled {
+                match r.mandatory_done_at {
+                    Some(at) if at <= r.deadline_ms + 1e-9 => {}
+                    other => {
+                        return Err(format!(
+                            "job of task {} counted scheduled with mandatory_done_at \
+                             {other:?} vs deadline {}",
+                            r.task, r.deadline_ms
+                        ))
+                    }
+                }
+            }
+        }
+        // The audit trail and the counter must agree exactly.
+        let counted = m.job_log.iter().filter(|r| r.counted_scheduled).count() as u64;
+        if counted != m.scheduled {
+            return Err(format!(
+                "job_log says {counted} scheduled, counter says {}",
+                m.scheduled
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fragment_reexecution_never_double_counts() {
+    forall("fragment-accounting", cfg(), random_scenario, |sc| {
+        let m = build_engine(sc).run();
+        if m.refragments > m.fragments {
+            return Err("more re-executions than attempts".to_string());
+        }
+        let successful = m.fragments - m.refragments;
+        let units = m.mandatory_units + m.optional_units;
+        // Every completed unit consumed exactly FRAGS_PER_UNIT successful
+        // fragments; re-executed (lost) fragments must not be credited.
+        if successful < units * FRAGS_PER_UNIT {
+            return Err(format!(
+                "completed units claim more successful fragments than ran: \
+                 successful={successful} units={units}"
+            ));
+        }
+        // Successes beyond completed units are partial in-flight unit
+        // progress: strictly less than one unit's worth per released job.
+        if successful >= (units + m.released + 1) * FRAGS_PER_UNIT {
+            return Err(format!(
+                "fragment successes double-counted: successful={successful} \
+                 units={units} released={}",
+                m.released
+            ));
+        }
+        // Every released job is scheduled, missed, dropped, or in-queue.
+        if m.scheduled + m.deadline_missed + m.queue_dropped > m.released {
+            return Err(format!("job accounting identity violated: {m:?}"));
+        }
+        Ok(())
+    });
+}
