@@ -1,19 +1,35 @@
 //! Sweep-engine throughput: scenarios/sec at 1, 2, 4, and 8 threads over
 //! a synthetic 96-scenario matrix (no artifacts needed), cross-checking
-//! that every thread count produces the byte-identical report.
+//! that every thread count produces the byte-identical report, plus a
+//! per-NVM-commit-policy throughput section (the commit path is on the
+//! engine's hot loop).
 //!
 //! Run with `cargo bench --bench bench_sweep`. Scale the workload with
 //! SWEEP_BENCH_REPS (default 4 reps → 96 scenarios) and
 //! SWEEP_BENCH_DURATION_MS (default 20000 ms of simulated time per cell).
+//!
+//! Emits a machine-readable `BENCH_sweep.json` (path overridable via
+//! SWEEP_BENCH_JSON) so the perf trajectory is tracked across PRs.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use zygarde::coordinator::sched::SchedulerKind;
 use zygarde::energy::harvester::HarvesterKind;
+use zygarde::nvm::NvmSpec;
 use zygarde::sim::sweep::{run_matrix, FaultPlan, HarvesterSpec, ScenarioMatrix, TaskMix};
+use zygarde::util::json::Value;
 
 fn env_u64(key: &str, default: u64) -> u64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
 }
 
 fn main() {
@@ -52,24 +68,91 @@ fn main() {
     let n = matrix.len();
     println!("bench-sweep: {n} scenarios × {duration_ms} ms simulated each\n");
 
-    let mut runs: Vec<(usize, f64, String)> = Vec::new();
+    let mut runs: Vec<(usize, f64, f64, String)> = Vec::new();
     for &threads in &[1usize, 2, 4, 8] {
         let t0 = Instant::now();
         let report = run_matrix(&matrix, threads);
         let dt = t0.elapsed().as_secs_f64();
         let rate = n as f64 / dt;
-        let speedup = rate / runs.first().map(|(_, r1, _)| *r1).unwrap_or(rate);
+        let speedup = rate / runs.first().map(|(_, r1, _, _)| *r1).unwrap_or(rate);
         println!(
             "threads {threads}: {:>8.1} scenarios/s  ({dt:.3} s total, {speedup:.2}x vs 1 thread)",
             rate
         );
-        runs.push((threads, rate, report.json_string()));
+        runs.push((threads, rate, dt, report.json_string()));
     }
-    let reference = &runs[0].2;
-    for (threads, _, json) in &runs[1..] {
+    let reference = runs[0].3.clone();
+    for (threads, _, _, json) in &runs[1..] {
         assert_eq!(
-            reference, json,
+            &reference, json,
             "thread count {threads} changed the report — determinism broken"
         );
     }
+
+    // --- NVM commit-policy rows: the commit path rides the fragment hot
+    // loop, so per-policy throughput is tracked alongside the thread scaling.
+    println!();
+    let policies = [
+        NvmSpec::ideal(),
+        NvmSpec::fram_every_fragment(),
+        NvmSpec::fram_unit_boundary(),
+        NvmSpec::fram_jit(),
+    ];
+    let mut nvm_rows: Vec<(String, f64, f64)> = Vec::new();
+    for &spec in &policies {
+        let m = matrix.clone().nvms(vec![spec]);
+        let t0 = Instant::now();
+        let report = run_matrix(&m, 4);
+        let dt = t0.elapsed().as_secs_f64();
+        let rate = n as f64 / dt;
+        println!(
+            "nvm {:<10} {:>8.1} scenarios/s  ({dt:.3} s, {} commits, {} lost fragments)",
+            spec.label(),
+            rate,
+            report.summary.commits,
+            report.summary.lost_fragments
+        );
+        nvm_rows.push((spec.label(), rate, dt));
+    }
+
+    // --- machine-readable trajectory ------------------------------------
+    let out = obj(vec![
+        ("bench", Value::Str("bench_sweep".to_string())),
+        ("scenarios", Value::Num(n as f64)),
+        ("duration_ms", Value::Num(duration_ms)),
+        ("reps", Value::Num(reps as f64)),
+        (
+            "threads",
+            Value::Arr(
+                runs.iter()
+                    .map(|(threads, rate, secs, _)| {
+                        obj(vec![
+                            ("threads", Value::Num(*threads as f64)),
+                            ("scenarios_per_s", Value::Num(*rate)),
+                            ("secs", Value::Num(*secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "nvm_policies",
+            Value::Arr(
+                nvm_rows
+                    .iter()
+                    .map(|(label, rate, secs)| {
+                        obj(vec![
+                            ("policy", Value::Str(label.clone())),
+                            ("scenarios_per_s", Value::Num(*rate)),
+                            ("secs", Value::Num(*secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let path =
+        std::env::var("SWEEP_BENCH_JSON").unwrap_or_else(|_| "BENCH_sweep.json".to_string());
+    std::fs::write(&path, out.to_json()).expect("writing bench json");
+    println!("\nwrote {path}");
 }

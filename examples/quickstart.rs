@@ -1,32 +1,55 @@
-//! Quickstart: the minimal Zygarde serving loop.
+//! Quickstart: the minimal Zygarde loop — works out of the box.
 //!
-//! Loads the MNIST agile DNN's AOT-compiled per-unit HLO artifacts
-//! (`make artifacts` must have run), executes them unit-by-unit through
-//! the XLA PJRT runtime with the utility-test early exit, and adapts the
-//! k-means centroids online — the full three-layer stack with Python
-//! nowhere on the path.
+//! With AOT artifacts (`make artifacts`) and the `pjrt` feature, this is
+//! the serving path: the MNIST agile DNN's per-unit HLO executed through
+//! the XLA PJRT runtime with the utility-test early exit and online
+//! k-means adaptation — Python nowhere on the path.
+//!
+//! Without them (the default build), it falls back to the simulation
+//! stack: a small deterministic scenario sweep over schedulers and NVM
+//! commit policies on the synthetic workload, which needs no artifacts
+//! and no external crates.
 //!
 //!     cargo run --release --example quickstart -- [--dataset mnist] [--samples 40]
 
+use zygarde::coordinator::sched::SchedulerKind;
 use zygarde::dnn::network::Network;
+use zygarde::energy::harvester::HarvesterKind;
+use zygarde::nvm::NvmSpec;
 use zygarde::runtime::Runtime;
+use zygarde::sim::sweep::{self, HarvesterSpec, ScenarioMatrix, SeedPolicy, TaskMix};
 use zygarde::util::cli::Args;
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let ds = args.str_or("dataset", "mnist").to_string();
     let n_samples = args.usize_or("samples", 40);
+    let seed = args.u64_or("seed", 7);
 
     let dir = zygarde::artifacts_root().join(&ds);
-    let mut net = Network::load(&dir).expect("artifacts — run `make artifacts` first");
-    let mut rt = match Runtime::cpu() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("quickstart needs the PJRT serving path: {e}");
-            std::process::exit(1);
+    match (Network::load(&dir), Runtime::cpu()) {
+        (Ok(net), Ok(rt)) => serve_quickstart(net, rt, &dir, &ds, n_samples),
+        (net, rt) => {
+            if let Err(e) = net {
+                eprintln!("artifacts unavailable ({e}); run `make artifacts` for the serving path");
+            }
+            if let Err(e) = rt {
+                eprintln!("PJRT unavailable ({e})");
+            }
+            sim_quickstart(seed);
         }
-    };
-    rt.load_network(&dir, &net.meta).expect("loading AOT units");
+    }
+}
+
+/// The PJRT serving path (artifacts + `--features pjrt` present).
+fn serve_quickstart(
+    mut net: Network,
+    mut rt: Runtime,
+    dir: &std::path::Path,
+    ds: &str,
+    n_samples: usize,
+) {
+    rt.load_network(dir, &net.meta).expect("loading AOT units");
     println!(
         "zygarde quickstart: `{ds}` ({} units) on {} — utility thresholds {:?}",
         net.meta.n_layers,
@@ -43,7 +66,7 @@ fn main() {
         let (mut pred, mut exit_at) = (0i32, net.meta.n_layers - 1);
         for li in 0..net.meta.n_layers {
             let (next, dists) = rt
-                .execute_unit(&ds, li, &act, &net.classifiers[li].centroids)
+                .execute_unit(ds, li, &act, &net.classifiers[li].centroids)
                 .expect("unit execution");
             let res = net.classifiers[li].classify_from_dists(&dists);
             pred = res.pred;
@@ -76,5 +99,45 @@ fn main() {
         "\n{n} samples  accuracy {:.1}%  mean PJRT latency {:.2} ms  exit histogram {exits:?}",
         100.0 * correct as f64 / n as f64,
         t0.elapsed().as_secs_f64() * 1e3 / n as f64
+    );
+}
+
+/// The default-build path: a deterministic sweep on the synthetic
+/// workload — schedulers × NVM commit policies on paired seeds.
+fn sim_quickstart(seed: u64) {
+    println!(
+        "\nrunning the simulation quickstart instead: Zygarde vs EDF-M on a \
+         synthetic 2-task mix,\nacross NVM commit policies (ideal, FRAM \
+         every-fragment, FRAM JIT), paired harvest streams\n"
+    );
+    let matrix = ScenarioMatrix::new("quickstart", seed)
+        .mixes(vec![TaskMix::synthetic("demo", 2, 3, seed)])
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 600.0 },
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 90.0,
+                q: 0.85,
+                duty: 0.55,
+                eta: 0.45,
+            },
+        ])
+        .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::EdfMandatory])
+        .nvms(vec![
+            NvmSpec::ideal(),
+            NvmSpec::fram_every_fragment(),
+            NvmSpec::fram_jit(),
+        ])
+        .duration_ms(20_000.0)
+        .seed_policy(SeedPolicy::PairedEnvironment);
+    let report = sweep::run_matrix(&matrix, sweep::default_threads());
+    report.print();
+    println!(
+        "\ncommits {}  restores {}  lost fragments {}  commit energy {:.2} mJ \
+         (see `zygarde nvm` for the full policy comparison)",
+        report.summary.commits,
+        report.summary.restores,
+        report.summary.lost_fragments,
+        report.summary.commit_mj
     );
 }

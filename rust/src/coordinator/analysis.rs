@@ -99,6 +99,7 @@ mod tests {
             unit_fragments: vec![1; n],
             unit_time_ms: unit_ms,
             release_energy_mj: 0.0,
+            unit_state_bytes: vec![2048; n],
             traces: Arc::new(traces),
             imprecise: true,
         }

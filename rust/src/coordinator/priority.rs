@@ -28,7 +28,7 @@ impl PriorityParams {
     pub fn new(max_deadline_ms: f64, max_utility: f64) -> Self {
         PriorityParams {
             alpha: 1.0 / max_deadline_ms.max(1e-9),
-            beta: 1.0 / max_utility.max(1e-9) as f64,
+            beta: 1.0 / max_utility.max(1e-9),
         }
     }
 }
@@ -89,6 +89,7 @@ mod tests {
             unit_energy_mj: vec![1.0],
             unit_fragments: vec![1],
             release_energy_mj: 0.0,
+            unit_state_bytes: vec![2048],
             traces: Arc::new(vec![]),
             imprecise: true,
         };

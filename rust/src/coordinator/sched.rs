@@ -175,6 +175,7 @@ mod tests {
             unit_energy_mj: vec![1.0, 1.0],
             unit_fragments: vec![1, 1],
             release_energy_mj: 0.0,
+            unit_state_bytes: vec![2048; 2],
             traces: Arc::new(vec![]),
             imprecise: true,
         }

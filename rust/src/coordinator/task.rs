@@ -27,6 +27,10 @@ pub struct TaskSpec {
     /// Sensor read + feature extraction cost at release (DMA/LEA path:
     /// consumes energy but not CPU time; paper Fig. 14 job generator).
     pub release_energy_mj: f64,
+    /// Bytes of volatile working state a checkpoint at a fragment boundary
+    /// of each unit must persist (the unit's activation buffer). Feeds the
+    /// `nvm` commit/restore cost model; see [`TaskSpec::state_bytes`].
+    pub unit_state_bytes: Vec<usize>,
     /// Per-sample unit traces this task's jobs sample from.
     pub traces: Arc<Vec<SampleTrace>>,
     /// Non-imprecise task support (paper §5.1): if false, every unit is
@@ -51,7 +55,17 @@ impl TaskSpec {
     pub fn fragment_energy_mj(&self, unit: usize) -> f64 {
         self.unit_energy_mj[unit] / self.unit_fragments[unit] as f64
     }
+
+    /// Checkpoint state size of `unit` (bytes); tasks that predate the
+    /// NVM model (shorter or empty `unit_state_bytes`) fall back to
+    /// [`DEFAULT_STATE_BYTES`].
+    pub fn state_bytes(&self, unit: usize) -> usize {
+        self.unit_state_bytes.get(unit).copied().unwrap_or(DEFAULT_STATE_BYTES)
+    }
 }
+
+/// Fallback per-unit checkpoint size (a small activation buffer).
+pub const DEFAULT_STATE_BYTES: usize = 2048;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum JobState {
@@ -61,6 +75,21 @@ pub enum JobState {
     Optional,
     /// All units executed.
     Exhausted,
+}
+
+/// The durable (committed-to-NVM) snapshot of a job's progress. On a
+/// power failure the engine rolls the volatile fields of [`Job`] back to
+/// this point; everything since re-executes (idempotent fragments).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobCheckpoint {
+    pub next_unit: usize,
+    pub fragments_done: usize,
+    pub state: JobState,
+    pub utility: f32,
+    pub pred: Option<i32>,
+    pub mandatory_done: bool,
+    pub mandatory_done_at: Option<f64>,
+    pub units_done: usize,
 }
 
 /// One job instance in the queue.
@@ -88,10 +117,23 @@ pub struct Job {
     /// Completion time of the mandatory part, if any.
     pub mandatory_done_at: Option<f64>,
     pub units_done: usize,
+    /// Last committed (durable) progress; the rollback target on power
+    /// failure. Maintained by the engine per its `CommitPolicy`.
+    pub committed: JobCheckpoint,
 }
 
 impl Job {
     pub fn new(task: &TaskSpec, id: u64, release_ms: f64, trace_idx: usize) -> Job {
+        let fresh = JobCheckpoint {
+            next_unit: 0,
+            fragments_done: 0,
+            state: JobState::Mandatory,
+            utility: 0.0,
+            pred: None,
+            mandatory_done: false,
+            mandatory_done_at: None,
+            units_done: 0,
+        };
         Job {
             task: task.id,
             id,
@@ -106,7 +148,90 @@ impl Job {
             mandatory_done: false,
             mandatory_done_at: None,
             units_done: 0,
+            committed: fresh,
         }
+    }
+
+    /// Snapshot the volatile progress fields.
+    pub fn snapshot(&self) -> JobCheckpoint {
+        JobCheckpoint {
+            next_unit: self.next_unit,
+            fragments_done: self.fragments_done,
+            state: self.state,
+            utility: self.utility,
+            pred: self.pred,
+            mandatory_done: self.mandatory_done,
+            mandatory_done_at: self.mandatory_done_at,
+            units_done: self.units_done,
+        }
+    }
+
+    /// Make the current volatile progress durable.
+    pub fn checkpoint(&mut self) {
+        self.committed = self.snapshot();
+    }
+
+    /// Volatile progress ahead of the last commit?
+    pub fn is_dirty(&self) -> bool {
+        self.snapshot() != self.committed
+    }
+
+    /// Any durable progress worth restoring after a reboot?
+    pub fn has_committed_progress(&self) -> bool {
+        self.committed.next_unit > 0
+            || self.committed.fragments_done > 0
+            || self.committed.units_done > 0
+    }
+
+    /// The unit whose activation buffer is live in volatile memory: the
+    /// executing unit mid-unit, or the just-completed unit at a boundary
+    /// (its output is the next unit's input). This is the buffer a
+    /// checkpoint must persist and a restore must read back.
+    pub fn active_unit(&self, n_units: usize) -> usize {
+        if self.fragments_done == 0 && self.next_unit > 0 {
+            (self.next_unit - 1).min(n_units - 1)
+        } else {
+            self.next_unit.min(n_units.saturating_sub(1))
+        }
+    }
+
+    /// [`Job::active_unit`] evaluated on the committed checkpoint.
+    pub fn committed_active_unit(&self, n_units: usize) -> usize {
+        if self.committed.fragments_done == 0 && self.committed.next_unit > 0 {
+            (self.committed.next_unit - 1).min(n_units - 1)
+        } else {
+            self.committed.next_unit.min(n_units.saturating_sub(1))
+        }
+    }
+
+    /// Total fragment-granularity progress of the volatile state.
+    pub fn progress_fragments(&self, spec: &TaskSpec) -> u64 {
+        let done: usize = spec.unit_fragments.iter().take(self.next_unit).sum();
+        (done + self.fragments_done) as u64
+    }
+
+    /// Total fragment-granularity progress of the committed state.
+    pub fn committed_progress_fragments(&self, spec: &TaskSpec) -> u64 {
+        let done: usize = spec.unit_fragments.iter().take(self.committed.next_unit).sum();
+        (done + self.committed.fragments_done) as u64
+    }
+
+    /// Power failed: discard volatile progress, return to the last commit.
+    /// Returns the number of completed-but-uncommitted fragments lost.
+    pub fn rollback(&mut self, spec: &TaskSpec) -> u64 {
+        let lost = self
+            .progress_fragments(spec)
+            .saturating_sub(self.committed_progress_fragments(spec));
+        let c = self.committed;
+        self.next_unit = c.next_unit;
+        self.fragments_done = c.fragments_done;
+        self.state = c.state;
+        self.utility = c.utility;
+        self.pred = c.pred;
+        self.mandatory_done = c.mandatory_done;
+        self.mandatory_done_at = c.mandatory_done_at;
+        self.units_done = c.units_done;
+        lost
     }
 
     /// Is the *next* unit mandatory (γ = 1 in Eq. 6/7)?
@@ -173,6 +298,7 @@ mod tests {
             unit_energy_mj: vec![1.0; n_units],
             unit_fragments: vec![4; n_units],
             release_energy_mj: 0.5,
+            unit_state_bytes: vec![2048; n_units],
             traces: Arc::new(vec![]),
             imprecise: true,
         }
@@ -216,6 +342,72 @@ mod tests {
         assert_eq!(s.wcet_ms(), 400.0);
         assert_eq!(s.fragment_time_ms(0), 25.0);
         assert_eq!(s.fragment_energy_mj(0), 0.25);
+    }
+
+    #[test]
+    fn state_bytes_falls_back_when_undeclared() {
+        let mut s = spec(3);
+        assert_eq!(s.state_bytes(1), 2048);
+        s.unit_state_bytes = vec![100];
+        assert_eq!(s.state_bytes(0), 100);
+        assert_eq!(s.state_bytes(2), DEFAULT_STATE_BYTES);
+    }
+
+    #[test]
+    fn checkpoint_and_rollback_restore_committed_progress() {
+        let s = spec(3); // 3 units x 4 fragments
+        let t = trace(&[false, true, false]);
+        let mut j = Job::new(&s, 0, 0.0, 0);
+        assert!(!j.is_dirty());
+        assert!(!j.has_committed_progress());
+
+        // Two fragments of unit 0, volatile.
+        j.fragments_done = 2;
+        assert!(j.is_dirty());
+        assert_eq!(j.progress_fragments(&s), 2);
+        assert_eq!(j.committed_progress_fragments(&s), 0);
+        assert_eq!(j.rollback(&s), 2);
+        assert_eq!(j.fragments_done, 0);
+        assert!(!j.is_dirty());
+
+        // Complete unit 0 and commit at the boundary.
+        j.fragments_done = 4;
+        j.complete_unit(&t, 3, 10.0); // resets fragments_done, next_unit=1
+        j.checkpoint();
+        assert!(j.has_committed_progress());
+        assert_eq!(j.committed_progress_fragments(&s), 4);
+
+        // Complete unit 1 (confident exit) but do NOT commit: a power
+        // failure rolls the confidence back too.
+        j.fragments_done = 4;
+        j.complete_unit(&t, 3, 20.0);
+        assert!(j.mandatory_done);
+        assert_eq!(j.progress_fragments(&s), 8);
+        assert_eq!(j.rollback(&s), 4);
+        assert!(!j.mandatory_done);
+        assert_eq!(j.state, JobState::Mandatory);
+        assert_eq!(j.next_unit, 1);
+        assert_eq!(j.units_done, 1);
+    }
+
+    #[test]
+    fn active_unit_tracks_the_live_buffer() {
+        let s = spec(3);
+        let t = trace(&[false, true, false]);
+        let mut j = Job::new(&s, 0, 0.0, 0);
+        assert_eq!(j.active_unit(3), 0); // fresh: unit 0's input buffer
+        j.fragments_done = 2;
+        assert_eq!(j.active_unit(3), 0); // mid-unit 0
+        j.fragments_done = 4;
+        j.complete_unit(&t, 3, 1.0);
+        // Boundary: unit 0's output is what lives in SRAM, even though
+        // next_unit already points at unit 1.
+        assert_eq!(j.next_unit, 1);
+        assert_eq!(j.active_unit(3), 0);
+        j.fragments_done = 1; // executing unit 1 now
+        assert_eq!(j.active_unit(3), 1);
+        j.checkpoint();
+        assert_eq!(j.committed_active_unit(3), 1);
     }
 
     #[test]

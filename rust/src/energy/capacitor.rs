@@ -18,6 +18,10 @@ pub struct Capacitor {
     mcu_on: bool,
     /// Cumulative harvested energy that arrived while full (wasted).
     pub wasted_mj: f64,
+    /// Cumulative energy drawn from storage (fragments, idle drain, NVM
+    /// commits/restores, and brownout remnants) — the consumption side of
+    /// the energy-conservation identity the sweep tests check.
+    pub consumed_mj: f64,
 }
 
 impl Capacitor {
@@ -36,6 +40,7 @@ impl Capacitor {
             energy_mj: 0.0,
             mcu_on: false,
             wasted_mj: 0.0,
+            consumed_mj: 0.0,
         }
     }
 
@@ -92,11 +97,13 @@ impl Capacitor {
             // Brown-out: the energy is still spent (the fragment ran and
             // died) but the work is lost, and the MCU powers off — it must
             // recharge past v_on before executing again.
+            self.consumed_mj += self.energy_mj - self.floor_mj();
             self.energy_mj = self.floor_mj();
             self.mcu_on = false;
             return false;
         }
         self.energy_mj -= e_mj;
+        self.consumed_mj += e_mj;
         self.update_mcu();
         true
     }
@@ -105,7 +112,9 @@ impl Capacitor {
     pub fn idle_drain(&mut self, power_mw: f64, dt_ms: f64) {
         if self.mcu_on {
             // mW · ms · 1e-3 = mJ.
-            self.energy_mj = (self.energy_mj - power_mw * dt_ms * 1e-3).max(0.0);
+            let drained = (power_mw * dt_ms * 1e-3).min(self.energy_mj);
+            self.energy_mj -= drained;
+            self.consumed_mj += drained;
             self.update_mcu();
         }
     }
@@ -193,6 +202,29 @@ mod tests {
         assert!(!c.draw(huge));
         assert!(!c.mcu_on());
         assert!((c.energy_mj() - c.floor_mj()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consumed_accounting_closes_the_energy_identity() {
+        let mut c = Capacitor::new(0.001, 3.0, 2.5, 1.5);
+        let mut harvested = 0.0;
+        for _ in 0..200 {
+            c.charge(50.0, 100.0);
+            harvested += 50.0 * 100.0 * 1e-3;
+            if c.mcu_on() {
+                let _ = c.draw(0.8);
+                c.idle_drain(0.3, 100.0);
+            }
+        }
+        // Force a brownout remnant too.
+        while !c.mcu_on() {
+            c.charge(50.0, 100.0);
+            harvested += 50.0 * 100.0 * 1e-3;
+        }
+        assert!(!c.draw(c.capacity_mj()));
+        let balance = harvested - c.wasted_mj - c.consumed_mj - c.energy_mj();
+        assert!(balance.abs() < 1e-9, "energy identity violated by {balance}");
+        assert!(c.consumed_mj > 0.0);
     }
 
     #[test]

@@ -79,6 +79,14 @@ impl EnergyManager {
     pub fn mandatory_allowed(&self) -> bool {
         self.capacitor.mcu_on() && self.e_curr() >= self.e_man_mj
     }
+
+    /// JIT-checkpoint trigger (Hibernus/QuickRecall idiom): true when the
+    /// capacitor has sagged to `threshold_v` or below while the MCU is
+    /// still up — the last safe moment to commit volatile progress before
+    /// an impending brown-out. Consumed by `CommitPolicy::JitVoltage`.
+    pub fn jit_voltage_trigger(&self, threshold_v: f64) -> bool {
+        self.capacitor.mcu_on() && self.capacitor.voltage() <= threshold_v
+    }
 }
 
 #[cfg(test)]
@@ -133,6 +141,26 @@ mod tests {
         assert!(!m.optional_allowed()); // 0.5 * full < full
         m.set_e_opt(m.e_curr() * 0.4);
         assert!(m.optional_allowed());
+    }
+
+    #[test]
+    fn jit_trigger_fires_only_near_brownout_while_on() {
+        let mut m = mgr(1.0);
+        // Off and empty: no trigger (nothing to save, nothing running).
+        assert!(!m.jit_voltage_trigger(2.0));
+        for _ in 0..100_000 {
+            m.tick(100.0);
+        }
+        // Full capacitor at 3.3 V: above any sensible threshold.
+        assert!(!m.jit_voltage_trigger(2.0));
+        // Drain down toward v_off = 1.9: the trigger fires before the
+        // MCU browns out.
+        let mut fired = false;
+        while m.capacitor.mcu_on() {
+            fired = fired || m.jit_voltage_trigger(2.0);
+            let _ = m.capacitor.draw(1.0);
+        }
+        assert!(fired, "trigger never fired on the way down");
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub mod classifiers_cmp;
 pub mod common;
 pub mod eta;
 pub mod loss_compare;
+pub mod nvm_cmp;
 pub mod overhead;
 pub mod schedule;
 pub mod schedulability;

@@ -22,6 +22,10 @@
 //!   k-means classifiers, utility test, centroid adaptation, unit traces.
 //! * [`energy`] — energy events, η-factor, harvester models, capacitor,
 //!   cost model, energy manager.
+//! * [`nvm`] — nonvolatile progress: FRAM-like commit/restore cost model
+//!   and the checkpoint-commit policies (every-fragment, unit-boundary,
+//!   JIT voltage-triggered); the engine charges commit/restore energy and
+//!   rolls volatile progress back to the last commit on power failure.
 //! * [`clock`] — RTC and CHRT remanence-clock models.
 //! * [`coordinator`] — tasks/jobs/units/fragments, job queue, priority
 //!   functions ζ and ζ_I, Zygarde/EDF/EDF-M/RR schedulers, schedulability.
@@ -76,6 +80,7 @@ pub mod coordinator;
 pub mod dnn;
 pub mod energy;
 pub mod exp;
+pub mod nvm;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -20,6 +20,8 @@ experiments (DESIGN.md §3):
   termination    Fig. 16 termination policies
   schedule       Figs. 17-20 EDF / EDF-M / Zygarde      [--dataset mnist --jobs N --systems 1,2,...]
   capacitor      Fig. 21 capacitor-size sweep           [--jobs N]
+  nvm            NVM commit-policy comparison (ideal / FRAM every-fragment
+                 / unit-boundary / JIT voltage-triggered) [--jobs N]
   chrt           Table 5 RTC vs CHRT remanence clock    [--jobs N]
   acoustic       Fig. 22 six acoustic applications      [--minutes 10]
   visual         Fig. 23 multi-task visual sensing      [--minutes 10]
@@ -75,6 +77,10 @@ fn main() {
         "capacitor" => {
             let cells = exp::capacitor_sweep::run(args.u64_or("jobs", 200), seed);
             exp::capacitor_sweep::print(&cells);
+        }
+        "nvm" => {
+            let (matrix, report) = exp::nvm_cmp::run(args.u64_or("jobs", 300), seed);
+            exp::nvm_cmp::print(&exp::nvm_cmp::summarize(&matrix, &report));
         }
         "chrt" => {
             let rows = exp::chrt_cmp::run(args.u64_or("jobs", 2000), seed);
@@ -184,6 +190,10 @@ fn run_all(seed: u64, args: &Args) {
     }
 
     exp::capacitor_sweep::print(&exp::capacitor_sweep::run(args.u64_or("jobs", 200), seed));
+    {
+        let (matrix, report) = exp::nvm_cmp::run(args.u64_or("nvm-jobs", 300), seed);
+        exp::nvm_cmp::print(&exp::nvm_cmp::summarize(&matrix, &report));
+    }
     exp::chrt_cmp::print(&exp::chrt_cmp::run(args.u64_or("chrt-jobs", 2000), seed));
     exp::acoustic::print(&exp::acoustic::run(600_000.0, seed));
     exp::visual::print(&exp::visual::run(600_000.0, seed));

@@ -10,6 +10,14 @@
 //!   mid-fragment loses that fragment's work (the energy is spent, the
 //!   fragment later re-executes — SONIC's idempotent re-execution).
 //!
+//! What survives a power failure beyond the in-flight fragment is decided
+//! by the [`crate::nvm`] subsystem: completed fragments persist only once
+//! *committed* per the engine's [`CommitPolicy`], commits and post-reboot
+//! restores are charged real NVM energy and latency, and on an outage
+//! every queued job rolls back to its last durable checkpoint (the
+//! default, [`crate::nvm::NvmSpec::ideal`], commits every fragment for
+//! free — the seed engine's idealization, bit-for-bit).
+//!
 //! Jobs are discarded at their deadline (*scheduler-believed* deadline:
 //! the clock may err after reboots, §8.7) to avoid the domino effect. A
 //! job whose mandatory part completed before the deadline counts as
@@ -21,9 +29,13 @@ use crate::coordinator::priority::EnergyView;
 use crate::coordinator::sched::{ExitPolicy, Scheduler};
 use crate::coordinator::task::{Job, JobState, TaskSpec};
 use crate::energy::manager::EnergyManager;
+use crate::nvm::{CommitPolicy, Nvm};
 use crate::util::rng::Pcg32;
 
 use super::metrics::Metrics;
+
+/// Per-tick probe signature, e.g. voltage logging for Fig. 22.
+pub type Probe = Box<dyn FnMut(f64, &EnergyManager, &Metrics)>;
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -66,6 +78,10 @@ pub struct Engine {
     pub energy: EnergyManager,
     pub clock: Box<dyn Clock>,
     pub metrics: Metrics,
+    /// Nonvolatile-progress model + commit policy. Defaults to the
+    /// zero-cost every-fragment idealization; the sweep runner overrides
+    /// it from the scenario's `NvmSpec`.
+    pub nvm: Nvm,
     queue: Vec<Job>,
     now_ms: f64,
     next_release_ms: Vec<f64>,
@@ -75,7 +91,7 @@ pub struct Engine {
     was_on: bool,
     outage_start_ms: f64,
     /// Optional per-tick probe, e.g. voltage logging for Fig. 22.
-    pub probe: Option<Box<dyn FnMut(f64, &EnergyManager, &Metrics)>>,
+    pub probe: Option<Probe>,
 }
 
 impl Engine {
@@ -90,6 +106,14 @@ impl Engine {
         let n = tasks.len();
         let rng = Pcg32::seeded(cfg.seed);
         let next_release_ms = tasks.iter().map(|_| 0.0).collect();
+        // Waste before t = 0 is pre-deployment fiction (the precharge
+        // slop); `wasted_mj` reports in-simulation waste only, so the
+        // energy-conservation identity closes over the run.
+        let mut energy = energy;
+        energy.capacitor.wasted_mj = 0.0;
+        let mut metrics = Metrics::new(n);
+        metrics.initial_energy_mj = energy.capacitor.energy_mj();
+        let nvm = Nvm::ideal(&energy.capacitor);
         Engine {
             cfg,
             tasks,
@@ -97,7 +121,8 @@ impl Engine {
             exit_policy,
             energy,
             clock,
-            metrics: Metrics::new(n),
+            metrics,
+            nvm,
             queue: Vec::new(),
             now_ms: 0.0,
             next_release_ms,
@@ -119,6 +144,8 @@ impl Engine {
         self.metrics.reboots = self.energy.reboots;
         self.metrics.harvested_mj = self.energy.harvested_mj;
         self.metrics.wasted_mj = self.energy.capacitor.wasted_mj;
+        self.metrics.final_energy_mj = self.energy.capacitor.energy_mj();
+        self.metrics.consumed_mj = self.energy.capacitor.consumed_mj;
         self.metrics
     }
 
@@ -136,18 +163,22 @@ impl Engine {
             return;
         }
 
+        // Fresh boot with durable progress on record: pay the NVM restore
+        // before anything executes. A brown-out mid-restore retries on the
+        // next boot.
+        if self.nvm.pending_restore && !self.restore_checkpoint() {
+            return;
+        }
+
         // Scheduler invocation (limited preemption: we are at a unit
-        // boundary by construction). Charge the scheduler's own overhead.
+        // boundary by construction). The scheduler's own overhead is
+        // sub-fragment scale and accounted for in the unit costs.
         let view = self.energy_view();
         let believed = self.believed_now();
         let Some(idx) = self.scheduler.pick(&self.queue, believed, &view) else {
             self.advance_idle();
             return;
         };
-        let sched_mj = self.tasks[self.queue[idx].task]
-            .release_energy_mj
-            .min(0.05); // scheduler overhead is sub-fragment scale
-        let _ = self.energy.capacitor.draw(sched_mj * 0.0); // accounted in unit costs
         self.execute_unit(idx);
     }
 
@@ -165,10 +196,148 @@ impl Engine {
         if on && !self.was_on {
             let outage = self.now_ms - self.outage_start_ms;
             self.clock.on_reboot(self.now_ms, outage);
+            // A boot starts above v_on, well over the JIT threshold.
+            self.nvm.jit_armed = true;
         } else if !on && self.was_on {
             self.outage_start_ms = self.now_ms;
+            // Power failed: volatile progress dies. Every queued job rolls
+            // back to its last durable checkpoint; whatever it had beyond
+            // that re-executes after reboot (idempotent fragments).
+            let mut lost = 0u64;
+            let mut any_committed = false;
+            for j in &mut self.queue {
+                lost += j.rollback(&self.tasks[j.task]);
+                any_committed = any_committed || j.has_committed_progress();
+            }
+            self.metrics.lost_fragments += lost;
+            if any_committed {
+                self.nvm.pending_restore = true;
+            }
         }
         self.was_on = on;
+    }
+
+    /// Charge one NVM transaction (commit or restore): harvest during the
+    /// write, advance time, then draw the energy. Returns false if the
+    /// draw browned out — the transaction did not take effect.
+    fn nvm_transaction(&mut self, e_mj: f64, t_ms: f64) -> bool {
+        if t_ms > 0.0 {
+            self.energy.tick(t_ms);
+            self.now_ms += t_ms;
+            self.metrics.on_time_ms += t_ms;
+        }
+        if e_mj > 0.0 && !self.energy.capacitor.draw(e_mj) {
+            self.track_power_edges();
+            return false;
+        }
+        true
+    }
+
+    /// Commit one job's volatile progress; `unit` is the unit whose state
+    /// buffer the checkpoint persists (the executing unit mid-unit, the
+    /// just-completed unit at a boundary — NOT `next_unit`, which has
+    /// already advanced by then). Returns false on power failure
+    /// mid-commit.
+    fn commit_job(&mut self, idx: usize, unit: usize) -> bool {
+        let spec = &self.tasks[self.queue[idx].task];
+        let bytes = self.nvm.model.base_commit_bytes + spec.state_bytes(unit);
+        let (e_mj, t_ms) = self.nvm.model.commit_cost(bytes);
+        if !self.nvm_transaction(e_mj, t_ms) {
+            return false;
+        }
+        self.queue[idx].checkpoint();
+        self.metrics.commits += 1;
+        self.metrics.commit_mj += e_mj;
+        self.metrics.commit_ms += t_ms;
+        true
+    }
+
+    /// JIT checkpoint: one snapshot transaction covering every dirty
+    /// job's live state. Returns false on power failure mid-commit.
+    fn jit_commit_all(&mut self) -> bool {
+        let mut bytes = self.nvm.model.base_commit_bytes;
+        let mut any_dirty = false;
+        for j in &self.queue {
+            if j.is_dirty() {
+                let spec = &self.tasks[j.task];
+                bytes += spec.state_bytes(j.active_unit(spec.n_units()));
+                any_dirty = true;
+            }
+        }
+        if !any_dirty {
+            return true;
+        }
+        let (e_mj, t_ms) = self.nvm.model.commit_cost(bytes);
+        if !self.nvm_transaction(e_mj, t_ms) {
+            return false;
+        }
+        for j in &mut self.queue {
+            if j.is_dirty() {
+                j.checkpoint();
+            }
+        }
+        self.metrics.commits += 1;
+        self.metrics.jit_commits += 1;
+        self.metrics.commit_mj += e_mj;
+        self.metrics.commit_ms += t_ms;
+        self.nvm.jit_armed = false;
+        true
+    }
+
+    /// Evaluate the JIT voltage trigger (with re-arm hysteresis) and
+    /// checkpoint if it fires. No-op for non-JIT policies. Returns false
+    /// only on power failure mid-commit.
+    fn jit_check(&mut self) -> bool {
+        if !matches!(self.nvm.policy, CommitPolicy::JitVoltage { .. }) {
+            return true;
+        }
+        if !self.nvm.jit_armed
+            && self.energy.capacitor.voltage() >= self.nvm.jit_rearm_v
+        {
+            self.nvm.jit_armed = true;
+        }
+        if self.nvm.jit_armed && self.energy.jit_voltage_trigger(self.nvm.jit_threshold_v) {
+            return self.jit_commit_all();
+        }
+        true
+    }
+
+    /// Bytes a post-reboot restore must read back: the base record plus
+    /// each job's committed in-progress unit state. Zero when nothing
+    /// durable is on record.
+    fn restore_bytes(&self) -> usize {
+        let mut bytes = 0usize;
+        for j in &self.queue {
+            if j.has_committed_progress() {
+                let spec = &self.tasks[j.task];
+                bytes += spec.state_bytes(j.committed_active_unit(spec.n_units()));
+            }
+        }
+        if bytes > 0 {
+            bytes + self.nvm.model.base_commit_bytes
+        } else {
+            0
+        }
+    }
+
+    /// Pay the post-reboot restore. Returns false if the read browned the
+    /// capacitor out again (the restore stays pending for the next boot).
+    fn restore_checkpoint(&mut self) -> bool {
+        let bytes = self.restore_bytes();
+        if bytes == 0 {
+            // Everything durable left the queue while we were down.
+            self.nvm.pending_restore = false;
+            return true;
+        }
+        let (e_mj, t_ms) = self.nvm.model.restore_cost(bytes);
+        if !self.nvm_transaction(e_mj, t_ms) {
+            return false;
+        }
+        self.nvm.pending_restore = false;
+        self.metrics.restores += 1;
+        self.metrics.restore_mj += e_mj;
+        self.metrics.restore_ms += t_ms;
+        true
     }
 
     fn release_due_jobs(&mut self) {
@@ -187,6 +356,13 @@ impl Engine {
                     .draw(self.tasks[t].release_energy_mj)
                 {
                     self.metrics.capture_missed += 1;
+                    // A sensor read can brown the capacitor out like any
+                    // other draw. Observe the edge immediately — a strong
+                    // harvester can recharge past v_on within this step's
+                    // idle tick, and the rollback/restore bookkeeping must
+                    // not miss the outage. (No-op if the MCU was already
+                    // off: the edge was handled when it happened.)
+                    self.track_power_edges();
                     continue;
                 }
                 self.metrics.released += 1;
@@ -246,6 +422,12 @@ impl Engine {
     /// "Scheduled" is judged against the TRUE deadline — a clock running
     /// behind (CHRT negative error, §8.7) can make the scheduler *believe*
     /// a late job finished in time, but the event was still reported late.
+    ///
+    /// Result delivery is modeled as an external action at the moment the
+    /// job leaves the queue (radio TX / actuation), not as an NVM write:
+    /// the MCU is up when this runs, so even a JIT-policy job whose state
+    /// was never checkpointed delivers its result — what a power failure
+    /// destroys is *undelivered* progress still in the queue.
     fn finish_job(&mut self, job: Job, _believed_now: f64) {
         let t = job.task;
         let in_time = job
@@ -297,8 +479,8 @@ impl Engine {
             }
             // Zygarde only: optional work is strictly opportunistic — it
             // may only absorb energy and CPU time that mandatory work
-            // cannot use. Park the unit at this fragment boundary
-            // (progress persists — SONIC-style checkpointing) when either
+            // cannot use. Park the unit at this fragment boundary (the
+            // progress survives per the NVM commit policy) when either
             // (a) the ζ_I gate closes mid-unit (η·E_curr < E_opt): keep
             //     draining and the capacitor browns out on energy a future
             //     mandatory capture needs; or
@@ -345,6 +527,20 @@ impl Engine {
                 self.track_power_edges();
                 return;
             }
+            // NVM commit point after a successful fragment; the unit-
+            // boundary commit below subsumes the final fragment's. A
+            // `false` return means power failed mid-commit (the fragment
+            // stays volatile and was already rolled back).
+            if self.queue[idx].fragments_done < n_frag {
+                let committed = match self.nvm.policy {
+                    CommitPolicy::EveryFragment => self.commit_job(idx, unit),
+                    CommitPolicy::UnitBoundary => true,
+                    CommitPolicy::JitVoltage { .. } => self.jit_check(),
+                };
+                if !committed {
+                    return;
+                }
+            }
             // A release or deadline may occur mid-unit; deadlines are only
             // *acted on* at unit boundaries (limited preemption), but the
             // probe sees continuous time.
@@ -374,6 +570,19 @@ impl Engine {
             }
         }
 
+        // NVM commit at the unit boundary (EveryFragment and UnitBoundary
+        // both persist here — the completed unit's output plus the
+        // classification result; JIT consults its voltage trigger instead).
+        let committed = match self.nvm.policy {
+            CommitPolicy::EveryFragment | CommitPolicy::UnitBoundary => {
+                self.commit_job(idx, unit)
+            }
+            CommitPolicy::JitVoltage { .. } => self.jit_check(),
+        };
+        if !committed {
+            return;
+        }
+
         // Exit-policy: may terminate the job now.
         let done = {
             let job = &self.queue[idx];
@@ -397,8 +606,7 @@ impl Engine {
         };
         if done {
             let believed = self.believed_now();
-            let job = self.queue.swap_remove(idx);
-            let mut job = job;
+            let mut job = self.queue.swap_remove(idx);
             if self.exit_policy == ExitPolicy::Oracle && !job.mandatory_done {
                 // Oracle termination defines the mandatory part.
                 job.mandatory_done = true;
@@ -419,6 +627,10 @@ impl Engine {
         self.energy.capacitor.idle_drain(self.cfg.idle_power_mw, dt);
         if self.energy.capacitor.mcu_on() {
             self.metrics.on_time_ms += dt;
+            // The capacitor can sag through the JIT threshold while idle
+            // (e.g. parked volatile progress under a closed ζ_I gate):
+            // checkpoint now, not after the brown-out.
+            let _ = self.jit_check();
         }
         self.now_ms += dt;
         if let Some(p) = self.probe.as_mut() {
@@ -466,6 +678,7 @@ mod tests {
             unit_energy_mj: vec![2.0, 2.0, 2.0],
             unit_fragments: vec![4, 4, 4],
             release_energy_mj: 0.05,
+            unit_state_bytes: vec![2048; 3],
             traces: Arc::new(vec![trace(1, 3, true), trace(2, 3, true)]),
             imprecise: true,
         }
@@ -560,6 +773,97 @@ mod tests {
         e.tasks[0].deadline_ms = 2000.0;
         let m = e.run();
         assert!(m.queue_dropped > 0);
+    }
+
+    #[test]
+    fn ideal_nvm_counts_commits_but_charges_nothing() {
+        let m = persistent_engine(SchedulerKind::Zygarde, ExitPolicy::Utility).run();
+        assert!(m.commits > 0, "every-fragment policy must commit");
+        assert_eq!(m.commit_mj, 0.0);
+        assert_eq!(m.commit_ms, 0.0);
+        assert_eq!(m.lost_fragments, 0, "zero-cost commits never lose work");
+        assert_eq!(m.restores, 0, "persistent power never reboots mid-run");
+        assert_eq!(m.jit_commits, 0);
+    }
+
+    #[test]
+    fn fram_every_fragment_charges_one_commit_per_successful_fragment() {
+        let mut e = persistent_engine(SchedulerKind::Zygarde, ExitPolicy::Utility);
+        e.nvm = Nvm::build(crate::nvm::NvmSpec::fram_every_fragment(), &e.energy.capacitor);
+        let m = e.run();
+        assert!(m.commits > 0);
+        assert_eq!(m.commits, m.fragments - m.refragments);
+        assert!(m.commit_mj > 0.0);
+        assert!(m.commit_ms > 0.0);
+        // Overhead stays in the low single-digit percents of the total.
+        assert!(m.nvm_overhead() < 0.10, "overhead {}", m.nvm_overhead());
+        assert!(m.scheduled > 0);
+    }
+
+    #[test]
+    fn fram_unit_boundary_commits_once_per_unit() {
+        let mut e = persistent_engine(SchedulerKind::Zygarde, ExitPolicy::Utility);
+        e.nvm = Nvm::build(crate::nvm::NvmSpec::fram_unit_boundary(), &e.energy.capacitor);
+        let m = e.run();
+        assert_eq!(m.commits, m.mandatory_units + m.optional_units);
+        assert!(m.commit_mj > 0.0);
+    }
+
+    #[test]
+    fn jit_never_fires_on_persistent_power() {
+        let mut e = persistent_engine(SchedulerKind::Zygarde, ExitPolicy::Utility);
+        e.nvm = Nvm::build(crate::nvm::NvmSpec::fram_jit(), &e.energy.capacitor);
+        let m = e.run();
+        // The capacitor never sags near v_off, so nothing ever commits —
+        // and with no power failures nothing is ever lost either.
+        assert_eq!(m.commits, 0);
+        assert_eq!(m.jit_commits, 0);
+        assert_eq!(m.lost_fragments, 0);
+        assert!(m.scheduled > 0);
+    }
+
+    #[test]
+    fn unit_boundary_loses_more_rolled_back_work_than_every_fragment() {
+        let run = |spec: crate::nvm::NvmSpec| {
+            let h = Harvester::markov(
+                crate::energy::harvester::HarvesterKind::Rf,
+                40.0,
+                0.9,
+                0.5,
+                1000.0,
+                7,
+            );
+            let mut cap = Capacitor::new(0.01, 3.3, 2.8, 1.9);
+            cap.charge(1e7, 1000.0);
+            let em = EnergyManager::new(cap, h, 0.5, 0.05);
+            let mut e = Engine::new(
+                SimConfig { duration_ms: 240_000.0, ..Default::default() },
+                vec![task(0, 500.0, 1000.0)],
+                Scheduler::new(SchedulerKind::Zygarde, PriorityParams::new(1000.0, 10.0)),
+                ExitPolicy::Utility,
+                em,
+                Box::new(Rtc),
+            );
+            e.nvm = Nvm::build(spec, &e.energy.capacitor);
+            e.run()
+        };
+        let every = run(crate::nvm::NvmSpec::fram_every_fragment());
+        let unit = run(crate::nvm::NvmSpec::fram_unit_boundary());
+        // Same seed, same harvester stream. Unit-boundary keeps mid-unit
+        // progress volatile, so brownouts roll real work back; the
+        // every-fragment policy can lose at most the fragment whose
+        // commit was interrupted.
+        assert!(unit.lost_fragments > 0, "brownouts must cost volatile work");
+        assert!(
+            unit.lost_fragments >= every.lost_fragments,
+            "unit {} < every {}",
+            unit.lost_fragments,
+            every.lost_fragments
+        );
+        // And the steady-state commit bill goes the other way.
+        assert!(every.commits > unit.commits);
+        // Reboots with durable progress pay restore costs.
+        assert!(every.restores > 0 || unit.restores > 0);
     }
 
     #[test]

@@ -42,6 +42,21 @@ pub struct Metrics {
     /// Fragments re-executed due to power failure mid-fragment.
     pub refragments: u64,
     pub fragments: u64,
+    /// NVM commit transactions (fragment-, unit-, or JIT-triggered).
+    pub commits: u64,
+    /// Commits fired by the JIT low-voltage trigger (subset of `commits`).
+    pub jit_commits: u64,
+    /// Energy and time spent writing checkpoints to NVM.
+    pub commit_mj: f64,
+    pub commit_ms: f64,
+    /// Checkpoint restores after reboots, and their cost.
+    pub restores: u64,
+    pub restore_mj: f64,
+    pub restore_ms: f64,
+    /// Completed-but-uncommitted fragments rolled back on power failure
+    /// (distinct from `refragments`, the in-flight fragment the energy of
+    /// which was spent without completing).
+    pub lost_fragments: u64,
     /// Per-task scheduled counts (multi-task fairness, Fig. 23).
     pub per_task_released: Vec<u64>,
     pub per_task_scheduled: Vec<u64>,
@@ -54,6 +69,14 @@ pub struct Metrics {
     pub reboots: u64,
     pub harvested_mj: f64,
     pub wasted_mj: f64,
+    /// Capacitor energy at engine construction / simulation end, and the
+    /// total the simulation drew (fragments + idle + commits + restores +
+    /// brownout remnants). Together with `harvested_mj` and `wasted_mj`
+    /// these close the energy-conservation identity the sweep property
+    /// tests check: initial + harvested = final + wasted + consumed.
+    pub initial_energy_mj: f64,
+    pub final_energy_mj: f64,
+    pub consumed_mj: f64,
     /// Per-job audit trail; empty unless `SimConfig::log_jobs` was set.
     pub job_log: Vec<JobRecord>,
 }
@@ -102,6 +125,12 @@ impl Metrics {
         self.on_time_ms / self.sim_time_ms.max(1e-9)
     }
 
+    /// NVM commit + restore energy as a fraction of everything consumed —
+    /// the checkpointing overhead the commit-policy comparison reports.
+    pub fn nvm_overhead(&self) -> f64 {
+        (self.commit_mj + self.restore_mj) / self.consumed_mj.max(1e-9)
+    }
+
     /// Machine-readable summary for `sim::sweep` reports. Every field that
     /// feeds an evaluation figure is included; the `job_log` audit trail
     /// is not (it is an in-memory debugging aid, not a result).
@@ -120,12 +149,23 @@ impl Metrics {
         num(&mut m, "optional_units", self.optional_units as f64);
         num(&mut m, "refragments", self.refragments as f64);
         num(&mut m, "fragments", self.fragments as f64);
+        num(&mut m, "commits", self.commits as f64);
+        num(&mut m, "jit_commits", self.jit_commits as f64);
+        num(&mut m, "commit_mj", self.commit_mj);
+        num(&mut m, "commit_ms", self.commit_ms);
+        num(&mut m, "restores", self.restores as f64);
+        num(&mut m, "restore_mj", self.restore_mj);
+        num(&mut m, "restore_ms", self.restore_ms);
+        num(&mut m, "lost_fragments", self.lost_fragments as f64);
         num(&mut m, "latency_sum_ms", self.latency_sum_ms);
         num(&mut m, "sim_time_ms", self.sim_time_ms);
         num(&mut m, "on_time_ms", self.on_time_ms);
         num(&mut m, "reboots", self.reboots as f64);
         num(&mut m, "harvested_mj", self.harvested_mj);
         num(&mut m, "wasted_mj", self.wasted_mj);
+        num(&mut m, "initial_energy_mj", self.initial_energy_mj);
+        num(&mut m, "final_energy_mj", self.final_energy_mj);
+        num(&mut m, "consumed_mj", self.consumed_mj);
         let arr = |xs: &[u64]| Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect());
         m.insert("per_task_released".to_string(), arr(&self.per_task_released));
         m.insert("per_task_scheduled".to_string(), arr(&self.per_task_scheduled));

@@ -2,8 +2,8 @@
 //!
 //! The paper's evaluation is a grid of intermittent-power scenarios —
 //! harvester profiles × capacitor sizes × schedulers × exit policies ×
-//! task mixes × seeds (§8, Tables 5–7). This module turns that grid into
-//! a first-class object:
+//! task mixes × NVM commit policies × seeds (§8, Tables 5–7). This module
+//! turns that grid into a first-class object:
 //!
 //! * [`ScenarioMatrix`] — a declarative cartesian product over the sweep
 //!   dimensions, expanded into self-contained [`Scenario`] specs.
@@ -39,6 +39,7 @@ pub use runner::{build_engine, default_threads, run_matrix, run_scenario, run_sc
 use crate::coordinator::sched::{ExitPolicy, SchedulerKind};
 use crate::coordinator::task::TaskSpec;
 use crate::energy::harvester::{harvester_for, system, Harvester, HarvesterKind};
+use crate::nvm::NvmSpec;
 use crate::sim::workload::synthetic_task;
 use crate::util::rng::Pcg32;
 
@@ -145,6 +146,8 @@ pub struct Scenario {
     /// Index within the matrix's seed range.
     pub rep: u64,
     pub fault: FaultPlan,
+    /// Nonvolatile-progress model + commit policy for this cell.
+    pub nvm: NvmSpec,
     pub duration_ms: f64,
     pub queue_size: usize,
     pub release_jitter: f64,
@@ -165,13 +168,14 @@ impl Scenario {
     /// Human-readable cell label (stable across runs; used in reports).
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/{}mF/{}/{}/{}/r{}",
+            "{}/{}/{}mF/{}/{}/{}/{}/r{}",
             self.mix.name,
             self.harvester.label(),
             self.capacitor_mf,
             self.scheduler.name(),
             self.exit.name(),
             self.fault.label(),
+            self.nvm.label(),
             self.rep
         )
     }
@@ -182,9 +186,9 @@ impl Scenario {
 /// hand it to [`runner::run_matrix`].
 ///
 /// Expansion order (outermost first): task mixes → harvesters →
-/// capacitors → schedulers → exit policies → fault plans → reps. The
-/// order is part of the format: scenario indices (and thus per-scenario
-/// RNG streams) depend on it.
+/// capacitors → schedulers → exit policies → fault plans → NVM specs →
+/// reps. The order is part of the format: scenario indices (and thus
+/// per-scenario RNG streams) depend on it.
 ///
 /// [`expand`]: ScenarioMatrix::expand
 #[derive(Clone, Debug)]
@@ -199,6 +203,8 @@ pub struct ScenarioMatrix {
     pub exits: Vec<Option<ExitPolicy>>,
     pub mixes: Vec<TaskMix>,
     pub faults: Vec<FaultPlan>,
+    /// NVM commit-policy axis; default = the zero-cost idealization.
+    pub nvms: Vec<NvmSpec>,
     /// Seed range: reps 0..n_reps.
     pub n_reps: u64,
     pub duration_ms: f64,
@@ -220,6 +226,7 @@ impl ScenarioMatrix {
             exits: vec![None],
             mixes: vec![TaskMix::synthetic("default", 1, 3, seed)],
             faults: vec![FaultPlan::none()],
+            nvms: vec![NvmSpec::ideal()],
             n_reps: 1,
             duration_ms: 30_000.0,
             queue_size: 3,
@@ -272,6 +279,13 @@ impl ScenarioMatrix {
         self
     }
 
+    /// Set the NVM commit-policy axis (one scenario per entry).
+    pub fn nvms(mut self, v: Vec<NvmSpec>) -> Self {
+        assert!(!v.is_empty());
+        self.nvms = v;
+        self
+    }
+
     pub fn reps(mut self, n: u64) -> Self {
         assert!(n > 0);
         self.n_reps = n;
@@ -311,6 +325,7 @@ impl ScenarioMatrix {
             * self.schedulers.len()
             * self.exits.len()
             * self.faults.len()
+            * self.nvms.len()
             * self.n_reps as usize
     }
 
@@ -328,48 +343,53 @@ impl ScenarioMatrix {
                     for &scheduler in &self.schedulers {
                         for &exit_choice in &self.exits {
                             for &fault in &self.faults {
-                                for rep in 0..self.n_reps {
-                                    let engine_seed = match self.seed_policy {
-                                        SeedPolicy::PerScenario => {
-                                            Pcg32::new(self.seed, index as u64).next_u64()
-                                        }
-                                        SeedPolicy::PairedEnvironment => {
-                                            // Only the stream-generating
-                                            // dims (mix, harvester, rep):
-                                            // identical harvest + release
-                                            // streams across scheduler /
-                                            // exit / fault / capacitor.
-                                            // Storage size does not alter
-                                            // what arrives, only what can
-                                            // be banked — so capacitor
-                                            // cells stay paired too.
-                                            let env = (mix_i * self.harvesters.len()
-                                                + h_i)
-                                                as u64
-                                                * self.n_reps
-                                                + rep;
-                                            Pcg32::new(self.seed, env).next_u64()
-                                        }
-                                    };
-                                    out.push(Scenario {
-                                        index,
-                                        matrix_seed: self.seed,
-                                        harvester: *harvester,
-                                        capacitor_mf,
-                                        precharge: self.precharge,
-                                        scheduler,
-                                        exit: exit_choice
-                                            .unwrap_or_else(|| scheduler.default_exit()),
-                                        mix: mix.clone(),
-                                        rep,
-                                        fault,
-                                        duration_ms: self.duration_ms,
-                                        queue_size: self.queue_size,
-                                        release_jitter: self.release_jitter,
-                                        log_jobs: self.log_jobs,
-                                        engine_seed,
-                                    });
-                                    index += 1;
+                                for &nvm in &self.nvms {
+                                    for rep in 0..self.n_reps {
+                                        let engine_seed = match self.seed_policy {
+                                            SeedPolicy::PerScenario => {
+                                                Pcg32::new(self.seed, index as u64).next_u64()
+                                            }
+                                            SeedPolicy::PairedEnvironment => {
+                                                // Only the stream-generating
+                                                // dims (mix, harvester, rep):
+                                                // identical harvest + release
+                                                // streams across scheduler /
+                                                // exit / fault / capacitor /
+                                                // NVM policy. Storage size
+                                                // and persistence policy do
+                                                // not alter what arrives,
+                                                // only what can be banked or
+                                                // kept — so those cells stay
+                                                // paired too.
+                                                let env = (mix_i * self.harvesters.len()
+                                                    + h_i)
+                                                    as u64
+                                                    * self.n_reps
+                                                    + rep;
+                                                Pcg32::new(self.seed, env).next_u64()
+                                            }
+                                        };
+                                        out.push(Scenario {
+                                            index,
+                                            matrix_seed: self.seed,
+                                            harvester: *harvester,
+                                            capacitor_mf,
+                                            precharge: self.precharge,
+                                            scheduler,
+                                            exit: exit_choice
+                                                .unwrap_or_else(|| scheduler.default_exit()),
+                                            mix: mix.clone(),
+                                            rep,
+                                            fault,
+                                            nvm,
+                                            duration_ms: self.duration_ms,
+                                            queue_size: self.queue_size,
+                                            release_jitter: self.release_jitter,
+                                            log_jobs: self.log_jobs,
+                                            engine_seed,
+                                        });
+                                        index += 1;
+                                    }
                                 }
                             }
                         }
@@ -447,6 +467,36 @@ mod tests {
         assert_eq!(a.next_u64(), b.next_u64());
         let mut c = sc[6].stream();
         assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn nvm_axis_multiplies_and_stays_paired() {
+        let m = two_by_two()
+            .nvms(vec![NvmSpec::ideal(), NvmSpec::fram_unit_boundary(), NvmSpec::fram_jit()])
+            .seed_policy(SeedPolicy::PairedEnvironment);
+        assert_eq!(m.len(), 2 * 2 * 3 * 3);
+        let sc = m.expand();
+        assert_eq!(sc.len(), 36);
+        // NVM twins replay identical harvest + release streams: same
+        // (mix, harvester, rep) but different policy → same engine seed.
+        for s in &sc {
+            let twin = sc
+                .iter()
+                .find(|o| {
+                    o.index != s.index
+                        && o.rep == s.rep
+                        && o.harvester.label() == s.harvester.label()
+                        && o.nvm != s.nvm
+                })
+                .expect("each cell has an NVM twin");
+            assert_eq!(twin.engine_seed, s.engine_seed);
+        }
+        // Cell labels carry the policy and stay unique.
+        let mut labels: Vec<String> = sc.iter().map(|s| s.label()).collect();
+        assert!(labels[0].contains("ideal+frag"), "{}", labels[0]);
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 36);
     }
 
     #[test]

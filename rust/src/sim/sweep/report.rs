@@ -46,6 +46,11 @@ pub struct SummaryStats {
     pub deadline_missed: u64,
     pub reboots: u64,
     pub refragments: u64,
+    pub commits: u64,
+    pub restores: u64,
+    pub lost_fragments: u64,
+    pub commit_mj: f64,
+    pub restore_mj: f64,
     pub harvested_mj: f64,
     pub wasted_mj: f64,
     pub scheduled_rate_mean: f64,
@@ -70,6 +75,11 @@ impl SummaryStats {
             s.deadline_missed += m.deadline_missed;
             s.reboots += m.reboots;
             s.refragments += m.refragments;
+            s.commits += m.commits;
+            s.restores += m.restores;
+            s.lost_fragments += m.lost_fragments;
+            s.commit_mj += m.commit_mj;
+            s.restore_mj += m.restore_mj;
             s.harvested_mj += m.harvested_mj;
             s.wasted_mj += m.wasted_mj;
             rate.push(m.event_scheduled_rate());
@@ -98,6 +108,11 @@ impl SummaryStats {
         num("deadline_missed", self.deadline_missed as f64);
         num("reboots", self.reboots as f64);
         num("refragments", self.refragments as f64);
+        num("commits", self.commits as f64);
+        num("restores", self.restores as f64);
+        num("lost_fragments", self.lost_fragments as f64);
+        num("commit_mj", self.commit_mj);
+        num("restore_mj", self.restore_mj);
         num("harvested_mj", self.harvested_mj);
         num("wasted_mj", self.wasted_mj);
         num("scheduled_rate_mean", self.scheduled_rate_mean);

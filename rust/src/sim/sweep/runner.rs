@@ -67,7 +67,7 @@ pub fn build_engine(sc: &Scenario) -> Engine {
 
     let energy = EnergyManager::new(cap, harvester, eta, e_man);
     let params = PriorityParams::new(max_deadline, max_utility);
-    Engine::new(
+    let mut engine = Engine::new(
         SimConfig {
             duration_ms: sc.duration_ms,
             queue_size: sc.queue_size,
@@ -81,7 +81,11 @@ pub fn build_engine(sc: &Scenario) -> Engine {
         sc.exit,
         energy,
         sc.fault.clock.build(clock_seed),
-    )
+    );
+    // Nonvolatile-progress model: the JIT threshold is an absolute voltage
+    // derived from this scenario's capacitor.
+    engine.nvm = crate::nvm::Nvm::build(sc.nvm, &engine.energy.capacitor);
+    engine
 }
 
 /// Run one scenario to completion (a pure function of the scenario).
@@ -98,7 +102,7 @@ pub fn run_scenario(sc: &Scenario) -> CellResult {
 /// Run a scenario list on `threads` workers; results come back in
 /// scenario-index order regardless of completion order.
 pub fn run_scenarios(scenarios: &[Scenario], threads: usize) -> Vec<CellResult> {
-    let threads = threads.max(1).min(scenarios.len().max(1));
+    let threads = threads.clamp(1, scenarios.len().max(1));
     if threads <= 1 {
         return scenarios.iter().map(run_scenario).collect();
     }
@@ -178,5 +182,20 @@ mod tests {
     fn more_threads_than_scenarios_is_fine() {
         let r = run_matrix(&tiny_matrix(), 64);
         assert_eq!(r.cells.len(), 4);
+    }
+
+    #[test]
+    fn nvm_axis_is_deterministic_across_thread_counts() {
+        use crate::nvm::NvmSpec;
+        let m = tiny_matrix().nvms(vec![
+            NvmSpec::ideal(),
+            NvmSpec::fram_every_fragment(),
+            NvmSpec::fram_unit_boundary(),
+            NvmSpec::fram_jit(),
+        ]);
+        let a = run_matrix(&m, 1);
+        let b = run_matrix(&m, 4);
+        assert_eq!(a.n_scenarios, 16);
+        assert_eq!(a.json_string(), b.json_string());
     }
 }

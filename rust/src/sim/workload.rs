@@ -28,6 +28,14 @@ pub fn task_from_network(
         unit_energy_mj: net.meta.layers.iter().map(|l| l.energy_mj).collect(),
         unit_fragments: net.meta.layers.iter().map(|l| l.n_fragments).collect(),
         release_energy_mj: net.meta.cost.job_generator_energy_mj,
+        // Checkpoint footprint per unit: its f32 activation buffer (the
+        // state a fragment-boundary commit must persist to NVM).
+        unit_state_bytes: net
+            .meta
+            .layers
+            .iter()
+            .map(|l| 4 * l.act_shape.iter().product::<usize>().max(1))
+            .collect(),
         traces,
         imprecise: true,
     }
@@ -83,6 +91,9 @@ pub fn synthetic_task(
         unit_energy_mj: vec![2.0; n_units],
         unit_fragments: vec![4; n_units],
         release_energy_mj: 0.05,
+        // A small 2 KB activation buffer per unit (the synthetic agile
+        // DNN's checkpoint footprint for the NVM commit-cost model).
+        unit_state_bytes: vec![2048; n_units],
         traces: Arc::new(traces),
         imprecise: true,
     }
@@ -154,7 +165,7 @@ mod tests {
         for t in a.traces.iter() {
             assert_eq!(t.units.len(), 3);
             assert_eq!(t.units.iter().filter(|u| u.exit).count(), 1);
-            assert_eq!(t.units[t.exit_unit].exit, true);
+            assert!(t.units[t.exit_unit].exit);
             for u in &t.units {
                 // `correct` is consistent with pred-vs-label.
                 assert_eq!(u.correct, u.pred == t.label);

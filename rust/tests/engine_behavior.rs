@@ -36,6 +36,7 @@ fn task(id: usize, period: f64, deadline: f64, exit_at: usize) -> TaskSpec {
         unit_energy_mj: vec![3.3; 4], // 110 mW at 30 ms/unit
         unit_fragments: vec![4; 4],
         release_energy_mj: 0.1,
+        unit_state_bytes: vec![2048; 4],
         traces: Arc::new(vec![trace(exit_at, 4)]),
         imprecise: true,
     }

@@ -36,6 +36,7 @@ fn spec() -> TaskSpec {
         unit_energy_mj: vec![1.0; 4],
         unit_fragments: vec![1; 4],
         release_energy_mj: 0.0,
+        unit_state_bytes: vec![2048; 4],
         traces: Arc::new(vec![trace(0, 4), trace(1, 4)]),
         imprecise: true,
     }
@@ -128,6 +129,7 @@ fn figure1_imprecise_fixes_the_missed_deadline() {
         // the capacitor's boot-to-brownout band or no progress is possible.
         unit_fragments: vec![70; 4],
         release_energy_mj: 0.0,
+        unit_state_bytes: vec![2048; 4],
         traces: Arc::new(vec![trace(mandatory_units - 1, 4)]),
         imprecise: true,
     };

@@ -43,6 +43,7 @@ fn rand_task(rng: &mut Pcg32, id: usize, size: Size) -> TaskSpec {
         unit_energy_mj: (0..n_units).map(|_| 0.5 + rng.f64() * 5.0).collect(),
         unit_fragments: (0..n_units).map(|_| 1 + rng.below(8) as usize).collect(),
         release_energy_mj: rng.f64() * 2.0,
+        unit_state_bytes: (0..n_units).map(|_| 256 + rng.below(8192) as usize).collect(),
         traces: Arc::new((0..n_traces).map(|_| rand_trace(rng, n_units)).collect()),
         imprecise: true,
     }

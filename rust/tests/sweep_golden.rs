@@ -12,6 +12,7 @@
 //! back-to-back starting at its release.
 
 use zygarde::coordinator::sched::{ExitPolicy, SchedulerKind};
+use zygarde::nvm::{CommitPolicy, NvmModelKind, NvmSpec};
 use zygarde::sim::sweep::{run_matrix, HarvesterSpec, ScenarioMatrix, TaskMix};
 use zygarde::sim::workload::synthetic_task;
 
@@ -85,6 +86,50 @@ fn golden_summary_matches_first_principles() {
     // generator is deterministic, so these are fixed for GOLDEN_SEED.
     assert!(expected_correct >= (N_JOBS / 2) as u64, "traces mostly correct");
     assert!((m.sim_time_ms - 30_000.0).abs() < 1e-9);
+
+    // NVM accounting under the default (ideal every-fragment) policy:
+    // one commit per successful fragment, all free, nothing ever lost.
+    assert_eq!(m.commits, 4 * 3 * N_JOBS as u64);
+    assert_eq!(m.commit_mj, 0.0);
+    assert_eq!(m.lost_fragments, 0);
+    assert_eq!(m.restores, 0, "persistent supply never reboots mid-run");
+}
+
+/// The golden contract of the NVM subsystem: `EveryFragment` with zero
+/// commit cost *is* the blessed golden, bitwise — and a zero-cost
+/// `UnitBoundary` run has identical dynamics (free commits disturb
+/// neither time nor energy nor RNG), differing only in commit counts:
+/// 300 unit commits instead of 1200 fragment commits.
+#[test]
+fn zero_cost_policies_reproduce_golden_dynamics_bitwise() {
+    let (_task, matrix) = golden_matrix();
+    let default_json = run_matrix(&matrix, 1).json_string();
+
+    let explicit = matrix.clone().nvms(vec![NvmSpec::ideal()]);
+    assert_eq!(
+        run_matrix(&explicit, 1).json_string(),
+        default_json,
+        "explicit zero-cost EveryFragment must be the golden, bitwise"
+    );
+
+    let unit_matrix = matrix.clone().nvms(vec![NvmSpec {
+        model: NvmModelKind::Ideal,
+        policy: CommitPolicy::UnitBoundary,
+    }]);
+    let unit = run_matrix(&unit_matrix, 1);
+    let m = &unit.cells[0].metrics;
+    assert_eq!(m.commits, 3 * N_JOBS as u64, "one commit per completed unit");
+    assert_eq!(m.commit_mj, 0.0);
+    // Same dynamics as the golden cell on every non-NVM counter.
+    let golden = run_matrix(&matrix, 1);
+    let g = &golden.cells[0].metrics;
+    assert_eq!(m.released, g.released);
+    assert_eq!(m.scheduled, g.scheduled);
+    assert_eq!(m.correct, g.correct);
+    assert_eq!(m.fragments, g.fragments);
+    assert_eq!(m.latency_sum_ms, g.latency_sum_ms);
+    assert_eq!(m.harvested_mj, g.harvested_mj);
+    assert_eq!(m.consumed_mj, g.consumed_mj);
 }
 
 /// Full-precision snapshot (bless pattern): the first run writes

@@ -5,13 +5,17 @@
 //!
 //! 1. capacitor energy never goes negative (and never exceeds capacity),
 //! 2. no job is counted as scheduled after its deadline,
-//! 3. fragment re-execution never double-counts completed work.
+//! 3. fragment re-execution never double-counts completed work,
+//! 4. NVM accounting: commits never exceed executed fragments, rollbacks
+//!    never lose more than was completed, and total energy is conserved
+//!    including commit/restore costs.
 
 use std::cell::Cell;
 use std::rc::Rc;
 
 use zygarde::coordinator::sched::SchedulerKind;
 use zygarde::energy::harvester::HarvesterKind;
+use zygarde::nvm::{NvmModelKind, NvmSpec};
 use zygarde::sim::sweep::{
     build_engine, FaultPlan, HarvesterSpec, Scenario, ScenarioMatrix, TaskMix,
 };
@@ -51,12 +55,19 @@ fn random_scenario(rng: &mut Pcg32, size: Size) -> Scenario {
             rng.f64() * 300.0,
         )
     };
+    let nvm = *rng.choice(&[
+        NvmSpec::ideal(),
+        NvmSpec::fram_every_fragment(),
+        NvmSpec::fram_unit_boundary(),
+        NvmSpec::fram_jit(),
+    ]);
     ScenarioMatrix::new("prop", rng.next_u64())
         .mixes(vec![TaskMix::synthetic("m", n_tasks, n_units, rng.next_u64())])
         .harvesters(vec![harvester])
         .capacitors_mf(vec![capacitor_mf])
         .schedulers(vec![scheduler])
         .faults(vec![fault])
+        .nvms(vec![nvm])
         .precharge(rng.chance(0.7))
         .queue_size(1 + rng.below(3) as usize)
         .duration_ms(2_000.0 + 1_000.0 * size.0.min(6) as f64)
@@ -149,17 +160,102 @@ fn fragment_reexecution_never_double_counts() {
             ));
         }
         // Successes beyond completed units are partial in-flight unit
-        // progress: strictly less than one unit's worth per released job.
-        if successful >= (units + m.released + 1) * FRAGS_PER_UNIT {
+        // progress (strictly less than one unit's worth per released job)
+        // plus whatever NVM rollbacks forced into re-execution.
+        if successful >= (units + m.released + 1) * FRAGS_PER_UNIT + m.lost_fragments {
             return Err(format!(
                 "fragment successes double-counted: successful={successful} \
-                 units={units} released={}",
-                m.released
+                 units={units} released={} lost={}",
+                m.released, m.lost_fragments
             ));
         }
         // Every released job is scheduled, missed, dropped, or in-queue.
         if m.scheduled + m.deadline_missed + m.queue_dropped > m.released {
             return Err(format!("job accounting identity violated: {m:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn nvm_commit_and_rollback_accounting() {
+    forall("nvm-accounting", cfg(), random_scenario, |sc| {
+        let m = build_engine(sc).run();
+        let successful = m.fragments - m.refragments;
+        // Committed work can never exceed executed work: each commit
+        // transaction follows at least one fragment success or unit
+        // completion that made state dirty.
+        if m.commits > successful + m.mandatory_units + m.optional_units + 1 {
+            return Err(format!(
+                "more commits than commit points: commits={} successful={successful} \
+                 units={}",
+                m.commits,
+                m.mandatory_units + m.optional_units
+            ));
+        }
+        // A rollback can only lose fragments that actually completed.
+        if m.lost_fragments > successful {
+            return Err(format!(
+                "lost more fragments than ever succeeded: lost={} successful={successful}",
+                m.lost_fragments
+            ));
+        }
+        // JIT commits are a subset of all commits; restores follow reboots.
+        if m.jit_commits > m.commits {
+            return Err(format!("jit {} > commits {}", m.jit_commits, m.commits));
+        }
+        if m.restores > m.reboots {
+            return Err(format!("restores {} > reboots {}", m.restores, m.reboots));
+        }
+        // The ideal model charges nothing — and the ideal every-fragment
+        // policy (the default) never has uncommitted work to lose.
+        if sc.nvm.model == NvmModelKind::Ideal {
+            if m.commit_mj != 0.0 || m.restore_mj != 0.0 {
+                return Err(format!(
+                    "ideal NVM charged energy: commit={} restore={}",
+                    m.commit_mj, m.restore_mj
+                ));
+            }
+            if sc.nvm == NvmSpec::ideal() && m.lost_fragments != 0 {
+                return Err(format!(
+                    "ideal every-fragment lost work: {}",
+                    m.lost_fragments
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn energy_conserved_including_commit_and_restore() {
+    forall("nvm-energy-conservation", cfg(), random_scenario, |sc| {
+        let m = build_engine(sc).run();
+        // Everything that entered storage either remains, was clipped at
+        // the rail (wasted), or was drawn (fragments, idle, sensor reads,
+        // NVM commits and restores, brownout remnants).
+        let lhs = m.initial_energy_mj + m.harvested_mj;
+        let rhs = m.final_energy_mj + m.wasted_mj + m.consumed_mj;
+        let tol = 1e-6 * (1.0 + lhs.abs());
+        if (lhs - rhs).abs() > tol {
+            return Err(format!(
+                "energy not conserved: initial {} + harvested {} != final {} + \
+                 wasted {} + consumed {} (diff {})",
+                m.initial_energy_mj,
+                m.harvested_mj,
+                m.final_energy_mj,
+                m.wasted_mj,
+                m.consumed_mj,
+                lhs - rhs
+            ));
+        }
+        // NVM spending is part of (not on top of) the consumed total.
+        if m.commit_mj + m.restore_mj > m.consumed_mj + tol {
+            return Err(format!(
+                "NVM charged {} mJ but only {} mJ was ever drawn",
+                m.commit_mj + m.restore_mj,
+                m.consumed_mj
+            ));
         }
         Ok(())
     });
