@@ -1,23 +1,28 @@
 //! Sweep-engine throughput: scenarios/sec at 1, 2, 4, and 8 threads over
 //! a synthetic 96-scenario matrix (no artifacts needed), cross-checking
-//! that every thread count produces the byte-identical report, plus a
-//! per-NVM-commit-policy throughput section (the commit path is on the
-//! engine's hot loop).
+//! that every thread count produces the byte-identical report; a
+//! per-NVM-commit-policy section (the commit path is on the engine's hot
+//! loop); and a sharded-execution section that spawns N single-threaded
+//! `zygarde sweep --shard i/N` processes, merges their PartialReports,
+//! and cross-checks the merge against the in-process reference — the
+//! N-processes-vs-N-threads comparison the scale-out story rests on.
 //!
 //! Run with `cargo bench --bench bench_sweep`. Scale the workload with
 //! SWEEP_BENCH_REPS (default 4 reps → 96 scenarios) and
 //! SWEEP_BENCH_DURATION_MS (default 20000 ms of simulated time per cell).
 //!
 //! Emits a machine-readable `BENCH_sweep.json` (path overridable via
-//! SWEEP_BENCH_JSON) so the perf trajectory is tracked across PRs.
+//! SWEEP_BENCH_JSON) so the perf trajectory is tracked across PRs;
+//! `tools/bench_gate.py` diffs it against the committed
+//! `BENCH_baseline.json` in CI and fails on a >30 % throughput drop.
 
 use std::collections::BTreeMap;
+use std::process::Command;
 use std::time::Instant;
 
-use zygarde::coordinator::sched::SchedulerKind;
-use zygarde::energy::harvester::HarvesterKind;
+use zygarde::exp::sweep_cli::bench_matrix;
 use zygarde::nvm::NvmSpec;
-use zygarde::sim::sweep::{run_matrix, FaultPlan, HarvesterSpec, ScenarioMatrix, TaskMix};
+use zygarde::sim::sweep::{merge, run_matrix, PartialReport};
 use zygarde::util::json::Value;
 
 fn env_u64(key: &str, default: u64) -> u64 {
@@ -36,34 +41,11 @@ fn main() {
     let reps = env_u64("SWEEP_BENCH_REPS", 4);
     let duration_ms = env_u64("SWEEP_BENCH_DURATION_MS", 20_000) as f64;
 
-    // 2 harvesters × 1 cap × 3 schedulers × 2 faults × reps → 12·reps
-    // scenarios, plus a second mix doubling it: 24·reps (96 at default).
-    let matrix = ScenarioMatrix::new("bench-sweep", 0xB5EE9)
-        .mixes(vec![
-            TaskMix::synthetic("uni", 1, 3, 11),
-            TaskMix::synthetic("duo", 2, 3, 12),
-        ])
-        .harvesters(vec![
-            HarvesterSpec::Persistent { power_mw: 600.0 },
-            HarvesterSpec::Markov {
-                kind: HarvesterKind::Rf,
-                on_power_mw: 120.0,
-                q: 0.9,
-                duty: 0.6,
-                eta: 0.51,
-            },
-        ])
-        .schedulers(vec![
-            SchedulerKind::Zygarde,
-            SchedulerKind::EdfMandatory,
-            SchedulerKind::Edf,
-        ])
-        .faults(vec![
-            FaultPlan::none(),
-            FaultPlan::none().with_brownouts(2_000.0, 400.0, 250.0),
-        ])
-        .reps(reps)
-        .duration_ms(duration_ms);
+    // The shared bench grid (exp::sweep_cli::bench_matrix): 2 mixes ×
+    // 2 harvesters × 3 schedulers × 2 faults × reps → 24·reps scenarios
+    // (96 at default). Shared with the CLI so the sharded rows below run
+    // the exact same matrix in child processes.
+    let matrix = bench_matrix(reps, duration_ms);
 
     let n = matrix.len();
     println!("bench-sweep: {n} scenarios × {duration_ms} ms simulated each\n");
@@ -87,6 +69,79 @@ fn main() {
             &reference, json,
             "thread count {threads} changed the report — determinism broken"
         );
+    }
+
+    // --- sharded execution: N single-threaded processes vs N threads ----
+    // Spawns the real CLI (`zygarde sweep --matrix bench --shard i/N`), so
+    // the measured rate includes process startup, matrix expansion, and
+    // shard-file serialization — the true cross-host orchestration cost.
+    println!();
+    let exe = env!("CARGO_BIN_EXE_zygarde");
+    let pid = std::process::id();
+    let mut shard_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &procs in &[2usize, 4] {
+        let paths: Vec<std::path::PathBuf> = (0..procs)
+            .map(|i| {
+                std::env::temp_dir().join(format!("zygarde_bench_{pid}_shard_{i}_of_{procs}.json"))
+            })
+            .collect();
+        let t0 = Instant::now();
+        let children: Vec<_> = (0..procs)
+            .map(|i| {
+                Command::new(exe)
+                    .args([
+                        "sweep",
+                        "--matrix",
+                        "bench",
+                        "--reps",
+                        &reps.to_string(),
+                        "--duration-ms",
+                        &duration_ms.to_string(),
+                        "--shard",
+                        &format!("{i}/{procs}"),
+                        "--threads",
+                        "1",
+                        "--out",
+                        paths[i].to_str().unwrap(),
+                    ])
+                    .stdout(std::process::Stdio::null())
+                    .spawn()
+                    .expect("spawning zygarde sweep shard process")
+            })
+            .collect();
+        for mut c in children {
+            let status = c.wait().expect("waiting for shard process");
+            assert!(status.success(), "shard process failed: {status}");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let rate = n as f64 / dt;
+        let threads_rate = runs
+            .iter()
+            .find(|(t, ..)| *t == procs)
+            .map(|(_, r, ..)| *r)
+            .unwrap_or(f64::NAN);
+        println!(
+            "shards  {procs}x1-thread procs: {rate:>8.1} scenarios/s  ({dt:.3} s, \
+             {:.2}x of {procs}-thread in-process)",
+            rate / threads_rate
+        );
+
+        // The merged shard files must reproduce the in-process report
+        // byte-for-byte — the determinism contract, now across processes.
+        let parts: Vec<PartialReport> = paths
+            .iter()
+            .map(|p| PartialReport::from_file(p).expect("reading shard report"))
+            .collect();
+        let merged = merge(&parts).expect("merging shard reports");
+        assert_eq!(
+            merged.json_string(),
+            reference,
+            "{procs}-process sharded run diverged from the in-process report"
+        );
+        for p in &paths {
+            let _ = std::fs::remove_file(p);
+        }
+        shard_rows.push((procs, rate, dt));
     }
 
     // --- NVM commit-policy rows: the commit path rides the fragment hot
@@ -128,6 +183,21 @@ fn main() {
                     .map(|(threads, rate, secs, _)| {
                         obj(vec![
                             ("threads", Value::Num(*threads as f64)),
+                            ("scenarios_per_s", Value::Num(*rate)),
+                            ("secs", Value::Num(*secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "sharded",
+            Value::Arr(
+                shard_rows
+                    .iter()
+                    .map(|(procs, rate, secs)| {
+                        obj(vec![
+                            ("processes", Value::Num(*procs as f64)),
                             ("scenarios_per_s", Value::Num(*rate)),
                             ("secs", Value::Num(*secs)),
                         ])

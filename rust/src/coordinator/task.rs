@@ -77,31 +77,14 @@ pub enum JobState {
     Exhausted,
 }
 
-/// The durable (committed-to-NVM) snapshot of a job's progress. On a
-/// power failure the engine rolls the volatile fields of [`Job`] back to
-/// this point; everything since re-executes (idempotent fragments).
+/// One job's execution progress — every field that advances as fragments
+/// and units complete. [`Job`] embeds it **twice**: once volatile (the
+/// live SRAM state, reachable transparently through `Deref`) and once
+/// committed (the durable rollback target), so checkpoint and rollback
+/// are single struct assignments and a future progress field cannot
+/// silently escape either path.
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub struct JobCheckpoint {
-    pub next_unit: usize,
-    pub fragments_done: usize,
-    pub state: JobState,
-    pub utility: f32,
-    pub pred: Option<i32>,
-    pub mandatory_done: bool,
-    pub mandatory_done_at: Option<f64>,
-    pub units_done: usize,
-}
-
-/// One job instance in the queue.
-#[derive(Clone, Debug)]
-pub struct Job {
-    pub task: usize,
-    pub id: u64,
-    pub release_ms: f64,
-    /// Absolute deadline (release + D_i).
-    pub deadline_ms: f64,
-    /// Index into the task's trace set (the data sample).
-    pub trace_idx: usize,
+pub struct Progress {
     /// Next unit to execute.
     pub next_unit: usize,
     /// Fragments completed within the current unit.
@@ -117,14 +100,16 @@ pub struct Job {
     /// Completion time of the mandatory part, if any.
     pub mandatory_done_at: Option<f64>,
     pub units_done: usize,
-    /// Last committed (durable) progress; the rollback target on power
-    /// failure. Maintained by the engine per its `CommitPolicy`.
-    pub committed: JobCheckpoint,
 }
 
-impl Job {
-    pub fn new(task: &TaskSpec, id: u64, release_ms: f64, trace_idx: usize) -> Job {
-        let fresh = JobCheckpoint {
+/// The durable (committed-to-NVM) snapshot of a job's progress has the
+/// same shape as the live progress — they are the same struct.
+pub type JobCheckpoint = Progress;
+
+impl Progress {
+    /// A brand-new job: nothing executed, maximally uncertain.
+    pub fn fresh() -> Progress {
+        Progress {
             next_unit: 0,
             fragments_done: 0,
             state: JobState::Mandatory,
@@ -133,60 +118,18 @@ impl Job {
             mandatory_done: false,
             mandatory_done_at: None,
             units_done: 0,
-        };
-        Job {
-            task: task.id,
-            id,
-            release_ms,
-            deadline_ms: release_ms + task.deadline_ms,
-            trace_idx,
-            next_unit: 0,
-            fragments_done: 0,
-            state: JobState::Mandatory,
-            utility: 0.0,
-            pred: None,
-            mandatory_done: false,
-            mandatory_done_at: None,
-            units_done: 0,
-            committed: fresh,
         }
     }
 
-    /// Snapshot the volatile progress fields.
-    pub fn snapshot(&self) -> JobCheckpoint {
-        JobCheckpoint {
-            next_unit: self.next_unit,
-            fragments_done: self.fragments_done,
-            state: self.state,
-            utility: self.utility,
-            pred: self.pred,
-            mandatory_done: self.mandatory_done,
-            mandatory_done_at: self.mandatory_done_at,
-            units_done: self.units_done,
-        }
+    /// Any progress worth restoring after a reboot?
+    pub fn any(&self) -> bool {
+        self.next_unit > 0 || self.fragments_done > 0 || self.units_done > 0
     }
 
-    /// Make the current volatile progress durable.
-    pub fn checkpoint(&mut self) {
-        self.committed = self.snapshot();
-    }
-
-    /// Volatile progress ahead of the last commit?
-    pub fn is_dirty(&self) -> bool {
-        self.snapshot() != self.committed
-    }
-
-    /// Any durable progress worth restoring after a reboot?
-    pub fn has_committed_progress(&self) -> bool {
-        self.committed.next_unit > 0
-            || self.committed.fragments_done > 0
-            || self.committed.units_done > 0
-    }
-
-    /// The unit whose activation buffer is live in volatile memory: the
-    /// executing unit mid-unit, or the just-completed unit at a boundary
-    /// (its output is the next unit's input). This is the buffer a
-    /// checkpoint must persist and a restore must read back.
+    /// The unit whose activation buffer is live at this progress point:
+    /// the executing unit mid-unit, or the just-completed unit at a
+    /// boundary (its output is the next unit's input). This is the buffer
+    /// a checkpoint must persist and a restore must read back.
     pub fn active_unit(&self, n_units: usize) -> usize {
         if self.fragments_done == 0 && self.next_unit > 0 {
             (self.next_unit - 1).min(n_units - 1)
@@ -195,42 +138,102 @@ impl Job {
         }
     }
 
-    /// [`Job::active_unit`] evaluated on the committed checkpoint.
-    pub fn committed_active_unit(&self, n_units: usize) -> usize {
-        if self.committed.fragments_done == 0 && self.committed.next_unit > 0 {
-            (self.committed.next_unit - 1).min(n_units - 1)
-        } else {
-            self.committed.next_unit.min(n_units.saturating_sub(1))
-        }
-    }
-
-    /// Total fragment-granularity progress of the volatile state.
+    /// Total fragment-granularity progress.
     pub fn progress_fragments(&self, spec: &TaskSpec) -> u64 {
         let done: usize = spec.unit_fragments.iter().take(self.next_unit).sum();
         (done + self.fragments_done) as u64
     }
+}
 
-    /// Total fragment-granularity progress of the committed state.
-    pub fn committed_progress_fragments(&self, spec: &TaskSpec) -> u64 {
-        let done: usize = spec.unit_fragments.iter().take(self.committed.next_unit).sum();
-        (done + self.committed.fragments_done) as u64
+/// One job instance in the queue. Progress fields (`next_unit`,
+/// `fragments_done`, `state`, …) live in [`Job::progress`] and are read
+/// and written through `Deref`/`DerefMut`, so `job.next_unit` keeps
+/// working at every call site.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub task: usize,
+    pub id: u64,
+    pub release_ms: f64,
+    /// Absolute deadline (release + D_i).
+    pub deadline_ms: f64,
+    /// Index into the task's trace set (the data sample).
+    pub trace_idx: usize,
+    /// Volatile (SRAM) progress — what executes and what a power failure
+    /// destroys.
+    pub progress: Progress,
+    /// Last committed (durable) progress; the rollback target on power
+    /// failure. Maintained by the engine per its `CommitPolicy`.
+    pub committed: Progress,
+}
+
+impl std::ops::Deref for Job {
+    type Target = Progress;
+
+    fn deref(&self) -> &Progress {
+        &self.progress
+    }
+}
+
+impl std::ops::DerefMut for Job {
+    fn deref_mut(&mut self) -> &mut Progress {
+        &mut self.progress
+    }
+}
+
+impl Job {
+    pub fn new(task: &TaskSpec, id: u64, release_ms: f64, trace_idx: usize) -> Job {
+        Job {
+            task: task.id,
+            id,
+            release_ms,
+            deadline_ms: release_ms + task.deadline_ms,
+            trace_idx,
+            progress: Progress::fresh(),
+            committed: Progress::fresh(),
+        }
     }
 
-    /// Power failed: discard volatile progress, return to the last commit.
+    /// Snapshot the volatile progress (one struct copy).
+    pub fn snapshot(&self) -> JobCheckpoint {
+        self.progress
+    }
+
+    /// Make the current volatile progress durable (one struct assignment).
+    pub fn checkpoint(&mut self) {
+        self.committed = self.progress;
+    }
+
+    /// Volatile progress ahead of the last commit?
+    pub fn is_dirty(&self) -> bool {
+        self.progress != self.committed
+    }
+
+    /// Any durable progress worth restoring after a reboot?
+    pub fn has_committed_progress(&self) -> bool {
+        self.committed.any()
+    }
+
+    /// [`Progress::active_unit`] evaluated on the committed checkpoint
+    /// (the volatile variant is reachable directly as `job.active_unit`).
+    pub fn committed_active_unit(&self, n_units: usize) -> usize {
+        self.committed.active_unit(n_units)
+    }
+
+    /// Total fragment-granularity progress of the committed state (the
+    /// volatile variant is reachable directly as `job.progress_fragments`).
+    pub fn committed_progress_fragments(&self, spec: &TaskSpec) -> u64 {
+        self.committed.progress_fragments(spec)
+    }
+
+    /// Power failed: discard volatile progress, return to the last commit
+    /// (one struct assignment — no field can be forgotten).
     /// Returns the number of completed-but-uncommitted fragments lost.
     pub fn rollback(&mut self, spec: &TaskSpec) -> u64 {
         let lost = self
+            .progress
             .progress_fragments(spec)
-            .saturating_sub(self.committed_progress_fragments(spec));
-        let c = self.committed;
-        self.next_unit = c.next_unit;
-        self.fragments_done = c.fragments_done;
-        self.state = c.state;
-        self.utility = c.utility;
-        self.pred = c.pred;
-        self.mandatory_done = c.mandatory_done;
-        self.mandatory_done_at = c.mandatory_done_at;
-        self.units_done = c.units_done;
+            .saturating_sub(self.committed.progress_fragments(spec));
+        self.progress = self.committed;
         lost
     }
 
@@ -408,6 +411,25 @@ mod tests {
         assert_eq!(j.active_unit(3), 1);
         j.checkpoint();
         assert_eq!(j.committed_active_unit(3), 1);
+    }
+
+    #[test]
+    fn rollback_and_checkpoint_are_whole_struct_assignments() {
+        let s = spec(3);
+        let t = trace(&[false, true, false]);
+        let mut j = Job::new(&s, 0, 0.0, 0);
+        assert_eq!(j.progress, Progress::fresh());
+        j.fragments_done = 4;
+        j.complete_unit(&t, 3, 10.0);
+        j.checkpoint();
+        assert_eq!(j.progress, j.committed, "checkpoint copies every field");
+        j.fragments_done = 2;
+        j.utility = 3.5;
+        assert!(j.is_dirty());
+        j.rollback(&s);
+        assert_eq!(j.progress, j.committed, "rollback restores every field");
+        assert_eq!(j.snapshot(), j.committed);
+        assert_eq!(j.utility, 0.5, "utility rolled back with the rest");
     }
 
     #[test]

@@ -8,14 +8,18 @@ use std::sync::Arc;
 use crate::dnn::network::Network;
 use crate::dnn::trace::compute_traces;
 use crate::energy::harvester::HarvesterKind;
+use crate::nvm::NvmSpec;
 use crate::sim::metrics::Metrics;
-use crate::sim::sweep::{self, HarvesterSpec, ScenarioMatrix, SeedPolicy, TaskMix};
+use crate::sim::sweep::{self, HarvesterSpec, ScenarioMatrix, SeedPolicy, SweepReport, TaskMix};
 use crate::sim::workload::task_from_network;
 
 use super::common::{pct, print_header, print_row};
 
 pub struct CapacitorCell {
     pub c_mf: f64,
+    /// NVM commit policy this cell ran under (ideal unless an `nvms` axis
+    /// was set — `zygarde capacitor --nvm fram-unit`).
+    pub nvm: NvmSpec,
     pub metrics: Metrics,
 }
 
@@ -32,11 +36,13 @@ pub const SIZES_MF: [f64; 4] = [0.1, 1.0, 50.0, 470.0];
 pub const STRESS_AVG_POWER_MW: f64 = 70.0;
 pub const STRESS_DUTY: f64 = 0.92;
 
-/// One capacitor-size scenario per matrix cell, run in parallel on the
-/// sweep engine. Cold start (`precharge(false)`): the deployment begins
-/// with an empty capacitor, so the 470 mF unit pays its long initial
-/// charge, as in the paper.
-pub fn run(n_jobs: u64, seed: u64) -> Vec<CapacitorCell> {
+/// The Fig. 21 matrix: one capacitor-size scenario per cell (× NVM
+/// policies when `nvms` is non-empty), cold start (`precharge(false)`) so
+/// the 470 mF unit pays its long initial charge, as in the paper. The
+/// matrix is the shard-aware entry point: run it locally with
+/// `sweep::run_matrix` or split it across hosts with
+/// `sweep::shard::run_shard` / `zygarde sweep --matrix capacitor --shard I/N`.
+pub fn matrix(n_jobs: u64, seed: u64, nvms: &[NvmSpec]) -> ScenarioMatrix {
     let net = Network::load(&crate::artifacts_root().join("cifar100")).unwrap();
     let traces = Arc::new(compute_traces(&net, None));
     let stress_mw: f64 = std::env::var("CAP_POWER")
@@ -47,7 +53,7 @@ pub fn run(n_jobs: u64, seed: u64) -> Vec<CapacitorCell> {
     // Period 9-11 s -> midpoint, with the engine's sporadic jitter.
     let task = task_from_network(0, &net, 10_000.0, 20_000.0, Some(traces));
 
-    let matrix = ScenarioMatrix::new("capacitor-sweep", seed)
+    let mut m = ScenarioMatrix::new("capacitor-sweep", seed)
         .mixes(vec![TaskMix::from_tasks("cifar100", vec![task])])
         .harvesters(vec![HarvesterSpec::Markov {
             kind: HarvesterKind::Rf,
@@ -60,24 +66,49 @@ pub fn run(n_jobs: u64, seed: u64) -> Vec<CapacitorCell> {
         .precharge(false)
         .duration_ms(duration_ms)
         .seed_policy(SeedPolicy::PairedEnvironment);
-    let scenarios = matrix.expand();
-    let cells = sweep::run_scenarios(&scenarios, sweep::default_threads());
+    if !nvms.is_empty() {
+        m = m.nvms(nvms.to_vec());
+    }
+    m
+}
 
+/// Recover figure rows from a finished report (local or shard-merged).
+pub fn cells_from(matrix: &ScenarioMatrix, report: &SweepReport) -> Vec<CapacitorCell> {
+    let scenarios = matrix.expand();
+    assert_eq!(scenarios.len(), report.cells.len(), "report does not match matrix");
     scenarios
         .iter()
-        .zip(cells)
-        .map(|(sc, cell)| CapacitorCell { c_mf: sc.capacitor_mf, metrics: cell.metrics })
+        .zip(&report.cells)
+        .map(|(sc, cell)| CapacitorCell {
+            c_mf: sc.capacitor_mf,
+            nvm: sc.nvm,
+            metrics: cell.metrics.clone(),
+        })
         .collect()
+}
+
+/// Run the matrix on all cores under the given NVM policies (empty =
+/// the zero-cost ideal).
+pub fn run_with_nvms(n_jobs: u64, seed: u64, nvms: &[NvmSpec]) -> Vec<CapacitorCell> {
+    let m = matrix(n_jobs, seed, nvms);
+    let report = sweep::run_matrix(&m, sweep::default_threads());
+    cells_from(&m, &report)
+}
+
+/// The paper-default run: zero-cost ideal persistence.
+pub fn run(n_jobs: u64, seed: u64) -> Vec<CapacitorCell> {
+    run_with_nvms(n_jobs, seed, &[])
 }
 
 pub fn print(cells: &[CapacitorCell]) {
     print_header(
         "Fig. 21: effect of capacitor size (CIFAR-100, RF eta=0.51)",
-        &["C (mF)", "scheduled%", "missed", "re-frags", "reboots"],
+        &["C (mF)", "nvm", "scheduled%", "missed", "re-frags", "reboots"],
     );
     for c in cells {
         print_row(&[
             format!("{}", c.c_mf),
+            c.nvm.label(),
             pct(c.metrics.event_scheduled_rate()),
             c.metrics.deadline_missed.to_string(),
             c.metrics.refragments.to_string(),
@@ -89,6 +120,19 @@ pub fn print(cells: &[CapacitorCell]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn nvm_axis_multiplies_capacitor_cells() {
+        if !crate::artifacts_root().join("cifar100/meta.json").exists() {
+            return;
+        }
+        let nvms = [NvmSpec::ideal(), NvmSpec::fram_unit_boundary()];
+        let cells = run_with_nvms(10, 5, &nvms);
+        assert_eq!(cells.len(), SIZES_MF.len() * nvms.len());
+        for spec in &nvms {
+            assert_eq!(cells.iter().filter(|c| c.nvm == *spec).count(), SIZES_MF.len());
+        }
+    }
 
     #[test]
     fn fifty_mf_is_the_sweet_spot() {

@@ -26,8 +26,11 @@ const SYSTEM_IDS: [usize; 3] = [2, 3, 4];
 /// One matrix: (Systems 2–4) × (RTC, CHRT tier-3) on the sweep engine.
 /// Paired environment seeds mean both clock variants of a system replay
 /// the *same* harvest and release streams — the only difference between
-/// the paired cells is the clock error, exactly Table 5's contrast.
-pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
+/// the paired cells is the clock error, exactly Table 5's contrast. The
+/// matrix is the shard-aware entry point: run it locally with
+/// `sweep::run_matrix` or split it across hosts with
+/// `sweep::shard::run_shard` / `zygarde sweep --matrix chrt --shard I/N`.
+pub fn matrix(n_jobs: u64, seed: u64) -> ScenarioMatrix {
     let net = Network::load(&crate::artifacts_root().join("vww")).unwrap();
     let traces = Arc::new(compute_traces(&net, None));
     // Table 5's deployments schedule ~99.9 % of tasks (29 989 / ~30 000),
@@ -37,7 +40,7 @@ pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
     let task = task_from_network(0, &net, 6000.0, 12_000.0, Some(traces));
     let duration_ms = n_jobs as f64 * 6000.0 * 1.06;
 
-    let matrix = ScenarioMatrix::new("chrt-cmp", seed)
+    ScenarioMatrix::new("chrt-cmp", seed)
         .mixes(vec![TaskMix::from_tasks("vww", vec![task])])
         .harvesters(SYSTEM_IDS.iter().map(|&sid| HarvesterSpec::System(sid)).collect())
         .faults(vec![
@@ -45,11 +48,14 @@ pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
             FaultPlan::none().with_clock(ClockSpec::Chrt(ChrtTier::Tier3)),
         ])
         .duration_ms(duration_ms)
-        .seed_policy(SeedPolicy::PairedEnvironment);
-    let report = sweep::run_matrix(&matrix, sweep::default_threads());
+        .seed_policy(SeedPolicy::PairedEnvironment)
+}
 
-    // Expansion order: harvesters outer, faults inner → cells[2i] is the
-    // RTC run of SYSTEM_IDS[i] and cells[2i+1] its CHRT twin.
+/// Fold a finished report (local or shard-merged) into Table 5 rows.
+/// Expansion order: harvesters outer, faults inner → cells[2i] is the
+/// RTC run of SYSTEM_IDS[i] and cells[2i+1] its CHRT twin.
+pub fn rows_from(report: &crate::sim::sweep::SweepReport) -> Vec<ChrtRow> {
+    assert_eq!(report.cells.len(), 2 * SYSTEM_IDS.len(), "report does not match matrix");
     SYSTEM_IDS
         .iter()
         .enumerate()
@@ -65,6 +71,11 @@ pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
             }
         })
         .collect()
+}
+
+pub fn run(n_jobs: u64, seed: u64) -> Vec<ChrtRow> {
+    let m = matrix(n_jobs, seed);
+    rows_from(&sweep::run_matrix(&m, sweep::default_threads()))
 }
 
 pub fn print(rows: &[ChrtRow]) {

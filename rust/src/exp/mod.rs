@@ -15,6 +15,7 @@ pub mod nvm_cmp;
 pub mod overhead;
 pub mod schedule;
 pub mod schedulability;
+pub mod sweep_cli;
 pub mod termination;
 pub mod threshold;
 pub mod visual;

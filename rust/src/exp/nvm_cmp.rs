@@ -40,7 +40,11 @@ pub fn policies() -> Vec<NvmSpec> {
 }
 
 /// Policies × harvesters × capacitors, paired-seed. `n_jobs` scales the
-/// per-cell horizon (task periods are 300/500 ms).
+/// per-cell horizon (task periods are 300/500 ms). The matrix is the
+/// shard-aware entry point: run it locally with `sweep::run_matrix` or
+/// split it across hosts with `sweep::shard::run_shard` /
+/// `zygarde sweep --matrix nvm --shard I/N` (it needs no `artifacts/`,
+/// which is why the CI shard jobs sweep it).
 pub fn matrix(n_jobs: u64, seed: u64) -> ScenarioMatrix {
     let duration_ms = (n_jobs as f64 * 300.0).max(30_000.0);
     ScenarioMatrix::new("nvm-cmp", seed)
@@ -105,8 +109,9 @@ impl PolicyRow {
 }
 
 /// Fold a finished sweep into one row per NVM policy. The report's cells
-/// are in matrix-expansion order, so zipping against `matrix.expand()`
-/// recovers each cell's policy.
+/// are in matrix-expansion order — true for a local `run_matrix` result
+/// and for a `sweep::shard::merge` of shard files alike — so zipping
+/// against `matrix.expand()` recovers each cell's policy.
 pub fn summarize(matrix: &ScenarioMatrix, report: &SweepReport) -> Vec<PolicyRow> {
     let scenarios = matrix.expand();
     assert_eq!(scenarios.len(), report.cells.len(), "report does not match matrix");

@@ -13,9 +13,10 @@ use std::sync::Arc;
 use crate::coordinator::sched::SchedulerKind;
 use crate::dnn::network::Network;
 use crate::dnn::trace::compute_traces;
+use crate::nvm::NvmSpec;
 use crate::sim::metrics::Metrics;
 use crate::sim::sweep::{
-    self, HarvesterSpec, ScenarioMatrix, SeedPolicy, TaskMix,
+    self, HarvesterSpec, ScenarioMatrix, SeedPolicy, SweepReport, TaskMix,
 };
 use crate::sim::workload::task_from_network;
 
@@ -47,23 +48,30 @@ pub fn params_for(dataset: &str) -> WorkloadParams {
 pub struct ScheduleCell {
     pub system: System,
     pub scheduler: SchedulerKind,
+    /// NVM commit policy this cell ran under (ideal unless an `nvms` axis
+    /// was set — `zygarde schedule --nvm fram-jit`).
+    pub nvm: NvmSpec,
     pub metrics: Metrics,
 }
 
 pub const SCHEDULERS: [SchedulerKind; 3] =
     [SchedulerKind::Edf, SchedulerKind::EdfMandatory, SchedulerKind::Zygarde];
 
-/// Build the (systems × schedulers) matrix and run it on the sweep
-/// engine: one scenario per cell, executed in parallel, with paired
-/// environment seeds so every scheduler sees the same release and
-/// harvest streams within a system (the apples-to-apples comparison the
-/// figures need).
-pub fn run(
+/// The (systems × schedulers [× NVM policies]) matrix behind Figs. 17–20,
+/// with paired environment seeds so every scheduler sees the same release
+/// and harvest streams within a system (the apples-to-apples comparison
+/// the figures need). An empty `nvms` keeps the paper's zero-cost default;
+/// passing policies regenerates the figures under realistic persistence
+/// costs. The matrix is the shard-aware entry point: hand it to
+/// `sweep::run_matrix`, or split it across hosts with
+/// `sweep::shard::run_shard` / `zygarde sweep --matrix schedule --shard I/N`.
+pub fn matrix(
     dataset: &str,
     systems: &[usize],
     n_jobs_override: Option<u64>,
     seed: u64,
-) -> Vec<ScheduleCell> {
+    nvms: &[NvmSpec],
+) -> ScenarioMatrix {
     let net = Network::load(&crate::artifacts_root().join(dataset)).unwrap();
     let p = params_for(dataset);
     let n_jobs = n_jobs_override.unwrap_or(p.n_jobs);
@@ -72,38 +80,77 @@ pub fn run(
     let traces = Arc::new(compute_traces(&net, None));
     let task = task_from_network(0, &net, p.period_ms, p.deadline_ms, Some(traces));
 
-    let matrix = ScenarioMatrix::new(format!("schedule-{dataset}"), seed)
+    let mut m = ScenarioMatrix::new(format!("schedule-{dataset}"), seed)
         .mixes(vec![TaskMix::from_tasks(dataset, vec![task])])
         .harvesters(systems.iter().map(|&sid| HarvesterSpec::System(sid)).collect())
         .schedulers(SCHEDULERS.to_vec())
         .duration_ms(duration_ms)
         .seed_policy(SeedPolicy::PairedEnvironment);
-    let scenarios = matrix.expand();
-    let cells = sweep::run_scenarios(&scenarios, sweep::default_threads());
+    if !nvms.is_empty() {
+        m = m.nvms(nvms.to_vec());
+    }
+    m
+}
 
+/// Recover per-cell figure rows from a finished report (a local
+/// `run_matrix` result or a `sweep::shard::merge` of shard files — the
+/// report's cells are in matrix-expansion order either way).
+pub fn cells_from(matrix: &ScenarioMatrix, report: &SweepReport) -> Vec<ScheduleCell> {
+    let scenarios = matrix.expand();
+    assert_eq!(scenarios.len(), report.cells.len(), "report does not match matrix");
     scenarios
         .iter()
-        .zip(cells)
+        .zip(&report.cells)
         .map(|(sc, cell)| {
             let sid = match sc.harvester {
                 HarvesterSpec::System(id) => id,
                 _ => unreachable!("schedule matrix only uses Table 4 systems"),
             };
-            ScheduleCell { system: system(sid), scheduler: sc.scheduler, metrics: cell.metrics }
+            ScheduleCell {
+                system: system(sid),
+                scheduler: sc.scheduler,
+                nvm: sc.nvm,
+                metrics: cell.metrics.clone(),
+            }
         })
         .collect()
+}
+
+/// Run the matrix on all cores under the given NVM policies (empty =
+/// the zero-cost ideal).
+pub fn run_with_nvms(
+    dataset: &str,
+    systems: &[usize],
+    n_jobs_override: Option<u64>,
+    seed: u64,
+    nvms: &[NvmSpec],
+) -> Vec<ScheduleCell> {
+    let m = matrix(dataset, systems, n_jobs_override, seed, nvms);
+    let report = sweep::run_matrix(&m, sweep::default_threads());
+    cells_from(&m, &report)
+}
+
+/// The paper-default run: zero-cost ideal persistence.
+pub fn run(
+    dataset: &str,
+    systems: &[usize],
+    n_jobs_override: Option<u64>,
+    seed: u64,
+) -> Vec<ScheduleCell> {
+    run_with_nvms(dataset, systems, n_jobs_override, seed, &[])
 }
 
 pub fn print(dataset: &str, cells: &[ScheduleCell]) {
     print_header(
         &format!("Figs. 17-20: scheduler comparison — {dataset}"),
-        &["system", "eta", "sched", "released", "scheduled%", "correct%", "opt-units"],
+        &["system", "eta", "sched", "nvm", "released", "scheduled%", "correct%", "opt-units"],
     );
     for c in cells {
         print_row(&[
             format!("S{}", c.system.id),
             format!("{:.2}", c.system.eta),
             c.scheduler.name().into(),
+            c.nvm.label(),
             c.metrics.released.to_string(),
             pct(c.metrics.event_scheduled_rate()),
             pct(c.metrics.event_correct_rate()),
@@ -136,6 +183,22 @@ mod tests {
             .unwrap()
             .metrics
             .event_correct_rate()
+    }
+
+    #[test]
+    fn nvm_axis_multiplies_cells_and_labels_them() {
+        if !ready() {
+            return;
+        }
+        let nvms = [NvmSpec::ideal(), NvmSpec::fram_jit()];
+        let cells = run_with_nvms("mnist", &[1], Some(20), 3, &nvms);
+        assert_eq!(cells.len(), nvms.len() * SCHEDULERS.len());
+        for spec in &nvms {
+            assert_eq!(
+                cells.iter().filter(|c| c.nvm == *spec).count(),
+                SCHEDULERS.len()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Named sweep matrices for the `zygarde sweep` / `zygarde merge` CLI.
+//!
+//! Every figure sweep (and two synthetic grids that need no `artifacts/`)
+//! is reachable by name, so any of them can be split across processes or
+//! hosts with `--shard I/N` and reassembled with `zygarde merge`. The
+//! matrix construction is deterministic in the options, which is what
+//! makes cross-host sharding safe: every host that runs
+//! `zygarde sweep --matrix M --seed S --jobs J --shard I/N` builds the
+//! same expansion (and the same [`MatrixFingerprint`]), and the merge
+//! rejects shards whose options drifted.
+//!
+//! [`MatrixFingerprint`]: crate::sim::sweep::MatrixFingerprint
+
+use crate::coordinator::sched::SchedulerKind;
+use crate::energy::harvester::HarvesterKind;
+use crate::nvm::NvmSpec;
+use crate::sim::sweep::{FaultPlan, HarvesterSpec, ScenarioMatrix, TaskMix};
+
+/// Tunables shared by the named matrices; each matrix uses the subset it
+/// needs (e.g. `dataset`/`systems` only matter to `schedule`).
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    pub seed: u64,
+    pub jobs: u64,
+    pub reps: u64,
+    /// Per-cell simulated horizon override (ms) for the synthetic grids.
+    pub duration_ms: Option<f64>,
+    pub dataset: String,
+    pub systems: Vec<usize>,
+    /// NVM commit-policy axis (empty = each matrix's default).
+    pub nvms: Vec<NvmSpec>,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts {
+            seed: 7,
+            jobs: 200,
+            reps: 2,
+            duration_ms: None,
+            dataset: "mnist".to_string(),
+            systems: (1..=7).collect(),
+            nvms: Vec::new(),
+        }
+    }
+}
+
+/// `(name, description)` of every named matrix, for `zygarde help`.
+pub const MATRICES: &[(&str, &str)] = &[
+    ("synthetic", "stress grid: mixes x harvesters x caps x scheds x faults (no artifacts)"),
+    ("bench", "the bench_sweep throughput grid (fixed seed; no artifacts)"),
+    ("nvm", "NVM commit-policy comparison (no artifacts)"),
+    ("schedule", "Figs. 17-20 scheduler comparison (needs artifacts/<dataset>)"),
+    ("capacitor", "Fig. 21 capacitor-size sweep (needs artifacts/cifar100)"),
+    ("chrt", "Table 5 RTC vs CHRT clocks (needs artifacts/vww)"),
+];
+
+/// Every [`SweepOpts`] tunable the CLI exposes, by flag name.
+pub const TUNABLE_FLAGS: &[&str] =
+    &["seed", "jobs", "reps", "duration-ms", "dataset", "systems", "nvm"];
+
+/// The subset of [`TUNABLE_FLAGS`] a named matrix actually consumes.
+/// `zygarde sweep` warns when an explicitly passed flag is not in this
+/// list — otherwise `--matrix bench --seed 42` (bench pins its seed) or
+/// `--matrix nvm --nvm fram-jit` (nvm sweeps its own policy axis) would
+/// silently run a different configuration than the user asked for, and
+/// the fingerprint could never catch it because every host would ignore
+/// the flag identically.
+pub fn consumed_flags(name: &str) -> &'static [&'static str] {
+    match name {
+        "synthetic" => &["seed", "reps", "duration-ms"],
+        "bench" => &["reps", "duration-ms"],
+        "nvm" => &["seed", "jobs"],
+        "schedule" => &["seed", "jobs", "dataset", "systems", "nvm"],
+        "capacitor" => &["seed", "jobs", "nvm"],
+        "chrt" => &["seed", "jobs"],
+        _ => &[],
+    }
+}
+
+/// Build a named matrix. Unknown names list the known ones.
+pub fn build_matrix(name: &str, opts: &SweepOpts) -> Result<ScenarioMatrix, String> {
+    match name {
+        "synthetic" => {
+            Ok(synthetic_matrix(opts.seed, opts.reps, opts.duration_ms.unwrap_or(6_000.0)))
+        }
+        "bench" => Ok(bench_matrix(opts.reps, opts.duration_ms.unwrap_or(20_000.0))),
+        "nvm" => Ok(super::nvm_cmp::matrix(opts.jobs, opts.seed)),
+        "schedule" => Ok(super::schedule::matrix(
+            &opts.dataset,
+            &opts.systems,
+            Some(opts.jobs),
+            opts.seed,
+            &opts.nvms,
+        )),
+        "capacitor" => Ok(super::capacitor_sweep::matrix(opts.jobs, opts.seed, &opts.nvms)),
+        "chrt" => Ok(super::chrt_cmp::matrix(opts.jobs, opts.seed)),
+        other => Err(format!(
+            "unknown matrix `{other}` (known: {})",
+            MATRICES.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+        )),
+    }
+}
+
+/// A no-artifacts grid covering every sweep dimension — the CI shard
+/// jobs' workload (2 mixes × 2 harvesters × 2 capacitors × 2 schedulers ×
+/// 2 fault plans × reps).
+pub fn synthetic_matrix(seed: u64, reps: u64, duration_ms: f64) -> ScenarioMatrix {
+    ScenarioMatrix::new("synthetic", seed)
+        .mixes(vec![
+            TaskMix::synthetic("uni", 1, 3, seed ^ 0xA),
+            TaskMix::synthetic("duo", 2, 2, seed ^ 0xB),
+        ])
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 600.0 },
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 120.0,
+                q: 0.9,
+                duty: 0.6,
+                eta: 0.51,
+            },
+        ])
+        .capacitors_mf(vec![5.0, 50.0])
+        .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::EdfMandatory])
+        .faults(vec![
+            FaultPlan::none(),
+            FaultPlan::none().with_brownouts(1_500.0, 300.0, 100.0),
+        ])
+        .reps(reps.max(1))
+        .duration_ms(duration_ms)
+}
+
+/// The `benches/bench_sweep.rs` grid, shared so the sharded-throughput
+/// bench rows can spawn `zygarde sweep --matrix bench --shard I/N`
+/// processes that run *exactly* the matrix the in-process rows ran.
+/// 2 mixes × 2 harvesters × 3 schedulers × 2 faults × reps scenarios
+/// (96 at the default 4 reps); the seed is fixed so the throughput
+/// trajectory is comparable across PRs.
+pub fn bench_matrix(reps: u64, duration_ms: f64) -> ScenarioMatrix {
+    ScenarioMatrix::new("bench-sweep", 0xB5EE9)
+        .mixes(vec![
+            TaskMix::synthetic("uni", 1, 3, 11),
+            TaskMix::synthetic("duo", 2, 3, 12),
+        ])
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 600.0 },
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 120.0,
+                q: 0.9,
+                duty: 0.6,
+                eta: 0.51,
+            },
+        ])
+        .schedulers(vec![
+            SchedulerKind::Zygarde,
+            SchedulerKind::EdfMandatory,
+            SchedulerKind::Edf,
+        ])
+        .faults(vec![
+            FaultPlan::none(),
+            FaultPlan::none().with_brownouts(2_000.0, 400.0, 250.0),
+        ])
+        .reps(reps.max(1))
+        .duration_ms(duration_ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::sweep::fingerprint;
+
+    #[test]
+    fn registry_builds_the_no_artifact_matrices() {
+        let opts = SweepOpts { seed: 3, reps: 1, ..Default::default() };
+        for name in ["synthetic", "bench", "nvm"] {
+            let m = build_matrix(name, &opts).unwrap();
+            assert!(!m.is_empty(), "{name} expanded to nothing");
+        }
+        let err = build_matrix("bogus", &opts).unwrap_err();
+        assert!(err.contains("synthetic"), "{err}");
+    }
+
+    #[test]
+    fn same_opts_same_fingerprint_across_builds() {
+        let opts = SweepOpts { seed: 9, reps: 2, ..Default::default() };
+        let a = fingerprint(&build_matrix("synthetic", &opts).unwrap());
+        let b = fingerprint(&build_matrix("synthetic", &opts).unwrap());
+        assert_eq!(a, b, "matrix construction must be deterministic in the options");
+        let other = SweepOpts { seed: 10, ..opts };
+        let c = fingerprint(&build_matrix("synthetic", &other).unwrap());
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn consumed_flags_cover_every_matrix_and_stay_tunable() {
+        for &(name, _) in MATRICES {
+            let used = consumed_flags(name);
+            assert!(!used.is_empty(), "{name} consumes no flags?");
+            for f in used {
+                assert!(TUNABLE_FLAGS.contains(f), "{name}: unknown flag {f}");
+            }
+        }
+        assert!(consumed_flags("bogus").is_empty());
+        // The cases the warning exists for: bench pins its seed, nvm owns
+        // its policy axis.
+        assert!(!consumed_flags("bench").contains(&"seed"));
+        assert!(!consumed_flags("nvm").contains(&"nvm"));
+    }
+
+    #[test]
+    fn bench_matrix_matches_the_documented_shape() {
+        let m = bench_matrix(4, 20_000.0);
+        assert_eq!(m.len(), 2 * 2 * 3 * 2 * 4, "96 scenarios at default reps");
+        assert_eq!(m.seed, 0xB5EE9);
+    }
+}

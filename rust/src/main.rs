@@ -7,6 +7,9 @@
 use zygarde::coordinator::sched::SchedulerKind;
 use zygarde::dnn::network::Network;
 use zygarde::exp;
+use zygarde::exp::sweep_cli::{self, SweepOpts};
+use zygarde::nvm::NvmSpec;
+use zygarde::sim::sweep::{self, ShardSpec};
 use zygarde::util::cli::Args;
 
 const HELP: &str = "\
@@ -18,8 +21,9 @@ experiments (DESIGN.md §3):
   overhead       Fig. 14 component overheads (ESC-10)
   loss-compare   Fig. 15 loss functions under early exit
   termination    Fig. 16 termination policies
-  schedule       Figs. 17-20 EDF / EDF-M / Zygarde      [--dataset mnist --jobs N --systems 1,2,...]
-  capacitor      Fig. 21 capacitor-size sweep           [--jobs N]
+  schedule       Figs. 17-20 EDF / EDF-M / Zygarde      [--dataset mnist --jobs N --systems 1,2,...
+                                                         --nvm ideal,fram-jit]
+  capacitor      Fig. 21 capacitor-size sweep           [--jobs N --nvm fram-unit]
   nvm            NVM commit-policy comparison (ideal / FRAM every-fragment
                  / unit-boundary / JIT voltage-triggered) [--jobs N]
   chrt           Table 5 RTC vs CHRT remanence clock    [--jobs N]
@@ -30,6 +34,17 @@ experiments (DESIGN.md §3):
   schedulability Sec. 5.3 necessary condition
   infer          run PJRT inference over a test set     [--dataset mnist --samples N]
   all            everything above at paper-scale sizes
+
+sharded execution (scale any sweep across processes / hosts):
+  sweep          run a named scenario matrix, whole or one shard of it
+                 [--matrix synthetic|bench|nvm|schedule|capacitor|chrt]
+                 [--shard I/N --threads N --jobs N --reps N --duration-ms X
+                  --dataset NAME --systems 1,2 --nvm ideal,fram-jit --out FILE]
+                 with --shard: writes a PartialReport JSON (default
+                 shard_I_of_N.json); without: writes/prints the SweepReport
+  merge          zygarde merge shard_*.json [--out report.json] [--table]
+                 reassembles shards into the byte-identical single-process
+                 report; rejects shards from mismatched matrices
 
 common flags: --seed N (default 7), --jobs N, --dataset NAME
 ";
@@ -71,11 +86,13 @@ fn main() {
                 .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
                 .unwrap_or_else(|| (1..=7).collect());
             let jobs = args.opt_str("jobs").map(|j| j.parse().unwrap());
-            let cells = exp::schedule::run(&ds, &systems, jobs, seed);
+            let nvms = parse_nvms(&args);
+            let cells = exp::schedule::run_with_nvms(&ds, &systems, jobs, seed, &nvms);
             exp::schedule::print(&ds, &cells);
         }
         "capacitor" => {
-            let cells = exp::capacitor_sweep::run(args.u64_or("jobs", 200), seed);
+            let nvms = parse_nvms(&args);
+            let cells = exp::capacitor_sweep::run_with_nvms(args.u64_or("jobs", 200), seed, &nvms);
             exp::capacitor_sweep::print(&cells);
         }
         "nvm" => {
@@ -111,12 +128,127 @@ fn main() {
             );
             exp::schedulability::print(&rows);
         }
+        "sweep" => run_sweep(&args, seed),
+        "merge" => run_merge(&args),
         "infer" => run_infer(&args),
         "all" => run_all(seed, &args),
         other => {
             eprintln!("unknown experiment `{other}`\n");
             print!("{HELP}");
             std::process::exit(2);
+        }
+    }
+}
+
+/// Parse the `--nvm` policy list (empty = each matrix's zero-cost
+/// default); exits with the known-policy list on a typo.
+fn parse_nvms(args: &Args) -> Vec<NvmSpec> {
+    match args.opt_str("nvm") {
+        None => Vec::new(),
+        Some(s) => NvmSpec::parse_list(s).unwrap_or_else(|e| {
+            eprintln!("--nvm: {e}");
+            std::process::exit(2);
+        }),
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("{msg}");
+    std::process::exit(2);
+}
+
+/// `zygarde sweep`: run a named matrix — the whole thing, or one strided
+/// shard of it for multi-process / multi-host execution.
+fn run_sweep(args: &Args, seed: u64) {
+    let name = args.str_or("matrix", "synthetic").to_string();
+    let opts = SweepOpts {
+        seed,
+        jobs: args.u64_or("jobs", 200),
+        reps: args.u64_or("reps", 2),
+        duration_ms: args.opt_str("duration-ms").map(|v| {
+            v.parse().unwrap_or_else(|_| die(&format!("--duration-ms: bad number `{v}`")))
+        }),
+        dataset: args.str_or("dataset", "mnist").to_string(),
+        systems: args
+            .opt_str("systems")
+            .map(|s| {
+                s.split(',')
+                    .map(|x| {
+                        x.parse().unwrap_or_else(|_| die(&format!("--systems: bad id `{x}`")))
+                    })
+                    .collect()
+            })
+            .unwrap_or_else(|| (1..=7).collect()),
+        nvms: parse_nvms(args),
+    };
+    for &flag in sweep_cli::TUNABLE_FLAGS {
+        if args.has(flag) && !sweep_cli::consumed_flags(&name).contains(&flag) {
+            eprintln!("warning: --{flag} is ignored by --matrix {name}");
+        }
+    }
+    let matrix = sweep_cli::build_matrix(&name, &opts).unwrap_or_else(|e| die(&e));
+    let threads = args.usize_or("threads", sweep::default_threads());
+    match args.opt_str("shard") {
+        Some(spec) => {
+            let shard = ShardSpec::parse(spec).unwrap_or_else(|e| die(&format!("--shard: {e}")));
+            let part = sweep::run_shard(&matrix, shard, threads);
+            let out = args.opt_str("out").map(String::from).unwrap_or_else(|| {
+                format!("shard_{}_of_{}.json", shard.shard_index, shard.shard_count)
+            });
+            std::fs::write(&out, part.json_string()).expect("writing shard report");
+            println!(
+                "sweep `{}` shard {}: {} of {} cells -> {out}",
+                matrix.name,
+                shard.label(),
+                part.cells.len(),
+                part.fingerprint.n_scenarios
+            );
+        }
+        None => {
+            let report = sweep::run_matrix(&matrix, threads);
+            match args.opt_str("out") {
+                Some(out) => {
+                    std::fs::write(out, report.json_string()).expect("writing sweep report");
+                    println!(
+                        "sweep `{}`: {} scenarios -> {out}",
+                        report.matrix_name, report.n_scenarios
+                    );
+                }
+                None => report.print(),
+            }
+        }
+    }
+}
+
+/// `zygarde merge`: reassemble shard files into the byte-identical
+/// single-process report.
+fn run_merge(args: &Args) {
+    if args.positional.is_empty() {
+        die("usage: zygarde merge shard_*.json [--out report.json] [--table]");
+    }
+    let paths: Vec<std::path::PathBuf> =
+        args.positional.iter().map(std::path::PathBuf::from).collect();
+    match sweep::shard::merge_files(&paths) {
+        Ok(report) => {
+            let json = report.json_string();
+            match args.opt_str("out") {
+                Some(out) => {
+                    std::fs::write(out, &json).expect("writing merged report");
+                    println!(
+                        "merged {} shard file(s) -> {out} ({} scenarios)",
+                        paths.len(),
+                        report.n_scenarios
+                    );
+                }
+                None => println!("{json}"),
+            }
+            if args.bool_or("table", false) {
+                report.print();
+            }
+        }
+        Err(e) => {
+            eprintln!("merge failed: {e}");
+            std::process::exit(1);
         }
     }
 }

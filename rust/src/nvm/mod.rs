@@ -189,6 +189,26 @@ impl NvmSpec {
     pub fn label(&self) -> String {
         format!("{}+{}", self.model.name(), self.policy.name())
     }
+
+    /// Parse a CLI policy name (`--nvm` flags): `ideal`, `fram-frag`,
+    /// `fram-unit`, `fram-jit`. `+` separators (the [`NvmSpec::label`]
+    /// form) are accepted too.
+    pub fn parse(s: &str) -> Result<NvmSpec, String> {
+        match s.trim().replace('+', "-").as_str() {
+            "ideal" | "ideal-frag" => Ok(NvmSpec::ideal()),
+            "fram" | "fram-frag" => Ok(NvmSpec::fram_every_fragment()),
+            "fram-unit" => Ok(NvmSpec::fram_unit_boundary()),
+            "fram-jit" => Ok(NvmSpec::fram_jit()),
+            other => Err(format!(
+                "unknown NVM policy `{other}` (known: ideal, fram-frag, fram-unit, fram-jit)"
+            )),
+        }
+    }
+
+    /// Parse a comma-separated policy list, e.g. `ideal,fram-jit`.
+    pub fn parse_list(s: &str) -> Result<Vec<NvmSpec>, String> {
+        s.split(',').filter(|p| !p.trim().is_empty()).map(NvmSpec::parse).collect()
+    }
 }
 
 impl Default for NvmSpec {
@@ -284,6 +304,20 @@ mod tests {
         assert_eq!(NvmSpec::fram_unit_boundary().label(), "fram+unit");
         assert_eq!(NvmSpec::fram_jit().label(), "fram+jit");
         assert_eq!(NvmSpec::default(), NvmSpec::ideal());
+    }
+
+    #[test]
+    fn cli_names_parse_to_specs() {
+        assert_eq!(NvmSpec::parse("ideal").unwrap(), NvmSpec::ideal());
+        assert_eq!(NvmSpec::parse("fram-frag").unwrap(), NvmSpec::fram_every_fragment());
+        assert_eq!(NvmSpec::parse("fram+unit").unwrap(), NvmSpec::fram_unit_boundary());
+        assert_eq!(NvmSpec::parse(" fram-jit ").unwrap(), NvmSpec::fram_jit());
+        assert!(NvmSpec::parse("flash").is_err());
+        assert_eq!(
+            NvmSpec::parse_list("ideal,fram-jit").unwrap(),
+            vec![NvmSpec::ideal(), NvmSpec::fram_jit()]
+        );
+        assert!(NvmSpec::parse_list("ideal,bogus").is_err());
     }
 
     #[test]

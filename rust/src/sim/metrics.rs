@@ -172,4 +172,96 @@ impl Metrics {
         m.insert("per_task_correct".to_string(), arr(&self.per_task_correct));
         Value::Obj(m)
     }
+
+    /// Inverse of [`Metrics::to_json`] — the deserialization half of the
+    /// shard-report round trip (`sim::sweep::shard`). The JSON writer emits
+    /// f64s in their shortest round-tripping form, so parse-then-reserialize
+    /// is byte-identical; the `job_log` audit trail is never serialized and
+    /// comes back empty.
+    pub fn from_json(v: &Value) -> Result<Metrics, String> {
+        let num = |k: &str| -> Result<f64, String> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("metrics: missing numeric field `{k}`"))
+        };
+        let count = |k: &str| -> Result<u64, String> { Ok(num(k)? as u64) };
+        let counts = |k: &str| -> Result<Vec<u64>, String> {
+            v.get(k)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| format!("metrics: missing array field `{k}`"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(|f| f as u64)
+                        .ok_or_else(|| format!("metrics: non-numeric entry in `{k}`"))
+                })
+                .collect()
+        };
+        Ok(Metrics {
+            released: count("released")?,
+            capture_missed: count("capture_missed")?,
+            queue_dropped: count("queue_dropped")?,
+            scheduled: count("scheduled")?,
+            correct: count("correct")?,
+            deadline_missed: count("deadline_missed")?,
+            mandatory_units: count("mandatory_units")?,
+            optional_units: count("optional_units")?,
+            refragments: count("refragments")?,
+            fragments: count("fragments")?,
+            commits: count("commits")?,
+            jit_commits: count("jit_commits")?,
+            commit_mj: num("commit_mj")?,
+            commit_ms: num("commit_ms")?,
+            restores: count("restores")?,
+            restore_mj: num("restore_mj")?,
+            restore_ms: num("restore_ms")?,
+            lost_fragments: count("lost_fragments")?,
+            per_task_released: counts("per_task_released")?,
+            per_task_scheduled: counts("per_task_scheduled")?,
+            per_task_correct: counts("per_task_correct")?,
+            latency_sum_ms: num("latency_sum_ms")?,
+            sim_time_ms: num("sim_time_ms")?,
+            on_time_ms: num("on_time_ms")?,
+            reboots: count("reboots")?,
+            harvested_mj: num("harvested_mj")?,
+            wasted_mj: num("wasted_mj")?,
+            initial_energy_mj: num("initial_energy_mj")?,
+            final_energy_mj: num("final_energy_mj")?,
+            consumed_mj: num("consumed_mj")?,
+            job_log: Vec::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut m = Metrics::new(2);
+        m.released = 123;
+        m.scheduled = 77;
+        m.correct = 60;
+        m.commits = 999;
+        m.commit_mj = 0.1 + 0.2; // deliberately non-representable (0.30000000000000004)
+        m.latency_sum_ms = 1234.5678901234567;
+        m.harvested_mj = 1e-9;
+        m.per_task_released = vec![100, 23];
+        m.per_task_scheduled = vec![50, 27];
+        m.per_task_correct = vec![40, 20];
+        let json = m.to_json().to_json();
+        let back = Metrics::from_json(&Value::parse(&json).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_json(), json, "round trip must be byte-identical");
+        assert_eq!(back.released, 123);
+        assert_eq!(back.commit_mj, m.commit_mj);
+        assert_eq!(back.per_task_scheduled, vec![50, 27]);
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields() {
+        let v = Value::parse(r#"{"released": 3}"#).unwrap();
+        let err = Metrics::from_json(&v).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+    }
 }

@@ -18,6 +18,11 @@
 //!   remanence-clock models.
 //! * [`SweepReport`] — per-cell metrics plus aggregate summary statistics
 //!   (`util::stats`), serialized with `util::json`.
+//! * [`shard`] — multi-process / multi-host scale-out: a [`ShardSpec`]
+//!   deterministically partitions the expansion (strided by scenario
+//!   index), each shard ships a [`PartialReport`], and [`merge`]
+//!   reassembles the byte-identical single-process [`SweepReport`]
+//!   (`zygarde sweep --shard I/N` / `zygarde merge`).
 //!
 //! Seed discipline: by default every scenario's engine seed is an
 //! independent function of `(matrix_seed, scenario_index)`
@@ -31,10 +36,14 @@
 pub mod faults;
 pub mod report;
 pub mod runner;
+pub mod shard;
 
 pub use faults::FaultPlan;
 pub use report::{CellResult, SummaryStats, SweepReport};
 pub use runner::{build_engine, default_threads, run_matrix, run_scenario, run_scenarios};
+pub use shard::{
+    fingerprint, merge, run_shard, MatrixFingerprint, MergeError, PartialReport, ShardSpec,
+};
 
 use crate::coordinator::sched::{ExitPolicy, SchedulerKind};
 use crate::coordinator::task::TaskSpec;

@@ -24,13 +24,38 @@ pub struct CellResult {
 }
 
 impl CellResult {
-    fn to_json(&self) -> Value {
+    pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         m.insert("index".to_string(), Value::Num(self.index as f64));
         m.insert("label".to_string(), Value::Str(self.label.clone()));
         m.insert("engine_seed".to_string(), Value::Str(self.engine_seed.to_string()));
         m.insert("metrics".to_string(), self.metrics.to_json());
         Value::Obj(m)
+    }
+
+    /// Inverse of [`CellResult::to_json`]; the shard-merge path uses this
+    /// to reassemble a [`SweepReport`] byte-identical to a single-process
+    /// run (see `sim::sweep::shard`).
+    pub fn from_json(v: &Value) -> Result<CellResult, String> {
+        let index = v
+            .get("index")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| "cell: missing numeric `index`".to_string())? as usize;
+        let label = v
+            .get("label")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "cell: missing string `label`".to_string())?
+            .to_string();
+        let engine_seed = v
+            .get("engine_seed")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "cell: missing string `engine_seed`".to_string())?
+            .parse::<u64>()
+            .map_err(|e| format!("cell: bad engine_seed: {e}"))?;
+        let metrics = Metrics::from_json(
+            v.get("metrics").ok_or_else(|| "cell: missing `metrics`".to_string())?,
+        )?;
+        Ok(CellResult { index, label, engine_seed, metrics })
     }
 }
 

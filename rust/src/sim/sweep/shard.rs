@@ -1,0 +1,712 @@
+//! Sharded multi-process sweep execution with deterministic merging.
+//!
+//! The per-scenario `(matrix_seed, scenario_index)` seed derivation makes
+//! every cell of a [`ScenarioMatrix`] location-independent, so scaling a
+//! sweep across processes or hosts is purely an orchestration + merge
+//! problem. This module supplies the three pieces:
+//!
+//! * [`ShardSpec`] — `shard_index/shard_count`, a deterministic strided
+//!   partition of the matrix expansion (cell `i` belongs to shard
+//!   `i % shard_count`). Striding, not contiguous ranges, so uneven-cost
+//!   cells (a 470 mF cold-start runs ~10× a 1 mF cell) load-balance.
+//! * [`PartialReport`] — one shard's [`CellResult`]s serialized with
+//!   `util::json`, carrying a [`MatrixFingerprint`] (matrix seed, axis
+//!   hash, total cell count) so shards of *different* matrices — or of a
+//!   matrix whose axes drifted between runs — are rejected at merge time
+//!   instead of producing a silently wrong report.
+//! * [`merge`] — reassembles any complete set of partial reports into a
+//!   [`SweepReport`] that is **byte-identical** to the single-process
+//!   `SweepReport::json_string` for any shard count (including 1): cells
+//!   are re-sorted by scenario index and [`SummaryStats`] recomputed from
+//!   the union in index order, which replays the exact f64 operation
+//!   sequence of the single-process path.
+//!
+//! CLI: `zygarde sweep --matrix M --shard I/N --out shard_I.json` on N
+//! hosts, then `zygarde merge shard_*.json --out report.json` anywhere.
+//!
+//! [`SummaryStats`]: super::report::SummaryStats
+
+use std::fmt;
+use std::path::Path;
+
+use crate::util::json::Value;
+
+use crate::nvm::CommitPolicy;
+
+use super::report::{CellResult, SweepReport};
+use super::runner;
+use super::{HarvesterSpec, ScenarioMatrix, SeedPolicy};
+
+/// One shard of a strided partition: this process owns every scenario
+/// index `i` with `i % shard_count == shard_index`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub shard_index: usize,
+    pub shard_count: usize,
+}
+
+impl ShardSpec {
+    pub fn new(shard_index: usize, shard_count: usize) -> Result<ShardSpec, String> {
+        if shard_count == 0 {
+            return Err("shard count must be > 0".to_string());
+        }
+        if shard_index >= shard_count {
+            return Err(format!(
+                "shard index {shard_index} out of range for {shard_count} shards"
+            ));
+        }
+        Ok(ShardSpec { shard_index, shard_count })
+    }
+
+    /// The degenerate single-shard spec: owns every scenario.
+    pub fn whole() -> ShardSpec {
+        ShardSpec { shard_index: 0, shard_count: 1 }
+    }
+
+    /// Parse the CLI form `I/N` (e.g. `--shard 2/8`).
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let (i, n) = s
+            .split_once('/')
+            .ok_or_else(|| format!("bad shard spec `{s}`: expected I/N, e.g. 0/4"))?;
+        let i = i.trim().parse::<usize>().map_err(|_| format!("bad shard index in `{s}`"))?;
+        let n = n.trim().parse::<usize>().map_err(|_| format!("bad shard count in `{s}`"))?;
+        ShardSpec::new(i, n)
+    }
+
+    /// Does this shard own scenario index `idx`?
+    pub fn owns(&self, idx: usize) -> bool {
+        idx % self.shard_count == self.shard_index
+    }
+
+    /// Number of scenarios this shard owns out of `total`.
+    pub fn len_of(&self, total: usize) -> usize {
+        (total + self.shard_count - 1 - self.shard_index) / self.shard_count
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}/{}", self.shard_index, self.shard_count)
+    }
+}
+
+// ---- matrix fingerprint --------------------------------------------------
+
+/// Identity of a matrix expansion, embedded in every [`PartialReport`]:
+/// shards only merge when they were cut from the same matrix. The axis
+/// hash covers every expansion-relevant field — axes (including task-mix
+/// traces), seed policy, horizon, queue geometry — so two matrices agree
+/// on the fingerprint only if they expand to identical scenario lists.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MatrixFingerprint {
+    pub name: String,
+    pub seed: u64,
+    pub n_scenarios: usize,
+    pub axes_hash: u64,
+}
+
+/// Incremental FNV-1a (64-bit) — dependency-free and stable across
+/// platforms, unlike `DefaultHasher` whose algorithm is unspecified.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    fn bool(&mut self, b: bool) {
+        self.u64(b as u64);
+    }
+}
+
+/// Compute the [`MatrixFingerprint`] of a matrix.
+pub fn fingerprint(m: &ScenarioMatrix) -> MatrixFingerprint {
+    let mut h = Fnv::new();
+    h.str(&m.name);
+    h.u64(m.seed);
+    h.u64(match m.seed_policy {
+        SeedPolicy::PerScenario => 0,
+        SeedPolicy::PairedEnvironment => 1,
+    });
+    h.u64(m.mixes.len() as u64);
+    for mix in &m.mixes {
+        h.str(&mix.name);
+        h.u64(mix.tasks.len() as u64);
+        for t in &mix.tasks {
+            h.u64(t.id as u64);
+            h.str(&t.name);
+            h.f64(t.period_ms);
+            h.f64(t.deadline_ms);
+            h.f64(t.release_energy_mj);
+            h.bool(t.imprecise);
+            // Every variable-length vector is length-prefixed so element
+            // boundaries are unambiguous in the hash stream (the per-unit
+            // vectors can legitimately differ in length — e.g. a short
+            // `unit_state_bytes` falls back to the default).
+            h.u64(t.unit_time_ms.len() as u64);
+            for &x in &t.unit_time_ms {
+                h.f64(x);
+            }
+            h.u64(t.unit_energy_mj.len() as u64);
+            for &x in &t.unit_energy_mj {
+                h.f64(x);
+            }
+            h.u64(t.unit_fragments.len() as u64);
+            for &x in &t.unit_fragments {
+                h.u64(x as u64);
+            }
+            h.u64(t.unit_state_bytes.len() as u64);
+            for &x in &t.unit_state_bytes {
+                h.u64(x as u64);
+            }
+            // Trace content drives the simulated outcomes; hash it so two
+            // mixes that differ only in data cannot share a fingerprint.
+            h.u64(t.traces.len() as u64);
+            for tr in t.traces.iter() {
+                h.u64(tr.label as u64);
+                h.u64(tr.exit_unit as u64);
+                h.u64(tr.oracle_unit.map(|o| o as u64 + 1).unwrap_or(0));
+                h.u64(tr.units.len() as u64);
+                for u in &tr.units {
+                    h.u64(u.gap.to_bits() as u64);
+                    h.u64(u.pred as u64);
+                    h.bool(u.exit);
+                    h.bool(u.correct);
+                }
+            }
+        }
+    }
+    // Axes are hashed field by field, NOT via their display labels —
+    // labels are lossy (a Markov harvester's label omits q and eta, a
+    // fault plan's omits the burst offset), and a lossy fingerprint would
+    // let shards of *different* simulations merge silently.
+    h.u64(m.harvesters.len() as u64);
+    for hs in &m.harvesters {
+        match *hs {
+            HarvesterSpec::System(id) => {
+                h.u64(1);
+                h.u64(id as u64);
+            }
+            HarvesterSpec::Persistent { power_mw } => {
+                h.u64(2);
+                h.f64(power_mw);
+            }
+            HarvesterSpec::Markov { kind, on_power_mw, q, duty, eta } => {
+                h.u64(3);
+                h.str(&format!("{kind:?}"));
+                h.f64(on_power_mw);
+                h.f64(q);
+                h.f64(duty);
+                h.f64(eta);
+            }
+        }
+    }
+    h.u64(m.capacitors_mf.len() as u64);
+    for &c in &m.capacitors_mf {
+        h.f64(c);
+    }
+    h.bool(m.precharge);
+    h.u64(m.schedulers.len() as u64);
+    for s in &m.schedulers {
+        h.str(s.name());
+    }
+    h.u64(m.exits.len() as u64);
+    for e in &m.exits {
+        h.str(e.map(|e| e.name()).unwrap_or("scheduler-default"));
+    }
+    h.u64(m.faults.len() as u64);
+    for f in &m.faults {
+        h.str(f.clock.name());
+        match f.brownout {
+            None => h.u64(0),
+            Some(w) => {
+                h.u64(1);
+                h.f64(w.period_ms);
+                h.f64(w.duration_ms);
+                h.f64(w.offset_ms);
+            }
+        }
+    }
+    h.u64(m.nvms.len() as u64);
+    for n in &m.nvms {
+        h.str(n.model.name());
+        match n.policy {
+            CommitPolicy::EveryFragment => h.u64(0),
+            CommitPolicy::UnitBoundary => h.u64(1),
+            CommitPolicy::JitVoltage { margin_v } => {
+                h.u64(2);
+                h.f64(margin_v);
+            }
+        }
+    }
+    h.u64(m.n_reps);
+    h.f64(m.duration_ms);
+    h.u64(m.queue_size as u64);
+    h.f64(m.release_jitter);
+    h.bool(m.log_jobs);
+    MatrixFingerprint {
+        name: m.name.clone(),
+        seed: m.seed,
+        n_scenarios: m.len(),
+        axes_hash: h.0,
+    }
+}
+
+impl MatrixFingerprint {
+    pub fn to_json(&self) -> Value {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("matrix".to_string(), Value::Str(self.name.clone()));
+        m.insert("matrix_seed".to_string(), Value::Str(self.seed.to_string()));
+        m.insert("n_scenarios".to_string(), Value::Num(self.n_scenarios as f64));
+        m.insert("axes_hash".to_string(), Value::Str(format!("{:016x}", self.axes_hash)));
+        Value::Obj(m)
+    }
+
+    pub fn from_json(v: &Value) -> Result<MatrixFingerprint, String> {
+        let name = v
+            .get("matrix")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "fingerprint: missing `matrix`".to_string())?
+            .to_string();
+        let seed = v
+            .get("matrix_seed")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "fingerprint: missing `matrix_seed`".to_string())?
+            .parse::<u64>()
+            .map_err(|e| format!("fingerprint: bad matrix_seed: {e}"))?;
+        let n_scenarios = v
+            .get("n_scenarios")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| "fingerprint: missing `n_scenarios`".to_string())?
+            as usize;
+        let axes_hash = u64::from_str_radix(
+            v.get("axes_hash")
+                .and_then(Value::as_str)
+                .ok_or_else(|| "fingerprint: missing `axes_hash`".to_string())?,
+            16,
+        )
+        .map_err(|e| format!("fingerprint: bad axes_hash: {e}"))?;
+        Ok(MatrixFingerprint { name, seed, n_scenarios, axes_hash })
+    }
+}
+
+// ---- partial reports -----------------------------------------------------
+
+/// One shard's finished cells plus the identity of the matrix they were
+/// cut from — the unit of cross-host result shipping.
+#[derive(Clone, Debug)]
+pub struct PartialReport {
+    pub fingerprint: MatrixFingerprint,
+    pub shard: ShardSpec,
+    /// In scenario-index order (ascending, strided by `shard_count`).
+    pub cells: Vec<CellResult>,
+}
+
+impl PartialReport {
+    pub fn to_json(&self) -> Value {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("fingerprint".to_string(), self.fingerprint.to_json());
+        m.insert("shard_index".to_string(), Value::Num(self.shard.shard_index as f64));
+        m.insert("shard_count".to_string(), Value::Num(self.shard.shard_count as f64));
+        m.insert(
+            "cells".to_string(),
+            Value::Arr(self.cells.iter().map(|c| c.to_json()).collect()),
+        );
+        Value::Obj(m)
+    }
+
+    pub fn json_string(&self) -> String {
+        self.to_json().to_json()
+    }
+
+    pub fn from_json(v: &Value) -> Result<PartialReport, String> {
+        let fingerprint = MatrixFingerprint::from_json(
+            v.get("fingerprint").ok_or_else(|| "partial: missing `fingerprint`".to_string())?,
+        )?;
+        let idx = v
+            .get("shard_index")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| "partial: missing `shard_index`".to_string())? as usize;
+        let count = v
+            .get("shard_count")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| "partial: missing `shard_count`".to_string())? as usize;
+        let shard = ShardSpec::new(idx, count)?;
+        let cells = v
+            .get("cells")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "partial: missing `cells`".to_string())?
+            .iter()
+            .map(CellResult::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(PartialReport { fingerprint, shard, cells })
+    }
+
+    pub fn parse(src: &str) -> Result<PartialReport, String> {
+        let v = Value::parse(src).map_err(|e| e.to_string())?;
+        PartialReport::from_json(&v)
+    }
+
+    pub fn from_file(path: &Path) -> Result<PartialReport, String> {
+        let v = Value::parse_file(path)?;
+        PartialReport::from_json(&v).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+/// Run one shard of a matrix: expand, keep the strided subset, execute on
+/// `threads` workers. Each scenario carries its own `(matrix_seed, index)`
+/// RNG derivation, so the subset runs exactly as it would inside the full
+/// sweep.
+pub fn run_shard(matrix: &ScenarioMatrix, shard: ShardSpec, threads: usize) -> PartialReport {
+    let scenarios: Vec<_> =
+        matrix.expand().into_iter().filter(|s| shard.owns(s.index)).collect();
+    let cells = runner::run_scenarios(&scenarios, threads);
+    PartialReport { fingerprint: fingerprint(matrix), shard, cells }
+}
+
+// ---- merging -------------------------------------------------------------
+
+/// Why a set of partial reports cannot be merged.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MergeError {
+    /// No partial reports were supplied.
+    Empty,
+    /// Two shards carry different matrix fingerprints (different matrix,
+    /// seed, axes, or total cell count).
+    FingerprintMismatch { expected: String, got: String },
+    /// Shards disagree on how many shards the matrix was cut into.
+    ShardCountMismatch { expected: usize, got: usize },
+    /// A shard's index is out of range for its own shard count.
+    InvalidShard { index: usize, count: usize },
+    /// The same shard index appears twice.
+    DuplicateShard(usize),
+    /// A shard of the partition is missing.
+    MissingShard(usize),
+    /// A cell's scenario index does not belong to the shard that carried
+    /// it, or exceeds the matrix's cell count.
+    ForeignCell { shard: usize, index: usize },
+    /// The union of cells has the wrong size (a shard file was truncated
+    /// or carries extra cells).
+    IncompleteCover { expected: usize, got: usize },
+    /// The union of cells has the right size but skips or duplicates a
+    /// scenario index (a corrupted shard file).
+    CellIndexMismatch { expected: usize, found: usize },
+}
+
+impl fmt::Display for MergeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MergeError::Empty => write!(f, "no partial reports to merge"),
+            MergeError::FingerprintMismatch { expected, got } => write!(
+                f,
+                "matrix fingerprint mismatch: {got} vs {expected} — these shards \
+                 were not cut from the same matrix"
+            ),
+            MergeError::ShardCountMismatch { expected, got } => {
+                write!(f, "shard count mismatch: {got} vs {expected}")
+            }
+            MergeError::InvalidShard { index, count } => {
+                write!(f, "shard index {index} out of range for {count} shards")
+            }
+            MergeError::DuplicateShard(i) => write!(f, "shard {i} supplied twice"),
+            MergeError::MissingShard(i) => write!(f, "shard {i} missing from the partition"),
+            MergeError::ForeignCell { shard, index } => {
+                write!(f, "cell index {index} does not belong to shard {shard}")
+            }
+            MergeError::IncompleteCover { expected, got } => write!(
+                f,
+                "merged cells do not cover the matrix: got {got} of {expected} scenarios"
+            ),
+            MergeError::CellIndexMismatch { expected, found } => write!(
+                f,
+                "merged cells skip or duplicate a scenario: expected index {expected}, \
+                 found {found} (corrupted shard file)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MergeError {}
+
+/// Merge a complete shard partition back into the [`SweepReport`] the
+/// single-process sweep would have produced — byte-identical for any shard
+/// count, including `shard_count = 1`. Order of `parts` does not matter.
+pub fn merge(parts: &[PartialReport]) -> Result<SweepReport, MergeError> {
+    let first = parts.first().ok_or(MergeError::Empty)?;
+    let fp = &first.fingerprint;
+    let count = first.shard.shard_count;
+    // Shard count and cell count come from files — bound every allocation
+    // by the *actual* input size before trusting them. A complete
+    // partition needs one report per shard, so count > parts.len() means
+    // a shard is missing; by pigeonhole the smallest absent index is
+    // <= parts.len(), so this scan is bounded too.
+    if count > parts.len() {
+        let seen: std::collections::BTreeSet<usize> =
+            parts.iter().map(|p| p.shard.shard_index).collect();
+        let missing = (0..count).find(|i| !seen.contains(i)).unwrap_or(0);
+        return Err(MergeError::MissingShard(missing));
+    }
+    let mut seen = vec![false; count];
+    let total_cells: usize = parts.iter().map(|p| p.cells.len()).sum();
+    let mut cells: Vec<CellResult> = Vec::with_capacity(total_cells);
+    for p in parts {
+        if p.fingerprint != *fp {
+            return Err(MergeError::FingerprintMismatch {
+                expected: format!("{:?}", fp),
+                got: format!("{:?}", p.fingerprint),
+            });
+        }
+        if p.shard.shard_count != count {
+            return Err(MergeError::ShardCountMismatch {
+                expected: count,
+                got: p.shard.shard_count,
+            });
+        }
+        if p.shard.shard_index >= count {
+            return Err(MergeError::InvalidShard {
+                index: p.shard.shard_index,
+                count,
+            });
+        }
+        if seen[p.shard.shard_index] {
+            return Err(MergeError::DuplicateShard(p.shard.shard_index));
+        }
+        seen[p.shard.shard_index] = true;
+        for c in &p.cells {
+            if c.index >= fp.n_scenarios || !p.shard.owns(c.index) {
+                return Err(MergeError::ForeignCell {
+                    shard: p.shard.shard_index,
+                    index: c.index,
+                });
+            }
+        }
+        cells.extend(p.cells.iter().cloned());
+    }
+    if let Some(missing) = seen.iter().position(|&s| !s) {
+        return Err(MergeError::MissingShard(missing));
+    }
+    // Matrix-expansion order, regardless of which shard (or host) ran what.
+    cells.sort_by_key(|c| c.index);
+    if cells.len() != fp.n_scenarios {
+        return Err(MergeError::IncompleteCover {
+            expected: fp.n_scenarios,
+            got: cells.len(),
+        });
+    }
+    if let Some((i, c)) = cells.iter().enumerate().find(|(i, c)| c.index != *i) {
+        return Err(MergeError::CellIndexMismatch { expected: i, found: c.index });
+    }
+    // SweepReport::new recomputes SummaryStats from the union in index
+    // order — the same f64 operation sequence as the single-process path,
+    // so the serialized summary is byte-identical too.
+    Ok(SweepReport::new(&fp.name, fp.seed, cells))
+}
+
+/// Parse and merge shard files — the `zygarde merge` entry point.
+pub fn merge_files(paths: &[std::path::PathBuf]) -> Result<SweepReport, String> {
+    let parts = paths
+        .iter()
+        .map(|p| PartialReport::from_file(p.as_path()))
+        .collect::<Result<Vec<_>, _>>()?;
+    merge(&parts).map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::SchedulerKind;
+    use crate::sim::sweep::{run_matrix, HarvesterSpec, TaskMix};
+
+    fn tiny_matrix(seed: u64) -> ScenarioMatrix {
+        ScenarioMatrix::new("shard-test", seed)
+            .mixes(vec![TaskMix::synthetic("m", 1, 3, seed)])
+            .harvesters(vec![
+                HarvesterSpec::Persistent { power_mw: 600.0 },
+                HarvesterSpec::Persistent { power_mw: 120.0 },
+            ])
+            .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+            .reps(3)
+            .duration_ms(3_000.0)
+    }
+
+    #[test]
+    fn shard_spec_parses_and_validates() {
+        assert_eq!(ShardSpec::parse("2/8").unwrap(), ShardSpec::new(2, 8).unwrap());
+        assert_eq!(ShardSpec::parse("0/1").unwrap(), ShardSpec::whole());
+        assert!(ShardSpec::parse("8/8").is_err());
+        assert!(ShardSpec::parse("3").is_err());
+        assert!(ShardSpec::parse("a/b").is_err());
+        assert!(ShardSpec::new(0, 0).is_err());
+    }
+
+    #[test]
+    fn strided_partition_covers_everything_once() {
+        let total = 13;
+        for count in 1..=5usize {
+            let mut owned = vec![0u32; total];
+            let mut sizes = Vec::new();
+            for i in 0..count {
+                let spec = ShardSpec::new(i, count).unwrap();
+                let n = (0..total).filter(|&x| spec.owns(x)).count();
+                assert_eq!(n, spec.len_of(total));
+                sizes.push(n);
+                for (x, o) in owned.iter_mut().enumerate() {
+                    if spec.owns(x) {
+                        *o += 1;
+                    }
+                }
+            }
+            assert!(owned.iter().all(|&o| o == 1), "{count} shards double/un-covered");
+            // Strided partitions are balanced to within one cell.
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    fn single_shard_merge_is_identity() {
+        let m = tiny_matrix(0x51);
+        let full = run_matrix(&m, 2);
+        let part = run_shard(&m, ShardSpec::whole(), 2);
+        let merged = merge(&[part]).unwrap();
+        assert_eq!(merged.json_string(), full.json_string());
+    }
+
+    #[test]
+    fn fingerprint_is_sensitive_to_axes_and_seed() {
+        let base = fingerprint(&tiny_matrix(1));
+        assert_eq!(base, fingerprint(&tiny_matrix(1)));
+        assert_ne!(base, fingerprint(&tiny_matrix(2)));
+        assert_ne!(base, fingerprint(&tiny_matrix(1).duration_ms(4_000.0)));
+        assert_ne!(
+            base,
+            fingerprint(&tiny_matrix(1).schedulers(vec![SchedulerKind::Zygarde]))
+        );
+        assert_ne!(
+            base.axes_hash,
+            fingerprint(&tiny_matrix(1).capacitors_mf(vec![5.0])).axes_hash
+        );
+    }
+
+    #[test]
+    fn fingerprint_sees_fields_that_labels_omit() {
+        use crate::energy::harvester::HarvesterKind;
+        use crate::sim::sweep::FaultPlan;
+        // Markov q/eta and brownout offset do not appear in display
+        // labels; the fingerprint must still distinguish them.
+        let markov = |q: f64, eta: f64| {
+            tiny_matrix(1).harvesters(vec![HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 100.0,
+                q,
+                duty: 0.5,
+                eta,
+            }])
+        };
+        assert_ne!(
+            fingerprint(&markov(0.9, 0.5)).axes_hash,
+            fingerprint(&markov(0.5, 0.5)).axes_hash
+        );
+        assert_ne!(
+            fingerprint(&markov(0.9, 0.5)).axes_hash,
+            fingerprint(&markov(0.9, 0.6)).axes_hash
+        );
+        let burst = |offset_ms: f64| {
+            tiny_matrix(1).faults(vec![FaultPlan::none().with_brownouts(1000.0, 200.0, offset_ms)])
+        };
+        assert_ne!(
+            fingerprint(&burst(0.0)).axes_hash,
+            fingerprint(&burst(150.0)).axes_hash
+        );
+    }
+
+    #[test]
+    fn partial_report_round_trips_through_json() {
+        let m = tiny_matrix(0xAB);
+        let part = run_shard(&m, ShardSpec::new(1, 3).unwrap(), 1);
+        assert!(part.cells.iter().all(|c| c.index % 3 == 1));
+        let back = PartialReport::parse(&part.json_string()).unwrap();
+        assert_eq!(back.json_string(), part.json_string());
+        assert_eq!(back.fingerprint, part.fingerprint);
+        assert_eq!(back.shard, part.shard);
+    }
+
+    #[test]
+    fn mismatched_fingerprints_refuse_to_merge() {
+        let a = run_shard(&tiny_matrix(1), ShardSpec::new(0, 2).unwrap(), 1);
+        let b = run_shard(&tiny_matrix(2), ShardSpec::new(1, 2).unwrap(), 1);
+        match merge(&[a, b]) {
+            Err(MergeError::FingerprintMismatch { .. }) => {}
+            other => panic!("expected fingerprint mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn incomplete_partitions_refuse_to_merge() {
+        let m = tiny_matrix(7);
+        let a = run_shard(&m, ShardSpec::new(0, 3).unwrap(), 1);
+        let b = run_shard(&m, ShardSpec::new(2, 3).unwrap(), 1);
+        assert_eq!(merge(&[a.clone(), b.clone()]).unwrap_err(), MergeError::MissingShard(1));
+        assert_eq!(
+            merge(&[a.clone(), a.clone(), b.clone()]).unwrap_err(),
+            MergeError::DuplicateShard(0)
+        );
+        assert_eq!(merge(&[]).unwrap_err(), MergeError::Empty);
+        // A truncated shard file fails the cover check.
+        let mut c = run_shard(&m, ShardSpec::new(1, 3).unwrap(), 1);
+        c.cells.pop();
+        let n = fingerprint(&m).n_scenarios;
+        assert_eq!(
+            merge(&[a, c, b]).unwrap_err(),
+            MergeError::IncompleteCover { expected: n, got: n - 1 }
+        );
+    }
+
+    #[test]
+    fn duplicated_plus_skipped_cells_in_one_shard_are_detected() {
+        let m = tiny_matrix(7);
+        let mut a = run_shard(&m, ShardSpec::new(0, 2).unwrap(), 1);
+        let b = run_shard(&m, ShardSpec::new(1, 2).unwrap(), 1);
+        // Replace one owned cell with a copy of another owned cell: sizes
+        // and ownership both check out, so only the positional scan can
+        // catch the duplicate/gap pair — and its error must name it.
+        let dup = a.cells[0].clone();
+        let last = a.cells.len() - 1;
+        a.cells[last] = dup;
+        match merge(&[a, b]) {
+            Err(MergeError::CellIndexMismatch { expected: 1, found: 0 }) => {}
+            other => panic!("expected cell-index mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn foreign_cells_are_rejected() {
+        let m = tiny_matrix(7);
+        let mut a = run_shard(&m, ShardSpec::new(0, 2).unwrap(), 1);
+        let b = run_shard(&m, ShardSpec::new(1, 2).unwrap(), 1);
+        // Steal a cell from the other shard.
+        a.cells.push(b.cells[0].clone());
+        match merge(&[a, b]) {
+            Err(MergeError::ForeignCell { shard: 0, .. }) => {}
+            other => panic!("expected foreign-cell error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Shard-merge contract tests: for ANY partition of a matrix into strided
+//! shards — any shard count, any per-shard thread count, any shard-file
+//! order — `sweep::shard::merge` reproduces the single-process
+//! `SweepReport::json_string` **byte-for-byte**; and shards that were not
+//! cut from the same matrix refuse to merge. The CI shard-matrix job
+//! proves the same property end-to-end through the CLI
+//! (`zygarde sweep --shard i/3` × 3 → `zygarde merge` → `diff`).
+
+use zygarde::coordinator::sched::{ExitPolicy, SchedulerKind};
+use zygarde::energy::harvester::HarvesterKind;
+use zygarde::nvm::NvmSpec;
+use zygarde::sim::sweep::{
+    fingerprint, merge, run_matrix, run_shard, FaultPlan, HarvesterSpec, MergeError,
+    PartialReport, ScenarioMatrix, SeedPolicy, ShardSpec, TaskMix,
+};
+use zygarde::sim::workload::synthetic_task;
+use zygarde::util::prop::{forall, Config, Size};
+use zygarde::util::rng::Pcg32;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 7];
+
+/// The golden-snapshot matrix from `rust/tests/sweep_golden.rs` — the
+/// acceptance criterion demands that any shard partition of it merges
+/// back to the byte-identical single-process report.
+fn golden_matrix() -> ScenarioMatrix {
+    let task = synthetic_task(0, 3, 300.0, 600.0, 40, 0x601D);
+    ScenarioMatrix::new("golden-small", 0x601D)
+        .mixes(vec![TaskMix::from_tasks("golden", vec![task])])
+        .harvesters(vec![HarvesterSpec::Persistent { power_mw: 600.0 }])
+        .capacitors_mf(vec![50.0])
+        .schedulers(vec![SchedulerKind::Edf])
+        .exits(vec![ExitPolicy::None])
+        .release_jitter(0.0)
+        .duration_ms(30_000.0)
+}
+
+/// A multi-dimensional matrix big enough that every shard count in
+/// `SHARD_COUNTS` produces non-trivial shards.
+fn grid_matrix(seed: u64) -> ScenarioMatrix {
+    ScenarioMatrix::new("shard-grid", seed)
+        .mixes(vec![
+            TaskMix::synthetic("uni", 1, 3, seed ^ 0x1),
+            TaskMix::synthetic("duo", 2, 2, seed ^ 0x2),
+        ])
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 500.0 },
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 110.0,
+                q: 0.88,
+                duty: 0.55,
+                eta: 0.5,
+            },
+        ])
+        .capacitors_mf(vec![5.0, 50.0])
+        .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+        .faults(vec![
+            FaultPlan::none(),
+            FaultPlan::none().with_brownouts(1_200.0, 250.0, 50.0),
+        ])
+        .nvms(vec![NvmSpec::ideal(), NvmSpec::fram_jit()])
+        .reps(1)
+        .duration_ms(4_000.0)
+}
+
+/// Round-trip every shard through its JSON form, as the CLI does, then
+/// merge — so the test covers serialization, not just in-memory merging.
+fn merge_via_json(parts: &[PartialReport]) -> String {
+    let rt: Vec<PartialReport> = parts
+        .iter()
+        .map(|p| PartialReport::parse(&p.json_string()).expect("shard json round trip"))
+        .collect();
+    merge(&rt).expect("merge").json_string()
+}
+
+#[test]
+fn golden_matrix_merges_byte_identically_for_any_shard_count() {
+    let m = golden_matrix();
+    let reference = run_matrix(&m, 1).json_string();
+    for &count in &SHARD_COUNTS {
+        let parts: Vec<PartialReport> = (0..count)
+            .map(|i| run_shard(&m, ShardSpec::new(i, count).unwrap(), 2))
+            .collect();
+        assert_eq!(
+            merge_via_json(&parts),
+            reference,
+            "{count}-way shard merge of the golden matrix diverged"
+        );
+    }
+}
+
+#[test]
+fn grid_merges_byte_identically_across_shard_and_thread_counts() {
+    let m = grid_matrix(0x5AD);
+    assert_eq!(m.len(), 64);
+    let reference = run_matrix(&m, 4).json_string();
+    for (k, &count) in SHARD_COUNTS.iter().enumerate() {
+        // Vary per-shard thread counts so shards finish out of order.
+        let parts: Vec<PartialReport> = (0..count)
+            .map(|i| run_shard(&m, ShardSpec::new(i, count).unwrap(), 1 + (i + k) % 4))
+            .collect();
+        assert_eq!(
+            merge_via_json(&parts),
+            reference,
+            "{count}-way shard merge diverged from the 4-thread single process"
+        );
+    }
+}
+
+#[test]
+fn shard_file_order_does_not_matter() {
+    let m = grid_matrix(0x0DD);
+    let reference = run_matrix(&m, 2).json_string();
+    let mut parts: Vec<PartialReport> =
+        (0..7).map(|i| run_shard(&m, ShardSpec::new(i, 7).unwrap(), 2)).collect();
+    let mut rng = Pcg32::seeded(99);
+    for round in 0..5 {
+        rng.shuffle(&mut parts);
+        assert_eq!(
+            merge_via_json(&parts),
+            reference,
+            "shuffled merge round {round} diverged"
+        );
+    }
+}
+
+#[test]
+fn mismatched_fingerprints_are_an_error() {
+    // Same shape, different matrix seed → different engine seeds.
+    let a = run_shard(&grid_matrix(1), ShardSpec::new(0, 2).unwrap(), 1);
+    let b = run_shard(&grid_matrix(2), ShardSpec::new(1, 2).unwrap(), 1);
+    assert!(matches!(
+        merge(&[a.clone(), b]),
+        Err(MergeError::FingerprintMismatch { .. })
+    ));
+    // Same seed, different axis (duration) → different fingerprint too.
+    let c = run_shard(&grid_matrix(1).duration_ms(5_000.0), ShardSpec::new(1, 2).unwrap(), 1);
+    assert!(matches!(
+        merge(&[a, c]),
+        Err(MergeError::FingerprintMismatch { .. })
+    ));
+}
+
+#[test]
+fn paired_seed_matrices_shard_identically_too() {
+    // PairedEnvironment seeds derive from dimension indices, not the
+    // scenario stream — sharding must not disturb them either.
+    let m = grid_matrix(0x7A1).seed_policy(SeedPolicy::PairedEnvironment);
+    let reference = run_matrix(&m, 3).json_string();
+    let parts: Vec<PartialReport> =
+        (0..3).map(|i| run_shard(&m, ShardSpec::new(i, 3).unwrap(), 2)).collect();
+    assert_eq!(merge_via_json(&parts), reference);
+}
+
+/// Property: a randomly generated matrix, partitioned into a random shard
+/// count and merged from JSON in random order, reproduces the
+/// single-process report byte-for-byte.
+#[test]
+fn random_matrices_merge_byte_identically() {
+    let cfg = Config { iters: 10, ..Default::default() };
+    forall(
+        "shard-merge-byte-identical",
+        cfg,
+        |rng: &mut Pcg32, size: Size| {
+            let seed = rng.next_u64();
+            let n_sched = 1 + rng.below(2) as usize;
+            let scheds = [SchedulerKind::Zygarde, SchedulerKind::EdfMandatory];
+            let m = ScenarioMatrix::new("prop-shard", seed)
+                .mixes(vec![TaskMix::synthetic("m", 1 + rng.below(2) as usize, 2, seed)])
+                .harvesters(vec![
+                    HarvesterSpec::Persistent { power_mw: 300.0 + rng.f64() * 300.0 },
+                    HarvesterSpec::Markov {
+                        kind: HarvesterKind::Solar,
+                        on_power_mw: 150.0 + rng.f64() * 200.0,
+                        q: 0.85,
+                        duty: 0.5,
+                        eta: 0.55,
+                    },
+                ])
+                .capacitors_mf(vec![5.0, 50.0])
+                .schedulers(scheds[..n_sched].to_vec())
+                .reps(1 + rng.below(3))
+                .duration_ms(1_500.0 + 500.0 * size.0.min(4) as f64);
+            let count = 1 + rng.below(7) as usize;
+            let order_seed = rng.next_u64();
+            (m, count, order_seed)
+        },
+        |(m, count, order_seed)| {
+            let reference = run_matrix(m, 2).json_string();
+            let mut parts: Vec<PartialReport> = (0..*count)
+                .map(|i| run_shard(m, ShardSpec::new(i, *count).unwrap(), 1 + i % 3))
+                .collect();
+            Pcg32::seeded(*order_seed).shuffle(&mut parts);
+            let merged = merge_via_json(&parts);
+            if merged != reference {
+                return Err(format!(
+                    "{count}-way merge diverged for matrix seed {} ({} cells)",
+                    m.seed,
+                    m.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shard_counts_beyond_cells_still_merge() {
+    // More shards than scenarios: trailing shards are empty but still
+    // required members of the partition.
+    let m = ScenarioMatrix::new("tiny", 3)
+        .mixes(vec![TaskMix::synthetic("m", 1, 2, 3)])
+        .reps(2)
+        .duration_ms(2_000.0);
+    assert_eq!(m.len(), 2);
+    let reference = run_matrix(&m, 1).json_string();
+    let parts: Vec<PartialReport> =
+        (0..5).map(|i| run_shard(&m, ShardSpec::new(i, 5).unwrap(), 1)).collect();
+    assert!(parts[3].cells.is_empty() && parts[4].cells.is_empty());
+    assert_eq!(merge_via_json(&parts), reference);
+    // Dropping an *empty* shard still fails the partition check: merge
+    // cannot know it was empty without its fingerprinted report.
+    assert!(matches!(
+        merge(&parts[..4]),
+        Err(MergeError::MissingShard(4))
+    ));
+}
+
+#[test]
+fn fingerprint_matches_cli_contract() {
+    // The fingerprint is what `zygarde merge` trusts across hosts: equal
+    // for identical matrices, different when any axis moves.
+    let fp = fingerprint(&grid_matrix(5));
+    assert_eq!(fp, fingerprint(&grid_matrix(5)));
+    assert_eq!(fp.n_scenarios, 64);
+    assert_ne!(fp, fingerprint(&grid_matrix(6)));
+    assert_ne!(
+        fp.axes_hash,
+        fingerprint(&grid_matrix(5).capacitors_mf(vec![50.0])).axes_hash
+    );
+}

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the sweep engine.
+
+Compares a freshly measured ``BENCH_sweep.json`` (written by
+``cargo bench --bench bench_sweep``) against the committed
+``BENCH_baseline.json`` and fails when scenarios/sec drops more than
+``--max-drop`` (default 30%) below the baseline on any comparable row
+(per-thread-count, per-process-count sharded, and per-NVM-policy rows).
+
+The comparison only runs when the workloads match (same scenario count,
+per-cell horizon, and reps); otherwise it reports and exits 0, since a
+ratio between different workloads is meaningless.
+
+Bootstrapping: a baseline carrying ``"provisional": true`` (committed
+from a machine that could not run the bench) reports the comparison but
+never fails. To arm the gate, download CI's ``bench-sweep`` artifact and
+commit its ``BENCH_sweep.json`` as ``BENCH_baseline.json`` with the
+``provisional`` key removed.
+"""
+
+import argparse
+import json
+import sys
+
+
+def rows(doc):
+    out = {}
+    for r in doc.get("threads", []):
+        out[f"threads={int(r['threads'])}"] = r["scenarios_per_s"]
+    for r in doc.get("sharded", []):
+        out[f"processes={int(r['processes'])}"] = r["scenarios_per_s"]
+    for r in doc.get("nvm_policies", []):
+        out[f"nvm={r['policy']}"] = r["scenarios_per_s"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_sweep.json")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="maximum tolerated fractional throughput drop (default 0.30)")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    mismatch = [k for k in ("scenarios", "duration_ms", "reps")
+                if cur.get(k) != base.get(k)]
+    if mismatch:
+        print(f"bench-gate: workload mismatch on {mismatch} "
+              f"(current {[cur.get(k) for k in mismatch]} vs "
+              f"baseline {[base.get(k) for k in mismatch]}); skipping comparison")
+        return 0
+
+    provisional = bool(base.get("provisional"))
+    crows, brows = rows(cur), rows(base)
+    failures = []
+    print(f"{'row':<24} {'baseline':>12} {'current':>12} {'ratio':>9}")
+    for key, b in sorted(brows.items()):
+        c = crows.get(key)
+        if c is None:
+            print(f"{key:<24} {b:>12.1f} {'missing':>12}")
+            failures.append(f"{key}: row missing from current run")
+            continue
+        ratio = c / b if b > 0 else float("inf")
+        flag = "" if ratio >= 1.0 - args.max_drop else "  << DROP"
+        print(f"{key:<24} {b:>12.1f} {c:>12.1f} {ratio:>8.2f}x{flag}")
+        if ratio < 1.0 - args.max_drop:
+            failures.append(f"{key}: {c:.1f}/s vs baseline {b:.1f}/s ({ratio:.2f}x)")
+
+    if failures:
+        msg = "; ".join(failures)
+        if provisional:
+            print(f"bench-gate: would fail ({msg}) but the baseline is marked "
+                  f"provisional — commit a CI-measured BENCH_sweep.json as "
+                  f"BENCH_baseline.json (without 'provisional') to arm the gate")
+            return 0
+        print(f"bench-gate: FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("bench-gate: OK — no row dropped more than "
+          f"{args.max_drop:.0%} below baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
