@@ -20,9 +20,14 @@ use std::collections::BTreeMap;
 use std::process::Command;
 use std::time::Instant;
 
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::energy::harvester::HarvesterKind;
 use zygarde::exp::sweep_cli::bench_matrix;
 use zygarde::nvm::NvmSpec;
-use zygarde::sim::sweep::{merge, run_matrix, PartialReport};
+use zygarde::sim::sweep::{
+    merge, run_matrix, run_matrix_reference, HarvesterSpec, PartialReport, ScenarioMatrix,
+    TaskMix,
+};
 use zygarde::util::json::Value;
 
 fn env_u64(key: &str, default: u64) -> u64 {
@@ -144,6 +149,83 @@ fn main() {
         shard_rows.push((procs, rate, dt));
     }
 
+    // --- off-dominated rows: the off-phase fast-forward regime ----------
+    // Low-duty RF, piezo footsteps, and diurnal solar spend most of their
+    // simulated time below the boot voltage — the regime the fast path
+    // targets. Each matrix runs on the optimized engine AND the naive
+    // reference stepper, asserts the reports are byte-identical (the CI
+    // differential proof on real workloads), and reports the speedup;
+    // `tools/bench_gate.py` enforces the committed per-row `min_speedup`.
+    println!();
+    let off_matrices: Vec<(&str, ScenarioMatrix)> = vec![
+        (
+            "rf-lowduty",
+            ScenarioMatrix::new("off-rf-lowduty", 0x0FF1)
+                .mixes(vec![TaskMix::synthetic("uni", 1, 3, 21)])
+                .harvesters(vec![HarvesterSpec::Markov {
+                    kind: HarvesterKind::Rf,
+                    on_power_mw: 90.0,
+                    q: 0.97,
+                    duty: 0.12,
+                    eta: 0.38,
+                }])
+                .capacitors_mf(vec![10.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .reps(2)
+                // Long enough that the reference leg is well clear of
+                // Instant/scheduler noise — the speedup floor gates on
+                // this ratio unconditionally.
+                .duration_ms(7_200_000.0),
+        ),
+        (
+            "piezo",
+            ScenarioMatrix::new("off-piezo", 0x0FF2)
+                .mixes(vec![TaskMix::synthetic("uni", 1, 3, 22)])
+                .harvesters(vec![HarvesterSpec::Piezo { eta: 0.3 }])
+                .capacitors_mf(vec![50.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .duration_ms(14_400_000.0), // 4 h of footstep bouts
+        ),
+        (
+            "solar-diurnal",
+            ScenarioMatrix::new("off-solar-diurnal", 0x0FF3)
+                .mixes(vec![TaskMix::synthetic("uni", 1, 3, 23)])
+                .harvesters(vec![HarvesterSpec::SolarDiurnal { eta: 0.4 }])
+                .capacitors_mf(vec![50.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .duration_ms(86_400_000.0), // one full day/night cycle
+        ),
+    ];
+    let mut off_rows: Vec<(String, usize, f64, f64, f64, f64)> = Vec::new();
+    for (name, m) in &off_matrices {
+        let cells = m.len();
+        // Best of two timed runs per leg: the floor below is a hard CI
+        // gate, so a single descheduled run must not fake a regression.
+        let timed = |run: &dyn Fn() -> zygarde::sim::sweep::SweepReport| {
+            let t0 = Instant::now();
+            let report = run();
+            let dt1 = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let _ = run();
+            (report, dt1.min(t0.elapsed().as_secs_f64()))
+        };
+        let (fast, fast_dt) = timed(&|| run_matrix(m, 1));
+        let (reference, ref_dt) = timed(&|| run_matrix_reference(m, 1));
+        assert_eq!(
+            fast.json_string(),
+            reference.json_string(),
+            "{name}: fast engine diverged from the reference stepper"
+        );
+        let fast_rate = cells as f64 / fast_dt;
+        let ref_rate = cells as f64 / ref_dt;
+        let speedup = ref_dt / fast_dt;
+        println!(
+            "off {name:<14} {fast_rate:>8.2} scenarios/s fast ({fast_dt:.3} s)  \
+             {ref_rate:>8.2}/s reference ({ref_dt:.3} s)  {speedup:.2}x, byte-identical"
+        );
+        off_rows.push((name.to_string(), cells, m.duration_ms, fast_rate, ref_rate, speedup));
+    }
+
     // --- NVM commit-policy rows: the commit path rides the fragment hot
     // loop, so per-policy throughput is tracked alongside the thread scaling.
     println!();
@@ -200,6 +282,24 @@ fn main() {
                             ("processes", Value::Num(*procs as f64)),
                             ("scenarios_per_s", Value::Num(*rate)),
                             ("secs", Value::Num(*secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "offphase",
+            Value::Arr(
+                off_rows
+                    .iter()
+                    .map(|(name, cells, duration_ms, fast_rate, ref_rate, speedup)| {
+                        obj(vec![
+                            ("matrix", Value::Str(name.clone())),
+                            ("scenarios", Value::Num(*cells as f64)),
+                            ("duration_ms", Value::Num(*duration_ms)),
+                            ("scenarios_per_s", Value::Num(*fast_rate)),
+                            ("reference_scenarios_per_s", Value::Num(*ref_rate)),
+                            ("speedup", Value::Num(*speedup)),
                         ])
                     })
                     .collect(),

@@ -15,6 +15,12 @@ use crate::util::rng::Pcg32;
 
 pub trait Clock {
     /// The time the scheduler believes it is, given true time `t_ms`.
+    ///
+    /// Must be a *pure observation* (no state change): the engine's
+    /// off-phase fast path skips reads that cannot influence anything
+    /// (empty queue), and the differential-exactness suite holds the
+    /// optimized and naive steppers — which read at different rates — to
+    /// byte-identical outcomes. State may only change in `on_reboot`.
     fn now_ms(&mut self, true_t_ms: f64) -> f64;
     /// Called when the MCU reboots after an outage of `outage_ms`.
     fn on_reboot(&mut self, true_t_ms: f64, outage_ms: f64);

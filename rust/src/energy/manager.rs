@@ -64,6 +64,26 @@ impl EnergyManager {
         self.was_on = on;
     }
 
+    /// One tick of the off-phase fast path: succeeds iff the MCU is off
+    /// AND the harvester can take a zero-power in-window tick
+    /// ([`Harvester::off_tick`]). On success the manager state is
+    /// **bitwise identical** to what `tick(dt_ms)` would have produced:
+    /// harvesting 0 mW adds exactly 0.0 mJ (`harvested_mj` and the
+    /// capacitor are unchanged bit for bit, and `Capacitor::charge(0.0, _)`
+    /// cannot move the MCU state), and the only observation `tick` would
+    /// have recorded is the off state itself — which is why `was_on` must
+    /// still be cleared here, or a brown-out that happened via a *draw*
+    /// (not a tick) would leave `was_on` stale and a later boot would
+    /// miss a reboot count. On failure nothing advances; take `tick`.
+    #[inline]
+    pub fn off_tick(&mut self, dt_ms: f64) -> bool {
+        if self.capacitor.mcu_on() || !self.harvester.off_tick(dt_ms) {
+            return false;
+        }
+        self.was_on = false;
+        true
+    }
+
     /// The scheduler's E_curr: usable stored energy.
     pub fn e_curr(&self) -> f64 {
         self.capacitor.usable_mj()
@@ -161,6 +181,36 @@ mod tests {
             let _ = m.capacitor.draw(1.0);
         }
         assert!(fired, "trigger never fired on the way down");
+    }
+
+    /// The manager-level fast-path contract: a walk that takes `off_tick`
+    /// whenever it applies (falling back to `tick`, with the engine's
+    /// idle/drain pattern) is bitwise indistinguishable from pure
+    /// `tick`ing — including `reboots`, which depends on the `was_on`
+    /// bookkeeping `off_tick` must keep in sync.
+    #[test]
+    fn off_tick_walk_is_bitwise_equal_to_naive_ticks() {
+        let h = Harvester::markov(HarvesterKind::Rf, 30.0, 0.9, 0.3, 1000.0, 5);
+        let mut fast = EnergyManager::new(Capacitor::new(0.005, 3.3, 2.8, 1.9), h, 0.5, 0.05);
+        let mut slow = fast.clone();
+        for i in 0..500_000u64 {
+            if !fast.off_tick(5.0) {
+                fast.tick(5.0);
+                if fast.capacitor.mcu_on() {
+                    fast.capacitor.draw(0.08); // engine-style on-drain
+                }
+            }
+            slow.tick(5.0);
+            if slow.capacitor.mcu_on() {
+                slow.capacitor.draw(0.08);
+            }
+            if i % 25_000 == 0 {
+                assert_eq!(format!("{fast:?}"), format!("{slow:?}"), "diverged at {i}");
+            }
+        }
+        assert_eq!(format!("{fast:?}"), format!("{slow:?}"));
+        assert_eq!(fast.reboots, slow.reboots);
+        assert!(fast.reboots > 1, "walk never cycled power: reboots={}", fast.reboots);
     }
 
     #[test]

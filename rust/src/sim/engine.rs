@@ -23,6 +23,25 @@
 //! job whose mandatory part completed before the deadline counts as
 //! scheduled; optional units improve its prediction but never block
 //! another job's mandatory work under energy pressure (ζ_I).
+//!
+//! # Performance: two-regime hot path
+//!
+//! The off/charging regime dominates wall-clock for the paper's bursty
+//! low-duty harvesters (RF, piezo, diurnal solar — Fig. 4), so it has a
+//! dedicated fast path: while the MCU is off, the queue is empty, and no
+//! probe is attached, [`Engine::advance_idle_off`] runs idle ticks in a
+//! tight loop that performs the *identical floating-point operations in
+//! the identical order* as the naive stepper — hoisting only work that is
+//! provably a no-op per tick (the release scan, the deadline scan, the
+//! virtual clock read, scheduler dispatch, and zero-power harvester /
+//! capacitor arithmetic). Unlike a stride hack, every boot edge, release,
+//! and window transition lands on exactly the same tick, so `Metrics`
+//! output is bit-for-bit unchanged. The on-regime fragment loop is
+//! flattened the same way: the per-fragment O(tasks) release scan and
+//! O(queue) mandatory scan are replaced by incrementally maintained
+//! `next_release_min` / `mandatory_pending`. Setting
+//! [`Engine::reference`] disables every shortcut and steps naively —
+//! the baseline `rust/tests/engine_differential.rs` proves byte-equal.
 
 use crate::clock::Clock;
 use crate::coordinator::priority::EnergyView;
@@ -85,11 +104,27 @@ pub struct Engine {
     queue: Vec<Job>,
     now_ms: f64,
     next_release_ms: Vec<f64>,
+    /// min(`next_release_ms`), maintained incrementally so neither the
+    /// fragment loop's park gate nor the off-phase fast-forward rescans
+    /// O(tasks) per fragment/tick. Exact, not approximate: recomputed
+    /// whenever `next_release_ms` changes.
+    next_release_min: f64,
     next_trace: Vec<usize>,
     next_job_id: u64,
     rng: Pcg32,
     was_on: bool,
     outage_start_ms: f64,
+    /// Count of queued jobs in [`JobState::Mandatory`] — exactly the set
+    /// the fragment gate's `mandatory_waiting` scan looked for (a job
+    /// mid-optional-unit is `Optional`, a finished one `Exhausted`).
+    /// Maintained at every queue push/remove and job state transition.
+    mandatory_pending: usize,
+    /// Step with the naive reference dispatcher: no off-phase
+    /// fast-forward, scan-based fragment gates, no short-circuits. This
+    /// is the differential-exactness baseline (`engine_differential`
+    /// tests, `--features slow-reference` CI leg), not a performance
+    /// mode — the optimized path must match it byte for byte.
+    pub reference: bool,
     /// Optional per-tick probe, e.g. voltage logging for Fig. 22.
     pub probe: Option<Probe>,
 }
@@ -126,11 +161,14 @@ impl Engine {
             queue: Vec::new(),
             now_ms: 0.0,
             next_release_ms,
+            next_release_min: if n == 0 { f64::INFINITY } else { 0.0 },
             next_trace: vec![0; n],
             next_job_id: 0,
             rng,
             was_on: false,
             outage_start_ms: 0.0,
+            mandatory_pending: 0,
+            reference: false,
             probe: None,
         }
     }
@@ -159,7 +197,21 @@ impl Engine {
         self.discard_past_deadline();
 
         if !self.energy.mandatory_allowed() {
-            self.advance_idle();
+            // Off-phase fast-forward preconditions: truly off (not merely
+            // energy-starved while up — the on-idle tick drains, triggers
+            // JIT checks, and accrues on-time), nothing queued (so the
+            // per-step deadline scan is a no-op), and no probe (probes
+            // observe every tick). Under these, each naive step reduces
+            // to exactly one idle tick — see `advance_idle_off`.
+            if !self.reference
+                && self.probe.is_none()
+                && self.queue.is_empty()
+                && !self.energy.capacitor.mcu_on()
+            {
+                self.advance_idle_off();
+            } else {
+                self.advance_idle();
+            }
             return;
         }
 
@@ -213,8 +265,27 @@ impl Engine {
             if any_committed {
                 self.nvm.pending_restore = true;
             }
+            // Rollback can move any job's state (Optional back to
+            // Mandatory); recount rather than track per-job deltas —
+            // outages are rare next to fragments.
+            self.recount_mandatory_pending();
         }
         self.was_on = on;
+    }
+
+    /// Rebuild `mandatory_pending` from the queue (bulk state changes).
+    fn recount_mandatory_pending(&mut self) {
+        let n = self.queue.iter().filter(|j| j.state == JobState::Mandatory).count();
+        self.mandatory_pending = n;
+    }
+
+    /// Remove `queue[i]`, keeping `mandatory_pending` in sync.
+    fn take_job(&mut self, i: usize) -> Job {
+        let job = self.queue.swap_remove(i);
+        if job.state == JobState::Mandatory {
+            self.mandatory_pending -= 1;
+        }
+        job
     }
 
     /// Charge one NVM transaction (commit or restore): harvest during the
@@ -341,6 +412,11 @@ impl Engine {
     }
 
     fn release_due_jobs(&mut self) {
+        // Nothing due: the scan below would be a pure no-op (every inner
+        // `while` guard false), so one compare replaces O(tasks) of them.
+        if !self.reference && self.next_release_min > self.now_ms {
+            return;
+        }
         for t in 0..self.tasks.len() {
             while self.next_release_ms[t] <= self.now_ms {
                 let release_at = self.next_release_ms[t];
@@ -387,7 +463,7 @@ impl Engine {
                     match evict {
                         Some(i) => {
                             let believed = self.believed_now();
-                            let old = self.queue.swap_remove(i);
+                            let old = self.take_job(i);
                             self.finish_job(old, believed);
                         }
                         None => {
@@ -401,16 +477,26 @@ impl Engine {
                 let job = Job::new(&self.tasks[t], self.next_job_id, release_at, tr);
                 self.next_job_id += 1;
                 self.queue.push(job);
+                // Fresh jobs start Mandatory (Progress::fresh).
+                self.mandatory_pending += 1;
             }
         }
+        let min = self.next_release_ms.iter().copied().fold(f64::INFINITY, f64::min);
+        self.next_release_min = min;
     }
 
     fn discard_past_deadline(&mut self) {
+        // Clock reads are pure observations (see `clock::Clock`), so an
+        // empty queue makes this whole pass — virtual call included — a
+        // no-op the hot idle path need not pay.
+        if !self.reference && self.queue.is_empty() {
+            return;
+        }
         let believed = self.believed_now();
         let mut i = 0;
         while i < self.queue.len() {
             if believed >= self.queue[i].deadline_ms {
-                let job = self.queue.swap_remove(i);
+                let job = self.take_job(i);
                 self.finish_job(job, believed);
             } else {
                 i += 1;
@@ -499,15 +585,36 @@ impl Engine {
                 && self.scheduler.kind == crate::coordinator::sched::SchedulerKind::Zygarde
             {
                 let gate_closed = !self.energy_view().optional_allowed();
-                let mandatory_waiting = self
-                    .queue
-                    .iter()
-                    .enumerate()
-                    .any(|(i, j)| i != idx && !j.finished() && j.next_is_mandatory());
+                // The executing job is mid-optional-unit (state Optional,
+                // unchanged during the fragment loop), so it contributes
+                // nothing to `mandatory_pending` and the counter equals
+                // the old `i != idx` scan exactly.
+                let mandatory_waiting = if self.reference {
+                    self.queue
+                        .iter()
+                        .enumerate()
+                        .any(|(i, j)| i != idx && !j.finished() && j.next_is_mandatory())
+                } else {
+                    debug_assert_eq!(
+                        self.mandatory_pending,
+                        self.queue.iter().filter(|j| j.state == JobState::Mandatory).count(),
+                        "mandatory_pending drifted from the queue"
+                    );
+                    self.mandatory_pending > 0
+                };
                 // A release that came due mid-unit is mandatory by
                 // definition (fresh jobs start mandatory); it enters the
                 // queue in the next step() — park so it can.
-                let release_due = self.next_release_ms.iter().any(|&r| r <= self.now_ms);
+                let release_due = if self.reference {
+                    self.next_release_ms.iter().any(|&r| r <= self.now_ms)
+                } else {
+                    debug_assert_eq!(
+                        self.next_release_min,
+                        self.next_release_ms.iter().copied().fold(f64::INFINITY, f64::min),
+                        "next_release_min drifted from the release table"
+                    );
+                    self.next_release_min <= self.now_ms
+                };
                 if gate_closed || mandatory_waiting || release_due {
                     return;
                 }
@@ -556,18 +663,29 @@ impl Engine {
             self.metrics.optional_units += 1;
         }
         let n_units = self.tasks[task_id].n_units();
-        let traces = self.tasks[task_id].traces.clone();
-        let trace = &traces[self.queue[idx].trace_idx];
         let now = self.now_ms;
         let imprecise = self.tasks[task_id].imprecise;
-        {
+        let trace_idx = self.queue[idx].trace_idx;
+        let oracle_unit = self.tasks[task_id].traces[trace_idx].oracle_unit;
+        let (was_mandatory, is_mandatory) = {
+            // Disjoint field borrows: the trace (shared, `tasks`) feeds
+            // the job mutation (`queue`) with no per-boundary Arc clone —
+            // the refcount bounce was shared across every sweep worker.
+            let trace = &self.tasks[task_id].traces[trace_idx];
             let job = &mut self.queue[idx];
+            let was = job.state == JobState::Mandatory;
             job.complete_unit(trace, n_units, now);
             if !imprecise && !job.finished() {
                 // Non-imprecise tasks: everything mandatory (γ always 1).
                 job.state = JobState::Mandatory;
                 job.mandatory_done = false;
             }
+            (was, job.state == JobState::Mandatory)
+        };
+        match (was_mandatory, is_mandatory) {
+            (true, false) => self.mandatory_pending -= 1,
+            (false, true) => self.mandatory_pending += 1,
+            _ => {}
         }
 
         // NVM commit at the unit boundary (EveryFragment and UnitBoundary
@@ -600,13 +718,13 @@ impl Engine {
                 }
                 ExitPolicy::Oracle => {
                     job.finished()
-                        || trace.oracle_unit.map(|o| job.next_unit > o).unwrap_or(false)
+                        || oracle_unit.map(|o| job.next_unit > o).unwrap_or(false)
                 }
             }
         };
         if done {
             let believed = self.believed_now();
-            let mut job = self.queue.swap_remove(idx);
+            let mut job = self.take_job(idx);
             if self.exit_policy == ExitPolicy::Oracle && !job.mandatory_done {
                 // Oracle termination defines the mandatory part.
                 job.mandatory_done = true;
@@ -621,7 +739,9 @@ impl Engine {
         // MCU is off bought ~9 % wall-clock on `zygarde all` but coarsened
         // boot detection enough to shift scheduler outcomes at fragment
         // granularity (off-phase ends mid-stride). Determinism of the
-        // experiment tables wins over the 9 %.
+        // experiment tables wins over the 9 % — `advance_idle_off` is the
+        // exact replacement: it never strides, it runs the same per-tick
+        // arithmetic with the dispatch hoisted out.
         let dt = self.cfg.idle_tick_ms;
         self.energy.tick(dt);
         self.energy.capacitor.idle_drain(self.cfg.idle_power_mw, dt);
@@ -635,6 +755,64 @@ impl Engine {
         self.now_ms += dt;
         if let Some(p) = self.probe.as_mut() {
             p(self.now_ms, &self.energy, &self.metrics);
+        }
+    }
+
+    /// Off-phase fast-forward: many naive steps' worth of idle ticks in
+    /// one call, bit-for-bit.
+    ///
+    /// Preconditions (checked by `step`): MCU off, queue empty, no probe,
+    /// not in reference mode. Under them a naive `step()` is exactly one
+    /// `advance_idle()` tick — the power-edge tracker sees off→off, the
+    /// release scan is vacuous until `next_release_min` comes due, the
+    /// deadline scan has nothing to scan, and `mandatory_allowed` is
+    /// false while the MCU is down — so this loop may keep ticking until
+    /// a per-tick *event* needs the full dispatcher again:
+    ///
+    /// * the harvester turns on / crosses a ΔT window (`off_tick` fails:
+    ///   that tick runs the full `tick` + `idle_drain` sequence below,
+    ///   which is `advance_idle` verbatim for a probe-less off engine);
+    /// * the capacitor boots (only a charging tick can: zero-power ticks
+    ///   cannot move the MCU state) — return so `step` observes the edge;
+    /// * a release comes due (`next_release_min`) — return so the next
+    ///   step's scan processes it on exactly the naive tick;
+    /// * the horizon is reached — `run`'s loop condition takes over.
+    ///
+    /// While the source is dark and inside its ΔT window, the only state
+    /// a naive tick changes is the harvester's window clock and `now_ms`
+    /// (zero harvest adds 0.0 mJ everywhere, and idle drain needs the MCU
+    /// on) — so the inner loop is three f64 adds and the event compares,
+    /// instead of the full dispatch + harvest + charge + √V per tick.
+    fn advance_idle_off(&mut self) {
+        debug_assert!(
+            !self.energy.capacitor.mcu_on() && self.queue.is_empty() && self.probe.is_none()
+        );
+        let dt = self.cfg.idle_tick_ms;
+        loop {
+            // Zero-power bulk ticks (source dark, within its ΔT window).
+            while self.energy.off_tick(dt) {
+                self.now_ms += dt;
+                if self.now_ms >= self.cfg.duration_ms || self.next_release_min <= self.now_ms {
+                    return;
+                }
+            }
+            // Boundary tick: window crossing, state transition, or the
+            // source is on — the full per-tick sequence, identical to
+            // `advance_idle` (no probe attached, MCU off on entry).
+            self.energy.tick(dt);
+            self.energy.capacitor.idle_drain(self.cfg.idle_power_mw, dt);
+            let booted = self.energy.capacitor.mcu_on();
+            if booted {
+                self.metrics.on_time_ms += dt;
+                let _ = self.jit_check();
+            }
+            self.now_ms += dt;
+            if booted
+                || self.now_ms >= self.cfg.duration_ms
+                || self.next_release_min <= self.now_ms
+            {
+                return;
+            }
         }
     }
 }
@@ -864,6 +1042,57 @@ mod tests {
         assert!(every.commits > unit.commits);
         // Reboots with durable progress pay restore costs.
         assert!(every.restores > 0 || unit.restores > 0);
+    }
+
+    /// The tentpole invariant, at engine scope: the optimized dispatcher
+    /// (off-phase fast-forward + flattened gates) and the naive reference
+    /// stepper produce bit-identical metrics on an intermittent scenario
+    /// that exercises long off phases, brownouts mid-fragment, NVM
+    /// rollback/restore, and queue churn. (The randomized cross-product
+    /// lives in `rust/tests/engine_differential.rs`.)
+    #[test]
+    fn fast_and_reference_steppers_agree_bitwise() {
+        let mk = |nvm: crate::nvm::NvmSpec| {
+            let h = Harvester::markov(
+                crate::energy::harvester::HarvesterKind::Rf,
+                40.0,
+                0.9,
+                0.3,
+                1000.0,
+                13,
+            );
+            let mut cap = Capacitor::new(0.01, 3.3, 2.8, 1.9);
+            cap.charge(1e7, 1000.0);
+            let em = EnergyManager::new(cap, h, 0.5, 0.05);
+            let mut e = Engine::new(
+                SimConfig { duration_ms: 300_000.0, ..Default::default() },
+                vec![task(0, 500.0, 1000.0)],
+                Scheduler::new(SchedulerKind::Zygarde, PriorityParams::new(1000.0, 10.0)),
+                ExitPolicy::Utility,
+                em,
+                Box::new(Rtc),
+            );
+            e.nvm = Nvm::build(nvm, &e.energy.capacitor);
+            e
+        };
+        for nvm in [
+            crate::nvm::NvmSpec::ideal(),
+            crate::nvm::NvmSpec::fram_every_fragment(),
+            crate::nvm::NvmSpec::fram_unit_boundary(),
+            crate::nvm::NvmSpec::fram_jit(),
+        ] {
+            let fast = mk(nvm).run();
+            let mut re = mk(nvm);
+            re.reference = true;
+            let refm = re.run();
+            assert_eq!(
+                fast.to_json().to_json(),
+                refm.to_json().to_json(),
+                "fast vs reference diverged under {:?}",
+                nvm
+            );
+            assert!(refm.reboots > 0, "scenario never cycled power — no off phase exercised");
+        }
     }
 
     #[test]

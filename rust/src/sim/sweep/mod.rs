@@ -40,7 +40,10 @@ pub mod shard;
 
 pub use faults::FaultPlan;
 pub use report::{CellResult, SummaryStats, SweepReport};
-pub use runner::{build_engine, default_threads, run_matrix, run_scenario, run_scenarios};
+pub use runner::{
+    build_engine, default_threads, run_matrix, run_matrix_reference, run_scenario,
+    run_scenario_reference, run_scenarios, run_scenarios_reference,
+};
 pub use shard::{
     fingerprint, merge, run_shard, MatrixFingerprint, MergeError, PartialReport, ShardSpec,
 };
@@ -64,6 +67,12 @@ pub enum HarvesterSpec {
     /// Explicit two-state Markov burst source with an offline-estimated η
     /// (the deployment's `eta` the scheduler is told, not re-measured).
     Markov { kind: HarvesterKind, on_power_mw: f64, q: f64, duty: f64, eta: f64 },
+    /// Footstep-driven piezo bouts (ΔT = 5 min, long dark gaps — the
+    /// Fig. 4(b) regime; the simulator's off-phase-dominated workload).
+    Piezo { eta: f64 },
+    /// Window-sill solar: ~5 lit hours per 24 h day plus cloud flicker
+    /// (the two-month Fig. 4(c) study; overwhelmingly off-dominated).
+    SolarDiurnal { eta: f64 },
 }
 
 impl HarvesterSpec {
@@ -78,6 +87,26 @@ impl HarvesterSpec {
             HarvesterSpec::Markov { kind, on_power_mw, q, duty, eta } => {
                 (Harvester::markov(kind, on_power_mw, q, duty, 1000.0, seed), eta)
             }
+            HarvesterSpec::Piezo { eta } => (Harvester::piezo(seed), eta),
+            HarvesterSpec::SolarDiurnal { eta } => (Harvester::solar_diurnal(seed), eta),
+        }
+    }
+
+    /// Warm the shared calibration memo this spec will consult, so a
+    /// sweep can pay the (deterministic, memoized) calibration search
+    /// once up front instead of inside the first worker that hits it.
+    /// No-op for specs that need no calibration.
+    pub fn prewarm(&self) {
+        if let HarvesterSpec::System(id) = *self {
+            let sys = system(id);
+            if sys.kind != HarvesterKind::Persistent {
+                let _ = crate::energy::harvester::calibrated_q(
+                    sys.kind,
+                    sys.avg_power_mw / crate::energy::harvester::DUTY,
+                    crate::energy::harvester::DUTY,
+                    sys.eta,
+                );
+            }
         }
     }
 
@@ -88,6 +117,8 @@ impl HarvesterSpec {
             HarvesterSpec::Markov { kind, on_power_mw, duty, .. } => {
                 format!("{kind:?}{on_power_mw}mW@{duty}")
             }
+            HarvesterSpec::Piezo { .. } => "piezo".to_string(),
+            HarvesterSpec::SolarDiurnal { .. } => "solar-diurnal".to_string(),
         }
     }
 }

@@ -217,6 +217,14 @@ pub fn fingerprint(m: &ScenarioMatrix) -> MatrixFingerprint {
                 h.f64(duty);
                 h.f64(eta);
             }
+            HarvesterSpec::Piezo { eta } => {
+                h.u64(4);
+                h.f64(eta);
+            }
+            HarvesterSpec::SolarDiurnal { eta } => {
+                h.u64(5);
+                h.f64(eta);
+            }
         }
     }
     h.u64(m.capacitors_mf.len() as u64);

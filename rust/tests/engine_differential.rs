@@ -1,0 +1,179 @@
+//! Differential exactness harness: the optimized engine (off-phase
+//! fast-forward, flattened per-fragment gates, short-circuited release /
+//! deadline scans) must produce **byte-identical metrics JSON** to the
+//! naive reference stepper (`Engine::reference = true`) on randomized
+//! scenarios covering every harvester kind (persistent, calibrated
+//! Table-4 system, Markov RF/solar, piezo, diurnal solar), every
+//! scheduler, every NVM commit policy, blackout-burst fault plans, CHRT
+//! clock skew, cold and precharged starts, and probes on/off.
+//!
+//! This suite is what makes hot-path optimizations cheap to verify: any
+//! future change to the fast paths either reproduces the reference
+//! stepper bit for bit or fails here with a reproducible seed
+//! (`PROP_SEED=<n>`). Scenario count is `DIFF_SCENARIOS` (default 64;
+//! the CI bench job runs an extended release-mode pass).
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use zygarde::clock::{ChrtTier, ClockSpec};
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::energy::harvester::HarvesterKind;
+use zygarde::nvm::NvmSpec;
+use zygarde::sim::sweep::{
+    build_engine, FaultPlan, HarvesterSpec, Scenario, ScenarioMatrix, TaskMix,
+};
+use zygarde::util::prop::{forall, Config, Size};
+use zygarde::util::rng::Pcg32;
+
+fn iters() -> usize {
+    std::env::var("DIFF_SCENARIOS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+        .max(50) // the exactness contract promises >= 50 scenarios
+}
+
+/// A random single-cell matrix. Off-dominated harvesters get the long
+/// horizons where the fast-forward actually engages; dense ones keep the
+/// runtime of the naive baseline in check.
+fn random_scenario(rng: &mut Pcg32, size: Size) -> Scenario {
+    let n_tasks = 1 + rng.below(2) as usize;
+    let n_units = 1 + rng.below(3) as usize;
+    let scheduler = *rng.choice(&[
+        SchedulerKind::Zygarde,
+        SchedulerKind::Edf,
+        SchedulerKind::EdfMandatory,
+        SchedulerKind::RoundRobin,
+    ]);
+    let capacitor_mf = *rng.choice(&[1.0, 5.0, 50.0]);
+    let nvm = *rng.choice(&[
+        NvmSpec::ideal(),
+        NvmSpec::fram_every_fragment(),
+        NvmSpec::fram_unit_boundary(),
+        NvmSpec::fram_jit(),
+    ]);
+    let grow = 1_000.0 * size.0.min(8) as f64;
+    let (harvester, duration_ms) = match rng.below(6) {
+        0 => (HarvesterSpec::Persistent { power_mw: 200.0 + rng.f64() * 400.0 }, 4_000.0 + grow),
+        // A Table 4 system: exercises the calibrated-q RwLock path (one
+        // fixed id so this binary pays a single calibration search).
+        1 => (HarvesterSpec::System(6), 20_000.0 + 4.0 * grow),
+        2 => (
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 40.0 + rng.f64() * 160.0,
+                q: 0.7 + rng.f64() * 0.28,
+                duty: 0.1 + rng.f64() * 0.7,
+                eta: 0.3 + rng.f64() * 0.6,
+            },
+            30_000.0 + 10.0 * grow,
+        ),
+        3 => (
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Solar,
+                on_power_mw: 200.0 + rng.f64() * 400.0,
+                q: 0.85 + rng.f64() * 0.13,
+                duty: 0.2 + rng.f64() * 0.5,
+                eta: 0.3 + rng.f64() * 0.6,
+            },
+            30_000.0 + 10.0 * grow,
+        ),
+        // The off-dominated regimes (ΔT = 5 min): long horizons so whole
+        // dark windows fast-forward.
+        4 => (HarvesterSpec::Piezo { eta: 0.2 + rng.f64() * 0.3 }, 1_800_000.0 + 400.0 * grow),
+        _ => (
+            HarvesterSpec::SolarDiurnal { eta: 0.3 + rng.f64() * 0.3 },
+            3_600_000.0 + 400.0 * grow,
+        ),
+    };
+    let mut fault = if rng.chance(0.5) {
+        FaultPlan::none()
+    } else {
+        FaultPlan::none().with_brownouts(
+            500.0 + rng.f64() * 2000.0,
+            rng.f64() * 500.0,
+            rng.f64() * 300.0,
+        )
+    };
+    if rng.chance(0.3) {
+        fault = fault.with_clock(ClockSpec::Chrt(ChrtTier::Tier3));
+    }
+    ScenarioMatrix::new("diff", rng.next_u64())
+        .mixes(vec![TaskMix::synthetic("m", n_tasks, n_units, rng.next_u64())])
+        .harvesters(vec![harvester])
+        .capacitors_mf(vec![capacitor_mf])
+        .schedulers(vec![scheduler])
+        .faults(vec![fault])
+        .nvms(vec![nvm])
+        .precharge(rng.chance(0.7))
+        .queue_size(1 + rng.below(3) as usize)
+        .duration_ms(duration_ms)
+        .log_jobs(rng.chance(0.5))
+        .expand()
+        .pop()
+        .unwrap()
+}
+
+fn metrics_json(sc: &Scenario, reference: bool) -> String {
+    let mut engine = build_engine(sc);
+    engine.reference = reference;
+    engine.run().to_json().to_json()
+}
+
+#[test]
+fn fast_engine_matches_reference_byte_for_byte() {
+    forall(
+        "fast-vs-reference-metrics",
+        Config { iters: iters(), ..Default::default() },
+        random_scenario,
+        |sc| {
+            let fast = metrics_json(sc, false);
+            let reference = metrics_json(sc, true);
+            if fast != reference {
+                return Err(format!(
+                    "metrics JSON diverged on {}:\n fast: {fast}\n ref:  {reference}",
+                    sc.label()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// With a probe attached the fast path must stand down entirely: both
+/// engines step naively, the probe observes the identical tick sequence,
+/// and the metrics still match byte for byte.
+#[test]
+fn probed_engines_agree_and_observe_identical_ticks() {
+    forall(
+        "fast-vs-reference-probed",
+        Config { iters: 24, ..Default::default() },
+        random_scenario,
+        |sc| {
+            let run = |reference: bool| {
+                let mut engine = build_engine(sc);
+                engine.reference = reference;
+                let ticks = Rc::new(Cell::new(0u64));
+                let t = ticks.clone();
+                engine.probe = Some(Box::new(move |_now, _em, _m| t.set(t.get() + 1)));
+                (engine.run().to_json().to_json(), ticks.get())
+            };
+            let (fast_json, fast_ticks) = run(false);
+            let (ref_json, ref_ticks) = run(true);
+            if fast_json != ref_json {
+                return Err(format!("probed metrics diverged on {}", sc.label()));
+            }
+            if fast_ticks != ref_ticks {
+                return Err(format!(
+                    "probe tick counts diverged on {}: fast {fast_ticks} vs ref {ref_ticks}",
+                    sc.label()
+                ));
+            }
+            if fast_ticks == 0 {
+                return Err("probe never fired".to_string());
+            }
+            Ok(())
+        },
+    );
+}

@@ -132,6 +132,27 @@ fn zero_cost_policies_reproduce_golden_dynamics_bitwise() {
     assert_eq!(m.consumed_mj, g.consumed_mj);
 }
 
+/// `cargo test --features slow-reference` leg: the naive reference
+/// stepper (the baseline the differential-exactness suite compares the
+/// optimized engine against) is pinned to the optimized engine on the
+/// golden matrix. The pin to the blessed snapshot is transitive —
+/// `golden_json_snapshot_is_stable` holds the optimized engine to the
+/// snapshot, this test holds the reference stepper to the optimized
+/// engine — so the snapshot file is deliberately not read here (the
+/// sibling test may be blessing it concurrently in the same binary).
+#[cfg(feature = "slow-reference")]
+#[test]
+fn reference_stepper_reproduces_the_golden_sweep() {
+    use zygarde::sim::sweep::run_matrix_reference;
+
+    let (_task, matrix) = golden_matrix();
+    assert_eq!(
+        run_matrix_reference(&matrix, 1).json_string(),
+        run_matrix(&matrix, 1).json_string(),
+        "reference stepper diverged from the optimized engine on the golden matrix"
+    );
+}
+
 /// Full-precision snapshot (bless pattern): the first run writes
 /// `rust/tests/golden/sweep_small.json`; later runs must reproduce it
 /// byte-for-byte. Delete the file (or set UPDATE_GOLDEN=1) to re-bless

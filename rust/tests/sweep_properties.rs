@@ -227,6 +227,63 @@ fn nvm_commit_and_rollback_accounting() {
     });
 }
 
+/// Idle-regime invariants around the off-phase fast-forward:
+///
+/// 1. time decomposes — `on_time_ms` plus the off idle ticks a probe
+///    observes reconstructs `sim_time_ms` (every advance of the clock is
+///    either MCU-on work, on-idle, or an off idle tick);
+/// 2. boot edges are schedule-invariant — the optimized stepper counts
+///    exactly the reboots the naive reference stepper counts (the
+///    fast-forward may never move a boot to a different tick).
+#[test]
+fn idle_regime_time_reconstruction_and_boot_parity() {
+    forall("idle-regime-invariants", cfg(), random_scenario, |sc| {
+        // Boot-edge parity, fast vs reference (byte equality of the full
+        // metrics JSON is the differential suite's job; reboots is the
+        // one counter a coarsened off phase would corrupt first).
+        let fast = build_engine(sc).run();
+        let mut re = build_engine(sc);
+        re.reference = true;
+        let reference = re.run();
+        if fast.reboots != reference.reboots {
+            return Err(format!(
+                "boot edges moved: fast {} vs reference {}",
+                fast.reboots, reference.reboots
+            ));
+        }
+        if fast.on_time_ms.to_bits() != reference.on_time_ms.to_bits() {
+            return Err(format!(
+                "on-time diverged: fast {} vs reference {}",
+                fast.on_time_ms, reference.on_time_ms
+            ));
+        }
+
+        // Time reconstruction via a probe (probes force naive stepping,
+        // which observes every idle tick; MCU-on time that bypasses the
+        // probe — fragments, NVM transactions — is in on_time_ms).
+        let mut probed = build_engine(sc);
+        let off_ticks = Rc::new(Cell::new(0u64));
+        {
+            let off_ticks = off_ticks.clone();
+            probed.probe = Some(Box::new(move |_now, em, _m| {
+                if !em.capacitor.mcu_on() {
+                    off_ticks.set(off_ticks.get() + 1);
+                }
+            }));
+        }
+        let m = probed.run();
+        let off_ms = off_ticks.get() as f64 * 5.0; // SimConfig::default idle_tick_ms
+        let tol = 1e-6 * (1.0 + m.sim_time_ms);
+        if (m.on_time_ms + off_ms - m.sim_time_ms).abs() > tol {
+            return Err(format!(
+                "time does not decompose: on {} + off {} != sim {}",
+                m.on_time_ms, off_ms, m.sim_time_ms
+            ));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn energy_conserved_including_commit_and_restore() {
     forall("nvm-energy-conservation", cfg(), random_scenario, |sc| {

@@ -13,9 +13,21 @@ ratio between different workloads is meaningless.
 
 Bootstrapping: a baseline carrying ``"provisional": true`` (committed
 from a machine that could not run the bench) reports the comparison but
-never fails. To arm the gate, download CI's ``bench-sweep`` artifact and
+never fails. To arm the gate, download CI's ``bench-sweep`` artifact,
 commit its ``BENCH_sweep.json`` as ``BENCH_baseline.json`` with the
-``provisional`` key removed.
+``provisional`` key removed — and copy each ``offphase`` row's
+``min_speedup`` key over from the old baseline (the measured file
+carries ``speedup``, not floors; a baseline offphase row *without*
+``min_speedup`` is a hard error so the floors cannot be disarmed by
+accident).
+
+The ``offphase`` rows are gated differently — and unconditionally. Each
+baseline row carries a ``min_speedup``: the measured ratio of the naive
+reference stepper's wall-clock to the optimized engine's on the same
+off-dominated matrix (a within-run ratio, so it is machine-independent
+and needs no committed absolute numbers). A current run whose speedup
+falls below the floor fails even against a provisional baseline: it
+means the off-phase fast-forward regressed.
 """
 
 import argparse
@@ -34,6 +46,54 @@ def rows(doc):
     return out
 
 
+def check_offphase_speedups(cur, base):
+    """Enforce each baseline offphase row's min_speedup floor (armed
+    regardless of the provisional flag: a within-run ratio needs no
+    committed absolute measurement). A baseline row lacking min_speedup
+    is itself a failure — promoting CI's measured BENCH_sweep.json
+    verbatim (its rows carry 'speedup', no floors) must fail loudly
+    rather than silently disarm the only armed gate. A row whose
+    workload keys drifted from the baseline is equally a hard error: a
+    floor set for a different matrix/horizon is not comparable, and the
+    PR that changes the bench workload must update (and re-justify) the
+    baseline row in the same change. Returns failures."""
+    current = {r["matrix"]: r for r in cur.get("offphase", [])}
+    failures = []
+    for row in base.get("offphase", []):
+        name, floor = row["matrix"], row.get("min_speedup")
+        if floor is None:
+            print(f"offphase {name:<16} baseline row has no min_speedup")
+            failures.append(
+                f"offphase {name}: baseline row lacks min_speedup — copy the "
+                f"floors over when promoting a measured BENCH_sweep.json")
+            continue
+        got = current.get(name)
+        if got is None:
+            print(f"offphase {name:<16} speedup floor {floor:.2f}x {'missing':>12}")
+            failures.append(f"offphase {name}: row missing from current run")
+            continue
+        drifted = [k for k in ("scenarios", "duration_ms")
+                   if k in row and row.get(k) != got.get(k)]
+        if drifted:
+            print(f"offphase {name:<16} workload drifted on {drifted} "
+                  f"(baseline {[row.get(k) for k in drifted]} vs current "
+                  f"{[got.get(k) for k in drifted]})")
+            failures.append(
+                f"offphase {name}: bench workload drifted on {drifted} — the "
+                f"floor is not comparable; update the baseline row alongside "
+                f"the bench change")
+            continue
+        speedup = got["speedup"]
+        flag = "" if speedup >= floor else "  << BELOW FLOOR"
+        print(f"offphase {name:<16} speedup floor {floor:.2f}x "
+              f"measured {speedup:6.2f}x{flag}")
+        if speedup < floor:
+            failures.append(
+                f"offphase {name}: fast-forward speedup {speedup:.2f}x "
+                f"fell below the {floor:.2f}x floor")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="fresh BENCH_sweep.json")
@@ -47,12 +107,20 @@ def main():
     with open(args.baseline) as f:
         base = json.load(f)
 
+    # The offphase speedup floors are workload- and machine-independent:
+    # check them first, and unconditionally.
+    off_failures = check_offphase_speedups(cur, base)
+
     mismatch = [k for k in ("scenarios", "duration_ms", "reps")
                 if cur.get(k) != base.get(k)]
     if mismatch:
         print(f"bench-gate: workload mismatch on {mismatch} "
               f"(current {[cur.get(k) for k in mismatch]} vs "
-              f"baseline {[base.get(k) for k in mismatch]}); skipping comparison")
+              f"baseline {[base.get(k) for k in mismatch]}); skipping "
+              f"throughput comparison")
+        if off_failures:
+            print(f"bench-gate: FAIL: {'; '.join(off_failures)}", file=sys.stderr)
+            return 1
         return 0
 
     provisional = bool(base.get("provisional"))
@@ -71,17 +139,18 @@ def main():
         if ratio < 1.0 - args.max_drop:
             failures.append(f"{key}: {c:.1f}/s vs baseline {b:.1f}/s ({ratio:.2f}x)")
 
+    if failures and provisional:
+        print(f"bench-gate: would fail ({'; '.join(failures)}) but the "
+              f"baseline is marked provisional — commit a CI-measured "
+              f"BENCH_sweep.json as BENCH_baseline.json (without "
+              f"'provisional') to arm the absolute-throughput gate")
+        failures = []
+    failures += off_failures
     if failures:
-        msg = "; ".join(failures)
-        if provisional:
-            print(f"bench-gate: would fail ({msg}) but the baseline is marked "
-                  f"provisional — commit a CI-measured BENCH_sweep.json as "
-                  f"BENCH_baseline.json (without 'provisional') to arm the gate")
-            return 0
-        print(f"bench-gate: FAIL: {msg}", file=sys.stderr)
+        print(f"bench-gate: FAIL: {'; '.join(failures)}", file=sys.stderr)
         return 1
-    print("bench-gate: OK — no row dropped more than "
-          f"{args.max_drop:.0%} below baseline")
+    print(f"bench-gate: OK — no row dropped more than {args.max_drop:.0%} "
+          f"below baseline and every offphase speedup floor held")
     return 0
 
 
