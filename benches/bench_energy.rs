@@ -16,7 +16,7 @@ fn main() {
         .report();
 
     let mut cap = Capacitor::standard();
-    cap.charge(1e9, 1000.0);
+    cap.precharge();
     b.run_throughput("capacitor/charge+draw", 1.0, "ops/s", || {
         cap.charge(80.0, 7.5);
         cap.draw(0.6)

@@ -6,6 +6,9 @@
 //! `zygarde sweep --shard i/N` processes, merges their PartialReports,
 //! and cross-checks the merge against the in-process reference — the
 //! N-processes-vs-N-threads comparison the scale-out story rests on.
+//! A streaming-dispatcher section (`zygarde serve --workers N` over
+//! pipes, byte-checked against the same reference) tracks the
+//! work-stealing path next to the static shard rows it supersedes.
 //!
 //! Run with `cargo bench --bench bench_sweep`. Scale the workload with
 //! SWEEP_BENCH_REPS (default 4 reps → 96 scenarios) and
@@ -149,6 +152,61 @@ fn main() {
         shard_rows.push((procs, rate, dt));
     }
 
+    // --- streaming dispatcher: serve/work over pipes ---------------------
+    // Spawns the real `zygarde serve --workers N` (which itself spawns N
+    // single-threaded `zygarde work --connect -` children), so the rate
+    // includes process startup, the fingerprint handshake, lease
+    // streaming, and the out-of-core merge. Cross-checked byte-identical
+    // against the in-process reference, and printed next to the static
+    // N-shard rows it supersedes.
+    println!();
+    let mut serve_rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &procs in &[1usize, 2, 4] {
+        let out_path = std::env::temp_dir().join(format!("zygarde_bench_{pid}_serve_{procs}.json"));
+        let t0 = Instant::now();
+        let status = Command::new(exe)
+            .args([
+                "serve",
+                "--matrix",
+                "bench",
+                "--reps",
+                &reps.to_string(),
+                "--duration-ms",
+                &duration_ms.to_string(),
+                "--workers",
+                &procs.to_string(),
+                "--worker-threads",
+                "1",
+                "--quiet",
+                "true",
+                "--out",
+                out_path.to_str().unwrap(),
+            ])
+            .stdout(std::process::Stdio::null())
+            .status()
+            .expect("running zygarde serve");
+        assert!(status.success(), "serve run failed: {status}");
+        let dt = t0.elapsed().as_secs_f64();
+        let rate = n as f64 / dt;
+        match shard_rows.iter().find(|(p, ..)| *p == procs) {
+            Some((_, static_rate, _)) => println!(
+                "serve   {procs}x1-thread workers: {rate:>8.1} scenarios/s  ({dt:.3} s, \
+                 {:.2}x of static {procs}-shard)",
+                rate / static_rate
+            ),
+            None => println!(
+                "serve   {procs}x1-thread workers: {rate:>8.1} scenarios/s  ({dt:.3} s)"
+            ),
+        }
+        let served = std::fs::read_to_string(&out_path).expect("reading served report");
+        assert_eq!(
+            served, reference,
+            "{procs}-worker dispatcher run diverged from the in-process report"
+        );
+        let _ = std::fs::remove_file(&out_path);
+        serve_rows.push((procs, rate, dt));
+    }
+
     // --- off-dominated rows: the off-phase fast-forward regime ----------
     // Low-duty RF, piezo footsteps, and diurnal solar spend most of their
     // simulated time below the boot voltage — the regime the fast path
@@ -280,6 +338,21 @@ fn main() {
                     .map(|(procs, rate, secs)| {
                         obj(vec![
                             ("processes", Value::Num(*procs as f64)),
+                            ("scenarios_per_s", Value::Num(*rate)),
+                            ("secs", Value::Num(*secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "serve",
+            Value::Arr(
+                serve_rows
+                    .iter()
+                    .map(|(workers, rate, secs)| {
+                        obj(vec![
+                            ("workers", Value::Num(*workers as f64)),
                             ("scenarios_per_s", Value::Num(*rate)),
                             ("secs", Value::Num(*secs)),
                         ])

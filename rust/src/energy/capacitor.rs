@@ -71,6 +71,19 @@ impl Capacitor {
         self.energy_mj >= self.capacity_mj() * (1.0 - 1e-9)
     }
 
+    /// Pre-deployment warm-up: fill to capacity before t = 0 (the
+    /// deployment has been harvesting before the simulation starts).
+    /// Deliberately *not* harvest accounting — the charge does not count
+    /// as harvested, wasted, or consumed, because those ledgers cover
+    /// simulated time only and the energy-conservation identity
+    /// (`harvested = Δstored + wasted + consumed`) must close over the
+    /// run. This replaces the old fiction of `charge(1e9, 1000.0)`
+    /// followed by zeroing `wasted_mj` in the engine constructor.
+    pub fn precharge(&mut self) {
+        self.energy_mj = self.capacity_mj();
+        self.update_mcu();
+    }
+
     /// Add harvested energy over `dt_ms` at `power_mw`; update MCU state.
     pub fn charge(&mut self, power_mw: f64, dt_ms: f64) {
         // mW · ms = µJ; µJ · 1e-3 = mJ.
@@ -151,6 +164,22 @@ mod tests {
         let c = Capacitor::standard();
         // ½ · 0.05 F · 3.3² V² = 272.25 mJ
         assert!((c.capacity_mj() - 272.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn precharge_fills_without_touching_the_ledgers() {
+        let mut c = Capacitor::standard();
+        c.precharge();
+        assert!(c.is_full());
+        assert!(c.mcu_on());
+        assert_eq!(c.wasted_mj, 0.0, "pre-t0 fiction must not count as waste");
+        assert_eq!(c.consumed_mj, 0.0);
+        // Bitwise the same stored energy as the old clamped mega-charge
+        // (whose overflow the engine constructor used to zero away).
+        let mut old = Capacitor::standard();
+        old.charge(1e9, 1000.0);
+        assert_eq!(c.energy_mj().to_bits(), old.energy_mj().to_bits());
+        assert!(old.wasted_mj > 0.0);
     }
 
     #[test]

@@ -83,7 +83,7 @@ pub fn run(duration_ms: f64, seed: u64) -> Vec<AppResult> {
                 .map(|u| task.fragment_energy_mj(u))
                 .fold(0.0f64, f64::max);
             let mut cap = Capacitor::standard();
-            cap.charge(1e9, 1000.0);
+            cap.precharge();
             let h = if app.duty >= 0.99 {
                 Harvester::persistent(app.on_power_mw)
             } else {

@@ -17,11 +17,12 @@ use crate::sim::metrics::Metrics;
 pub use crate::energy::harvester::{harvester_for, system, HarvesterKind, System, DUTY, SYSTEMS};
 
 /// Assemble an EnergyManager for a system with the given E_man and an
-/// optionally non-standard capacitor. The capacitor starts full (the
-/// deployment has been harvesting before t=0).
+/// optionally non-standard capacitor. The capacitor starts full via the
+/// explicit warm-up ([`Capacitor::precharge`] — the deployment has been
+/// harvesting before t=0, without touching the in-simulation ledgers).
 pub fn energy_for(sys: System, e_man_mj: f64, cap: Option<Capacitor>, seed: u64) -> EnergyManager {
     let mut cap = cap.unwrap_or_else(Capacitor::standard);
-    cap.charge(1e9, 1000.0);
+    cap.precharge();
     EnergyManager::new(cap, harvester_for(sys, seed), sys.eta, e_man_mj)
 }
 

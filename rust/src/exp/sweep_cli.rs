@@ -11,14 +11,17 @@
 //!
 //! [`MatrixFingerprint`]: crate::sim::sweep::MatrixFingerprint
 
+use std::collections::BTreeMap;
+
 use crate::coordinator::sched::SchedulerKind;
 use crate::energy::harvester::HarvesterKind;
 use crate::nvm::NvmSpec;
 use crate::sim::sweep::{FaultPlan, HarvesterSpec, ScenarioMatrix, TaskMix};
+use crate::util::json::Value;
 
 /// Tunables shared by the named matrices; each matrix uses the subset it
 /// needs (e.g. `dataset`/`systems` only matter to `schedule`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SweepOpts {
     pub seed: u64,
     pub jobs: u64,
@@ -42,6 +45,90 @@ impl Default for SweepOpts {
             systems: (1..=7).collect(),
             nvms: Vec::new(),
         }
+    }
+}
+
+impl SweepOpts {
+    /// Wire form for the serve protocol: the dispatcher ships these to
+    /// `zygarde work` processes so every worker rebuilds the *same*
+    /// matrix from the registry (the fingerprint handshake then proves
+    /// it). Seeds and counts are serialized as decimal strings, matching
+    /// the report convention (u64 exceeds f64's exact-integer range).
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("seed".to_string(), Value::Str(self.seed.to_string()));
+        m.insert("jobs".to_string(), Value::Str(self.jobs.to_string()));
+        m.insert("reps".to_string(), Value::Str(self.reps.to_string()));
+        m.insert(
+            "duration_ms".to_string(),
+            match self.duration_ms {
+                Some(d) => Value::Num(d),
+                None => Value::Null,
+            },
+        );
+        m.insert("dataset".to_string(), Value::Str(self.dataset.clone()));
+        m.insert(
+            "systems".to_string(),
+            Value::Arr(self.systems.iter().map(|&s| Value::Num(s as f64)).collect()),
+        );
+        m.insert(
+            "nvms".to_string(),
+            Value::Arr(self.nvms.iter().map(|n| Value::Str(n.label())).collect()),
+        );
+        Value::Obj(m)
+    }
+
+    /// Inverse of [`SweepOpts::to_json`] — the worker-side half of the
+    /// serve handshake.
+    pub fn from_json(v: &Value) -> Result<SweepOpts, String> {
+        let u64_field = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("opts: missing string `{key}`"))?
+                .parse::<u64>()
+                .map_err(|e| format!("opts: bad {key}: {e}"))
+        };
+        let duration_ms = match v.get("duration_ms") {
+            None | Some(Value::Null) => None,
+            Some(d) => Some(
+                d.as_f64().ok_or_else(|| "opts: bad duration_ms".to_string())?,
+            ),
+        };
+        let systems = v
+            .get("systems")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "opts: missing `systems`".to_string())?
+            .iter()
+            .map(|s| {
+                s.as_f64()
+                    .map(|x| x as usize)
+                    .ok_or_else(|| "opts: bad system id".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let nvms = v
+            .get("nvms")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "opts: missing `nvms`".to_string())?
+            .iter()
+            .map(|s| {
+                NvmSpec::parse(
+                    s.as_str().ok_or_else(|| "opts: bad nvm entry".to_string())?,
+                )
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SweepOpts {
+            seed: u64_field("seed")?,
+            jobs: u64_field("jobs")?,
+            reps: u64_field("reps")?,
+            duration_ms,
+            dataset: v
+                .get("dataset")
+                .and_then(Value::as_str)
+                .ok_or_else(|| "opts: missing `dataset`".to_string())?
+                .to_string(),
+            systems,
+            nvms,
+        })
     }
 }
 
@@ -207,6 +294,31 @@ mod tests {
         // its policy axis.
         assert!(!consumed_flags("bench").contains(&"seed"));
         assert!(!consumed_flags("nvm").contains(&"nvm"));
+    }
+
+    #[test]
+    fn sweep_opts_round_trip_through_the_wire_form() {
+        let opts = SweepOpts {
+            seed: 0xDEAD_BEEF_CAFE,
+            jobs: 321,
+            reps: 5,
+            duration_ms: Some(12_500.0),
+            dataset: "esc10".to_string(),
+            systems: vec![1, 4, 7],
+            nvms: vec![NvmSpec::ideal(), NvmSpec::fram_jit()],
+        };
+        let back = SweepOpts::from_json(&opts.to_json()).unwrap();
+        assert_eq!(back, opts);
+        // None duration survives too (the CLI default).
+        let opts = SweepOpts { duration_ms: None, ..opts };
+        assert_eq!(SweepOpts::from_json(&opts.to_json()).unwrap(), opts);
+        // And the round-tripped options rebuild a fingerprint-identical
+        // matrix — the property the serve handshake rests on.
+        let a = fingerprint(&build_matrix("synthetic", &opts).unwrap());
+        let b = fingerprint(
+            &build_matrix("synthetic", &SweepOpts::from_json(&opts.to_json()).unwrap()).unwrap(),
+        );
+        assert_eq!(a, b);
     }
 
     #[test]

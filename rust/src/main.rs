@@ -46,6 +46,19 @@ sharded execution (scale any sweep across processes / hosts):
                  reassembles shards into the byte-identical single-process
                  report; rejects shards from mismatched matrices
 
+streaming execution (work-stealing dispatcher, out-of-core merge):
+  serve          dispatch a named matrix as fine-grained leases to workers
+                 and stream-merge their results into --out (byte-identical
+                 to the single-process report)
+                 [--matrix NAME --workers N --worker-threads N
+                  --listen HOST:PORT --lease N --lease-timeout-ms X
+                  --spill-cells N --spill-dir DIR --out report.json --quiet
+                  + the sweep matrix flags (--seed/--jobs/--reps/...)]
+  work           run leases for a dispatcher until it shuts us down
+                 [--connect -|HOST:PORT --threads N --batch N]
+                 `-` speaks the protocol on stdin/stdout (what
+                 `serve --workers N` spawns); HOST:PORT joins over TCP
+
 common flags: --seed N (default 7), --jobs N, --dataset NAME
 ";
 
@@ -130,6 +143,8 @@ fn main() {
         }
         "sweep" => run_sweep(&args, seed),
         "merge" => run_merge(&args),
+        "serve" => run_serve(&args, seed),
+        "work" => run_work(&args),
         "infer" => run_infer(&args),
         "all" => run_all(seed, &args),
         other => {
@@ -157,9 +172,9 @@ fn die(msg: &str) -> ! {
     std::process::exit(2);
 }
 
-/// `zygarde sweep`: run a named matrix — the whole thing, or one strided
-/// shard of it for multi-process / multi-host execution.
-fn run_sweep(args: &Args, seed: u64) {
+/// Parse the matrix-tunable flags shared by `sweep` and `serve`, warning
+/// on flags the named matrix ignores, and build the matrix.
+fn matrix_from_flags(args: &Args, seed: u64) -> (String, SweepOpts, sweep::ScenarioMatrix) {
     let name = args.str_or("matrix", "synthetic").to_string();
     let opts = SweepOpts {
         seed,
@@ -187,6 +202,13 @@ fn run_sweep(args: &Args, seed: u64) {
         }
     }
     let matrix = sweep_cli::build_matrix(&name, &opts).unwrap_or_else(|e| die(&e));
+    (name, opts, matrix)
+}
+
+/// `zygarde sweep`: run a named matrix — the whole thing, or one strided
+/// shard of it for multi-process / multi-host execution.
+fn run_sweep(args: &Args, seed: u64) {
+    let (_, _, matrix) = matrix_from_flags(args, seed);
     let threads = args.usize_or("threads", sweep::default_threads());
     match args.opt_str("shard") {
         Some(spec) => {
@@ -217,6 +239,92 @@ fn run_sweep(args: &Args, seed: u64) {
                 None => report.print(),
             }
         }
+    }
+}
+
+/// `zygarde serve`: dispatch a named matrix as work-stealing leases to
+/// worker processes and stream-merge their cells out-of-core; the merged
+/// report is byte-identical to the single-process `SweepReport`.
+fn run_serve(args: &Args, seed: u64) {
+    use zygarde::sim::sweep::serve::{serve_to, ServeConfig};
+    let (name, opts, matrix) = matrix_from_flags(args, seed);
+    let listen = args.opt_str("listen").map(String::from);
+    // Pipes-only by default: one local worker per core. With --listen the
+    // default is pure-TCP (workers join from anywhere); --workers N still
+    // adds local ones alongside.
+    let default_workers = if listen.is_some() { 0 } else { sweep::default_threads() };
+    let mut cfg = ServeConfig::new(matrix, &name, opts.to_json());
+    cfg.listen = listen;
+    cfg.spawn_workers = args.usize_or("workers", default_workers);
+    cfg.worker_threads = args.usize_or("worker-threads", 1);
+    cfg.batch = args.usize_or("batch", 4);
+    cfg.lease_size = args.usize_or("lease", 0);
+    cfg.lease_timeout_ms = args.u64_or("lease-timeout-ms", 30_000);
+    cfg.spill_cells = args.usize_or("spill-cells", 10_000);
+    cfg.spill_dir = args.opt_str("spill-dir").map(std::path::PathBuf::from);
+    cfg.quiet = args.bool_or("quiet", false);
+    let out_path = args.str_or("out", "report.json").to_string();
+    let file = std::fs::File::create(&out_path)
+        .unwrap_or_else(|e| die(&format!("{out_path}: {e}")));
+    let mut out = std::io::BufWriter::new(file);
+    let n = cfg.matrix.len();
+    match serve_to(cfg, &mut out) {
+        Ok(o) => {
+            println!(
+                "serve `{name}`: {} cells -> {out_path} ({} workers, {} leases, \
+                 {} steals, {} reissues, {} duplicate cells, {} spill runs, \
+                 peak {} cells in memory)",
+                o.n_scenarios,
+                o.workers_seen,
+                o.leases_granted,
+                o.steals,
+                o.reissues,
+                o.duplicates,
+                o.runs_spilled,
+                o.peak_buffered,
+            );
+        }
+        Err(e) => {
+            // Leave no half-written report behind a failed serve.
+            drop(out);
+            let _ = std::fs::remove_file(&out_path);
+            die(&format!("serve failed after dispatching over {n} cells: {e}"));
+        }
+    }
+}
+
+/// `zygarde work`: execute leases for a dispatcher — over stdin/stdout
+/// (`--connect -`, the pipe workers `serve` spawns) or TCP
+/// (`--connect host:port`). All diagnostics go to stderr; stdout may be
+/// the protocol stream.
+fn run_work(args: &Args) {
+    use zygarde::sim::sweep::serve::run_worker;
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let batch = args.usize_or("batch", 4);
+    let resolve = |name: &str, opts: &zygarde::util::json::Value| {
+        let opts = SweepOpts::from_json(opts)?;
+        sweep_cli::build_matrix(name, &opts)
+    };
+    let connect = args.str_or("connect", "-").to_string();
+    let outcome = if connect == "-" {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let mut rx = stdin.lock();
+        let mut tx = stdout.lock();
+        run_worker(&mut rx, &mut tx, threads, batch, &resolve)
+    } else {
+        let stream = std::net::TcpStream::connect(&connect)
+            .unwrap_or_else(|e| die(&format!("connect {connect}: {e}")));
+        let read_half = stream
+            .try_clone()
+            .unwrap_or_else(|e| die(&format!("clone {connect}: {e}")));
+        let mut rx = std::io::BufReader::new(read_half);
+        let mut tx = stream;
+        run_worker(&mut rx, &mut tx, threads, batch, &resolve)
+    };
+    match outcome {
+        Ok(o) => eprintln!("work: {} cells over {} leases, clean shutdown", o.cells_run, o.leases),
+        Err(e) => die(&format!("work: {e}")),
     }
 }
 

@@ -141,11 +141,11 @@ impl Engine {
         let n = tasks.len();
         let rng = Pcg32::seeded(cfg.seed);
         let next_release_ms = tasks.iter().map(|_| 0.0).collect();
-        // Waste before t = 0 is pre-deployment fiction (the precharge
-        // slop); `wasted_mj` reports in-simulation waste only, so the
-        // energy-conservation identity closes over the run.
-        let mut energy = energy;
-        energy.capacitor.wasted_mj = 0.0;
+        debug_assert_eq!(
+            energy.capacitor.wasted_mj, 0.0,
+            "pre-t0 charging must go through Capacitor::precharge / Engine::warm_up, \
+             which keep the in-simulation waste ledger at zero"
+        );
         let mut metrics = Metrics::new(n);
         metrics.initial_energy_mj = energy.capacitor.energy_mj();
         let nvm = Nvm::ideal(&energy.capacitor);
@@ -171,6 +171,19 @@ impl Engine {
             reference: false,
             probe: None,
         }
+    }
+
+    /// Explicit pre-t0 warm-up phase: the deployment harvested before the
+    /// simulation starts, so the capacitor begins full and the energy
+    /// baseline (`Metrics::initial_energy_mj`) is re-taken from the warm
+    /// state. Call between construction and [`Engine::run`]. The warm-up
+    /// charge is pre-deployment fiction and touches none of the
+    /// in-simulation ledgers (`harvested_mj` / `wasted_mj` /
+    /// `consumed_mj`) — previously this was emulated by a huge
+    /// `Capacitor::charge` whose overflow slop the constructor zeroed.
+    pub fn warm_up(&mut self) {
+        self.energy.capacitor.precharge();
+        self.metrics.initial_energy_mj = self.energy.capacitor.energy_mj();
     }
 
     /// Run the simulation to completion and return the metrics.
@@ -865,8 +878,7 @@ mod tests {
     fn persistent_engine(kind: SchedulerKind, exit: ExitPolicy) -> Engine {
         let em = {
             let mut cap = Capacitor::standard();
-            // pre-charge
-            cap.charge(1e9, 1000.0);
+            cap.precharge();
             EnergyManager::new(cap, Harvester::persistent(600.0), 1.0, 0.05)
         };
         Engine::new(
@@ -877,6 +889,34 @@ mod tests {
             em,
             Box::new(Rtc),
         )
+    }
+
+    #[test]
+    fn warm_up_matches_precharged_construction_byte_for_byte() {
+        // The explicit warm-up phase (cold construction + `warm_up()`)
+        // must be indistinguishable from handing the engine an already
+        // precharged capacitor — same initial-energy baseline, same run.
+        let warm = persistent_engine(SchedulerKind::Zygarde, ExitPolicy::Utility).run();
+        let cold = {
+            let em = EnergyManager::new(
+                Capacitor::standard(),
+                Harvester::persistent(600.0),
+                1.0,
+                0.05,
+            );
+            let mut e = Engine::new(
+                SimConfig { duration_ms: 30_000.0, ..Default::default() },
+                vec![task(0, 300.0, 600.0)],
+                Scheduler::new(SchedulerKind::Zygarde, PriorityParams::new(600.0, 10.0)),
+                ExitPolicy::Utility,
+                em,
+                Box::new(Rtc),
+            );
+            assert_eq!(e.metrics.initial_energy_mj, 0.0, "cold start before warm_up");
+            e.warm_up();
+            e.run()
+        };
+        assert_eq!(cold.to_json().to_json(), warm.to_json().to_json());
     }
 
     #[test]
@@ -926,7 +966,7 @@ mod tests {
             7,
         );
         let mut cap = Capacitor::new(0.01, 3.3, 2.8, 1.9);
-        cap.charge(1e7, 1000.0);
+        cap.precharge();
         let em = EnergyManager::new(cap, h, 0.5, 0.05);
         let e = Engine::new(
             SimConfig { duration_ms: 120_000.0, ..Default::default() },
@@ -1012,7 +1052,7 @@ mod tests {
                 7,
             );
             let mut cap = Capacitor::new(0.01, 3.3, 2.8, 1.9);
-            cap.charge(1e7, 1000.0);
+            cap.precharge();
             let em = EnergyManager::new(cap, h, 0.5, 0.05);
             let mut e = Engine::new(
                 SimConfig { duration_ms: 240_000.0, ..Default::default() },
@@ -1062,7 +1102,7 @@ mod tests {
                 13,
             );
             let mut cap = Capacitor::new(0.01, 3.3, 2.8, 1.9);
-            cap.charge(1e7, 1000.0);
+            cap.precharge();
             let em = EnergyManager::new(cap, h, 0.5, 0.05);
             let mut e = Engine::new(
                 SimConfig { duration_ms: 300_000.0, ..Default::default() },

@@ -18,11 +18,15 @@
 //!   remanence-clock models.
 //! * [`SweepReport`] — per-cell metrics plus aggregate summary statistics
 //!   (`util::stats`), serialized with `util::json`.
-//! * [`shard`] — multi-process / multi-host scale-out: a [`ShardSpec`]
-//!   deterministically partitions the expansion (strided by scenario
-//!   index), each shard ships a [`PartialReport`], and [`merge`]
+//! * [`shard`] — *static* multi-process / multi-host scale-out: a
+//!   [`ShardSpec`] deterministically partitions the expansion (strided by
+//!   scenario index), each shard ships a [`PartialReport`], and [`merge`]
 //!   reassembles the byte-identical single-process [`SweepReport`]
 //!   (`zygarde sweep --shard I/N` / `zygarde merge`).
+//! * [`serve`] — *dynamic* scale-out: a work-stealing dispatcher streams
+//!   fine-grained index-range leases to worker processes (pipes or TCP),
+//!   reissues them on death or timeout, and merges results out-of-core —
+//!   still byte-identical (`zygarde serve` / `zygarde work`).
 //!
 //! Seed discipline: by default every scenario's engine seed is an
 //! independent function of `(matrix_seed, scenario_index)`
@@ -36,6 +40,7 @@
 pub mod faults;
 pub mod report;
 pub mod runner;
+pub mod serve;
 pub mod shard;
 
 pub use faults::FaultPlan;

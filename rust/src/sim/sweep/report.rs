@@ -85,42 +85,76 @@ pub struct SummaryStats {
     pub accuracy_mean: f64,
 }
 
-impl SummaryStats {
-    fn from_cells(cells: &[CellResult]) -> Self {
-        let mut s = SummaryStats::default();
-        let mut rate = Online::new();
-        let mut acc = Online::new();
-        for c in cells {
-            let m = &c.metrics;
-            s.released += m.released;
-            s.capture_missed += m.capture_missed;
-            s.queue_dropped += m.queue_dropped;
-            s.scheduled += m.scheduled;
-            s.correct += m.correct;
-            s.deadline_missed += m.deadline_missed;
-            s.reboots += m.reboots;
-            s.refragments += m.refragments;
-            s.commits += m.commits;
-            s.restores += m.restores;
-            s.lost_fragments += m.lost_fragments;
-            s.commit_mj += m.commit_mj;
-            s.restore_mj += m.restore_mj;
-            s.harvested_mj += m.harvested_mj;
-            s.wasted_mj += m.wasted_mj;
-            rate.push(m.event_scheduled_rate());
-            acc.push(m.accuracy());
-        }
-        if rate.count() > 0 {
-            s.scheduled_rate_mean = rate.mean();
-            s.scheduled_rate_std = rate.std();
-            s.scheduled_rate_min = rate.min();
-            s.scheduled_rate_max = rate.max();
-            s.accuracy_mean = acc.mean();
-        }
-        s
+/// Incremental [`SummaryStats`] builder: push per-cell metrics **in
+/// scenario-index order** and [`finish`]. Replays the exact f64 operation
+/// sequence of the batch path ([`SweepReport::new`] delegates here), so a
+/// streaming consumer — the serve dispatcher's out-of-core merger — can
+/// produce a byte-identical summary without materializing the cell list.
+///
+/// [`finish`]: SummaryAccumulator::finish
+#[derive(Clone, Debug)]
+pub struct SummaryAccumulator {
+    s: SummaryStats,
+    rate: Online,
+    acc: Online,
+}
+
+impl Default for SummaryAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SummaryAccumulator {
+    pub fn new() -> Self {
+        // NB: `Online::new()`, not `Online::default()` — the derived
+        // default zeroes the min/max seeds the batch path relies on.
+        SummaryAccumulator { s: SummaryStats::default(), rate: Online::new(), acc: Online::new() }
     }
 
-    fn to_json(&self) -> Value {
+    pub fn push(&mut self, m: &Metrics) {
+        let s = &mut self.s;
+        s.released += m.released;
+        s.capture_missed += m.capture_missed;
+        s.queue_dropped += m.queue_dropped;
+        s.scheduled += m.scheduled;
+        s.correct += m.correct;
+        s.deadline_missed += m.deadline_missed;
+        s.reboots += m.reboots;
+        s.refragments += m.refragments;
+        s.commits += m.commits;
+        s.restores += m.restores;
+        s.lost_fragments += m.lost_fragments;
+        s.commit_mj += m.commit_mj;
+        s.restore_mj += m.restore_mj;
+        s.harvested_mj += m.harvested_mj;
+        s.wasted_mj += m.wasted_mj;
+        self.rate.push(m.event_scheduled_rate());
+        self.acc.push(m.accuracy());
+    }
+
+    pub fn finish(mut self) -> SummaryStats {
+        if self.rate.count() > 0 {
+            self.s.scheduled_rate_mean = self.rate.mean();
+            self.s.scheduled_rate_std = self.rate.std();
+            self.s.scheduled_rate_min = self.rate.min();
+            self.s.scheduled_rate_max = self.rate.max();
+            self.s.accuracy_mean = self.acc.mean();
+        }
+        self.s
+    }
+}
+
+impl SummaryStats {
+    fn from_cells(cells: &[CellResult]) -> Self {
+        let mut acc = SummaryAccumulator::new();
+        for c in cells {
+            acc.push(&c.metrics);
+        }
+        acc.finish()
+    }
+
+    pub fn to_json(&self) -> Value {
         let mut m = BTreeMap::new();
         let mut num = |k: &str, v: f64| {
             m.insert(k.to_string(), Value::Num(v));

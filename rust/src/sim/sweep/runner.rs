@@ -46,10 +46,7 @@ pub fn build_engine(sc: &Scenario) -> Engine {
         None => harvester,
     };
 
-    let mut cap = Capacitor::new(sc.capacitor_mf * 1e-3, 3.3, 2.8, 1.9);
-    if sc.precharge {
-        cap.charge(1e9, 1000.0);
-    }
+    let cap = Capacitor::new(sc.capacitor_mf * 1e-3, 3.3, 2.8, 1.9);
 
     let tasks = sc.mix.tasks.clone();
     // E_man: the largest atomic fragment's energy (same rule as
@@ -85,6 +82,11 @@ pub fn build_engine(sc: &Scenario) -> Engine {
     // Nonvolatile-progress model: the JIT threshold is an absolute voltage
     // derived from this scenario's capacitor.
     engine.nvm = crate::nvm::Nvm::build(sc.nvm, &engine.energy.capacitor);
+    // Explicit pre-t0 warm-up phase (deployment harvesting before t = 0);
+    // `precharge(false)` scenarios pay their cold-start charge in-run.
+    if sc.precharge {
+        engine.warm_up();
+    }
     engine
 }
 

@@ -1,0 +1,641 @@
+//! The streaming dispatcher: lease bookkeeping as a pure state machine.
+//!
+//! [`DispatcherCore`] owns no sockets, threads, or clocks — it consumes
+//! events (`on_connect`, `on_message`, `on_disconnect`, `on_tick`) and
+//! returns the [`Out`] effects the transport layer must apply (send a
+//! message, ingest an accepted cell, drop a connection, finish). That
+//! split is what makes the headline guarantee testable: the property
+//! suite (`rust/tests/sweep_serve.rs`) drives the core through arbitrary
+//! lease sizes, interleavings, worker deaths, and timeouts with zero
+//! real IO and zero timing flakes, and asserts the merged report is
+//! byte-identical every time. The IO shell ([`super::service`]) stays a
+//! thin, boring loop.
+//!
+//! # Lease discipline
+//!
+//! Work is granted as fine-grained half-open index ranges
+//! (`lease_size` cells each) popped off a pending queue, one outstanding
+//! lease per worker. Three things return work to the queue:
+//!
+//! * **Death** — a worker's connection drops: the un-received tail of its
+//!   leases is requeued (`reissues`).
+//! * **Timeout** — a lease shows no progress for `lease_timeout_ms`: the
+//!   tail is requeued and the lease marked dead. Late results from the
+//!   original worker are still *accepted* (they are byte-identical by
+//!   determinism) and deduplicated.
+//! * **Stealing** — an idle worker asks for work while the queue is
+//!   empty: the largest un-started tail among live leases is split and
+//!   the far half re-leased (`steals`). The victim worker is not
+//!   interrupted — it may compute the stolen half anyway; whichever copy
+//!   arrives first wins, the other counts as `duplicates`.
+//!
+//! Every accepted cell is recorded in a per-index bitmap, so duplicate
+//! and reissued work can never double-ingest, and completion is exact:
+//! the sweep is done when every index has arrived, regardless of which
+//! lease carried it.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::sim::sweep::report::CellResult;
+use crate::sim::sweep::shard::MatrixFingerprint;
+use crate::util::json::Value;
+
+use super::protocol::Msg;
+
+/// Transport-assigned connection id.
+pub type WorkerId = usize;
+
+/// An effect the transport layer must apply after feeding the core an
+/// event. Ordering within the returned batch matters (e.g. an `Error`
+/// send precedes its `Kick`).
+#[derive(Debug)]
+pub enum Out {
+    /// Send this message to this worker.
+    Send(WorkerId, Msg),
+    /// A newly accepted (non-duplicate, in-lease) cell — feed the merger.
+    Ingest(CellResult),
+    /// Drop the worker's connection (protocol violation or admission
+    /// failure; an explanatory `Send` precedes it in the batch).
+    Kick(WorkerId),
+    /// Every scenario index has been ingested; finalize the merge.
+    Done,
+}
+
+struct Lease {
+    worker: WorkerId,
+    start: usize,
+    /// Exclusive end as granted. Results in `start..end` are always
+    /// acceptable from the lease owner, even past a stolen boundary.
+    end: usize,
+    /// Watermark: the worker streams cells in ascending index order, so
+    /// everything in `start..hwm` has been received from *this* lease.
+    hwm: usize,
+    /// Stealing may have re-leased `steal_end..end` to someone else; the
+    /// un-started tail of this lease is `hwm..steal_end`.
+    steal_end: usize,
+    last_activity_ms: u64,
+    /// Dead leases (worker gone or timed out) still accept late results.
+    dead: bool,
+    done: bool,
+}
+
+impl Lease {
+    /// The range a reissue (death/timeout) must put back in the queue.
+    fn tail(&self) -> (usize, usize) {
+        (self.hwm.max(self.start), self.steal_end)
+    }
+}
+
+struct WorkerState {
+    admitted: bool,
+    alive: bool,
+    active_leases: usize,
+}
+
+/// Counters the service layer reports when the sweep finishes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DispatchStats {
+    pub leases_granted: u64,
+    pub steals: u64,
+    pub reissues: u64,
+    pub duplicates: u64,
+    pub workers_seen: u64,
+}
+
+/// The dispatcher state machine. See module docs for the event model.
+pub struct DispatcherCore {
+    matrix_name: String,
+    opts: Value,
+    fingerprint: MatrixFingerprint,
+    n: usize,
+    received: Vec<bool>,
+    n_received: usize,
+    /// Half-open ranges not currently under any live lease. Ranges may
+    /// contain already-received indexes (reissue after partial receipt);
+    /// granting trims them against the bitmap.
+    pending: VecDeque<(usize, usize)>,
+    leases: BTreeMap<u64, Lease>,
+    next_lease_id: u64,
+    workers: BTreeMap<WorkerId, WorkerState>,
+    lease_size: usize,
+    lease_timeout_ms: u64,
+    done: bool,
+    pub stats: DispatchStats,
+}
+
+impl DispatcherCore {
+    /// `lease_size` is the grant granularity (clamped to ≥ 1);
+    /// `lease_timeout_ms` is how long a lease may sit with no progress
+    /// before its tail is reissued (0 disables timeouts).
+    pub fn new(
+        matrix_name: &str,
+        opts: Value,
+        fingerprint: MatrixFingerprint,
+        lease_size: usize,
+        lease_timeout_ms: u64,
+    ) -> DispatcherCore {
+        let n = fingerprint.n_scenarios;
+        assert!(n > 0, "cannot serve an empty matrix");
+        DispatcherCore {
+            matrix_name: matrix_name.to_string(),
+            opts,
+            fingerprint,
+            n,
+            received: vec![false; n],
+            n_received: 0,
+            pending: VecDeque::from(vec![(0, n)]),
+            leases: BTreeMap::new(),
+            next_lease_id: 0,
+            workers: BTreeMap::new(),
+            lease_size: lease_size.max(1),
+            lease_timeout_ms,
+            done: false,
+            stats: DispatchStats::default(),
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn cells_received(&self) -> usize {
+        self.n_received
+    }
+
+    /// A connection appeared: open the handshake.
+    pub fn on_connect(&mut self, w: WorkerId) -> Vec<Out> {
+        self.workers
+            .insert(w, WorkerState { admitted: false, alive: true, active_leases: 0 });
+        self.stats.workers_seen += 1;
+        vec![Out::Send(
+            w,
+            Msg::Matrix {
+                name: self.matrix_name.clone(),
+                opts: self.opts.clone(),
+                fingerprint: self.fingerprint.clone(),
+            },
+        )]
+    }
+
+    /// A connection dropped (EOF, broken pipe, kill -9): requeue the
+    /// un-received tails of its leases.
+    pub fn on_disconnect(&mut self, w: WorkerId, _now_ms: u64) -> Vec<Out> {
+        self.drop_worker(w);
+        Vec::new()
+    }
+
+    /// The disconnect bookkeeping: mark the worker gone and requeue its
+    /// live leases' tails. Also runs eagerly on every kick — correctness
+    /// must not depend on the transport actually managing to close a
+    /// violator's socket (a hostile peer can ignore the `Error` and keep
+    /// its connection open). Idempotent: dead leases are skipped, so the
+    /// transport's eventual real `on_disconnect` is a no-op.
+    fn drop_worker(&mut self, w: WorkerId) {
+        if let Some(state) = self.workers.get_mut(&w) {
+            state.alive = false;
+        }
+        let mut requeue = Vec::new();
+        for lease in self.leases.values_mut() {
+            if lease.worker == w && !lease.dead && !lease.done {
+                lease.dead = true;
+                requeue.push(lease.tail());
+            }
+        }
+        for (s, e) in requeue {
+            self.requeue_range(s, e);
+        }
+    }
+
+    /// Periodic maintenance: expire stalled leases and hand queued work
+    /// to idle workers (e.g. after a death requeued a tail).
+    pub fn on_tick(&mut self, now_ms: u64) -> Vec<Out> {
+        let mut out = Vec::new();
+        if self.done {
+            return out;
+        }
+        if self.lease_timeout_ms > 0 {
+            let mut requeue = Vec::new();
+            for lease in self.leases.values_mut() {
+                if !lease.dead
+                    && !lease.done
+                    && now_ms.saturating_sub(lease.last_activity_ms) >= self.lease_timeout_ms
+                {
+                    lease.dead = true;
+                    requeue.push(lease.tail());
+                }
+            }
+            for (s, e) in requeue {
+                self.requeue_range(s, e);
+            }
+        }
+        let idle: Vec<WorkerId> = self
+            .workers
+            .iter()
+            .filter(|(_, s)| s.alive && s.admitted && s.active_leases == 0)
+            .map(|(&w, _)| w)
+            .collect();
+        for w in idle {
+            self.grant(w, now_ms, &mut out);
+        }
+        out
+    }
+
+    /// One inbound protocol message. Violations (unknown lease, cells
+    /// outside the leased range, admission failure) kick the worker —
+    /// its leases requeue via the kick's `on_disconnect`, which the
+    /// transport calls when it drops the connection.
+    pub fn on_message(&mut self, w: WorkerId, msg: Msg, now_ms: u64) -> Vec<Out> {
+        let mut out = Vec::new();
+        // Unknown or already-dropped workers are ignored entirely: a
+        // kicked violator that keeps its socket open gets no further
+        // say. (A *stalled-but-alive* worker's late results are still
+        // welcome — its leases may be dead, the worker is not.)
+        let alive = self.workers.get(&w).map(|s| s.alive).unwrap_or(false);
+        if !alive {
+            return out;
+        }
+        match msg {
+            Msg::Ready { fingerprint } => {
+                if fingerprint != self.fingerprint {
+                    return self.violation(
+                        w,
+                        format!(
+                            "fingerprint mismatch: worker expanded {:?}, dispatcher \
+                             serves {:?} — mixed binaries or drifted options",
+                            fingerprint, self.fingerprint
+                        ),
+                    );
+                }
+                self.workers.get_mut(&w).expect("checked above").admitted = true;
+                self.grant(w, now_ms, &mut out);
+            }
+            Msg::Cells { lease, cells } => {
+                let Some(l) = self.leases.get(&lease) else {
+                    return self.violation(w, format!("cells for unknown lease {lease}"));
+                };
+                if l.worker != w {
+                    return self.violation(w, format!("cells for someone else's lease {lease}"));
+                }
+                let (start, end) = (l.start, l.end);
+                // The protocol requires a lease's cells to stream as one
+                // contiguous ascending run (the worker computes the range
+                // in order). Enforcing it keeps the hwm watermark honest:
+                // a peer that skipped ahead would otherwise fake a full
+                // watermark, and its skipped indexes could never be
+                // reissued — a silent permanent hang.
+                let mut expect = l.hwm;
+                for c in &cells {
+                    if c.index < start || c.index >= end {
+                        return self.violation(
+                            w,
+                            format!(
+                                "cell index {} outside leased range {start}..{end}",
+                                c.index
+                            ),
+                        );
+                    }
+                    if c.index != expect {
+                        return self.violation(
+                            w,
+                            format!(
+                                "out-of-order cell {} on lease {lease} (expected {expect})",
+                                c.index
+                            ),
+                        );
+                    }
+                    expect += 1;
+                }
+                let l = self.leases.get_mut(&lease).expect("checked above");
+                l.last_activity_ms = now_ms;
+                for c in cells {
+                    l.hwm = l.hwm.max(c.index + 1);
+                    if self.received[c.index] {
+                        self.stats.duplicates += 1;
+                        continue;
+                    }
+                    self.received[c.index] = true;
+                    self.n_received += 1;
+                    out.push(Out::Ingest(c));
+                }
+                if !self.done && self.n_received == self.n {
+                    self.finish(&mut out);
+                }
+            }
+            Msg::LeaseDone { lease } => {
+                let Some(l) = self.leases.get_mut(&lease) else {
+                    return self.violation(w, format!("done for unknown lease {lease}"));
+                };
+                if l.worker != w {
+                    return self.violation(w, format!("done for someone else's lease {lease}"));
+                }
+                if l.done {
+                    // A second LeaseDone would decrement active_leases
+                    // twice and let one worker hold multiple concurrent
+                    // leases — protocol violation, same as the rest.
+                    return self.violation(w, format!("lease {lease} finished twice"));
+                }
+                let was_dead = l.dead;
+                l.done = true;
+                let (tail_start, tail_end) = l.tail();
+                // Free the worker's lease slot even when the lease timed
+                // out underneath it (it was merely slow, not dead): the
+                // finished worker is immediately eligible for new work.
+                if let Some(state) = self.workers.get_mut(&w) {
+                    state.active_leases = state.active_leases.saturating_sub(1);
+                }
+                // A conforming worker streams every cell before its
+                // LeaseDone, so the tail is empty here; if a worker
+                // skipped cells anyway, requeue them rather than stall.
+                // (A dead lease's tail was already requeued at
+                // death/timeout time — don't requeue it twice.)
+                if !was_dead && tail_start < tail_end {
+                    self.requeue_range(tail_start, tail_end);
+                }
+                if !self.done {
+                    self.grant(w, now_ms, &mut out);
+                }
+            }
+            Msg::Error { reason: _ } => {
+                // The worker is aborting on its own: do the disconnect
+                // bookkeeping now (its leases requeue) instead of waiting
+                // for the transport to notice the closed socket.
+                self.drop_worker(w);
+                out.push(Out::Send(w, Msg::Shutdown));
+                out.push(Out::Kick(w));
+            }
+            Msg::Matrix { .. } | Msg::Lease { .. } | Msg::Shutdown => {
+                let reason = "dispatcher-bound stream got a worker-bound message";
+                return self.violation(w, reason.into());
+            }
+        }
+        out
+    }
+
+    // ---- internals -------------------------------------------------------
+
+    fn violation(&mut self, w: WorkerId, reason: String) -> Vec<Out> {
+        self.drop_worker(w);
+        vec![Out::Send(w, Msg::Error { reason }), Out::Kick(w)]
+    }
+
+    fn finish(&mut self, out: &mut Vec<Out>) {
+        self.done = true;
+        let alive: Vec<WorkerId> = self
+            .workers
+            .iter()
+            .filter(|(_, s)| s.alive)
+            .map(|(&w, _)| w)
+            .collect();
+        for w in alive {
+            out.push(Out::Send(w, Msg::Shutdown));
+        }
+        out.push(Out::Done);
+    }
+
+    /// Put a range back on the queue, trimming received indexes off both
+    /// ends (interior holes are handled at grant time / by dedup).
+    fn requeue_range(&mut self, mut start: usize, mut end: usize) {
+        while start < end && self.received[start] {
+            start += 1;
+        }
+        while end > start && self.received[end - 1] {
+            end -= 1;
+        }
+        if start < end {
+            self.stats.reissues += 1;
+            self.pending.push_back((start, end));
+        }
+    }
+
+    /// Pop the next grantable range: at most `lease_size` cells, front
+    /// trimmed against the received bitmap.
+    fn next_range(&mut self) -> Option<(usize, usize)> {
+        while let Some((mut start, end)) = self.pending.pop_front() {
+            while start < end && self.received[start] {
+                start += 1;
+            }
+            if start >= end {
+                continue;
+            }
+            let grant_end = end.min(start + self.lease_size);
+            if grant_end < end {
+                self.pending.push_front((grant_end, end));
+            }
+            return Some((start, grant_end));
+        }
+        None
+    }
+
+    /// The largest un-started live-lease tail worth splitting: returns
+    /// `(lease_id, mid)` where `mid..steal_end` is the half to re-lease.
+    fn steal_candidate(&self) -> Option<(u64, usize)> {
+        let mut best: Option<(u64, usize, usize)> = None; // (id, tail_start, tail_end)
+        for (&id, l) in &self.leases {
+            if l.dead || l.done {
+                continue;
+            }
+            let (s, e) = l.tail();
+            let len = e.saturating_sub(s);
+            if len >= 2 && best.map(|(_, bs, be)| len > be - bs).unwrap_or(true) {
+                best = Some((id, s, e));
+            }
+        }
+        best.map(|(id, s, e)| (id, s + (e - s) / 2))
+    }
+
+    /// Grant one lease to an idle admitted worker: queued work first,
+    /// else steal the far half of the largest outstanding tail.
+    fn grant(&mut self, w: WorkerId, now_ms: u64, out: &mut Vec<Out>) {
+        if self.done {
+            return;
+        }
+        let ready = self
+            .workers
+            .get(&w)
+            .map(|s| s.alive && s.admitted && s.active_leases == 0)
+            .unwrap_or(false);
+        if !ready {
+            return;
+        }
+        let range = self.next_range().or_else(|| {
+            self.steal_candidate().map(|(victim, mid)| {
+                let l = self.leases.get_mut(&victim).expect("candidate exists");
+                let end = l.steal_end;
+                l.steal_end = mid;
+                self.stats.steals += 1;
+                (mid, end)
+            })
+        });
+        let Some((start, end)) = range else {
+            return;
+        };
+        let id = self.next_lease_id;
+        self.next_lease_id += 1;
+        self.leases.insert(
+            id,
+            Lease {
+                worker: w,
+                start,
+                end,
+                hwm: start,
+                steal_end: end,
+                last_activity_ms: now_ms,
+                dead: false,
+                done: false,
+            },
+        );
+        self.workers.get_mut(&w).expect("checked ready").active_leases += 1;
+        self.stats.leases_granted += 1;
+        out.push(Out::Send(w, Msg::Lease { id, start, end }));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::metrics::Metrics;
+
+    fn fp(n: usize) -> MatrixFingerprint {
+        MatrixFingerprint { name: "t".into(), seed: 1, n_scenarios: n, axes_hash: 7 }
+    }
+
+    fn core(n: usize, lease: usize) -> DispatcherCore {
+        DispatcherCore::new("t", Value::Null, fp(n), lease, 1_000)
+    }
+
+    fn cell(index: usize) -> CellResult {
+        CellResult {
+            index,
+            label: format!("c{index}"),
+            engine_seed: index as u64,
+            metrics: Metrics::new(1),
+        }
+    }
+
+    fn admit(c: &mut DispatcherCore, w: WorkerId) -> Vec<Out> {
+        let outs = c.on_connect(w);
+        assert!(matches!(outs[..], [Out::Send(_, Msg::Matrix { .. })]));
+        c.on_message(w, Msg::Ready { fingerprint: fp(c.n) }, 0)
+    }
+
+    fn lease_of(outs: &[Out]) -> (u64, usize, usize) {
+        for o in outs {
+            if let Out::Send(_, Msg::Lease { id, start, end }) = o {
+                return (*id, *start, *end);
+            }
+        }
+        panic!("no lease in {outs:?}");
+    }
+
+    #[test]
+    fn handshake_grants_a_lease_and_completion_shuts_down() {
+        let mut c = core(5, 8);
+        let outs = admit(&mut c, 0);
+        let (id, start, end) = lease_of(&outs);
+        assert_eq!((start, end), (0, 5));
+        let outs =
+            c.on_message(0, Msg::Cells { lease: id, cells: (0..5).map(cell).collect() }, 1);
+        let ingested = outs.iter().filter(|o| matches!(o, Out::Ingest(_))).count();
+        assert_eq!(ingested, 5);
+        assert!(outs.iter().any(|o| matches!(o, Out::Done)));
+        assert!(outs.iter().any(|o| matches!(o, Out::Send(0, Msg::Shutdown))));
+        assert!(c.is_done());
+    }
+
+    #[test]
+    fn wrong_fingerprint_is_kicked_before_any_work() {
+        let mut c = core(4, 2);
+        c.on_connect(0);
+        let outs = c.on_message(0, Msg::Ready { fingerprint: fp(9) }, 0);
+        assert!(matches!(outs[..], [Out::Send(0, Msg::Error { .. }), Out::Kick(0)]));
+    }
+
+    #[test]
+    fn death_requeues_the_unreceived_tail() {
+        let mut c = core(6, 6);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        // Worker 0 delivers 2 of 6 cells, then dies.
+        c.on_message(0, Msg::Cells { lease: id, cells: vec![cell(0), cell(1)] }, 1);
+        c.on_disconnect(0, 2);
+        assert_eq!(c.stats.reissues, 1);
+        // A fresh worker picks up exactly the tail.
+        let outs = admit(&mut c, 1);
+        let (_, start, end) = lease_of(&outs);
+        assert_eq!((start, end), (2, 6));
+    }
+
+    #[test]
+    fn timeout_reissues_but_late_results_still_count_once() {
+        let mut c = core(4, 4);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        // No progress for longer than the 1000 ms timeout.
+        assert!(c.on_tick(2_000).is_empty());
+        assert_eq!(c.stats.reissues, 1);
+        // Second worker gets the reissued range and finishes half.
+        let outs = admit(&mut c, 1);
+        let (id2, start, end) = lease_of(&outs);
+        assert_eq!((start, end), (0, 4));
+        c.on_message(1, Msg::Cells { lease: id2, cells: vec![cell(0), cell(1)] }, 2_100);
+        // The stalled worker wakes up and sends everything: 2 dups, 2 new.
+        let outs =
+            c.on_message(0, Msg::Cells { lease: id, cells: (0..4).map(cell).collect() }, 2_200);
+        let ingested = outs.iter().filter(|o| matches!(o, Out::Ingest(_))).count();
+        assert_eq!(ingested, 2);
+        assert_eq!(c.stats.duplicates, 2);
+        assert!(c.is_done());
+    }
+
+    #[test]
+    fn idle_worker_steals_the_far_half_of_the_biggest_tail() {
+        let mut c = core(8, 8);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        // Worker 0 has sent 2/8; worker 1 connects with the queue empty.
+        c.on_message(0, Msg::Cells { lease: id, cells: vec![cell(0), cell(1)] }, 1);
+        let outs = admit(&mut c, 1);
+        let (_, start, end) = lease_of(&outs);
+        // Tail is 2..8; far half 5..8 goes to the thief.
+        assert_eq!((start, end), (5, 8));
+        assert_eq!(c.stats.steals, 1);
+        // Both deliver their (overlapping) share; report completes.
+        c.on_message(1, Msg::Cells { lease: 1, cells: (5..8).map(cell).collect() }, 2);
+        let outs =
+            c.on_message(0, Msg::Cells { lease: id, cells: (2..8).map(cell).collect() }, 3);
+        assert!(c.is_done());
+        assert_eq!(c.stats.duplicates, 3);
+        let ingested = outs.iter().filter(|o| matches!(o, Out::Ingest(_))).count();
+        assert_eq!(ingested, 3);
+    }
+
+    #[test]
+    fn out_of_lease_cells_are_a_violation() {
+        let mut c = core(8, 4);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        let outs = c.on_message(0, Msg::Cells { lease: id, cells: vec![cell(7)] }, 1);
+        assert!(matches!(outs[..], [Out::Send(0, Msg::Error { .. }), Out::Kick(0)]));
+    }
+
+    #[test]
+    fn out_of_order_cells_are_a_violation_and_the_lease_requeues() {
+        let mut c = core(6, 6);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        // Skipping ahead would fake the hwm watermark and strand the
+        // skipped indexes forever — it must kick, not be believed.
+        let outs = c.on_message(0, Msg::Cells { lease: id, cells: vec![cell(3)] }, 1);
+        assert!(matches!(outs[..], [Out::Send(0, Msg::Error { .. }), Out::Kick(0)]));
+        // The violator's untouched lease requeues eagerly (no reliance
+        // on the transport managing to close the socket)...
+        assert_eq!(c.stats.reissues, 1);
+        // ...and anything else it says is ignored.
+        let late = c.on_message(0, Msg::Cells { lease: id, cells: vec![cell(0)] }, 2);
+        assert!(late.is_empty());
+        // A fresh worker still covers the whole matrix.
+        let outs = admit(&mut c, 1);
+        let (_, start, end) = lease_of(&outs);
+        assert_eq!((start, end), (0, 6));
+    }
+}

@@ -1,0 +1,50 @@
+//! Streaming sweep dispatcher: work-stealing shard service with
+//! out-of-core incremental merge.
+//!
+//! PR 3's `sim::sweep::shard` scales a sweep across hosts *statically*:
+//! shard counts are fixed up front, a straggler host strands its stride,
+//! and `merge` holds every cell in memory. This subsystem replaces both
+//! limits with a dispatcher **process**:
+//!
+//! * [`protocol`] — line-delimited JSON messages over stdin/stdout pipes
+//!   or TCP, with a fingerprint handshake (the `zygarde merge` admission
+//!   control, moved to connection time).
+//! * [`dispatch`] — [`DispatcherCore`], a pure state machine that streams
+//!   fine-grained index-range *leases* to workers, steals the tails of
+//!   slow leases for idle workers, reissues leases on timeout or worker
+//!   death, and deduplicates overlapping results by scenario index.
+//! * [`worker`] — the lease-executing loop behind `zygarde work`.
+//! * [`spill`] — [`SpillMerger`], the out-of-core merger: sorted runs
+//!   spilled to disk, k-way merged, report streamed out — peak memory is
+//!   the spill-run size, never the matrix size.
+//! * [`service`] — the IO shell behind `zygarde serve`: transports,
+//!   reader/writer threads, the event loop.
+//!
+//! The headline guarantee is inherited from the seed discipline
+//! (`(matrix_seed, index)`-derived streams make every cell
+//! location-independent) and enforced end to end: **the dispatcher's
+//! merged report is byte-identical to the single-process
+//! `SweepReport::json_string()`** for any worker count, lease schedule,
+//! completion order, steal pattern, and mid-lease worker kill —
+//! `rust/tests/sweep_serve.rs` proves it against arbitrary interleavings
+//! of the core, and CI kills a live worker mid-run and `cmp`s the bytes.
+//!
+//! CLI:
+//!
+//! ```console
+//! $ zygarde serve --matrix bench --workers 4 --out report.json
+//! $ zygarde serve --matrix synthetic --listen 0.0.0.0:7177 --out report.json
+//! $ zygarde work --connect dispatcher-host:7177   # on any number of hosts
+//! ```
+
+pub mod dispatch;
+pub mod protocol;
+pub mod service;
+pub mod spill;
+pub mod worker;
+
+pub use dispatch::{DispatchStats, DispatcherCore, Out, WorkerId};
+pub use protocol::{read_msg, write_msg, Msg};
+pub use service::{serve_to, ServeConfig, ServeOutcome};
+pub use spill::SpillMerger;
+pub use worker::{run_worker, MatrixResolver, WorkerOutcome};

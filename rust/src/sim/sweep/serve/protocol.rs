@@ -1,0 +1,248 @@
+//! The serve wire protocol: line-delimited JSON messages.
+//!
+//! One message per line, each a JSON object tagged with a `"type"` field,
+//! written with the in-crate `util::json` writer (no external deps). The
+//! framing is deliberately dumb — newline-delimited objects survive
+//! stdin/stdout pipes, TCP streams, and `kill -9` mid-line equally well
+//! (a torn final line parses as an error and the dispatcher treats the
+//! connection as dead, exactly like an EOF).
+//!
+//! Handshake (dispatcher → worker → dispatcher):
+//!
+//! 1. [`Msg::Matrix`] — the dispatcher announces the named matrix, the
+//!    registry options to rebuild it from, and its [`MatrixFingerprint`].
+//! 2. [`Msg::Ready`] — the worker rebuilds the matrix *locally* from the
+//!    registry, fingerprints its own expansion, and echoes it. Both sides
+//!    compare: a worker running drifted code (different axes, different
+//!    trace generation, different seed derivation) is rejected before a
+//!    single cell runs — the same admission control `zygarde merge`
+//!    applies to shard files, moved to connection time.
+//!
+//! Work flow: [`Msg::Lease`] grants a half-open scenario-index range;
+//! the worker streams [`Msg::Cells`] batches back (ascending index order
+//! within a lease) and finishes with [`Msg::LeaseDone`]. [`Msg::Shutdown`]
+//! ends a worker; [`Msg::Error`] aborts a connection in either direction.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+
+use crate::sim::sweep::report::CellResult;
+use crate::sim::sweep::shard::MatrixFingerprint;
+use crate::util::json::Value;
+
+/// One protocol message (see module docs for the exchange order).
+#[derive(Clone, Debug)]
+pub enum Msg {
+    /// Dispatcher → worker: rebuild this named matrix from the registry
+    /// with these options; verify the fingerprint before touching work.
+    Matrix { name: String, opts: Value, fingerprint: MatrixFingerprint },
+    /// Dispatcher → worker: run scenario indexes `start..end`.
+    Lease { id: u64, start: usize, end: usize },
+    /// Dispatcher → worker: the sweep is complete (or aborted); exit.
+    Shutdown,
+    /// Worker → dispatcher: matrix rebuilt and fingerprint-verified.
+    Ready { fingerprint: MatrixFingerprint },
+    /// Worker → dispatcher: a batch of finished cells for one lease.
+    Cells { lease: u64, cells: Vec<CellResult> },
+    /// Worker → dispatcher: every cell of the lease has been sent.
+    LeaseDone { lease: u64 },
+    /// Either direction: something is wrong; the connection is over.
+    Error { reason: String },
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
+}
+
+fn num(v: &Value, key: &str) -> Result<f64, String> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| format!("protocol: missing numeric `{key}`"))
+}
+
+fn str_field(v: &Value, key: &str) -> Result<String, String> {
+    Ok(v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| format!("protocol: missing string `{key}`"))?
+        .to_string())
+}
+
+impl Msg {
+    pub fn to_json(&self) -> Value {
+        match self {
+            Msg::Matrix { name, opts, fingerprint } => obj(vec![
+                ("type", Value::Str("matrix".into())),
+                ("name", Value::Str(name.clone())),
+                ("opts", opts.clone()),
+                ("fingerprint", fingerprint.to_json()),
+            ]),
+            Msg::Lease { id, start, end } => obj(vec![
+                ("type", Value::Str("lease".into())),
+                ("id", Value::Num(*id as f64)),
+                ("start", Value::Num(*start as f64)),
+                ("end", Value::Num(*end as f64)),
+            ]),
+            Msg::Shutdown => obj(vec![("type", Value::Str("shutdown".into()))]),
+            Msg::Ready { fingerprint } => obj(vec![
+                ("type", Value::Str("ready".into())),
+                ("fingerprint", fingerprint.to_json()),
+            ]),
+            Msg::Cells { lease, cells } => obj(vec![
+                ("type", Value::Str("cells".into())),
+                ("lease", Value::Num(*lease as f64)),
+                ("cells", Value::Arr(cells.iter().map(|c| c.to_json()).collect())),
+            ]),
+            Msg::LeaseDone { lease } => obj(vec![
+                ("type", Value::Str("lease_done".into())),
+                ("lease", Value::Num(*lease as f64)),
+            ]),
+            Msg::Error { reason } => obj(vec![
+                ("type", Value::Str("error".into())),
+                ("reason", Value::Str(reason.clone())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Msg, String> {
+        let kind = str_field(v, "type")?;
+        match kind.as_str() {
+            "matrix" => Ok(Msg::Matrix {
+                name: str_field(v, "name")?,
+                opts: v
+                    .get("opts")
+                    .cloned()
+                    .ok_or_else(|| "protocol: matrix without `opts`".to_string())?,
+                fingerprint: MatrixFingerprint::from_json(
+                    v.get("fingerprint")
+                        .ok_or_else(|| "protocol: matrix without `fingerprint`".to_string())?,
+                )?,
+            }),
+            "lease" => Ok(Msg::Lease {
+                id: num(v, "id")? as u64,
+                start: num(v, "start")? as usize,
+                end: num(v, "end")? as usize,
+            }),
+            "shutdown" => Ok(Msg::Shutdown),
+            "ready" => Ok(Msg::Ready {
+                fingerprint: MatrixFingerprint::from_json(
+                    v.get("fingerprint")
+                        .ok_or_else(|| "protocol: ready without `fingerprint`".to_string())?,
+                )?,
+            }),
+            "cells" => Ok(Msg::Cells {
+                lease: num(v, "lease")? as u64,
+                cells: v
+                    .get("cells")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| "protocol: cells without `cells`".to_string())?
+                    .iter()
+                    .map(CellResult::from_json)
+                    .collect::<Result<Vec<_>, _>>()?,
+            }),
+            "lease_done" => Ok(Msg::LeaseDone { lease: num(v, "lease")? as u64 }),
+            "error" => Ok(Msg::Error { reason: str_field(v, "reason")? }),
+            other => Err(format!("protocol: unknown message type `{other}`")),
+        }
+    }
+
+    /// Serialize as one wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_json()
+    }
+
+    pub fn parse_line(line: &str) -> Result<Msg, String> {
+        let v = Value::parse(line.trim()).map_err(|e| e.to_string())?;
+        Msg::from_json(&v)
+    }
+}
+
+/// Write one message and flush — the peer blocks on whole lines, so
+/// buffering a message would deadlock a pipe transport.
+pub fn write_msg(w: &mut dyn Write, msg: &Msg) -> std::io::Result<()> {
+    let mut line = msg.to_line();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
+/// Read the next message. `Ok(None)` means a clean EOF; blank lines are
+/// skipped; a torn or malformed line is an error (the caller treats the
+/// connection as dead).
+pub fn read_msg(r: &mut dyn BufRead) -> Result<Option<Msg>, String> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = r.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Ok(None);
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        return Msg::parse_line(&line).map(Some);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::metrics::Metrics;
+
+    fn fp() -> MatrixFingerprint {
+        MatrixFingerprint { name: "m".into(), seed: 9, n_scenarios: 4, axes_hash: 0xABCD }
+    }
+
+    fn cell(index: usize) -> CellResult {
+        CellResult {
+            index,
+            label: format!("cell-{index}"),
+            engine_seed: 0xFEED + index as u64,
+            metrics: Metrics::new(1),
+        }
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        let msgs = vec![
+            Msg::Matrix {
+                name: "synthetic".into(),
+                opts: Value::parse(r#"{"seed":"7"}"#).unwrap(),
+                fingerprint: fp(),
+            },
+            Msg::Lease { id: 3, start: 8, end: 16 },
+            Msg::Shutdown,
+            Msg::Ready { fingerprint: fp() },
+            Msg::Cells { lease: 3, cells: vec![cell(8), cell(9)] },
+            Msg::LeaseDone { lease: 3 },
+            Msg::Error { reason: "fingerprint mismatch".into() },
+        ];
+        for m in msgs {
+            let line = m.to_line();
+            assert!(!line.contains('\n'), "line framing must hold: {line}");
+            let back = Msg::parse_line(&line).unwrap();
+            assert_eq!(back.to_line(), line, "round trip drifted for {line}");
+        }
+    }
+
+    #[test]
+    fn stream_of_lines_reads_back_in_order() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Lease { id: 1, start: 0, end: 4 }).unwrap();
+        write_msg(&mut buf, &Msg::Shutdown).unwrap();
+        let mut r = std::io::BufReader::new(&buf[..]);
+        assert!(matches!(read_msg(&mut r).unwrap(), Some(Msg::Lease { id: 1, .. })));
+        assert!(matches!(read_msg(&mut r).unwrap(), Some(Msg::Shutdown)));
+        assert!(read_msg(&mut r).unwrap().is_none(), "EOF is Ok(None)");
+    }
+
+    #[test]
+    fn torn_lines_and_unknown_types_are_errors() {
+        assert!(Msg::parse_line(r#"{"type":"lease","id":1,"star"#).is_err());
+        assert!(Msg::parse_line(r#"{"type":"warp"}"#).is_err());
+        assert!(Msg::parse_line(r#"{"id":1}"#).is_err());
+    }
+}

@@ -1,0 +1,425 @@
+//! The dispatcher's IO shell: transports, threads, and the event loop
+//! around [`DispatcherCore`] + [`SpillMerger`].
+//!
+//! Two transports, freely mixed in one run:
+//!
+//! * **Pipe workers** — `spawn_workers` child processes of
+//!   `<worker_exe> work --connect -`, protocol over stdin/stdout pipes
+//!   (stderr inherited for diagnostics). The zero-setup local mode.
+//! * **TCP workers** — a `--listen addr` socket accepting external
+//!   `zygarde work --connect addr` processes from anywhere; connections
+//!   may come and go at any point of the sweep (late joiners steal work,
+//!   deaths reissue it).
+//!
+//! Per connection: a reader thread parses inbound lines into an event
+//! channel, a writer thread drains an outbound channel. The single main
+//! loop owns all state — core and merger never see a lock. Every effect
+//! the core emits is applied in order; `Out::Ingest` feeds the merger,
+//! `Out::Done` ends the loop, and the merger then streams the final
+//! report (byte-identical to the single-process `SweepReport`) to the
+//! output writer.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::sim::sweep::report::SummaryStats;
+use crate::sim::sweep::shard::fingerprint;
+use crate::sim::sweep::ScenarioMatrix;
+use crate::util::json::Value;
+
+use super::dispatch::{DispatcherCore, Out, WorkerId};
+use super::protocol::{read_msg, write_msg, Msg};
+use super::spill::SpillMerger;
+
+/// Everything `serve_to` needs; the CLI fills this from flags.
+pub struct ServeConfig {
+    /// The matrix being served (built from the registry); used for its
+    /// name, seed, fingerprint, and cell count — the dispatcher itself
+    /// never runs a scenario.
+    pub matrix: ScenarioMatrix,
+    /// Registry name workers rebuild the matrix from.
+    pub matrix_name: String,
+    /// Registry options (`SweepOpts` JSON) shipped to workers verbatim.
+    pub opts: Value,
+    /// TCP listen address (e.g. `127.0.0.1:7177`); `None` = pipes only.
+    pub listen: Option<String>,
+    /// Local pipe workers to spawn.
+    pub spawn_workers: usize,
+    /// `--threads` handed to each spawned worker.
+    pub worker_threads: usize,
+    /// `--batch` handed to each spawned worker (streaming granularity).
+    pub batch: usize,
+    /// Cells per lease; 0 picks a size that gives every worker several
+    /// refills (stealing and reissue stay fine-grained).
+    pub lease_size: usize,
+    /// Reissue a lease after this long without progress; 0 disables.
+    pub lease_timeout_ms: u64,
+    /// Spill-run size in cells — the merger's peak memory.
+    pub spill_cells: usize,
+    /// Where run files go; default: a per-pid dir under the temp dir.
+    pub spill_dir: Option<PathBuf>,
+    /// Binary to spawn pipe workers from; default: this executable.
+    /// (Tests pass `CARGO_BIN_EXE_zygarde` — a test harness binary has
+    /// no `work` subcommand.)
+    pub worker_exe: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+impl ServeConfig {
+    pub fn new(matrix: ScenarioMatrix, matrix_name: &str, opts: Value) -> ServeConfig {
+        ServeConfig {
+            matrix,
+            matrix_name: matrix_name.to_string(),
+            opts,
+            listen: None,
+            spawn_workers: 0,
+            worker_threads: 1,
+            batch: 4,
+            lease_size: 0,
+            lease_timeout_ms: 30_000,
+            spill_cells: 10_000,
+            spill_dir: None,
+            worker_exe: None,
+            quiet: true,
+        }
+    }
+}
+
+/// What a completed serve run looked like.
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    pub n_scenarios: usize,
+    pub workers_seen: u64,
+    pub leases_granted: u64,
+    pub steals: u64,
+    pub reissues: u64,
+    pub duplicates: u64,
+    pub runs_spilled: usize,
+    pub peak_buffered: usize,
+    pub summary: SummaryStats,
+}
+
+enum Event {
+    /// A TCP worker connected (pipe workers are registered inline). The
+    /// extra stream handle is the *closer*: `Out::Kick` must be able to
+    /// actually shut the socket down (dropping the writer half alone
+    /// leaves the reader's dup'd fd open, and a hostile peer that
+    /// ignores the `Error` would otherwise keep the connection alive).
+    Connect(WorkerId, mpsc::Sender<Msg>, TcpStream),
+    Inbound(WorkerId, Msg),
+    Gone(WorkerId),
+}
+
+/// Start a writer thread draining `rx` into `w`; exits when the channel
+/// closes or the peer goes away.
+fn spawn_writer<W: Write + Send + 'static>(mut w: W, rx: mpsc::Receiver<Msg>) {
+    std::thread::spawn(move || {
+        for msg in rx {
+            if write_msg(&mut w, &msg).is_err() {
+                break;
+            }
+        }
+    });
+}
+
+/// Start a reader thread parsing `r` into events; a clean EOF, a torn
+/// line, or an IO error all end as `Gone`.
+fn spawn_reader<R: std::io::Read + Send + 'static>(
+    r: R,
+    id: WorkerId,
+    events: mpsc::Sender<Event>,
+) {
+    std::thread::spawn(move || {
+        let mut rx = BufReader::new(r);
+        loop {
+            match read_msg(&mut rx) {
+                Ok(Some(msg)) => {
+                    if events.send(Event::Inbound(id, msg)).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) | Err(_) => {
+                    let _ = events.send(Event::Gone(id));
+                    return;
+                }
+            }
+        }
+    });
+}
+
+/// Auto lease size: aim for every worker to refill several times so the
+/// queue (not luck) does the load balancing, clamped to a useful range.
+fn auto_lease_size(n: usize, workers: usize) -> usize {
+    (n / (workers.max(1) * 8)).clamp(1, 256)
+}
+
+/// Owns the spawned pipe-worker children; `Drop` reaps them so every
+/// error path out of `serve_to` (merge failure, all-workers-dead, closed
+/// event channel) kills and waits instead of leaking zombies. The happy
+/// path politely polls for a graceful exit first.
+struct Reaper(Vec<Child>);
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Run the dispatcher until every cell of the matrix has been ingested,
+/// then stream the merged report to `out`. See module docs.
+pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, String> {
+    let n = cfg.matrix.len();
+    let fp = fingerprint(&cfg.matrix);
+    let expected_workers = cfg.spawn_workers + usize::from(cfg.listen.is_some());
+    if expected_workers == 0 {
+        return Err("serve needs pipe workers (--workers) or a --listen address".to_string());
+    }
+    let lease_size = if cfg.lease_size > 0 {
+        cfg.lease_size
+    } else {
+        auto_lease_size(n, cfg.spawn_workers.max(1))
+    };
+    let mut core = DispatcherCore::new(
+        &cfg.matrix_name,
+        cfg.opts.clone(),
+        fp,
+        lease_size,
+        cfg.lease_timeout_ms,
+    );
+    let spill_dir = cfg.spill_dir.clone().unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("zygarde_serve_{}", std::process::id()))
+    });
+    let mut merger = Some(SpillMerger::new(spill_dir, cfg.spill_cells)?);
+
+    let (events_tx, events_rx) = mpsc::channel::<Event>();
+    let next_id = Arc::new(AtomicUsize::new(0));
+    let mut senders: HashMap<WorkerId, mpsc::Sender<Msg>> = HashMap::new();
+    // TCP closer handles so a kick can force the socket shut (see Event).
+    let mut closers: HashMap<WorkerId, TcpStream> = HashMap::new();
+    // Connections that have not produced a `Gone` yet (kicks only drop
+    // the sender; the reader thread still delivers the eventual EOF).
+    let mut live: std::collections::HashSet<WorkerId> = std::collections::HashSet::new();
+    let mut children = Reaper(Vec::new());
+
+    // --- pipe workers ----------------------------------------------------
+    let exe = match &cfg.worker_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?,
+    };
+    let mut pending_connects: Vec<WorkerId> = Vec::new();
+    for _ in 0..cfg.spawn_workers {
+        let id = next_id.fetch_add(1, Ordering::Relaxed);
+        let mut child = Command::new(&exe)
+            .args([
+                "work",
+                "--connect",
+                "-",
+                "--threads",
+                &cfg.worker_threads.to_string(),
+                "--batch",
+                &cfg.batch.to_string(),
+            ])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| format!("spawning worker `{}`: {e}", exe.display()))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let (out_tx, out_rx) = mpsc::channel::<Msg>();
+        spawn_writer(stdin, out_rx);
+        spawn_reader(stdout, id, events_tx.clone());
+        senders.insert(id, out_tx);
+        live.insert(id);
+        children.0.push(child);
+        pending_connects.push(id);
+    }
+
+    // --- TCP listener ----------------------------------------------------
+    if let Some(addr) = &cfg.listen {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("listen on {addr}: {e}"))?;
+        if !cfg.quiet {
+            eprintln!("serve: listening on {addr}");
+        }
+        let events = events_tx.clone();
+        let ids = Arc::clone(&next_id);
+        // Detached: blocks in accept() until the process exits. Workers
+        // that connect after completion get an EOF and exit on their own.
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let id = ids.fetch_add(1, Ordering::Relaxed);
+                let Ok(read_half) = stream.try_clone() else { continue };
+                let Ok(closer) = stream.try_clone() else { continue };
+                let (out_tx, out_rx) = mpsc::channel::<Msg>();
+                spawn_writer(stream, out_rx);
+                spawn_reader(read_half, id, events.clone());
+                if events.send(Event::Connect(id, out_tx, closer)).is_err() {
+                    return;
+                }
+            }
+        });
+    }
+
+    // --- main loop --------------------------------------------------------
+    let t0 = Instant::now();
+    let now_ms = |t0: Instant| t0.elapsed().as_millis() as u64;
+    let mut done = false;
+    let mut merge_err: Option<String> = None;
+    let mut last_report = 0usize;
+    let mut last_tick = Instant::now();
+    {
+        let route = |outs: Vec<Out>,
+                     senders: &mut HashMap<WorkerId, mpsc::Sender<Msg>>,
+                     closers: &mut HashMap<WorkerId, TcpStream>,
+                     merger: &mut Option<SpillMerger>,
+                     done: &mut bool,
+                     merge_err: &mut Option<String>| {
+            for o in outs {
+                match o {
+                    Out::Send(w, msg) => {
+                        // A closed channel means the worker already died;
+                        // its Gone event will requeue everything.
+                        if let Some(tx) = senders.get(&w) {
+                            let _ = tx.send(msg);
+                        }
+                    }
+                    Out::Ingest(cell) => {
+                        if let Some(m) = merger.as_mut() {
+                            if let Err(e) = m.push(cell) {
+                                *merge_err = Some(e);
+                                *done = true;
+                            }
+                        }
+                    }
+                    Out::Kick(w) => {
+                        // Dropping the sender lets the writer thread
+                        // drain the just-queued explanatory Error before
+                        // it closes the write side (pipe workers then die
+                        // of stdin EOF). For TCP, additionally shut only
+                        // the *read* half: the violator can say nothing
+                        // more and our reader sees EOF, while the Error
+                        // still flushes out the intact write half.
+                        senders.remove(&w);
+                        if let Some(s) = closers.remove(&w) {
+                            let _ = s.shutdown(Shutdown::Read);
+                        }
+                    }
+                    Out::Done => *done = true,
+                }
+            }
+        };
+
+        for id in pending_connects {
+            let outs = core.on_connect(id);
+            route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+        }
+
+        while !done {
+            match events_rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(Event::Connect(id, tx, closer)) => {
+                    senders.insert(id, tx);
+                    closers.insert(id, closer);
+                    live.insert(id);
+                    if !cfg.quiet {
+                        eprintln!("serve: worker {id} connected");
+                    }
+                    let outs = core.on_connect(id);
+                    route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+                }
+                Ok(Event::Inbound(id, msg)) => {
+                    let outs = core.on_message(id, msg, now_ms(t0));
+                    route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+                }
+                Ok(Event::Gone(id)) => {
+                    senders.remove(&id);
+                    closers.remove(&id);
+                    if live.remove(&id) && !cfg.quiet {
+                        eprintln!("serve: worker {id} disconnected");
+                    }
+                    let outs = core.on_disconnect(id, now_ms(t0));
+                    route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+                    if live.is_empty() && cfg.listen.is_none() && !core.is_done() {
+                        return Err(format!(
+                            "all workers exited with {} of {n} cells ingested",
+                            core.cells_received()
+                        ));
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err("event channel closed unexpectedly".to_string());
+                }
+            }
+            // Tick for lease timeouts and idle regrants, rate-limited:
+            // an unconditional per-message tick would rescan every lease
+            // and worker on each Cells batch — pure bookkeeping made
+            // quadratic on big matrices.
+            if !done && last_tick.elapsed() >= Duration::from_millis(100) {
+                last_tick = Instant::now();
+                let outs = core.on_tick(now_ms(t0));
+                route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+            }
+            if !cfg.quiet {
+                let got = core.cells_received();
+                if got * 10 / n > last_report * 10 / n.max(1) {
+                    eprintln!("serve: {got}/{n} cells");
+                    last_report = got;
+                }
+            }
+        }
+    }
+    if let Some(e) = merge_err {
+        return Err(e);
+    }
+
+    // Let the queued Shutdowns drain, then reap the children gracefully
+    // (a worker mid-sub-chunk notices the closed pipe at its next write);
+    // the Reaper's Drop force-kills whatever is left — and covers the
+    // early error returns above, which never reach this loop.
+    drop(senders);
+    drop(events_tx);
+    for child in &mut children.0 {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    break;
+                }
+            }
+        }
+    }
+
+    let merger = merger.expect("merger still present at finalize");
+    let runs_spilled = merger.runs_spilled();
+    let peak_buffered = merger.peak_buffered();
+    let summary = merger.finalize(&cfg.matrix.name, cfg.matrix.seed, n, out)?;
+    Ok(ServeOutcome {
+        n_scenarios: n,
+        workers_seen: core.stats.workers_seen,
+        leases_granted: core.stats.leases_granted,
+        steals: core.stats.steals,
+        reissues: core.stats.reissues,
+        duplicates: core.stats.duplicates,
+        runs_spilled,
+        peak_buffered,
+        summary,
+    })
+}

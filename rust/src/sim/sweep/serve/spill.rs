@@ -1,0 +1,308 @@
+//! Out-of-core incremental merge: spill sorted runs, k-way merge, stream
+//! the report — byte-identical to `SweepReport::json_string()` without
+//! ever holding all cells in memory.
+//!
+//! Cells arrive in arbitrary order (leases complete out of order, workers
+//! interleave). [`SpillMerger::push`] buffers up to `limit` cells; at the
+//! limit the buffer is sorted by scenario index and written to disk as
+//! one *run* (one compact cell-JSON per line). [`SpillMerger::finalize`]
+//! k-way merges the runs plus the final in-memory buffer with a binary
+//! heap keyed on scenario index — indexes are globally unique, so the
+//! merge order is total — and streams the report straight to the output
+//! writer:
+//!
+//! * the `"cells"` array is emitted cell by cell in index order, each
+//!   serialized exactly as `CellResult::to_json().to_json()` (runs store
+//!   that very byte string, and our JSON writer is round-trip stable, so
+//!   re-parsing a spilled line re-serializes to identical bytes);
+//! * [`SummaryAccumulator`] consumes the metrics *in index order during
+//!   the same pass*, replaying the exact f64 operation sequence of
+//!   `SweepReport::new`, so the trailing `"summary"` object is
+//!   byte-identical too;
+//! * the surrounding object layout mirrors `SweepReport::to_json`'s
+//!   `BTreeMap` key order (`cells` < `matrix` < `matrix_seed` <
+//!   `n_scenarios` < `summary` — alphabetical), with every scalar
+//!   formatted by the same `util::json` writer.
+//!
+//! Peak memory is `limit` buffered cells plus one in-flight cell per run
+//! (heap of run heads) — bounded by the spill-run size, never by the
+//! total cell count. The byte-exactness and the memory bound are both
+//! enforced by `rust/tests/sweep_serve.rs`.
+
+use std::collections::BinaryHeap;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::PathBuf;
+
+use crate::sim::sweep::report::{CellResult, SummaryAccumulator, SummaryStats};
+use crate::util::json::Value;
+
+/// One spilled run or the final buffer, as an index-ordered line stream.
+enum RunSource {
+    File(BufReader<File>),
+    Memory(std::vec::IntoIter<CellResult>),
+}
+
+/// One run head: the exact line bytes to emit plus the parsed cell (for
+/// the summary pass). Spilled lines are parsed once, here; in-memory
+/// cells never re-parse bytes they serialized a moment earlier.
+type RunHead = (String, CellResult);
+
+impl RunSource {
+    fn next_cell(&mut self) -> Result<Option<RunHead>, String> {
+        match self {
+            RunSource::File(r) => {
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    let n = r.read_line(&mut line).map_err(|e| format!("run read: {e}"))?;
+                    if n == 0 {
+                        return Ok(None);
+                    }
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        continue;
+                    }
+                    let v = Value::parse(trimmed).map_err(|e| format!("run parse: {e}"))?;
+                    let cell = CellResult::from_json(&v)?;
+                    return Ok(Some((trimmed.to_string(), cell)));
+                }
+            }
+            RunSource::Memory(it) => Ok(it.next().map(|c| (c.to_json().to_json(), c))),
+        }
+    }
+}
+
+/// Accepts each scenario's [`CellResult`] exactly once, in any order, and
+/// streams out the byte-exact single-process report. See module docs.
+pub struct SpillMerger {
+    dir: PathBuf,
+    limit: usize,
+    buf: Vec<CellResult>,
+    runs: Vec<PathBuf>,
+    total_pushed: usize,
+    peak_buffered: usize,
+}
+
+impl SpillMerger {
+    /// `dir` holds the run files (created if missing, removed on a clean
+    /// finalize); `limit` is the in-memory buffer size in cells.
+    pub fn new(dir: PathBuf, limit: usize) -> Result<SpillMerger, String> {
+        std::fs::create_dir_all(&dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        Ok(SpillMerger {
+            dir,
+            limit: limit.max(1),
+            buf: Vec::new(),
+            runs: Vec::new(),
+            total_pushed: 0,
+            peak_buffered: 0,
+        })
+    }
+
+    /// Cells pushed so far (across buffer and spilled runs).
+    pub fn len(&self) -> usize {
+        self.total_pushed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_pushed == 0
+    }
+
+    /// High-water mark of the in-memory buffer — the memory-bound proof
+    /// handle: never exceeds the configured limit.
+    pub fn peak_buffered(&self) -> usize {
+        self.peak_buffered
+    }
+
+    pub fn runs_spilled(&self) -> usize {
+        self.runs.len()
+    }
+
+    /// Accept one cell. The caller (the dispatcher) guarantees each
+    /// scenario index arrives exactly once; [`SpillMerger::finalize`]
+    /// verifies it.
+    pub fn push(&mut self, cell: CellResult) -> Result<(), String> {
+        self.buf.push(cell);
+        self.total_pushed += 1;
+        self.peak_buffered = self.peak_buffered.max(self.buf.len());
+        if self.buf.len() >= self.limit {
+            self.spill()?;
+        }
+        Ok(())
+    }
+
+    fn spill(&mut self) -> Result<(), String> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        self.buf.sort_by_key(|c| c.index);
+        let path = self.dir.join(format!("run_{:06}.jsonl", self.runs.len()));
+        let file = File::create(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        for c in self.buf.drain(..) {
+            let mut line = c.to_json().to_json();
+            line.push('\n');
+            w.write_all(line.as_bytes())
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+        }
+        w.flush().map_err(|e| format!("{}: {e}", path.display()))?;
+        self.runs.push(path);
+        Ok(())
+    }
+
+    /// K-way merge every run plus the remaining buffer and stream the
+    /// full report to `out`. Verifies exact cover (every index in
+    /// `0..n_expected` exactly once) and returns the summary it computed.
+    pub fn finalize(
+        mut self,
+        matrix_name: &str,
+        matrix_seed: u64,
+        n_expected: usize,
+        out: &mut dyn Write,
+    ) -> Result<SummaryStats, String> {
+        let io = |e: std::io::Error| format!("report write: {e}");
+        self.buf.sort_by_key(|c| c.index);
+        let mut sources: Vec<RunSource> = Vec::with_capacity(self.runs.len() + 1);
+        for path in &self.runs {
+            let f = File::open(path).map_err(|e| format!("{}: {e}", path.display()))?;
+            sources.push(RunSource::File(BufReader::new(f)));
+        }
+        sources.push(RunSource::Memory(std::mem::take(&mut self.buf).into_iter()));
+
+        // Heap of run heads: (Reverse(index), source id). Indexes are
+        // unique, so ties cannot occur and the pop order is total.
+        let mut heap: BinaryHeap<std::cmp::Reverse<(usize, usize)>> = BinaryHeap::new();
+        let mut heads: Vec<Option<RunHead>> = Vec::with_capacity(sources.len());
+        for (i, s) in sources.iter_mut().enumerate() {
+            match s.next_cell()? {
+                Some(head) => {
+                    heap.push(std::cmp::Reverse((head.1.index, i)));
+                    heads.push(Some(head));
+                }
+                None => heads.push(None),
+            }
+        }
+
+        out.write_all(b"{\"cells\":[").map_err(io)?;
+        let mut acc = SummaryAccumulator::new();
+        let mut next_index = 0usize;
+        while let Some(std::cmp::Reverse((idx, src))) = heap.pop() {
+            if idx != next_index {
+                return Err(format!(
+                    "merge cover broken: expected scenario index {next_index}, got {idx} \
+                     (missing or duplicated cell)"
+                ));
+            }
+            let (line, cell) = heads[src].take().expect("head present for popped source");
+            if next_index > 0 {
+                out.write_all(b",").map_err(io)?;
+            }
+            out.write_all(line.as_bytes()).map_err(io)?;
+            acc.push(&cell.metrics);
+            next_index += 1;
+            if let Some(head) = sources[src].next_cell()? {
+                heap.push(std::cmp::Reverse((head.1.index, src)));
+                heads[src] = Some(head);
+            }
+        }
+        if next_index != n_expected {
+            return Err(format!(
+                "merge cover broken: {next_index} of {n_expected} scenarios ingested"
+            ));
+        }
+        let summary = acc.finish();
+        out.write_all(b"],\"matrix\":").map_err(io)?;
+        out.write_all(Value::Str(matrix_name.to_string()).to_json().as_bytes()).map_err(io)?;
+        out.write_all(b",\"matrix_seed\":").map_err(io)?;
+        out.write_all(Value::Str(matrix_seed.to_string()).to_json().as_bytes()).map_err(io)?;
+        out.write_all(b",\"n_scenarios\":").map_err(io)?;
+        out.write_all(Value::Num(n_expected as f64).to_json().as_bytes()).map_err(io)?;
+        out.write_all(b",\"summary\":").map_err(io)?;
+        out.write_all(summary.to_json().to_json().as_bytes()).map_err(io)?;
+        out.write_all(b"}").map_err(io)?;
+        out.flush().map_err(io)?;
+        // Run files are removed by Drop (which also covers every error
+        // path out of this function); `sources` is a local, so the open
+        // handles close before the consumed `self` drops.
+        Ok(summary)
+    }
+}
+
+impl Drop for SpillMerger {
+    /// Best-effort cleanup of the spill runs — on the happy path and on
+    /// every error path (a failed serve must not leave a matrix worth of
+    /// JSONL in the temp dir). The dir is only removed once empty, in
+    /// case the caller pointed several mergers at a shared directory.
+    fn drop(&mut self) {
+        for path in &self.runs {
+            let _ = std::fs::remove_file(path);
+        }
+        let _ = std::fs::remove_dir(&self.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::SchedulerKind;
+    use crate::sim::sweep::{run_matrix, HarvesterSpec, ScenarioMatrix};
+
+    fn matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new("spill-test", 0x5111)
+            .harvesters(vec![
+                HarvesterSpec::Persistent { power_mw: 600.0 },
+                HarvesterSpec::Persistent { power_mw: 150.0 },
+            ])
+            .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+            .reps(3)
+            .duration_ms(2_000.0)
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("zygarde_spill_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn out_of_order_spilled_merge_is_byte_identical() {
+        let m = matrix();
+        let report = run_matrix(&m, 2);
+        let mut cells = report.cells.clone();
+        // Worst-case arrival order: reversed, so every run overlaps.
+        cells.reverse();
+        let mut merger = SpillMerger::new(temp_dir("rev"), 3).unwrap();
+        for c in cells {
+            merger.push(c).unwrap();
+        }
+        assert!(merger.runs_spilled() >= 3, "limit 3 over 12 cells must spill");
+        assert!(merger.peak_buffered() <= 3);
+        let mut bytes = Vec::new();
+        let summary = merger.finalize(&m.name, m.seed, report.n_scenarios, &mut bytes).unwrap();
+        assert_eq!(String::from_utf8(bytes).unwrap(), report.json_string());
+        assert_eq!(summary.released, report.summary.released);
+    }
+
+    #[test]
+    fn missing_and_duplicate_cells_fail_the_cover_check() {
+        let m = matrix();
+        let report = run_matrix(&m, 1);
+        // Missing cell.
+        let mut merger = SpillMerger::new(temp_dir("miss"), 64).unwrap();
+        for c in report.cells.iter().skip(1).cloned() {
+            merger.push(c).unwrap();
+        }
+        let err = merger
+            .finalize(&m.name, m.seed, report.n_scenarios, &mut Vec::new())
+            .unwrap_err();
+        assert!(err.contains("expected scenario index 0"), "{err}");
+        // Duplicate cell (the dispatcher's bitmap normally prevents this).
+        let mut merger = SpillMerger::new(temp_dir("dup"), 64).unwrap();
+        for c in report.cells.iter().cloned() {
+            merger.push(c).unwrap();
+        }
+        merger.push(report.cells[4].clone()).unwrap();
+        let err = merger
+            .finalize(&m.name, m.seed, report.n_scenarios, &mut Vec::new())
+            .unwrap_err();
+        assert!(err.contains("missing or duplicated"), "{err}");
+    }
+}

@@ -1,0 +1,196 @@
+//! The worker side of the serve protocol: rebuild the matrix, verify the
+//! fingerprint, then turn leases into streamed cell batches.
+//!
+//! The loop is transport-agnostic (any `BufRead` + `Write` pair): the CLI
+//! hands it stdin/stdout for `zygarde work --connect -` (pipe workers the
+//! dispatcher spawns itself) or a TCP stream for `--connect host:port`.
+//! Matrix construction is injected as a resolver closure so this module
+//! stays below the experiment layer — the CLI passes the
+//! `exp::sweep_cli::build_matrix` registry, tests can pass anything.
+//!
+//! A lease is executed in sub-chunks of `batch` scenarios (each sub-chunk
+//! through the ordinary multi-threaded [`runner::run_scenarios`]), and
+//! every sub-chunk is streamed back as its own [`Msg::Cells`] the moment
+//! it finishes. Fine-grained streaming is what makes the dispatcher's
+//! watermarks (and therefore stealing, timeout reissue, and kill-recovery)
+//! precise: after a `kill -9`, only the un-streamed part of the lease is
+//! recomputed elsewhere.
+
+use std::io::{BufRead, Write};
+
+use crate::sim::sweep::runner;
+use crate::sim::sweep::shard::fingerprint;
+use crate::sim::sweep::{Scenario, ScenarioMatrix};
+use crate::util::json::Value;
+
+use super::protocol::{read_msg, write_msg, Msg};
+
+/// What a finished worker did — the CLI prints it to stderr (stdout may
+/// be the protocol stream).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerOutcome {
+    pub leases: usize,
+    pub cells_run: usize,
+}
+
+/// Serve-side matrix registry hook: `(name, opts-json) -> matrix`.
+pub type MatrixResolver<'a> = dyn Fn(&str, &Value) -> Result<ScenarioMatrix, String> + 'a;
+
+/// Run the worker loop until `Shutdown` (clean) or a protocol/IO error.
+/// `threads` parallelizes within a sub-chunk; `batch` is the sub-chunk
+/// size (clamped to ≥ 1) — the streaming granularity discussed above.
+pub fn run_worker(
+    rx: &mut dyn BufRead,
+    tx: &mut dyn Write,
+    threads: usize,
+    batch: usize,
+    resolve: &MatrixResolver,
+) -> Result<WorkerOutcome, String> {
+    let batch = batch.max(1);
+    let mut scenarios: Vec<Scenario> = Vec::new();
+    let mut outcome = WorkerOutcome::default();
+    loop {
+        let msg = match read_msg(rx)? {
+            Some(m) => m,
+            None => {
+                return Err("dispatcher closed the connection before shutdown".to_string());
+            }
+        };
+        match msg {
+            Msg::Matrix { name, opts, fingerprint: announced } => {
+                let matrix = match resolve(&name, &opts) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        let reason = format!("cannot rebuild matrix `{name}`: {e}");
+                        let _ = write_msg(tx, &Msg::Error { reason: reason.clone() });
+                        return Err(reason);
+                    }
+                };
+                let fp = fingerprint(&matrix);
+                if fp != announced {
+                    // Same admission control as `zygarde merge`, applied
+                    // before a single cell runs: this binary expands the
+                    // matrix differently than the dispatcher's.
+                    let reason = format!(
+                        "fingerprint mismatch for `{name}`: local {fp:?} vs dispatcher \
+                         {announced:?} — mixed binaries or drifted options"
+                    );
+                    let _ = write_msg(tx, &Msg::Error { reason: reason.clone() });
+                    return Err(reason);
+                }
+                scenarios = matrix.expand();
+                write_msg(tx, &Msg::Ready { fingerprint: fp }).map_err(|e| e.to_string())?;
+            }
+            Msg::Lease { id, start, end } => {
+                if scenarios.is_empty() {
+                    return Err("lease before matrix handshake".to_string());
+                }
+                if start >= end || end > scenarios.len() {
+                    return Err(format!(
+                        "lease {id} range {start}..{end} exceeds the {}-cell expansion",
+                        scenarios.len()
+                    ));
+                }
+                let mut at = start;
+                while at < end {
+                    let stop = (at + batch).min(end);
+                    let cells = runner::run_scenarios(&scenarios[at..stop], threads);
+                    outcome.cells_run += cells.len();
+                    write_msg(tx, &Msg::Cells { lease: id, cells })
+                        .map_err(|e| e.to_string())?;
+                    at = stop;
+                }
+                write_msg(tx, &Msg::LeaseDone { lease: id }).map_err(|e| e.to_string())?;
+                outcome.leases += 1;
+            }
+            Msg::Shutdown => return Ok(outcome),
+            Msg::Error { reason } => {
+                return Err(format!("dispatcher aborted: {reason}"));
+            }
+            Msg::Ready { .. } | Msg::Cells { .. } | Msg::LeaseDone { .. } => {
+                return Err("worker-bound stream got a dispatcher-bound message".to_string());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::SchedulerKind;
+    use crate::sim::sweep::{run_matrix, HarvesterSpec, ScenarioMatrix};
+
+    fn matrix() -> ScenarioMatrix {
+        ScenarioMatrix::new("worker-test", 0x33)
+            .harvesters(vec![HarvesterSpec::Persistent { power_mw: 500.0 }])
+            .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+            .reps(2)
+            .duration_ms(1_500.0)
+    }
+
+    fn scripted(messages: &[Msg]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        for m in messages {
+            write_msg(&mut buf, m).unwrap();
+        }
+        buf
+    }
+
+    #[test]
+    fn worker_streams_lease_cells_in_batches_and_exits_on_shutdown() {
+        let m = matrix();
+        let fp = fingerprint(&m);
+        let script = scripted(&[
+            Msg::Matrix { name: "any".into(), opts: Value::Null, fingerprint: fp.clone() },
+            Msg::Lease { id: 7, start: 1, end: 4 },
+            Msg::Shutdown,
+        ]);
+        let mut rx = std::io::BufReader::new(&script[..]);
+        let mut tx = Vec::new();
+        let resolve = |_: &str, _: &Value| Ok(matrix());
+        let outcome = run_worker(&mut rx, &mut tx, 1, 2, &resolve).unwrap();
+        assert_eq!(outcome.leases, 1);
+        assert_eq!(outcome.cells_run, 3);
+
+        // Replies: Ready, Cells(2), Cells(1), LeaseDone — in order, with
+        // the cells byte-identical to the single-process run's.
+        let text = String::from_utf8(tx).unwrap();
+        let replies: Vec<Msg> =
+            text.lines().map(|l| Msg::parse_line(l).unwrap()).collect();
+        assert!(matches!(replies[0], Msg::Ready { .. }));
+        let reference = run_matrix(&m, 1);
+        let mut got = Vec::new();
+        for r in &replies[1..3] {
+            let Msg::Cells { lease: 7, cells } = r else {
+                panic!("expected cells for lease 7, got {r:?}");
+            };
+            got.extend(cells.iter().cloned());
+        }
+        assert!(matches!(replies[3], Msg::LeaseDone { lease: 7 }));
+        assert_eq!(got.len(), 3);
+        for (c, want) in got.iter().zip(&reference.cells[1..4]) {
+            assert_eq!(c.to_json().to_json(), want.to_json().to_json());
+        }
+    }
+
+    #[test]
+    fn fingerprint_mismatch_aborts_with_an_error_message() {
+        let mut fp = fingerprint(&matrix());
+        fp.axes_hash ^= 1;
+        let script = scripted(&[Msg::Matrix {
+            name: "any".into(),
+            opts: Value::Null,
+            fingerprint: fp,
+        }]);
+        let mut rx = std::io::BufReader::new(&script[..]);
+        let mut tx = Vec::new();
+        let resolve = |_: &str, _: &Value| Ok(matrix());
+        let err = run_worker(&mut rx, &mut tx, 1, 4, &resolve).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        let text = String::from_utf8(tx).unwrap();
+        assert!(
+            matches!(Msg::parse_line(text.lines().next().unwrap()), Ok(Msg::Error { .. })),
+            "worker should tell the dispatcher why it left"
+        );
+    }
+}

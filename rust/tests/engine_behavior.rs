@@ -44,7 +44,7 @@ fn task(id: usize, period: f64, deadline: f64, exit_at: usize) -> TaskSpec {
 
 fn full_cap() -> Capacitor {
     let mut c = Capacitor::standard();
-    c.charge(1e9, 1000.0);
+    c.precharge();
     c
 }
 

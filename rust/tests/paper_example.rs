@@ -136,7 +136,7 @@ fn figure1_imprecise_fixes_the_missed_deadline() {
     // ~55 mW harvester: half the active draw -> intermittent regime.
     let run = |exit: ExitPolicy, mandatory_units: usize| {
         let mut cap = Capacitor::standard();
-        cap.charge(1e9, 1000.0);
+        cap.precharge();
         let h = Harvester::markov(
             zygarde::energy::harvester::HarvesterKind::Rf,
             55.0,

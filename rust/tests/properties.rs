@@ -204,7 +204,7 @@ fn prop_engine_invariants() {
         },
         |(tasks, kind, exit, power, seed)| {
             let mut cap = Capacitor::standard();
-            cap.charge(1e9, 1000.0);
+            cap.precharge();
             let h = Harvester::markov(
                 zygarde::energy::harvester::HarvesterKind::Rf,
                 *power,
@@ -264,7 +264,7 @@ fn prop_failure_injection_preserves_unit_order() {
         |(task, seed)| {
             // Weak, very bursty harvester: frequent mid-fragment failures.
             let mut cap = Capacitor::new(0.002, 3.3, 2.8, 1.9);
-            cap.charge(1e9, 1000.0);
+            cap.precharge();
             let h = Harvester::markov(
                 zygarde::energy::harvester::HarvesterKind::Rf,
                 40.0,

@@ -1,0 +1,359 @@
+//! Property suite for the streaming serve dispatcher: the merged report
+//! must be **byte-identical** to the single-process `SweepReport` (and to
+//! the static `shard::merge` path) for arbitrary lease sizes, shuffled
+//! completion orders, stolen leases, killed-and-reissued workers, and
+//! stalled-then-late workers — with the merger's memory bounded by the
+//! spill-run size, not the matrix size.
+//!
+//! The dispatcher core is a pure state machine, so the suite drives it
+//! directly: simulated workers hold real computed cells and a scripted
+//! scheduler delivers their messages in seeded-random interleavings.
+//! The real-IO path (pipes, processes, `kill -9`) is covered by the
+//! end-to-end test below and by the CI serve job.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::sim::sweep::serve::{DispatcherCore, Msg, Out, SpillMerger, WorkerId};
+use zygarde::sim::sweep::shard::{self, fingerprint, run_shard, ShardSpec};
+use zygarde::sim::sweep::{
+    run_matrix, run_scenario, FaultPlan, HarvesterSpec, Scenario, ScenarioMatrix, TaskMix,
+};
+use zygarde::util::json::Value;
+use zygarde::util::rng::Pcg32;
+
+fn matrix(seed: u64) -> ScenarioMatrix {
+    ScenarioMatrix::new("serve-test", seed)
+        .mixes(vec![TaskMix::synthetic("m", 1, 3, seed ^ 0x5E)])
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 600.0 },
+            HarvesterSpec::Markov {
+                kind: zygarde::energy::harvester::HarvesterKind::Rf,
+                on_power_mw: 120.0,
+                q: 0.9,
+                duty: 0.6,
+                eta: 0.51,
+            },
+        ])
+        .capacitors_mf(vec![5.0, 50.0])
+        .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+        .faults(vec![FaultPlan::none(), FaultPlan::none().with_brownouts(900.0, 200.0, 50.0)])
+        .reps(2)
+        .duration_ms(1_200.0)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("zygarde_serve_test_{tag}_{}", std::process::id()))
+}
+
+/// A simulated worker: computes leased cells lazily (real `run_scenario`
+/// results) and queues protocol messages the interleaver delivers later.
+struct SimWorker {
+    id: WorkerId,
+    outbox: VecDeque<Msg>,
+    dead: bool,
+}
+
+/// Drive a full serve session against the core with `n_workers` simulated
+/// workers, seeded-random batch sizes, and seeded-random interleaving of
+/// message delivery. Optionally kill one worker mid-run. Returns the
+/// merged report bytes plus the core (for stat assertions).
+fn drive(
+    m: &ScenarioMatrix,
+    n_workers: usize,
+    lease_size: usize,
+    rng_seed: u64,
+    kill_one: bool,
+    spill_limit: usize,
+    tag: &str,
+) -> (Vec<u8>, DispatcherCore, usize, usize) {
+    let scenarios: Vec<Scenario> = m.expand();
+    let fp = fingerprint(m);
+    let n = fp.n_scenarios;
+    let mut core = DispatcherCore::new(&m.name, Value::Null, fp.clone(), lease_size, 0);
+    let mut merger = SpillMerger::new(temp_dir(tag), spill_limit).unwrap();
+    let mut rng = Pcg32::new(rng_seed, 0xD15);
+    let mut workers: Vec<SimWorker> = Vec::new();
+    let mut done = false;
+    let mut killed = false;
+
+    // Dispatcher->worker messages apply immediately (sends are ordered
+    // per worker anyway); worker->dispatcher messages go through each
+    // worker's outbox and are delivered one at a time from a randomly
+    // chosen worker — the shuffled completion order.
+    let mut inflight: Vec<Out> = Vec::new();
+    for w in 0..n_workers {
+        workers.push(SimWorker { id: w, outbox: VecDeque::new(), dead: false });
+        inflight.extend(core.on_connect(w));
+    }
+
+    let mut now = 0u64;
+    while !done {
+        now += 1;
+        // Apply every pending dispatcher effect.
+        let outs = std::mem::take(&mut inflight);
+        for o in outs {
+            match o {
+                Out::Send(w, msg) => {
+                    let worker = &mut workers[w];
+                    if worker.dead {
+                        continue;
+                    }
+                    match msg {
+                        Msg::Matrix { .. } => {
+                            worker.outbox.push_back(Msg::Ready { fingerprint: fp.clone() });
+                        }
+                        Msg::Lease { id, start, end } => {
+                            // Compute the lease now, stream it in random
+                            // batch sizes (1..=4 cells per message).
+                            let mut at = start;
+                            while at < end {
+                                let stop = (at + 1 + rng.below(4) as usize).min(end);
+                                let cells = scenarios[at..stop]
+                                    .iter()
+                                    .map(run_scenario)
+                                    .collect::<Vec<_>>();
+                                worker.outbox.push_back(Msg::Cells { lease: id, cells });
+                                at = stop;
+                            }
+                            worker.outbox.push_back(Msg::LeaseDone { lease: id });
+                        }
+                        Msg::Shutdown => worker.outbox.clear(),
+                        other => panic!("unexpected dispatcher send {other:?}"),
+                    }
+                }
+                Out::Ingest(cell) => merger.push(cell).unwrap(),
+                Out::Done => done = true,
+                Out::Kick(w) => workers[w].dead = true,
+            }
+        }
+        if done {
+            break;
+        }
+        // Mid-run kill: once at least a quarter of the cells are in,
+        // drop a worker that still holds undelivered cell results —
+        // exactly the data loss a kill -9 causes (its lease tail must
+        // then be reissued elsewhere).
+        if kill_one && !killed && core.cells_received() >= n / 4 {
+            let victim = (0..workers.len())
+                .filter(|&w| {
+                    !workers[w].dead
+                        && workers[w]
+                            .outbox
+                            .iter()
+                            .any(|m| matches!(m, Msg::Cells { .. }))
+                })
+                .max_by_key(|&w| workers[w].outbox.len());
+            if let Some(victim) = victim {
+                workers[victim].dead = true;
+                workers[victim].outbox.clear();
+                inflight.extend(core.on_disconnect(victim, now));
+                killed = true;
+                continue;
+            }
+        }
+        // Deliver one queued message from a random live worker.
+        let with_mail: Vec<usize> = workers
+            .iter()
+            .filter(|w| !w.dead && !w.outbox.is_empty())
+            .map(|w| w.id)
+            .collect();
+        if with_mail.is_empty() {
+            // Nothing in flight: let the tick re-grant (idle workers
+            // after a death pick the requeued ranges up here).
+            inflight.extend(core.on_tick(now));
+            assert!(
+                !inflight.is_empty() || done,
+                "dispatcher stalled with {}/{n} cells",
+                core.cells_received()
+            );
+            continue;
+        }
+        let pick = with_mail[rng.below(with_mail.len() as u64) as usize];
+        let msg = workers[pick].outbox.pop_front().unwrap();
+        inflight.extend(core.on_message(pick, msg, now));
+    }
+
+    let runs = merger.runs_spilled();
+    let peak = merger.peak_buffered();
+    let mut bytes = Vec::new();
+    merger.finalize(&m.name, m.seed, n, &mut bytes).unwrap();
+    (bytes, core, runs, peak)
+}
+
+#[test]
+fn random_lease_sizes_and_interleavings_are_byte_identical() {
+    let m = matrix(0xA11CE);
+    let want = run_matrix(&m, 2).json_string();
+    let mut rng = Pcg32::new(0xC0FFEE, 1);
+    for trial in 0..6u64 {
+        let workers = 1 + (rng.below(4) as usize);
+        let lease = 1 + (rng.below(9) as usize);
+        let (bytes, core, _, _) = drive(
+            &m,
+            workers,
+            lease,
+            0x5EED ^ trial,
+            false,
+            1_000_000,
+            &format!("interleave{trial}"),
+        );
+        assert_eq!(
+            String::from_utf8(bytes).unwrap(),
+            want,
+            "trial {trial}: {workers} workers, lease {lease}"
+        );
+        assert_eq!(core.cells_received(), m.len());
+    }
+}
+
+#[test]
+fn killed_worker_reissues_and_stays_byte_identical() {
+    let m = matrix(0xB0B5);
+    let want = run_matrix(&m, 2).json_string();
+    for trial in 0..4u64 {
+        let (bytes, core, _, _) =
+            drive(&m, 3, 3, 0x9999 + trial, true, 1_000_000, &format!("kill{trial}"));
+        assert_eq!(String::from_utf8(bytes).unwrap(), want, "trial {trial}");
+        assert!(
+            core.stats.reissues >= 1 || core.stats.steals >= 1,
+            "the kill should force a reissue or steal (trial {trial}): {:?}",
+            core.stats
+        );
+    }
+}
+
+#[test]
+fn dispatcher_report_matches_static_shard_merge_byte_for_byte() {
+    let m = matrix(0x7777);
+    // Static path: 3 strided shards, merged.
+    let parts: Vec<_> =
+        (0..3).map(|i| run_shard(&m, ShardSpec::new(i, 3).unwrap(), 1)).collect();
+    let static_merge = shard::merge(&parts).unwrap().json_string();
+    // Dynamic path: 2 workers, small leases, shuffled delivery.
+    let (bytes, ..) = drive(&m, 2, 2, 0xABAB, false, 1_000_000, "vs-shard");
+    assert_eq!(String::from_utf8(bytes).unwrap(), static_merge);
+}
+
+#[test]
+fn out_of_core_merge_bounds_memory_and_matches_bytes() {
+    let m = matrix(0x00C);
+    let want = run_matrix(&m, 2).json_string();
+    let limit = 5;
+    let (bytes, _, runs, peak) = drive(&m, 3, 2, 0xF00D, false, limit, "oom");
+    assert!(peak <= limit, "merger buffered {peak} cells, limit {limit}");
+    assert!(
+        runs >= m.len() / limit - 1,
+        "a {limit}-cell limit over {} cells must spill (got {runs} runs)",
+        m.len()
+    );
+    assert_eq!(String::from_utf8(bytes).unwrap(), want);
+}
+
+#[test]
+fn stalled_lease_times_out_reissues_and_dedups_late_results() {
+    let m = matrix(0x51AB);
+    let scenarios = m.expand();
+    let fp = fingerprint(&m);
+    let n = fp.n_scenarios;
+    // Tiny timeout; lease_size covers the whole matrix so worker 0 owns
+    // everything, stalls, and worker 1 must recover all of it.
+    let mut core = DispatcherCore::new(&m.name, Value::Null, fp.clone(), n, 10);
+    let mut merger = SpillMerger::new(temp_dir("timeout"), 1_000_000).unwrap();
+    let mut outs = core.on_connect(0);
+    outs.extend(core.on_message(0, Msg::Ready { fingerprint: fp.clone() }, 0));
+    let lease0 = outs
+        .iter()
+        .find_map(|o| match o {
+            Out::Send(0, Msg::Lease { id, .. }) => Some(*id),
+            _ => None,
+        })
+        .expect("worker 0 got a lease");
+    // Worker 0 goes silent. Time passes; the lease expires.
+    assert!(core.on_tick(100).is_empty());
+    assert_eq!(core.stats.reissues, 1);
+    // Worker 1 joins, gets the reissued whole range, and delivers it.
+    let mut outs = core.on_connect(1);
+    outs.extend(core.on_message(1, Msg::Ready { fingerprint: fp.clone() }, 101));
+    let (l1, s1, e1) = outs
+        .iter()
+        .find_map(|o| match o {
+            Out::Send(1, Msg::Lease { id, start, end }) => Some((*id, *start, *end)),
+            _ => None,
+        })
+        .expect("worker 1 got the reissued lease");
+    assert_eq!((s1, e1), (0, n));
+    let cells: Vec<_> = scenarios.iter().map(run_scenario).collect();
+    let outs = core.on_message(1, Msg::Cells { lease: l1, cells: cells.clone() }, 102);
+    for o in &outs {
+        if let Out::Ingest(c) = o {
+            merger.push(c.clone()).unwrap();
+        }
+    }
+    assert!(core.is_done());
+    // The stalled worker wakes up and floods its stale lease: every cell
+    // is a duplicate, none reach the merger.
+    let outs = core.on_message(0, Msg::Cells { lease: lease0, cells }, 103);
+    assert!(
+        !outs.iter().any(|o| matches!(o, Out::Ingest(_))),
+        "late duplicates must not double-ingest"
+    );
+    assert_eq!(core.stats.duplicates as usize, n);
+    let mut bytes = Vec::new();
+    merger.finalize(&m.name, m.seed, n, &mut bytes).unwrap();
+    assert_eq!(String::from_utf8(bytes).unwrap(), run_matrix(&m, 1).json_string());
+}
+
+#[test]
+fn foreign_fingerprint_is_rejected_at_admission() {
+    let m = matrix(0xF00);
+    let fp = fingerprint(&m);
+    let mut alien = fp.clone();
+    alien.axes_hash ^= 0xDEAD;
+    let mut core = DispatcherCore::new(&m.name, Value::Null, fp, 4, 0);
+    core.on_connect(0);
+    let outs = core.on_message(0, Msg::Ready { fingerprint: alien }, 0);
+    assert!(
+        matches!(outs[..], [Out::Send(0, Msg::Error { .. }), Out::Kick(0)]),
+        "admission must fail closed: {outs:?}"
+    );
+}
+
+/// End-to-end over real pipes and processes: `zygarde serve --workers 2`
+/// spawns real `zygarde work --connect -` children; the written report
+/// must be byte-identical to the in-process single-thread run.
+#[test]
+fn serve_cli_over_pipes_matches_single_process_bytes() {
+    let exe = env!("CARGO_BIN_EXE_zygarde");
+    let out = std::env::temp_dir()
+        .join(format!("zygarde_serve_e2e_{}.json", std::process::id()));
+    let status = std::process::Command::new(exe)
+        .args([
+            "serve",
+            "--matrix",
+            "synthetic",
+            "--seed",
+            "23",
+            "--reps",
+            "1",
+            "--duration-ms",
+            "1500",
+            "--workers",
+            "2",
+            "--lease",
+            "3",
+            "--spill-cells",
+            "6",
+            "--quiet=true",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning zygarde serve");
+    assert!(status.success(), "serve exited with {status}");
+    let got = std::fs::read_to_string(&out).expect("serve wrote the report");
+    let _ = std::fs::remove_file(&out);
+    let m = zygarde::exp::sweep_cli::synthetic_matrix(23, 1, 1_500.0);
+    assert_eq!(got, run_matrix(&m, 1).json_string());
+}

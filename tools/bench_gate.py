@@ -41,6 +41,8 @@ def rows(doc):
         out[f"threads={int(r['threads'])}"] = r["scenarios_per_s"]
     for r in doc.get("sharded", []):
         out[f"processes={int(r['processes'])}"] = r["scenarios_per_s"]
+    for r in doc.get("serve", []):
+        out[f"serve={int(r['workers'])}"] = r["scenarios_per_s"]
     for r in doc.get("nvm_policies", []):
         out[f"nvm={r['policy']}"] = r["scenarios_per_s"]
     return out
