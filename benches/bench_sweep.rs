@@ -23,14 +23,16 @@ use std::collections::BTreeMap;
 use std::process::Command;
 use std::time::Instant;
 
+use zygarde::clock::{ChrtTier, ClockSpec};
 use zygarde::coordinator::sched::SchedulerKind;
 use zygarde::energy::harvester::HarvesterKind;
 use zygarde::exp::sweep_cli::bench_matrix;
 use zygarde::nvm::NvmSpec;
 use zygarde::sim::sweep::{
-    merge, run_matrix, run_matrix_reference, HarvesterSpec, PartialReport, ScenarioMatrix,
-    TaskMix,
+    merge, run_matrix, run_matrix_reference, FaultPlan, HarvesterSpec, PartialReport,
+    ScenarioMatrix, TaskMix,
 };
+use zygarde::sim::workload::synthetic_task;
 use zygarde::util::json::Value;
 
 fn env_u64(key: &str, default: u64) -> u64 {
@@ -207,13 +209,17 @@ fn main() {
         serve_rows.push((procs, rate, dt));
     }
 
-    // --- off-dominated rows: the off-phase fast-forward regime ----------
-    // Low-duty RF, piezo footsteps, and diurnal solar spend most of their
-    // simulated time below the boot voltage — the regime the fast path
-    // targets. Each matrix runs on the optimized engine AND the naive
-    // reference stepper, asserts the reports are byte-identical (the CI
-    // differential proof on real workloads), and reports the speedup;
-    // `tools/bench_gate.py` enforces the committed per-row `min_speedup`.
+    // --- event-driven regime rows: fast-forward vs reference ------------
+    // Each matrix concentrates simulated time in one engine regime. The
+    // first three are dark-dominated (below the boot voltage with an empty
+    // queue); `onidle-solar` idles powered-on between sparse releases
+    // (`advance_on_phase_idle`); `rf-queued` keeps a job backlog queued
+    // across off phases under a skewed CHRT clock, exercising the
+    // believed-deadline watch in `advance_off_phase`. Each matrix runs on
+    // the optimized engine AND the naive reference stepper, asserts the
+    // reports are byte-identical (the CI differential proof on real
+    // workloads), and reports the speedup; `tools/bench_gate.py` enforces
+    // the committed per-row `min_speedup`.
     println!();
     let off_matrices: Vec<(&str, ScenarioMatrix)> = vec![
         (
@@ -252,6 +258,57 @@ fn main() {
                 .capacitors_mf(vec![50.0])
                 .schedulers(vec![SchedulerKind::Zygarde])
                 .duration_ms(86_400_000.0), // one full day/night cycle
+        ),
+        (
+            // Rich solar, big capacitor, sparse releases: the MCU stays
+            // on and idle for most of the hour, so the on-phase idle
+            // fast-forward (dark stretches bulked, gate/JIT/deadline
+            // budgets honored) carries the row.
+            "onidle-solar",
+            ScenarioMatrix::new("onidle-solar", 0x0FF4)
+                .mixes(vec![TaskMix::from_tasks(
+                    "slow",
+                    vec![synthetic_task(0, 3, 5_000.0, 10_000.0, 40, 0x51)],
+                )])
+                .harvesters(vec![HarvesterSpec::Markov {
+                    kind: HarvesterKind::Solar,
+                    on_power_mw: 350.0,
+                    q: 0.97,
+                    duty: 0.5,
+                    eta: 0.5,
+                }])
+                .capacitors_mf(vec![50.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .precharge(true)
+                .reps(2)
+                .duration_ms(3_600_000.0),
+        ),
+        (
+            // Short periods with 3x deadlines on a starved RF harvester:
+            // jobs queue up and ride across brown-outs, so the off-phase
+            // loop must track the believed next deadline — through a
+            // Tier-3 CHRT clock's constant post-reboot skew — instead of
+            // assuming an empty queue.
+            "rf-queued",
+            ScenarioMatrix::new("rf-queued", 0x0FF5)
+                .mixes(vec![TaskMix::from_tasks(
+                    "queued",
+                    vec![synthetic_task(0, 2, 1_000.0, 3_000.0, 40, 0x52)],
+                )])
+                .harvesters(vec![HarvesterSpec::Markov {
+                    kind: HarvesterKind::Rf,
+                    on_power_mw: 90.0,
+                    q: 0.97,
+                    duty: 0.12,
+                    eta: 0.38,
+                }])
+                .capacitors_mf(vec![10.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .faults(vec![
+                    FaultPlan::none().with_clock(ClockSpec::Chrt(ChrtTier::Tier3))
+                ])
+                .reps(2)
+                .duration_ms(3_600_000.0),
         ),
     ];
     let mut off_rows: Vec<(String, usize, f64, f64, f64, f64)> = Vec::new();

@@ -25,6 +25,16 @@ pub trait Clock {
     /// Called when the MCU reboots after an outage of `outage_ms`.
     fn on_reboot(&mut self, true_t_ms: f64, outage_ms: f64);
     fn name(&self) -> &'static str;
+    /// Constant-offset contract for the engine's event-driven idle loops:
+    /// `Some(o)` promises that, until the next `on_reboot`, every read
+    /// satisfies `now_ms(t) == (t + o).max(0.0)` **bitwise** for all
+    /// `t >= 0.0`. The engine then predicts believed-deadline crossings
+    /// with plain f64 arithmetic instead of a virtual clock read per tick.
+    /// Return `None` when no such offset exists (the loops fall back to
+    /// naive per-tick stepping — a correctness-neutral, perf-only choice).
+    fn const_offset(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Declarative clock choice for scenario specs (`sim::sweep`): a plain
@@ -68,6 +78,12 @@ impl Clock for Rtc {
 
     fn name(&self) -> &'static str {
         "rtc"
+    }
+
+    /// Exact: for `t >= 0.0`, `t + 0.0 == t` bitwise (simulation time is
+    /// never `-0.0`) and `max(t, 0.0) == t`.
+    fn const_offset(&self) -> Option<f64> {
+        Some(0.0)
     }
 }
 
@@ -154,6 +170,12 @@ impl Clock for Chrt {
     fn name(&self) -> &'static str {
         "chrt"
     }
+
+    /// `now_ms` *is* `(t + error_ms).max(0.0)`, and `error_ms` changes
+    /// only in `on_reboot` — the exact shape the contract requires.
+    fn const_offset(&self) -> Option<f64> {
+        Some(self.error_ms)
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +210,33 @@ mod tests {
         for _ in 0..1000 {
             c.on_reboot(0.0, 50.0);
             assert_eq!(c.error_ms, 0.0);
+        }
+    }
+
+    #[test]
+    fn const_offset_reproduces_now_ms_bitwise() {
+        let mut rtc = Rtc;
+        let o = rtc.const_offset().expect("rtc offers an offset");
+        for t in [0.0, 5.0, 1234.5, 9.9e7] {
+            assert_eq!(
+                rtc.now_ms(t).to_bits(),
+                (t + o).max(0.0).to_bits(),
+                "rtc offset contract broken at t={t}"
+            );
+        }
+        let mut chrt = Chrt::new(ChrtTier::Tier3, 77);
+        for reboot in 0..50 {
+            chrt.on_reboot(1000.0 * reboot as f64, 5000.0);
+            let o = chrt.const_offset().expect("chrt offers an offset");
+            // Negative errors must clamp identically (believed time never
+            // runs before t = 0).
+            for t in [0.0, 1.0, 250.0, 1999.5, 3.6e6] {
+                assert_eq!(
+                    chrt.now_ms(t).to_bits(),
+                    (t + o).max(0.0).to_bits(),
+                    "chrt offset contract broken at t={t} error={o}"
+                );
+            }
         }
     }
 

@@ -132,6 +132,51 @@ impl Capacitor {
         }
     }
 
+    /// Stored energy (mJ) at which the capacitor reads voltage `v` —
+    /// the E = ½CV² inverse the event-driven engine core uses to turn a
+    /// voltage trigger (JIT threshold, brown-out) into an energy guard.
+    /// Algebraic, not ulp-exact against [`Capacitor::voltage`]'s rounded
+    /// sqrt: callers must pad the guard (a couple of idle-drain quanta
+    /// dwarfs the ~1-ulp discrepancy) and let an exact per-tick tail
+    /// resolve the crossing itself.
+    pub fn energy_at_voltage_mj(&self, v: f64) -> f64 {
+        0.5 * self.c_farads * v * v * 1e3
+    }
+
+    /// Conservative lower bound on how many idle ticks draining
+    /// `drain_mj_per_tick` each can run while the stored energy provably
+    /// stays above `threshold_mj` — the capacitor leg of the engine's
+    /// next-event budget. Zero drain (idle power 0) never crosses:
+    /// saturates. The two-tick slack in [`super::conservative_ticks`]
+    /// covers sequential-subtraction drift; the caller pads `threshold_mj`
+    /// for sqrt-comparison discrepancies where the real trigger is a
+    /// voltage compare.
+    pub fn idle_ticks_above(&self, threshold_mj: f64, drain_mj_per_tick: f64) -> u64 {
+        if drain_mj_per_tick <= 0.0 {
+            return u64::MAX;
+        }
+        super::conservative_ticks(self.energy_mj - threshold_mj, drain_mj_per_tick)
+    }
+
+    /// Bulk replay of `n` [`Capacitor::idle_drain`] calls for which the
+    /// caller has proved (via [`Capacitor::idle_ticks_above`] with padded
+    /// guards) that no MCU state change can occur: the identical per-tick
+    /// f64 sequence — `min` included — with only the crossing check
+    /// (`update_mcu`'s sqrt + compares) hoisted out, so the post-state is
+    /// bitwise what `n` individual calls produce.
+    pub fn fast_forward_idle_drain(&mut self, power_mw: f64, dt_ms: f64, n: u64) {
+        debug_assert!(self.mcu_on);
+        for _ in 0..n {
+            let drained = (power_mw * dt_ms * 1e-3).min(self.energy_mj);
+            self.energy_mj -= drained;
+            self.consumed_mj += drained;
+        }
+        debug_assert!(
+            self.voltage() >= self.v_off,
+            "bulk idle drain ran through the brown-out crossing"
+        );
+    }
+
     fn update_mcu(&mut self) {
         let v = self.voltage();
         if self.mcu_on {
@@ -254,6 +299,51 @@ mod tests {
         let balance = harvested - c.wasted_mj - c.consumed_mj - c.energy_mj();
         assert!(balance.abs() < 1e-9, "energy identity violated by {balance}");
         assert!(c.consumed_mj > 0.0);
+    }
+
+    /// Predictor + bulk-replay contract: the budget only admits ticks that
+    /// provably cannot cross `threshold`, and draining them in bulk is
+    /// bitwise identical to per-tick `idle_drain` calls.
+    #[test]
+    fn idle_ticks_above_budget_and_bulk_drain_match_per_tick_bitwise() {
+        let mut bulk = Capacitor::standard();
+        bulk.precharge();
+        let mut tick = bulk.clone();
+        let dt = 5.0;
+        let power = 0.3;
+        let drain = power * dt * 1e-3;
+        let mut total = 0u64;
+        loop {
+            // Pad the floor by two drain quanta, as the engine does, so
+            // the voltage-vs-energy comparison discrepancy is covered.
+            let n = bulk.idle_ticks_above(bulk.floor_mj() + 2.0 * drain, drain);
+            if n == 0 {
+                break;
+            }
+            bulk.fast_forward_idle_drain(power, dt, n);
+            for _ in 0..n {
+                tick.idle_drain(power, dt);
+            }
+            total += n;
+            assert!(tick.mcu_on(), "budget admitted a tick that browned out");
+            assert_eq!(bulk.energy_mj().to_bits(), tick.energy_mj().to_bits());
+            assert_eq!(bulk.consumed_mj.to_bits(), tick.consumed_mj.to_bits());
+        }
+        assert!(total > 100_000, "50 mF at 0.3 mW should idle a long time: {total}");
+        // The exact tail: a handful of per-tick drains reach the real
+        // crossing on both copies identically.
+        for _ in 0..8 {
+            bulk.idle_drain(power, dt);
+            tick.idle_drain(power, dt);
+            assert_eq!(bulk.mcu_on(), tick.mcu_on());
+            assert_eq!(bulk.energy_mj().to_bits(), tick.energy_mj().to_bits());
+        }
+        // Zero drain never predicts a crossing.
+        assert_eq!(bulk.idle_ticks_above(0.0, 0.0), u64::MAX);
+        // The voltage inverse is the algebraic E(V) the guards build on.
+        let c = Capacitor::standard();
+        assert!((c.energy_at_voltage_mj(c.v_max) - c.capacity_mj()).abs() < 1e-9);
+        assert!((c.energy_at_voltage_mj(c.v_off) - c.floor_mj()).abs() < 1e-9);
     }
 
     #[test]

@@ -209,6 +209,41 @@ impl Harvester {
         true
     }
 
+    /// Analytic window-edge predictor for the event-driven engine core:
+    /// a conservative lower bound on how many consecutive `dt_ms` ticks
+    /// [`Harvester::off_tick`] is guaranteed to accept from the current
+    /// state. Zero when the source is on. Works for **every** kind —
+    /// including `Piezo` and `SolarDiurnal`, whose day/bout logic runs
+    /// only inside [`transition`], i.e. only at ΔT window edges — because
+    /// between edges the sole evolving state is the window countdown.
+    /// Conservative: undershooting the true edge just means a few extra
+    /// per-tick `off_tick` calls in the caller's tail loop.
+    ///
+    /// [`transition`]: Harvester::transition
+    #[inline]
+    pub fn off_ticks_hint(&self, dt_ms: f64) -> u64 {
+        if self.state_on {
+            return 0;
+        }
+        super::conservative_ticks(self.window_left_ms, dt_ms)
+    }
+
+    /// Bulk replay of `n` accepted [`Harvester::off_tick`] calls: the
+    /// identical two sequential f64 operations per tick (`window_left_ms
+    /// -= dt_ms`, `phase_ms += dt_ms`), so the post-state is bitwise what
+    /// `n` individual calls produce — with the per-tick state/boundary
+    /// branches hoisted out, because the caller already proved via
+    /// [`Harvester::off_ticks_hint`] that none can fire within `n` ticks.
+    #[inline]
+    pub fn fast_forward_dark(&mut self, n: u64, dt_ms: f64) {
+        debug_assert!(!self.state_on && n <= self.off_ticks_hint(dt_ms));
+        for _ in 0..n {
+            self.window_left_ms -= dt_ms;
+            self.phase_ms += dt_ms;
+        }
+        debug_assert!(self.window_left_ms > 0.0, "bulk ran through a window edge");
+    }
+
     fn transition(&mut self) {
         match self.kind {
             HarvesterKind::Persistent => {}
@@ -460,6 +495,46 @@ mod tests {
         let before = format!("{m:?}");
         assert!(!m.off_tick(4.0));
         assert_eq!(format!("{m:?}"), before, "a refused off_tick must not advance state");
+    }
+
+    /// The predictor + bulk-replay pair must walk the identical state
+    /// trajectory as per-tick `off_tick` calls: every hinted tick is one
+    /// `off_tick` would accept, and the bulk's post-state is bitwise equal
+    /// to taking them one at a time.
+    #[test]
+    fn off_ticks_hint_and_bulk_replay_match_off_tick_bitwise() {
+        let mk = |kind: u64| match kind {
+            0 => Harvester::markov(HarvesterKind::Rf, 80.0, 0.93, 0.3, 1000.0, 11),
+            1 => Harvester::piezo(11),
+            2 => Harvester::solar_diurnal(11),
+            _ => Harvester::markov(HarvesterKind::Solar, 400.0, 0.9, 0.5, 700.0, 11),
+        };
+        for kind in 0u64..4 {
+            let mut bulk = mk(kind);
+            let mut tick = mk(kind);
+            let mut bulked = 0u64;
+            for _ in 0..200_000u64 {
+                let n = bulk.off_ticks_hint(5.0);
+                assert_eq!(n, tick.off_ticks_hint(5.0));
+                if n > 0 {
+                    bulk.fast_forward_dark(n, 5.0);
+                    for i in 0..n {
+                        assert!(tick.off_tick(5.0), "hinted tick {i}/{n} refused");
+                    }
+                    bulked += n;
+                    assert_eq!(format!("{bulk:?}"), format!("{tick:?}"), "bulk diverged");
+                }
+                // Boundary / powered tick: both take the full step path.
+                let pb = bulk.step(5.0);
+                let pt = tick.step(5.0);
+                assert_eq!(pb.to_bits(), pt.to_bits());
+            }
+            assert_eq!(format!("{bulk:?}"), format!("{tick:?}"));
+            assert!(bulked > 0, "kind {kind}: the bulk path never engaged");
+            // On a powered source the hint must be zero.
+            let h = Harvester::persistent(100.0);
+            assert_eq!(h.off_ticks_hint(5.0), 0);
+        }
     }
 
     #[test]

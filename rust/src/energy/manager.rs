@@ -84,6 +84,42 @@ impl EnergyManager {
         true
     }
 
+    /// Bulk replay of `n` dark (zero-harvest, in-window) ticks for the
+    /// event-driven engine core. Equivalent bitwise to `n` calls of either
+    /// [`EnergyManager::tick`] (MCU on — the engine drains the capacitor
+    /// separately via `Capacitor::fast_forward_idle_drain`) or
+    /// [`EnergyManager::off_tick`] (MCU off), because a dark tick harvests
+    /// exactly 0 mW: `harvested_mj += 0.0` and `Capacitor::charge(0.0, _)`
+    /// are bitwise identities on non-negative accumulators, leaving only
+    /// the harvester window clock — replayed exactly — and the
+    /// `was_on`/reboot observation, which is constant after the first tick
+    /// (the MCU state cannot change without charge or drain crossing a
+    /// threshold, which the caller's budget excludes).
+    pub fn fast_forward_dark(&mut self, n: u64, dt_ms: f64) {
+        if n == 0 {
+            return;
+        }
+        let on = self.capacitor.mcu_on();
+        if on && !self.was_on {
+            // What the first naive `tick` would have observed (e.g. a
+            // pre-t0 precharge boot never seen by a tick yet).
+            self.reboots += 1;
+        }
+        self.was_on = on;
+        self.harvester.fast_forward_dark(n, dt_ms);
+    }
+
+    /// Conservative ticks-until-voltage-crossing predictor: how many idle
+    /// ticks draining `drain_mj_per_tick` can run while the capacitor
+    /// provably stays **above** voltage `v` — the JIT-trigger leg of the
+    /// engine's next-event budget. Pads the algebraic E(V) inverse by two
+    /// drain quanta so the rounded-sqrt voltage compare the real trigger
+    /// uses cannot disagree within the admitted ticks.
+    pub fn ticks_above_voltage(&self, v: f64, drain_mj_per_tick: f64) -> u64 {
+        let guard = self.capacitor.energy_at_voltage_mj(v) + 2.0 * drain_mj_per_tick;
+        self.capacitor.idle_ticks_above(guard, drain_mj_per_tick)
+    }
+
     /// The scheduler's E_curr: usable stored energy.
     pub fn e_curr(&self) -> f64 {
         self.capacitor.usable_mj()
@@ -211,6 +247,55 @@ mod tests {
         assert_eq!(format!("{fast:?}"), format!("{slow:?}"));
         assert_eq!(fast.reboots, slow.reboots);
         assert!(fast.reboots > 1, "walk never cycled power: reboots={}", fast.reboots);
+    }
+
+    /// `fast_forward_dark` + the capacitor bulk drain must be bitwise
+    /// equal to naive `tick` + `idle_drain` pairs across dark windows with
+    /// the MCU **on** — including the reboot observation when the first
+    /// tick after a precharge boot is a dark one.
+    #[test]
+    fn dark_bulk_with_mcu_on_matches_naive_ticks_bitwise() {
+        let mk = || {
+            let mut cap = Capacitor::standard();
+            cap.precharge(); // boots before any tick: was_on starts stale
+            // Piezo starts in a dark window, so the very first tick — the
+            // one that must observe the precharge boot — goes through the
+            // bulk path.
+            EnergyManager::new(cap, Harvester::piezo(9), 0.5, 0.05)
+        };
+        let mut bulk = mk();
+        let mut naive = mk();
+        let (dt, power) = (5.0, 0.3);
+        let drain = power * dt * 1e-3;
+        let mut bulked = 0u64;
+        for i in 0..20_000u64 {
+            let n = bulk
+                .harvester
+                .off_ticks_hint(dt)
+                .min(bulk.capacitor.idle_ticks_above(bulk.capacitor.floor_mj() + 2.0 * drain, drain))
+                .min(500); // keep interleaving with boundary ticks frequent
+            if n > 0 && bulk.capacitor.mcu_on() {
+                bulk.fast_forward_dark(n, dt);
+                bulk.capacitor.fast_forward_idle_drain(power, dt, n);
+                for _ in 0..n {
+                    naive.tick(dt);
+                    naive.capacitor.idle_drain(power, dt);
+                }
+                bulked += n;
+            } else {
+                bulk.tick(dt);
+                bulk.capacitor.idle_drain(power, dt);
+                naive.tick(dt);
+                naive.capacitor.idle_drain(power, dt);
+            }
+            if i % 512 == 0 {
+                assert_eq!(format!("{bulk:?}"), format!("{naive:?}"), "diverged at {i}");
+            }
+        }
+        assert_eq!(format!("{bulk:?}"), format!("{naive:?}"));
+        assert_eq!(bulk.reboots, naive.reboots);
+        assert!(bulk.reboots >= 1, "precharge boot must be observed");
+        assert!(bulked > 10_000, "bulk path never engaged meaningfully: {bulked}");
     }
 
     #[test]

@@ -13,3 +13,30 @@ pub use capacitor::Capacitor;
 pub use events::{conditional_event_dist, eta_factor, EtaEstimate};
 pub use harvester::{calibrate_markov, Harvester, HarvesterKind};
 pub use manager::EnergyManager;
+
+/// Conservative crossing predictor shared by the event-driven engine
+/// core's analytic budgets: the number of `step_ms` decrements a counter
+/// that starts `span_ms` away from its limit can take while provably
+/// staying strictly on the near side.
+///
+/// The true crossing tick of a *sequentially accumulated* f64 counter
+/// (`x -= step` / `x += step` per tick, never a closed-form multiply)
+/// differs from the algebraic `floor(span/step)` by at most the
+/// accumulated rounding drift — vanishingly below one 5 ms step for any
+/// realistic span — so two steps of slack make the bound safe: a
+/// fast-forward loop consuming at most this many ticks cannot cross the
+/// limit, and the exact per-tick tail walks the remaining margin. Being
+/// *under* the true count only costs a few extra tail compares, never
+/// correctness. Infinite spans saturate (`as u64` clamps), NaN yields 0.
+pub fn conservative_ticks(span_ms: f64, step_ms: f64) -> u64 {
+    debug_assert!(step_ms > 0.0);
+    if !(span_ms > 0.0) {
+        return 0;
+    }
+    let n = (span_ms / step_ms).floor() - 2.0;
+    if n > 0.0 {
+        n as u64
+    } else {
+        0
+    }
+}

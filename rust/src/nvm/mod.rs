@@ -257,6 +257,18 @@ impl Nvm {
     pub fn ideal(cap: &Capacitor) -> Self {
         Self::build(NvmSpec::ideal(), cap)
     }
+
+    /// True when the policy consults the JIT voltage trigger. The engine's
+    /// event-driven idle loops use this (with `jit_threshold_v` /
+    /// `jit_rearm_v` / `jit_armed`) to budget how far a dark window can be
+    /// fast-forwarded before the trigger could possibly fire: an unarmed
+    /// trigger below `jit_rearm_v` stays unarmed while the voltage is
+    /// non-increasing, an armed one with no dirty jobs commits nothing
+    /// (`jit_commit_all` is a pure no-op then), and otherwise the
+    /// `EnergyManager::ticks_above_voltage` predictor bounds the crossing.
+    pub fn is_jit(&self) -> bool {
+        matches!(self.policy, CommitPolicy::JitVoltage { .. })
+    }
 }
 
 #[cfg(test)]

@@ -24,21 +24,44 @@
 //! scheduled; optional units improve its prediction but never block
 //! another job's mandatory work under energy pressure (ζ_I).
 //!
-//! # Performance: two-regime hot path
+//! # Performance: the event-driven core
 //!
-//! The off/charging regime dominates wall-clock for the paper's bursty
-//! low-duty harvesters (RF, piezo, diurnal solar — Fig. 4), so it has a
-//! dedicated fast path: while the MCU is off, the queue is empty, and no
-//! probe is attached, [`Engine::advance_idle_off`] runs idle ticks in a
-//! tight loop that performs the *identical floating-point operations in
-//! the identical order* as the naive stepper — hoisting only work that is
-//! provably a no-op per tick (the release scan, the deadline scan, the
-//! virtual clock read, scheduler dispatch, and zero-power harvester /
-//! capacitor arithmetic). Unlike a stride hack, every boot edge, release,
-//! and window transition lands on exactly the same tick, so `Metrics`
-//! output is bit-for-bit unchanged. The on-regime fragment loop is
-//! flattened the same way: the per-fragment O(tasks) release scan and
-//! O(queue) mandatory scan are replaced by incrementally maintained
+//! Idle regimes dominate wall-clock for every one of the paper's
+//! harvesters — off/charging under the bursty low-duty sources (RF,
+//! piezo, diurnal solar — Fig. 4), on-but-idle under the strong ones —
+//! so the engine steps them *event to event* instead of tick by tick.
+//! Each idle loop first computes a conservative **next-event budget**:
+//! the minimum of analytic crossing predictors for
+//!
+//! * the next harvester window edge ([`crate::energy::Harvester::off_ticks_hint`],
+//!   exact for every source kind — transitions only happen at ΔT edges);
+//! * the simulation horizon and the next job release (`next_release_min`);
+//! * the next *believed*-deadline crossing, via the clock's
+//!   [`crate::clock::Clock::const_offset`] contract (an opaque clock
+//!   falls back to naive stepping — perf-only, never correctness);
+//! * the brown-out voltage crossing
+//!   ([`crate::energy::Capacitor::idle_ticks_above`], padded two drain
+//!   quanta past the √V comparison);
+//! * the JIT-commit trigger ([`crate::energy::EnergyManager::ticks_above_voltage`],
+//!   consulted only when a [`CommitPolicy::JitVoltage`] checkpoint could
+//!   actually fire — armed, with dirty jobs queued).
+//!
+//! That many ticks are then replayed in bulk with the *identical
+//! floating-point operations in the identical order* as the naive
+//! stepper, minus work that is provably a no-op per tick (zero-power
+//! harvest adds, the release/deadline scans, virtual clock reads,
+//! scheduler dispatch, `√V` threshold checks). Budgets only ever cause an
+//! **early exit** to the exact per-tick dispatcher — they bound when an
+//! event *could* occur, never decide behavior — so every boot edge,
+//! release, deadline, window transition, and JIT commit lands on exactly
+//! the same tick and `Metrics` output is bit-for-bit unchanged. Three
+//! regime loops share the scheme: [`Engine::advance_off_phase`] (MCU
+//! down, queue in any state), [`Engine::advance_on_phase_idle`] (up but
+//! starved or nothing runnable), and the budget-free
+//! [`Engine::advance_idle_probed`] (a probe observes every tick; only
+//! the dispatch is hoisted). The on-regime fragment loop is flattened
+//! the same way: the per-fragment O(tasks) release scan and O(queue)
+//! mandatory scan are replaced by incrementally maintained
 //! `next_release_min` / `mandatory_pending`. Setting
 //! [`Engine::reference`] disables every shortcut and steps naively —
 //! the baseline `rust/tests/engine_differential.rs` proves byte-equal.
@@ -47,6 +70,7 @@ use crate::clock::Clock;
 use crate::coordinator::priority::EnergyView;
 use crate::coordinator::sched::{ExitPolicy, Scheduler};
 use crate::coordinator::task::{Job, JobState, TaskSpec};
+use crate::energy::conservative_ticks;
 use crate::energy::manager::EnergyManager;
 use crate::nvm::{CommitPolicy, Nvm};
 use crate::util::rng::Pcg32;
@@ -210,20 +234,20 @@ impl Engine {
         self.discard_past_deadline();
 
         if !self.energy.mandatory_allowed() {
-            // Off-phase fast-forward preconditions: truly off (not merely
-            // energy-starved while up — the on-idle tick drains, triggers
-            // JIT checks, and accrues on-time), nothing queued (so the
-            // per-step deadline scan is a no-op), and no probe (probes
-            // observe every tick). Under these, each naive step reduces
-            // to exactly one idle tick — see `advance_idle_off`.
-            if !self.reference
-                && self.probe.is_none()
-                && self.queue.is_empty()
-                && !self.energy.capacitor.mcu_on()
-            {
-                self.advance_idle_off();
-            } else {
+            // Event-driven idle dispatch: each regime gets the strongest
+            // fast-forward its invariants allow. Reference mode steps
+            // naively; a probe pins the engine to per-tick stepping (it
+            // observes every tick) but still hoists the dispatch; a down
+            // MCU takes the dark fast-forward; an up-but-starved MCU
+            // takes the on-phase loop (idle drain + JIT budgets).
+            if self.reference {
                 self.advance_idle();
+            } else if self.probe.is_some() {
+                self.advance_idle_probed();
+            } else if !self.energy.capacitor.mcu_on() {
+                self.advance_off_phase();
+            } else {
+                self.advance_on_phase_idle(false);
             }
             return;
         }
@@ -241,7 +265,19 @@ impl Engine {
         let view = self.energy_view();
         let believed = self.believed_now();
         let Some(idx) = self.scheduler.pick(&self.queue, believed, &view) else {
-            self.advance_idle();
+            // Nothing runnable despite available energy (all jobs finished,
+            // or only optional work behind a closed ζ_I gate). `pick` on an
+            // unchanged queue stays `None` while idle — job states only
+            // move when units execute, and the one energy-dependent input
+            // (the ζ_I optional gate) is a tail-guarded exit — so the
+            // on-phase loop may fast-forward here too. Pick purity: every
+            // scheduler's `None` is stateless except round-robin's
+            // in-flight-job cleanup, which this very call just applied.
+            if !self.reference && self.probe.is_none() {
+                self.advance_on_phase_idle(true);
+            } else {
+                self.advance_idle();
+            }
             return;
         };
         self.execute_unit(idx);
@@ -752,9 +788,10 @@ impl Engine {
         // MCU is off bought ~9 % wall-clock on `zygarde all` but coarsened
         // boot detection enough to shift scheduler outcomes at fragment
         // granularity (off-phase ends mid-stride). Determinism of the
-        // experiment tables wins over the 9 % — `advance_idle_off` is the
-        // exact replacement: it never strides, it runs the same per-tick
-        // arithmetic with the dispatch hoisted out.
+        // experiment tables wins over the 9 % — the event-driven loops
+        // (`advance_off_phase` / `advance_on_phase_idle`) are the exact
+        // replacement: they never stride, they replay the same per-tick
+        // arithmetic with events pinned to their exact ticks.
         let dt = self.cfg.idle_tick_ms;
         self.energy.tick(dt);
         self.energy.capacitor.idle_drain(self.cfg.idle_power_mw, dt);
@@ -771,16 +808,41 @@ impl Engine {
         }
     }
 
+    /// Snapshot of the believed-deadline event the idle loops must not
+    /// run through, taken once at loop entry. Valid while the loop holds
+    /// its invariants: queue membership is frozen (releases and discards
+    /// are guarded exits, jobs' `deadline_ms` never mutates) and the
+    /// clock's offset is constant (no `on_reboot` — an MCU flip is a
+    /// guarded exit too), so the minimum believed deadline is a single
+    /// f64 crossing in true time.
+    fn deadline_watch(&self) -> DeadlineWatch {
+        if self.queue.is_empty() {
+            return DeadlineWatch::Clear;
+        }
+        match self.clock.const_offset() {
+            Some(offset) => {
+                let min_dl = self
+                    .queue
+                    .iter()
+                    .map(|j| j.deadline_ms)
+                    .fold(f64::INFINITY, f64::min);
+                DeadlineWatch::Watch { offset, min_dl }
+            }
+            None => DeadlineWatch::Opaque,
+        }
+    }
+
     /// Off-phase fast-forward: many naive steps' worth of idle ticks in
-    /// one call, bit-for-bit.
+    /// one call, bit-for-bit, with the queue in ANY state.
     ///
-    /// Preconditions (checked by `step`): MCU off, queue empty, no probe,
-    /// not in reference mode. Under them a naive `step()` is exactly one
+    /// Preconditions (checked by `step`): MCU off, no probe, not in
+    /// reference mode. Under them a naive `step()` is exactly one
     /// `advance_idle()` tick — the power-edge tracker sees off→off, the
     /// release scan is vacuous until `next_release_min` comes due, the
-    /// deadline scan has nothing to scan, and `mandatory_allowed` is
-    /// false while the MCU is down — so this loop may keep ticking until
-    /// a per-tick *event* needs the full dispatcher again:
+    /// deadline scan only reads the (pure) clock until the believed
+    /// deadline watch trips, and `mandatory_allowed` is false while the
+    /// MCU is down — so this loop may keep ticking until a per-tick
+    /// *event* needs the full dispatcher again:
     ///
     /// * the harvester turns on / crosses a ΔT window (`off_tick` fails:
     ///   that tick runs the full `tick` + `idle_drain` sequence below,
@@ -789,23 +851,53 @@ impl Engine {
     ///   cannot move the MCU state) — return so `step` observes the edge;
     /// * a release comes due (`next_release_min`) — return so the next
     ///   step's scan processes it on exactly the naive tick;
+    /// * a queued job's believed deadline comes due — return so the next
+    ///   step's discard scan acts on exactly the naive tick;
     /// * the horizon is reached — `run`'s loop condition takes over.
     ///
-    /// While the source is dark and inside its ΔT window, the only state
-    /// a naive tick changes is the harvester's window clock and `now_ms`
-    /// (zero harvest adds 0.0 mJ everywhere, and idle drain needs the MCU
-    /// on) — so the inner loop is three f64 adds and the event compares,
-    /// instead of the full dispatch + harvest + charge + √V per tick.
-    fn advance_idle_off(&mut self) {
+    /// While the source is dark and inside its ΔT window none of those
+    /// can fire for a provable number of ticks (the analytic budget), and
+    /// a dark tick's only state change is the harvester window clock and
+    /// `now_ms` (zero harvest adds 0.0 mJ everywhere, idle drain needs
+    /// the MCU on) — so whole dark stretches collapse into one bulk
+    /// replay plus an exact per-tick tail that walks the final couple of
+    /// ticks onto the event.
+    fn advance_off_phase(&mut self) {
         debug_assert!(
-            !self.energy.capacitor.mcu_on() && self.queue.is_empty() && self.probe.is_none()
+            !self.energy.capacitor.mcu_on() && self.probe.is_none() && !self.reference
         );
         let dt = self.cfg.idle_tick_ms;
+        let watch = self.deadline_watch();
+        if matches!(watch, DeadlineWatch::Opaque) {
+            // A clock with no constant-offset contract: believed-deadline
+            // crossings cannot be predicted, so step naively (pure perf
+            // fallback — no such clock exists today).
+            self.advance_idle();
+            return;
+        }
         loop {
-            // Zero-power bulk ticks (source dark, within its ΔT window).
+            // Analytic next-event budget: whole dark ΔT stretches at once.
+            let n = self
+                .energy
+                .harvester
+                .off_ticks_hint(dt)
+                .min(conservative_ticks(self.cfg.duration_ms - self.now_ms, dt))
+                .min(conservative_ticks(self.next_release_min - self.now_ms, dt))
+                .min(watch.ticks_until_due(self.now_ms, dt));
+            if n > 0 {
+                self.energy.fast_forward_dark(n, dt);
+                // Sequential adds, exactly as the naive ticks would.
+                for _ in 0..n {
+                    self.now_ms += dt;
+                }
+            }
+            // Exact tail: zero-power per-tick steps onto the event.
             while self.energy.off_tick(dt) {
                 self.now_ms += dt;
-                if self.now_ms >= self.cfg.duration_ms || self.next_release_min <= self.now_ms {
+                if self.now_ms >= self.cfg.duration_ms
+                    || self.next_release_min <= self.now_ms
+                    || watch.due(self.now_ms)
+                {
                     return;
                 }
             }
@@ -823,9 +915,202 @@ impl Engine {
             if booted
                 || self.now_ms >= self.cfg.duration_ms
                 || self.next_release_min <= self.now_ms
+                || watch.due(self.now_ms)
             {
                 return;
             }
+        }
+    }
+
+    /// How many idle ticks the JIT checkpoint machinery provably stays a
+    /// no-op for, while the capacitor only drains (dark window, MCU on).
+    /// Legs, in trigger order of `jit_check`:
+    ///
+    /// * non-JIT policies never fire — unbounded;
+    /// * unarmed at or above `jit_rearm_v`: the very next tick re-arms (a
+    ///   mutation) — budget 0, the exact tick performs it;
+    /// * unarmed below re-arm: draining voltage is non-increasing, so it
+    ///   stays unarmed — unbounded;
+    /// * armed with no dirty job: `jit_commit_all` early-returns before
+    ///   disarming — a pure no-op even if the trigger fires (dirtiness is
+    ///   frozen while idle: only execution and rollback change it, and an
+    ///   MCU flip is a guarded exit) — unbounded;
+    /// * armed and dirty: if the trigger already holds, budget 0 (the
+    ///   exact tick commits); else the voltage-crossing predictor bounds
+    ///   how long it provably cannot.
+    fn jit_idle_budget(&self, drain_mj_per_tick: f64) -> u64 {
+        if !self.nvm.is_jit() {
+            return u64::MAX;
+        }
+        if !self.nvm.jit_armed {
+            return if self.energy.capacitor.voltage() >= self.nvm.jit_rearm_v {
+                0
+            } else {
+                u64::MAX
+            };
+        }
+        if !self.queue.iter().any(|j| j.is_dirty()) {
+            return u64::MAX;
+        }
+        if self.energy.jit_voltage_trigger(self.nvm.jit_threshold_v) {
+            return 0;
+        }
+        self.energy.ticks_above_voltage(self.nvm.jit_threshold_v, drain_mj_per_tick)
+    }
+
+    /// On-phase idle fast-forward: the MCU is up but nothing can run —
+    /// either energy-starved (`entry_mand == false`: `mandatory_allowed`
+    /// failed) or nothing schedulable (`entry_mand == true`: `pick`
+    /// returned `None`). Preconditions (checked by `step`): MCU on, no
+    /// probe, not in reference mode; for the `pick`-`None` entry, the
+    /// restore check already passed this step (`pending_restore` is only
+    /// raised at a power-down — a guarded exit).
+    ///
+    /// Under those, a naive step is one `advance_idle()` tick — harvest,
+    /// idle drain, on-time accrual, JIT check — until an *event*: a
+    /// release or believed deadline comes due, the horizon is reached,
+    /// the MCU browns out, the dispatch regime changes
+    /// (`mandatory_allowed` crosses `entry_mand`), or the ζ_I optional
+    /// gate moves (which can change what `pick` returns). While the
+    /// harvester is dark all of those are bounded by analytic predictors
+    /// — the capacitor only drains, so threshold crossings
+    /// (brown-out, JIT trigger, the energy gates, which only matter in
+    /// their charging direction) are one-sided — and the dark stretch
+    /// collapses into bulk replays of the identical per-tick f64
+    /// sequence. Charging ticks (window edges, source on) fall through
+    /// to the exact `advance_idle` below, where the tail guards catch
+    /// every rising-edge event on its precise tick.
+    fn advance_on_phase_idle(&mut self, entry_mand: bool) {
+        debug_assert!(
+            self.energy.capacitor.mcu_on() && self.probe.is_none() && !self.reference
+        );
+        debug_assert_eq!(self.energy.mandatory_allowed(), entry_mand);
+        let dt = self.cfg.idle_tick_ms;
+        let drain_mj = self.cfg.idle_power_mw * dt * 1e-3;
+        let entry_opt = self.energy.optional_allowed();
+        let watch = self.deadline_watch();
+        if matches!(watch, DeadlineWatch::Opaque) {
+            self.advance_idle();
+            return;
+        }
+        loop {
+            let n = self
+                .energy
+                .harvester
+                .off_ticks_hint(dt)
+                .min(conservative_ticks(self.cfg.duration_ms - self.now_ms, dt))
+                .min(conservative_ticks(self.next_release_min - self.now_ms, dt))
+                .min(watch.ticks_until_due(self.now_ms, dt))
+                // Brown-out: stay provably above v_off, padded two drain
+                // quanta past the √V comparison (zero idle power never
+                // crosses — the predictor saturates).
+                .min(self.energy.capacitor.idle_ticks_above(
+                    self.energy.capacitor.floor_mj() + 2.0 * drain_mj,
+                    drain_mj,
+                ))
+                .min(self.jit_idle_budget(drain_mj));
+            if n > 0 {
+                // Bulk replay of n dark idle ticks: harvester window
+                // clock, capacitor drain, on-time, and now — each the
+                // identical per-tick f64 add/min sequence, with only the
+                // provably-idempotent threshold checks hoisted out.
+                self.energy.fast_forward_dark(n, dt);
+                self.energy
+                    .capacitor
+                    .fast_forward_idle_drain(self.cfg.idle_power_mw, dt, n);
+                for _ in 0..n {
+                    self.metrics.on_time_ms += dt;
+                    self.now_ms += dt;
+                }
+            }
+            // Event/boundary tick — the naive idle tick, verbatim (this
+            // is where charging, re-arm, JIT commits, boots, and window
+            // transitions actually happen).
+            self.advance_idle();
+            if self.now_ms >= self.cfg.duration_ms
+                || self.next_release_min <= self.now_ms
+                || watch.due(self.now_ms)
+                || !self.energy.capacitor.mcu_on()
+                || self.energy.mandatory_allowed() != entry_mand
+                || self.energy.optional_allowed() != entry_opt
+            {
+                return;
+            }
+        }
+    }
+
+    /// Probe-attached idle loop: a probe observes every tick, so nothing
+    /// may be bulked — but the per-step dispatch (power-edge tracker,
+    /// release scan, deadline scan, virtual clock read, scheduler gate)
+    /// is still provably inert between events and is hoisted out.
+    /// Precondition (checked by `step`): `mandatory_allowed` is false —
+    /// the MCU may be in either power state. Exits on exactly the events
+    /// the hoisted work exists to handle: horizon, release, believed
+    /// deadline, an MCU edge (rollback/reboot bookkeeping), or
+    /// `mandatory_allowed` turning true (the dispatch regime changes).
+    fn advance_idle_probed(&mut self) {
+        debug_assert!(
+            !self.energy.mandatory_allowed() && self.probe.is_some() && !self.reference
+        );
+        let entry_on = self.energy.capacitor.mcu_on();
+        let watch = self.deadline_watch();
+        if matches!(watch, DeadlineWatch::Opaque) {
+            self.advance_idle();
+            return;
+        }
+        loop {
+            self.advance_idle();
+            if self.now_ms >= self.cfg.duration_ms
+                || self.next_release_min <= self.now_ms
+                || watch.due(self.now_ms)
+                || self.energy.capacitor.mcu_on() != entry_on
+                || self.energy.mandatory_allowed()
+            {
+                return;
+            }
+        }
+    }
+}
+
+/// The believed-deadline leg of the idle loops' next-event computation.
+/// See [`Engine::deadline_watch`].
+#[derive(Clone, Copy, Debug)]
+enum DeadlineWatch {
+    /// Empty queue: the discard scan has nothing to do at any time.
+    Clear,
+    /// The clock honors the constant-offset contract: the scan first acts
+    /// when `(now + offset).max(0.0) >= min_dl` — bitwise the believed
+    /// time the naive scan would compare.
+    Watch { offset: f64, min_dl: f64 },
+    /// Non-empty queue under a clock with no offset contract: deadline
+    /// crossings are unpredictable; the loops step naively instead.
+    Opaque,
+}
+
+impl DeadlineWatch {
+    /// Would the discard scan act at true time `now_ms`? (Exact replica
+    /// of `believed_now() >= deadline` for the earliest believed
+    /// deadline, per the `const_offset` contract.)
+    fn due(self, now_ms: f64) -> bool {
+        match self {
+            DeadlineWatch::Clear => false,
+            DeadlineWatch::Watch { offset, min_dl } => (now_ms + offset).max(0.0) >= min_dl,
+            DeadlineWatch::Opaque => true,
+        }
+    }
+
+    /// Conservative tick budget before `due` can first hold. The `max(0)`
+    /// clamp only ever delays the believed crossing (it maps a negative
+    /// believed time to 0, still below any positive deadline), so the
+    /// unclamped span is a safe bound; an already-due (non-positive or
+    /// NaN) span yields 0, and an empty queue never bounds (saturates).
+    fn ticks_until_due(self, now_ms: f64, dt_ms: f64) -> u64 {
+        match self {
+            DeadlineWatch::Clear => u64::MAX,
+            DeadlineWatch::Watch { offset, min_dl } => {
+                conservative_ticks(min_dl - offset - now_ms, dt_ms)
+            }
+            DeadlineWatch::Opaque => 0,
         }
     }
 }
@@ -1132,6 +1417,116 @@ mod tests {
                 nvm
             );
             assert!(refm.reboots > 0, "scenario never cycled power — no off phase exercised");
+        }
+    }
+
+    /// Event-driven regime coverage: each scenario makes a different idle
+    /// fast-forward loop dominate the run — on-phase idle entered via
+    /// `pick`-`None` under a rich harvester, off-phase with a queued
+    /// backlog under a believed-deadline watch (skewed CHRT clock),
+    /// on-but-starved (usable energy below E_man while up), and a
+    /// round-robin + piezo pairing that leans on RR's pick-`None` purity
+    /// — and each must match the naive reference stepper bit for bit.
+    #[test]
+    fn event_driven_loops_agree_bitwise_in_every_regime() {
+        use crate::clock::{Chrt, ChrtTier, Rtc};
+        use crate::energy::harvester::HarvesterKind;
+
+        type Build = Box<dyn Fn() -> Engine>;
+        let scenarios: Vec<(&str, Build)> = vec![
+            (
+                "on-idle rich solar + fram_jit",
+                Box::new(|| {
+                    let h = Harvester::markov(HarvesterKind::Solar, 350.0, 0.97, 0.5, 700.0, 11);
+                    let mut cap = Capacitor::standard();
+                    cap.precharge();
+                    let em = EnergyManager::new(cap, h, 0.5, 0.05);
+                    let mut e = Engine::new(
+                        SimConfig { duration_ms: 240_000.0, ..Default::default() },
+                        vec![task(0, 5_000.0, 10_000.0)],
+                        Scheduler::new(SchedulerKind::Zygarde, PriorityParams::new(10_000.0, 10.0)),
+                        ExitPolicy::Utility,
+                        em,
+                        Box::new(Rtc),
+                    );
+                    e.nvm = Nvm::build(crate::nvm::NvmSpec::fram_jit(), &e.energy.capacitor);
+                    e
+                }),
+            ),
+            (
+                "queued backlog across off phases, skewed clock",
+                Box::new(|| {
+                    let h = Harvester::markov(HarvesterKind::Rf, 40.0, 0.9, 0.3, 1000.0, 23);
+                    let mut cap = Capacitor::new(0.01, 3.3, 2.8, 1.9);
+                    cap.precharge();
+                    let em = EnergyManager::new(cap, h, 0.5, 0.05);
+                    let mut e = Engine::new(
+                        SimConfig { duration_ms: 240_000.0, ..Default::default() },
+                        vec![task(0, 500.0, 5_000.0)],
+                        Scheduler::new(
+                            SchedulerKind::EdfMandatory,
+                            PriorityParams::new(5_000.0, 10.0),
+                        ),
+                        ExitPolicy::Utility,
+                        em,
+                        Box::new(Chrt::new(ChrtTier::Tier3, 5)),
+                    );
+                    e.nvm =
+                        Nvm::build(crate::nvm::NvmSpec::fram_unit_boundary(), &e.energy.capacitor);
+                    e
+                }),
+            ),
+            (
+                "on but starved: usable energy below E_man",
+                Box::new(|| {
+                    let h = Harvester::markov(HarvesterKind::Rf, 25.0, 0.9, 0.4, 1000.0, 31);
+                    let mut cap = Capacitor::new(0.002, 3.3, 2.8, 1.9);
+                    cap.precharge();
+                    // E_man above the 2 mF capacitor's usable swing at
+                    // boot: the MCU spends long stretches up but unable
+                    // to run a fragment — the starved on-phase loop.
+                    let em = EnergyManager::new(cap, h, 0.5, 6.0);
+                    Engine::new(
+                        SimConfig { duration_ms: 240_000.0, ..Default::default() },
+                        vec![task(0, 800.0, 1_600.0)],
+                        Scheduler::new(SchedulerKind::Zygarde, PriorityParams::new(1_600.0, 10.0)),
+                        ExitPolicy::Utility,
+                        em,
+                        Box::new(Chrt::new(ChrtTier::Tier3, 9)),
+                    )
+                }),
+            ),
+            (
+                "round-robin over piezo windows",
+                Box::new(|| {
+                    let mut cap = Capacitor::new(0.01, 3.3, 2.8, 1.9);
+                    cap.precharge();
+                    let em = EnergyManager::new(cap, Harvester::piezo(17), 0.5, 0.05);
+                    Engine::new(
+                        SimConfig { duration_ms: 240_000.0, ..Default::default() },
+                        vec![task(0, 1_000.0, 4_000.0)],
+                        Scheduler::new(
+                            SchedulerKind::RoundRobin,
+                            PriorityParams::new(4_000.0, 10.0),
+                        ),
+                        ExitPolicy::None,
+                        em,
+                        Box::new(Rtc),
+                    )
+                }),
+            ),
+        ];
+        for (name, mk) in &scenarios {
+            let fast = mk().run();
+            let mut re = mk();
+            re.reference = true;
+            let refm = re.run();
+            assert_eq!(
+                fast.to_json().to_json(),
+                refm.to_json().to_json(),
+                "fast vs reference diverged: {name}"
+            );
+            assert!(refm.released > 0, "{name}: no jobs ever released");
         }
     }
 

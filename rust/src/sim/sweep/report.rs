@@ -37,10 +37,22 @@ impl CellResult {
     /// to reassemble a [`SweepReport`] byte-identical to a single-process
     /// run (see `sim::sweep::shard`).
     pub fn from_json(v: &Value) -> Result<CellResult, String> {
-        let index = v
+        let raw_index = v
             .get("index")
             .and_then(Value::as_f64)
-            .ok_or_else(|| "cell: missing numeric `index`".to_string())? as usize;
+            .ok_or_else(|| "cell: missing numeric `index`".to_string())?;
+        // `to_json` writes `index as f64`, which round-trips exactly for
+        // any real matrix (indices are far below 2^53). Anything that does
+        // NOT round-trip — NaN, negatives, fractions, overflow — is a
+        // corrupt or hand-edited shard file; a saturating `as usize` would
+        // silently alias it onto cell 0 (or clamp), and the shard merge
+        // would then mis-order or drop cells without a diagnostic.
+        let index = raw_index as usize;
+        if index as f64 != raw_index {
+            return Err(format!(
+                "cell: `index` {raw_index} is not a non-negative exact integer"
+            ));
+        }
         let label = v
             .get("label")
             .and_then(Value::as_str)

@@ -11,7 +11,12 @@
 //! future change to the fast paths either reproduces the reference
 //! stepper bit for bit or fails here with a reproducible seed
 //! (`PROP_SEED=<n>`). Scenario count is `DIFF_SCENARIOS` (default 64;
-//! the CI bench job runs an extended release-mode pass).
+//! the CI bench job runs an extended release-mode pass). Handcrafted
+//! event-boundary collisions — a release on a boot tick, a deadline on a
+//! harvester window edge, a JIT crossing inside a budgeted idle run,
+//! zero-length blackout windows — get their own deterministic cases
+//! because random sampling essentially never aligns two events on one
+//! tick.
 
 use std::cell::Cell;
 use std::rc::Rc;
@@ -23,6 +28,7 @@ use zygarde::nvm::NvmSpec;
 use zygarde::sim::sweep::{
     build_engine, FaultPlan, HarvesterSpec, Scenario, ScenarioMatrix, TaskMix,
 };
+use zygarde::sim::workload::synthetic_task;
 use zygarde::util::prop::{forall, Config, Size};
 use zygarde::util::rng::Pcg32;
 
@@ -139,6 +145,114 @@ fn fast_engine_matches_reference_byte_for_byte() {
             Ok(())
         },
     );
+}
+
+/// Handcrafted scenarios that pin every event the next-event budget
+/// predicts onto the exact tick where another event fires. Random
+/// scenarios almost never align a release with a boot tick or a deadline
+/// with a harvester window edge, so an off-by-one in any of the analytic
+/// crossing predictors (`off_ticks_hint`, `idle_ticks_above`,
+/// `ticks_above_voltage`, the believed-deadline watch) could hide for
+/// thousands of random iterations. Each case must still be byte-identical
+/// to the reference stepper.
+#[test]
+fn event_boundaries_colliding_on_one_tick_stay_byte_identical() {
+    let cases: Vec<(&str, ScenarioMatrix)> = vec![
+        (
+            // Brown-out period == task period, zero release jitter: every
+            // post-blackout boot tick carries a due release, so the
+            // off-phase loop's boot exit and release exit race on the
+            // same tick.
+            "release lands on the boot tick",
+            ScenarioMatrix::new("bnd-release-boot", 0xB0B1)
+                .mixes(vec![TaskMix::from_tasks(
+                    "m",
+                    vec![synthetic_task(0, 2, 1_000.0, 2_000.0, 40, 0xB0B1)],
+                )])
+                .harvesters(vec![HarvesterSpec::Persistent { power_mw: 500.0 }])
+                .capacitors_mf(vec![5.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .faults(vec![FaultPlan::none().with_brownouts(1_000.0, 200.0, 0.0)])
+                .precharge(true)
+                .release_jitter(0.0)
+                .duration_ms(60_000.0),
+        ),
+        (
+            // Period == deadline == the diurnal harvester's 5-minute
+            // window edge (all multiples of the tick): believed deadlines
+            // expire exactly when a dark window opens or closes, under a
+            // skewed CHRT clock so the watch's constant offset is
+            // non-zero.
+            "deadline lands on a harvester window edge",
+            ScenarioMatrix::new("bnd-deadline-edge", 0xB0B2)
+                .mixes(vec![TaskMix::from_tasks(
+                    "m",
+                    vec![synthetic_task(0, 2, 300_000.0, 300_000.0, 40, 0xB0B2)],
+                )])
+                .harvesters(vec![HarvesterSpec::SolarDiurnal { eta: 0.4 }])
+                .capacitors_mf(vec![50.0])
+                .schedulers(vec![SchedulerKind::EdfMandatory])
+                .faults(vec![FaultPlan::none().with_clock(ClockSpec::Chrt(ChrtTier::Tier3))])
+                .precharge(true)
+                .release_jitter(0.0)
+                .duration_ms(3_600_000.0),
+        ),
+        (
+            // A 1 mF capacitor swings across the JIT trigger voltage in a
+            // handful of idle ticks: the `ticks_above_voltage` budget and
+            // the commit-then-disarm sequencing must agree with the
+            // per-tick `jit_check` on the exact crossing tick.
+            "jit trigger crosses on a budgeted idle tick",
+            ScenarioMatrix::new("bnd-jit-cross", 0xB0B3)
+                .mixes(vec![TaskMix::from_tasks(
+                    "m",
+                    vec![synthetic_task(0, 3, 800.0, 1_600.0, 40, 0xB0B3)],
+                )])
+                .harvesters(vec![HarvesterSpec::Markov {
+                    kind: HarvesterKind::Rf,
+                    on_power_mw: 60.0,
+                    q: 0.9,
+                    duty: 0.4,
+                    eta: 0.5,
+                }])
+                .capacitors_mf(vec![1.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .nvms(vec![NvmSpec::fram_jit()])
+                .precharge(true)
+                .duration_ms(120_000.0),
+        ),
+        (
+            // Zero-length blackout windows aligned to tick boundaries:
+            // the fault mask flips on and off within the same tick the
+            // budget targeted, a degenerate edge the window-crossing
+            // hints must treat as an ordinary boundary tick.
+            "zero-length blackout windows",
+            ScenarioMatrix::new("bnd-zero-window", 0xB0B4)
+                .mixes(vec![TaskMix::from_tasks(
+                    "m",
+                    vec![synthetic_task(0, 2, 500.0, 1_500.0, 40, 0xB0B4)],
+                )])
+                .harvesters(vec![HarvesterSpec::Markov {
+                    kind: HarvesterKind::Rf,
+                    on_power_mw: 80.0,
+                    q: 0.95,
+                    duty: 0.2,
+                    eta: 0.4,
+                }])
+                .capacitors_mf(vec![10.0])
+                .schedulers(vec![SchedulerKind::Zygarde])
+                .faults(vec![FaultPlan::none().with_brownouts(700.0, 0.0, 35.0)])
+                .queue_size(3)
+                .duration_ms(600_000.0),
+        ),
+    ];
+    for (name, matrix) in cases {
+        let sc = matrix.expand().pop().unwrap();
+        let fast = metrics_json(&sc, false);
+        let reference = metrics_json(&sc, true);
+        assert_eq!(fast, reference, "{name}: fast engine diverged from reference");
+        assert!(fast.contains("released"), "{name}: metrics JSON looks empty");
+    }
 }
 
 /// With a probe attached the fast path must stand down entirely: both

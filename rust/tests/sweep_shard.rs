@@ -226,6 +226,48 @@ fn shard_counts_beyond_cells_still_merge() {
     ));
 }
 
+/// A corrupt `index` in a shard file must be rejected when the cell is
+/// parsed — a plain `as usize` cast would silently saturate NaN and
+/// negatives onto cell 0 and truncate fractions, and the merge would then
+/// mis-order cells with no diagnostic.
+#[test]
+fn corrupt_cell_index_is_rejected_at_parse_time() {
+    use zygarde::util::json::Value;
+    let m = golden_matrix();
+    let part = run_shard(&m, ShardSpec::new(0, 1).unwrap(), 1);
+    assert!(!part.cells.is_empty());
+    let good = part.json_string();
+    // The honest round trip keeps working.
+    assert!(PartialReport::parse(&good).is_ok());
+    let with_index = |idx_json: Value| {
+        let mut v = Value::parse(&good).unwrap();
+        if let Value::Obj(top) = &mut v {
+            if let Some(Value::Arr(cells)) = top.get_mut("cells") {
+                if let Value::Obj(cell) = &mut cells[0] {
+                    cell.insert("index".to_string(), idx_json);
+                }
+            }
+        }
+        v
+    };
+    for (name, bad) in [
+        ("NaN", Value::Num(f64::NAN)),
+        ("negative", Value::Num(-1.0)),
+        ("negative fraction", Value::Num(-0.75)),
+        ("fractional", Value::Num(1.5)),
+        ("overflow", Value::Num(1e300)),
+        ("non-numeric", Value::Str("0".to_string())),
+    ] {
+        assert!(
+            PartialReport::from_json(&with_index(bad)).is_err(),
+            "{name} `index` must be rejected"
+        );
+    }
+    // An exact integer written the canonical way still parses.
+    let ok = PartialReport::from_json(&with_index(Value::Num(0.0)));
+    assert!(ok.is_ok(), "exact integer index must still parse");
+}
+
 #[test]
 fn fingerprint_matches_cli_contract() {
     // The fingerprint is what `zygarde merge` trusts across hosts: equal

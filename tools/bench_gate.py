@@ -24,15 +24,26 @@ accident).
 The ``offphase`` rows are gated differently — and unconditionally. Each
 baseline row carries a ``min_speedup``: the measured ratio of the naive
 reference stepper's wall-clock to the optimized engine's on the same
-off-dominated matrix (a within-run ratio, so it is machine-independent
-and needs no committed absolute numbers). A current run whose speedup
-falls below the floor fails even against a provisional baseline: it
-means the off-phase fast-forward regressed.
+matrix (a within-run ratio, so it is machine-independent and needs no
+committed absolute numbers). A current run whose speedup falls below the
+floor fails even against a provisional baseline: it means an engine
+fast-forward path regressed. Every baseline offphase row must pin its
+workload with ``scenarios`` and ``duration_ms`` — a row lacking either
+is a hard error, because without them a silent bench-workload change
+could keep a stale floor "passing" against a different matrix.
+
+``--self-test`` runs the gate against built-in synthetic documents
+covering every verdict (pass, floor breach, disarmed floor, missing
+workload keys, drift, provisional, throughput drop) and exits nonzero if
+any scenario produces the wrong verdict — cheap CI insurance that the
+gate itself cannot rot into a silent no-op.
 """
 
 import argparse
 import json
 import sys
+
+OFFPHASE_WORKLOAD_KEYS = ("scenarios", "duration_ms")
 
 
 def rows(doc):
@@ -54,11 +65,14 @@ def check_offphase_speedups(cur, base):
     committed absolute measurement). A baseline row lacking min_speedup
     is itself a failure — promoting CI's measured BENCH_sweep.json
     verbatim (its rows carry 'speedup', no floors) must fail loudly
-    rather than silently disarm the only armed gate. A row whose
-    workload keys drifted from the baseline is equally a hard error: a
-    floor set for a different matrix/horizon is not comparable, and the
-    PR that changes the bench workload must update (and re-justify) the
-    baseline row in the same change. Returns failures."""
+    rather than silently disarm the only armed gate. A baseline row
+    lacking the workload keys (scenarios, duration_ms) is equally a hard
+    error: the drift check below is what keeps a floor honest when the
+    bench workload changes, and it cannot fire on keys that are absent.
+    A row whose workload keys drifted from the baseline is a hard error
+    too: a floor set for a different matrix/horizon is not comparable,
+    and the PR that changes the bench workload must update (and
+    re-justify) the baseline row in the same change. Returns failures."""
     current = {r["matrix"]: r for r in cur.get("offphase", [])}
     failures = []
     for row in base.get("offphase", []):
@@ -69,13 +83,21 @@ def check_offphase_speedups(cur, base):
                 f"offphase {name}: baseline row lacks min_speedup — copy the "
                 f"floors over when promoting a measured BENCH_sweep.json")
             continue
+        unpinned = [k for k in OFFPHASE_WORKLOAD_KEYS if k not in row]
+        if unpinned:
+            print(f"offphase {name:<16} baseline row missing workload keys "
+                  f"{unpinned}")
+            failures.append(
+                f"offphase {name}: baseline row lacks {unpinned} — every "
+                f"floor must pin its workload so drift cannot pass unseen")
+            continue
         got = current.get(name)
         if got is None:
             print(f"offphase {name:<16} speedup floor {floor:.2f}x {'missing':>12}")
             failures.append(f"offphase {name}: row missing from current run")
             continue
-        drifted = [k for k in ("scenarios", "duration_ms")
-                   if k in row and row.get(k) != got.get(k)]
+        drifted = [k for k in OFFPHASE_WORKLOAD_KEYS
+                   if row.get(k) != got.get(k)]
         if drifted:
             print(f"offphase {name:<16} workload drifted on {drifted} "
                   f"(baseline {[row.get(k) for k in drifted]} vs current "
@@ -85,7 +107,13 @@ def check_offphase_speedups(cur, base):
                 f"floor is not comparable; update the baseline row alongside "
                 f"the bench change")
             continue
-        speedup = got["speedup"]
+        speedup = got.get("speedup")
+        if speedup is None:
+            print(f"offphase {name:<16} current row has no measured speedup")
+            failures.append(
+                f"offphase {name}: current row lacks `speedup` — the bench "
+                f"must measure fast vs reference on every gated matrix")
+            continue
         flag = "" if speedup >= floor else "  << BELOW FLOOR"
         print(f"offphase {name:<16} speedup floor {floor:.2f}x "
               f"measured {speedup:6.2f}x{flag}")
@@ -96,19 +124,8 @@ def check_offphase_speedups(cur, base):
     return failures
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="fresh BENCH_sweep.json")
-    ap.add_argument("baseline", help="committed BENCH_baseline.json")
-    ap.add_argument("--max-drop", type=float, default=0.30,
-                    help="maximum tolerated fractional throughput drop (default 0.30)")
-    args = ap.parse_args()
-
-    with open(args.current) as f:
-        cur = json.load(f)
-    with open(args.baseline) as f:
-        base = json.load(f)
-
+def run_gate(cur, base, max_drop):
+    """Gate `cur` against `base`; returns the process exit code."""
     # The offphase speedup floors are workload- and machine-independent:
     # check them first, and unconditionally.
     off_failures = check_offphase_speedups(cur, base)
@@ -136,9 +153,9 @@ def main():
             failures.append(f"{key}: row missing from current run")
             continue
         ratio = c / b if b > 0 else float("inf")
-        flag = "" if ratio >= 1.0 - args.max_drop else "  << DROP"
+        flag = "" if ratio >= 1.0 - max_drop else "  << DROP"
         print(f"{key:<24} {b:>12.1f} {c:>12.1f} {ratio:>8.2f}x{flag}")
-        if ratio < 1.0 - args.max_drop:
+        if ratio < 1.0 - max_drop:
             failures.append(f"{key}: {c:.1f}/s vs baseline {b:.1f}/s ({ratio:.2f}x)")
 
     if failures and provisional:
@@ -151,9 +168,125 @@ def main():
     if failures:
         print(f"bench-gate: FAIL: {'; '.join(failures)}", file=sys.stderr)
         return 1
-    print(f"bench-gate: OK — no row dropped more than {args.max_drop:.0%} "
+    print(f"bench-gate: OK — no row dropped more than {max_drop:.0%} "
           f"below baseline and every offphase speedup floor held")
     return 0
+
+
+def self_test():
+    """Exercise every gate verdict on synthetic documents."""
+    def off_row(name, speedup=None, floor=None, scenarios=3, duration=3.6e6,
+                drop_keys=()):
+        row = {"matrix": name, "scenarios": scenarios, "duration_ms": duration}
+        if speedup is not None:
+            row["speedup"] = speedup
+        if floor is not None:
+            row["min_speedup"] = floor
+        for k in drop_keys:
+            row.pop(k, None)
+        return row
+
+    def doc(offphase, threads=(), workload=(64, 4000.0, 1), provisional=False):
+        d = {"scenarios": workload[0], "duration_ms": workload[1],
+             "reps": workload[2],
+             "threads": [{"threads": t, "scenarios_per_s": s}
+                         for (t, s) in threads],
+             "offphase": offphase}
+        if provisional:
+            d["provisional"] = True
+        return d
+
+    cases = [
+        ("clean pass",
+         doc([off_row("rf", speedup=5.0)], threads=[(1, 100.0)]),
+         doc([off_row("rf", floor=2.0)], threads=[(1, 100.0)]),
+         0),
+        ("floor breach fails even against a provisional baseline",
+         doc([off_row("rf", speedup=1.1)], threads=[(1, 100.0)]),
+         doc([off_row("rf", floor=2.0)], threads=[(1, 100.0)],
+             provisional=True),
+         1),
+        ("baseline row without min_speedup is a hard error",
+         doc([off_row("rf", speedup=5.0)]),
+         doc([off_row("rf")]),
+         1),
+        ("baseline row without scenarios is a hard error",
+         doc([off_row("rf", speedup=5.0)]),
+         doc([off_row("rf", floor=2.0, drop_keys=("scenarios",))]),
+         1),
+        ("baseline row without duration_ms is a hard error",
+         doc([off_row("rf", speedup=5.0)]),
+         doc([off_row("rf", floor=2.0, drop_keys=("duration_ms",))]),
+         1),
+        ("workload drift on an offphase row is a hard error",
+         doc([off_row("rf", speedup=5.0, scenarios=9)]),
+         doc([off_row("rf", floor=2.0, scenarios=3)]),
+         1),
+        ("offphase row missing from the current run is a hard error",
+         doc([]),
+         doc([off_row("rf", floor=2.0)]),
+         1),
+        ("current row without a measured speedup is a hard error",
+         doc([off_row("rf")]),
+         doc([off_row("rf", floor=2.0)]),
+         1),
+        ("provisional baseline reports throughput drops without failing",
+         doc([off_row("rf", speedup=5.0)], threads=[(1, 10.0)]),
+         doc([off_row("rf", floor=2.0)], threads=[(1, 100.0)],
+             provisional=True),
+         0),
+        ("armed baseline fails on a throughput drop",
+         doc([off_row("rf", speedup=5.0)], threads=[(1, 10.0)]),
+         doc([off_row("rf", floor=2.0)], threads=[(1, 100.0)]),
+         1),
+        ("offphase floors stay armed across a workload mismatch",
+         doc([off_row("rf", speedup=1.1)], workload=(8, 1000.0, 1)),
+         doc([off_row("rf", floor=2.0)], workload=(64, 4000.0, 1)),
+         1),
+        ("workload mismatch alone skips the throughput gate",
+         doc([off_row("rf", speedup=5.0)], threads=[(1, 10.0)],
+             workload=(8, 1000.0, 1)),
+         doc([off_row("rf", floor=2.0)], threads=[(1, 100.0)],
+             workload=(64, 4000.0, 1)),
+         0),
+    ]
+    bad = 0
+    for name, cur, base, want in cases:
+        print(f"--- self-test: {name}")
+        got = run_gate(cur, base, 0.30)
+        if got != want:
+            print(f"self-test FAILED: `{name}` returned {got}, wanted {want}",
+                  file=sys.stderr)
+            bad += 1
+    if bad:
+        print(f"bench-gate --self-test: {bad}/{len(cases)} cases FAILED",
+              file=sys.stderr)
+        return 1
+    print(f"bench-gate --self-test: all {len(cases)} cases passed")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?", help="fresh BENCH_sweep.json")
+    ap.add_argument("baseline", nargs="?", help="committed BENCH_baseline.json")
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="maximum tolerated fractional throughput drop (default 0.30)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the gate against built-in synthetic documents "
+                         "and verify every verdict")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if args.current is None or args.baseline is None:
+        ap.error("current and baseline are required unless --self-test")
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    return run_gate(cur, base, args.max_drop)
 
 
 if __name__ == "__main__":
