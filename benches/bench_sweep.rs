@@ -19,8 +19,10 @@
 //! `tools/bench_gate.py` diffs it against the committed
 //! `BENCH_baseline.json` in CI and fails on a >30 % throughput drop.
 
+use std::cell::Cell;
 use std::collections::BTreeMap;
 use std::process::Command;
+use std::rc::Rc;
 use std::time::Instant;
 
 use zygarde::clock::{ChrtTier, ClockSpec};
@@ -29,10 +31,11 @@ use zygarde::energy::harvester::HarvesterKind;
 use zygarde::exp::sweep_cli::bench_matrix;
 use zygarde::nvm::NvmSpec;
 use zygarde::sim::sweep::{
-    merge, run_matrix, run_matrix_reference, FaultPlan, HarvesterSpec, PartialReport,
-    ScenarioMatrix, TaskMix,
+    merge, run_matrix, run_matrix_reference, run_scenario, run_scenario_with_sink, CellResult,
+    FaultPlan, HarvesterSpec, PartialReport, ScenarioMatrix, SweepReport, TaskMix,
 };
 use zygarde::sim::workload::synthetic_task;
+use zygarde::telemetry::CountingSink;
 use zygarde::util::json::Value;
 
 fn env_u64(key: &str, default: u64) -> u64 {
@@ -367,6 +370,54 @@ fn main() {
         nvm_rows.push((spec.label(), rate, dt));
     }
 
+    // --- telemetry overhead: traced (null sink) vs untraced --------------
+    // One binary cannot time its own pre-telemetry build, so the row
+    // measures the strictly MORE expensive enabled path — a counting sink
+    // attached, every event constructed and recorded — against the
+    // disabled path (`trace = None`, one branch per would-be emission).
+    // Gating that ratio under the committed `max_overhead` therefore
+    // upper-bounds the disabled-path cost the telemetry layer claims is
+    // ~zero. Both legs must also reproduce the reference report byte for
+    // byte: tracing is out-of-band or this bench fails before it times.
+    println!();
+    let scenarios = matrix.expand();
+    let timed_cells = |run: &dyn Fn() -> Vec<CellResult>| {
+        let t0 = Instant::now();
+        let cells = run();
+        let dt1 = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let _ = run();
+        (cells, dt1.min(t0.elapsed().as_secs_f64()))
+    };
+    let (untraced_cells, untraced_dt) =
+        timed_cells(&|| scenarios.iter().map(run_scenario).collect());
+    let events_seen = Rc::new(Cell::new(0u64));
+    let (traced_cells, traced_dt) = timed_cells(&|| {
+        scenarios
+            .iter()
+            .map(|sc| run_scenario_with_sink(sc, Box::new(CountingSink::new(events_seen.clone()))))
+            .collect()
+    });
+    let untraced_report = SweepReport::new(&matrix.name, matrix.seed, untraced_cells);
+    let traced_report = SweepReport::new(&matrix.name, matrix.seed, traced_cells);
+    assert_eq!(
+        untraced_report.json_string(),
+        reference,
+        "trace bench untraced leg diverged from the in-process reference"
+    );
+    assert_eq!(
+        traced_report.json_string(),
+        reference,
+        "tracing changed the report bytes — the sink is not out-of-band"
+    );
+    // The counter accumulated over both best-of-two passes.
+    let trace_events = events_seen.get() / 2;
+    let trace_overhead = traced_dt / untraced_dt;
+    println!(
+        "trace   untraced {untraced_dt:.3} s  traced(null-sink) {traced_dt:.3} s  \
+         overhead {trace_overhead:.3}x  ({trace_events} events/run), byte-identical"
+    );
+
     // --- machine-readable trajectory ------------------------------------
     let out = obj(vec![
         ("bench", Value::Str("bench_sweep".to_string())),
@@ -434,6 +485,18 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "trace",
+            Value::Arr(vec![obj(vec![
+                ("matrix", Value::Str("bench".to_string())),
+                ("scenarios", Value::Num(n as f64)),
+                ("duration_ms", Value::Num(duration_ms)),
+                ("untraced_secs", Value::Num(untraced_dt)),
+                ("traced_secs", Value::Num(traced_dt)),
+                ("overhead", Value::Num(trace_overhead)),
+                ("events", Value::Num(trace_events as f64)),
+            ])]),
         ),
         (
             "nvm_policies",

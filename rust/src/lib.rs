@@ -31,6 +31,9 @@
 //!   functions ζ and ζ_I, Zygarde/EDF/EDF-M/RR schedulers, schedulability.
 //! * [`sim`] — discrete-event intermittently-powered MCU simulator, plus
 //!   the deterministic parallel scenario-sweep engine ([`sim::sweep`]).
+//! * [`telemetry`] — out-of-band engine event traces (typed events, sinks,
+//!   Chrome `trace_event` / JSONL exporters); provably byte-neutral to
+//!   reports, surfaced as `zygarde trace` and `zygarde sweep --trace-dir`.
 //! * [`classifiers`] — KNN / k-means / SVM / random-forest baselines
 //!   (Table 7).
 //! * [`exp`] — one driver per paper table/figure (the scheduler,
@@ -83,6 +86,7 @@ pub mod exp;
 pub mod nvm;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 /// Root of the artifact tree produced by `make artifacts`.

@@ -42,9 +42,20 @@ sharded execution (scale any sweep across processes / hosts):
                   --dataset NAME --systems 1,2 --nvm ideal,fram-jit --out FILE]
                  with --shard: writes a PartialReport JSON (default
                  shard_I_of_N.json); without: writes/prints the SweepReport
+                 [--trace-dir DIR --trace-every N] additionally re-runs every
+                 Nth cell (default 8) with tracing and writes Chrome JSON
+                 traces into DIR (out-of-band: the report bytes don't change)
   merge          zygarde merge shard_*.json [--out report.json] [--table]
                  reassembles shards into the byte-identical single-process
                  report; rejects shards from mismatched matrices
+
+observability:
+  trace          run ONE cell of a named matrix with the telemetry sink on
+                 and export its event trace
+                 [--matrix NAME --index I --format chrome|jsonl --out FILE
+                  + the sweep matrix flags (--seed/--jobs/--reps/...)]
+                 chrome: load in chrome://tracing or ui.perfetto.dev;
+                 jsonl: one flat event object per line (see README)
 
 streaming execution (work-stealing dispatcher, out-of-core merge):
   serve          dispatch a named matrix as fine-grained leases to workers
@@ -53,6 +64,7 @@ streaming execution (work-stealing dispatcher, out-of-core merge):
                  [--matrix NAME --workers N --worker-threads N
                   --listen HOST:PORT --lease N --lease-timeout-ms X
                   --spill-cells N --spill-dir DIR --out report.json --quiet
+                  --metrics-out metrics.json --heartbeat-ms X
                   + the sweep matrix flags (--seed/--jobs/--reps/...)]
   work           run leases for a dispatcher until it shuts us down
                  [--connect -|HOST:PORT --threads N --batch N]
@@ -142,6 +154,7 @@ fn main() {
             exp::schedulability::print(&rows);
         }
         "sweep" => run_sweep(&args, seed),
+        "trace" => run_trace(&args, seed),
         "merge" => run_merge(&args),
         "serve" => run_serve(&args, seed),
         "work" => run_work(&args),
@@ -205,6 +218,73 @@ fn matrix_from_flags(args: &Args, seed: u64) -> (String, SweepOpts, sweep::Scena
     (name, opts, matrix)
 }
 
+/// `zygarde trace`: run one cell of a named matrix with the telemetry
+/// sink attached and export its event trace. The traced run is the same
+/// simulation the sweep would execute — sinks are out-of-band, so its
+/// metrics match the corresponding sweep cell byte for byte.
+fn run_trace(args: &Args, seed: u64) {
+    use zygarde::telemetry::export::{chrome_string, jsonl_string, ScenarioTrace};
+    let (name, _, matrix) = matrix_from_flags(args, seed);
+    let scenarios = matrix.expand();
+    let index = args.usize_or("index", 0);
+    if index >= scenarios.len() {
+        die(&format!(
+            "--index {index} out of range: matrix `{name}` has {} cells",
+            scenarios.len()
+        ));
+    }
+    let format = args.str_or("format", "chrome").to_string();
+    let sc = &scenarios[index];
+    let (cell, events) = sweep::run_scenario_traced(sc);
+    let body = match format.as_str() {
+        "chrome" => chrome_string(&[ScenarioTrace {
+            label: cell.label.clone(),
+            index,
+            events,
+        }]),
+        "jsonl" => jsonl_string(&events),
+        other => die(&format!("--format: `{other}` (expected chrome or jsonl)")),
+    };
+    match args.opt_str("out") {
+        Some(out) => {
+            std::fs::write(out, &body).expect("writing trace");
+            eprintln!(
+                "trace `{name}` cell {index} ({}): {} bytes -> {out}",
+                cell.label,
+                body.len()
+            );
+        }
+        None => print!("{body}"),
+    }
+}
+
+/// Re-run every `every`-th cell with the telemetry sink on and drop one
+/// Chrome-format trace file per sampled cell into `dir`. Runs after the
+/// sweep so the report is untouched by construction — traced re-runs are
+/// byte-identical anyway, and deterministic re-execution is cheaper than
+/// plumbing sinks through the parallel runner.
+fn write_sampled_traces(dir: &str, every: usize, matrix: &sweep::ScenarioMatrix) {
+    use zygarde::telemetry::export::{chrome_string, ScenarioTrace};
+    std::fs::create_dir_all(dir).unwrap_or_else(|e| die(&format!("--trace-dir {dir}: {e}")));
+    let scenarios = matrix.expand();
+    let mut written = 0usize;
+    for sc in scenarios.iter().step_by(every.max(1)) {
+        let (cell, events) = sweep::run_scenario_traced(sc);
+        let body = chrome_string(&[ScenarioTrace {
+            label: cell.label.clone(),
+            index: sc.index,
+            events,
+        }]);
+        let path = format!("{dir}/cell_{:05}.trace.json", sc.index);
+        std::fs::write(&path, body).unwrap_or_else(|e| die(&format!("{path}: {e}")));
+        written += 1;
+    }
+    println!(
+        "traces: {written} of {} cells (every {every}th) -> {dir}",
+        scenarios.len()
+    );
+}
+
 /// `zygarde sweep`: run a named matrix — the whole thing, or one strided
 /// shard of it for multi-process / multi-host execution.
 fn run_sweep(args: &Args, seed: u64) {
@@ -212,6 +292,9 @@ fn run_sweep(args: &Args, seed: u64) {
     let threads = args.usize_or("threads", sweep::default_threads());
     match args.opt_str("shard") {
         Some(spec) => {
+            if args.has("trace-dir") {
+                eprintln!("warning: --trace-dir is ignored with --shard (trace the merged run)");
+            }
             let shard = ShardSpec::parse(spec).unwrap_or_else(|e| die(&format!("--shard: {e}")));
             let part = sweep::run_shard(&matrix, shard, threads);
             let out = args.opt_str("out").map(String::from).unwrap_or_else(|| {
@@ -238,6 +321,9 @@ fn run_sweep(args: &Args, seed: u64) {
                 }
                 None => report.print(),
             }
+            if let Some(dir) = args.opt_str("trace-dir") {
+                write_sampled_traces(dir, args.usize_or("trace-every", 8), &matrix);
+            }
         }
     }
 }
@@ -263,6 +349,8 @@ fn run_serve(args: &Args, seed: u64) {
     cfg.spill_cells = args.usize_or("spill-cells", 10_000);
     cfg.spill_dir = args.opt_str("spill-dir").map(std::path::PathBuf::from);
     cfg.quiet = args.bool_or("quiet", false);
+    cfg.metrics_out = args.opt_str("metrics-out").map(std::path::PathBuf::from);
+    cfg.heartbeat_ms = args.u64_or("heartbeat-ms", 5_000);
     let out_path = args.str_or("out", "report.json").to_string();
     let file = std::fs::File::create(&out_path)
         .unwrap_or_else(|e| die(&format!("{out_path}: {e}")));

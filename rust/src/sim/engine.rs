@@ -73,6 +73,7 @@ use crate::coordinator::task::{Job, JobState, TaskSpec};
 use crate::energy::conservative_ticks;
 use crate::energy::manager::EnergyManager;
 use crate::nvm::{CommitPolicy, Nvm};
+use crate::telemetry::{EventKind, FfRegime, TraceEvent, TraceSink};
 use crate::util::rng::Pcg32;
 
 use super::metrics::Metrics;
@@ -151,6 +152,13 @@ pub struct Engine {
     pub reference: bool,
     /// Optional per-tick probe, e.g. voltage logging for Fig. 22.
     pub probe: Option<Probe>,
+    /// Optional out-of-band event sink (see [`crate::telemetry`]). Unlike
+    /// `probe`, an attached sink never changes how the engine steps: it is
+    /// deliberately absent from `step`'s dispatch conditions, so the
+    /// event-driven fast-forwards stay engaged and surface as
+    /// [`EventKind::FastForward`] span events instead of per-tick samples.
+    /// Disabled cost: one `Option` discriminant check per hook site.
+    pub trace: Option<Box<dyn TraceSink>>,
 }
 
 impl Engine {
@@ -194,6 +202,24 @@ impl Engine {
             mandatory_pending: 0,
             reference: false,
             probe: None,
+            trace: None,
+        }
+    }
+
+    /// Record a telemetry event. Hot call sites guard with
+    /// `self.trace.is_some()` so payload construction is skipped on the
+    /// disabled path. Emission only *reads* simulation state (true time,
+    /// capacitor energy) — never RNG streams, `Metrics`, or anything
+    /// dispatch consults — so traced and untraced runs are byte-identical
+    /// (`rust/tests/telemetry_trace.rs` enforces this).
+    fn emit(&mut self, kind: EventKind) {
+        let ev = TraceEvent {
+            t_ms: self.now_ms,
+            energy_mj: self.energy.capacitor.energy_mj(),
+            kind,
+        };
+        if let Some(sink) = self.trace.as_mut() {
+            sink.record(ev);
         }
     }
 
@@ -299,16 +325,25 @@ impl Engine {
             self.clock.on_reboot(self.now_ms, outage);
             // A boot starts above v_on, well over the JIT threshold.
             self.nvm.jit_armed = true;
+            if self.trace.is_some() {
+                self.emit(EventKind::Boot { outage_ms: outage });
+            }
         } else if !on && self.was_on {
             self.outage_start_ms = self.now_ms;
             // Power failed: volatile progress dies. Every queued job rolls
             // back to its last durable checkpoint; whatever it had beyond
             // that re-executes after reboot (idempotent fragments).
+            let tracing = self.trace.is_some();
+            let mut rollbacks: Vec<(usize, u64, u64)> = Vec::new();
             let mut lost = 0u64;
             let mut any_committed = false;
             for j in &mut self.queue {
-                lost += j.rollback(&self.tasks[j.task]);
+                let l = j.rollback(&self.tasks[j.task]);
+                lost += l;
                 any_committed = any_committed || j.has_committed_progress();
+                if tracing && l > 0 {
+                    rollbacks.push((j.task, j.id, l));
+                }
             }
             self.metrics.lost_fragments += lost;
             if any_committed {
@@ -318,6 +353,12 @@ impl Engine {
             // Mandatory); recount rather than track per-job deltas —
             // outages are rare next to fragments.
             self.recount_mandatory_pending();
+            if tracing {
+                self.emit(EventKind::BrownOut { lost_fragments: lost });
+                for (task, job, lost_fragments) in rollbacks {
+                    self.emit(EventKind::Rollback { task, job, lost_fragments });
+                }
+            }
         }
         self.was_on = on;
     }
@@ -369,6 +410,9 @@ impl Engine {
         self.metrics.commits += 1;
         self.metrics.commit_mj += e_mj;
         self.metrics.commit_ms += t_ms;
+        if self.trace.is_some() {
+            self.emit(EventKind::Commit { jit: false, e_mj, t_ms });
+        }
         true
     }
 
@@ -401,6 +445,9 @@ impl Engine {
         self.metrics.commit_mj += e_mj;
         self.metrics.commit_ms += t_ms;
         self.nvm.jit_armed = false;
+        if self.trace.is_some() {
+            self.emit(EventKind::Commit { jit: true, e_mj, t_ms });
+        }
         true
     }
 
@@ -457,6 +504,9 @@ impl Engine {
         self.metrics.restores += 1;
         self.metrics.restore_mj += e_mj;
         self.metrics.restore_ms += t_ms;
+        if self.trace.is_some() {
+            self.emit(EventKind::Restore { e_mj, t_ms });
+        }
         true
     }
 
@@ -525,6 +575,9 @@ impl Engine {
                 self.next_trace[t] = (tr + 1) % self.tasks[t].traces.len().max(1);
                 let job = Job::new(&self.tasks[t], self.next_job_id, release_at, tr);
                 self.next_job_id += 1;
+                if self.trace.is_some() {
+                    self.emit(EventKind::Release { task: t, job: job.id });
+                }
                 self.queue.push(job);
                 // Fresh jobs start Mandatory (Progress::fresh).
                 self.mandatory_pending += 1;
@@ -592,8 +645,14 @@ impl Engine {
                 self.metrics.correct += 1;
                 self.metrics.per_task_correct[t] += 1;
             }
+            if self.trace.is_some() {
+                self.emit(EventKind::DeadlineMet { task: t, job: job.id });
+            }
         } else {
             self.metrics.deadline_missed += 1;
+            if self.trace.is_some() {
+                self.emit(EventKind::DeadlineMissed { task: t, job: job.id });
+            }
         }
     }
 
@@ -606,6 +665,7 @@ impl Engine {
         let frag_mj = self.tasks[task_id].fragment_energy_mj(unit);
         let n_frag = self.tasks[task_id].unit_fragments[unit];
         let mandatory = self.queue[idx].next_is_mandatory();
+        let job_id = self.queue[idx].id;
 
         let mut did_work = false;
         while self.queue[idx].fragments_done < n_frag {
@@ -669,6 +729,9 @@ impl Engine {
                 }
             }
             did_work = true;
+            if self.trace.is_some() {
+                self.emit(EventKind::FragmentStart { task: task_id, job: job_id, unit });
+            }
             // Harvest during the fragment, then pay for it.
             self.energy.tick(frag_ms);
             self.now_ms += frag_ms;
@@ -676,10 +739,26 @@ impl Engine {
             self.metrics.fragments += 1;
             if self.energy.capacitor.draw(frag_mj) {
                 self.queue[idx].fragments_done += 1;
+                if self.trace.is_some() {
+                    self.emit(EventKind::FragmentEnd {
+                        task: task_id,
+                        job: job_id,
+                        unit,
+                        ok: true,
+                    });
+                }
             } else {
                 // Power failed mid-fragment: work lost, fragment will
                 // re-execute when power returns (idempotent).
                 self.metrics.refragments += 1;
+                if self.trace.is_some() {
+                    self.emit(EventKind::FragmentEnd {
+                        task: task_id,
+                        job: job_id,
+                        unit,
+                        ok: false,
+                    });
+                }
                 self.track_power_edges();
                 return;
             }
@@ -702,6 +781,9 @@ impl Engine {
             // probe sees continuous time.
             if let Some(p) = self.probe.as_mut() {
                 p(self.now_ms, &self.energy, &self.metrics);
+            }
+            if self.probe.is_some() && self.trace.is_some() {
+                self.emit(EventKind::Probe);
             }
         }
 
@@ -806,6 +888,9 @@ impl Engine {
         if let Some(p) = self.probe.as_mut() {
             p(self.now_ms, &self.energy, &self.metrics);
         }
+        if self.probe.is_some() && self.trace.is_some() {
+            self.emit(EventKind::Probe);
+        }
     }
 
     /// Snapshot of the believed-deadline event the idle loops must not
@@ -885,10 +970,18 @@ impl Engine {
                 .min(conservative_ticks(self.next_release_min - self.now_ms, dt))
                 .min(watch.ticks_until_due(self.now_ms, dt));
             if n > 0 {
+                let from_ms = self.now_ms;
                 self.energy.fast_forward_dark(n, dt);
                 // Sequential adds, exactly as the naive ticks would.
                 for _ in 0..n {
                     self.now_ms += dt;
+                }
+                if self.trace.is_some() {
+                    self.emit(EventKind::FastForward {
+                        regime: FfRegime::Off,
+                        from_ms,
+                        ticks: n,
+                    });
                 }
             }
             // Exact tail: zero-power per-tick steps onto the event.
@@ -1014,6 +1107,7 @@ impl Engine {
                 // clock, capacitor drain, on-time, and now — each the
                 // identical per-tick f64 add/min sequence, with only the
                 // provably-idempotent threshold checks hoisted out.
+                let from_ms = self.now_ms;
                 self.energy.fast_forward_dark(n, dt);
                 self.energy
                     .capacitor
@@ -1021,6 +1115,13 @@ impl Engine {
                 for _ in 0..n {
                     self.metrics.on_time_ms += dt;
                     self.now_ms += dt;
+                }
+                if self.trace.is_some() {
+                    self.emit(EventKind::FastForward {
+                        regime: FfRegime::OnIdle,
+                        from_ms,
+                        ticks: n,
+                    });
                 }
             }
             // Event/boundary tick — the naive idle tick, verbatim (this

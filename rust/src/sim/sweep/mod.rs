@@ -47,7 +47,8 @@ pub use faults::FaultPlan;
 pub use report::{CellResult, SummaryStats, SweepReport};
 pub use runner::{
     build_engine, default_threads, run_matrix, run_matrix_reference, run_scenario,
-    run_scenario_reference, run_scenarios, run_scenarios_reference,
+    run_scenario_reference, run_scenario_traced, run_scenario_with_sink, run_scenarios,
+    run_scenarios_reference,
 };
 pub use shard::{
     fingerprint, merge, run_shard, MatrixFingerprint, MergeError, PartialReport, ShardSpec,

@@ -14,6 +14,7 @@ use crate::coordinator::sched::Scheduler;
 use crate::energy::capacitor::Capacitor;
 use crate::energy::manager::EnergyManager;
 use crate::sim::engine::{Engine, SimConfig};
+use crate::telemetry::{TraceBuffer, TraceEvent, TraceSink};
 
 use super::report::{CellResult, SweepReport};
 use super::{HarvesterSpec, Scenario, ScenarioMatrix};
@@ -110,6 +111,29 @@ pub fn run_scenario(sc: &Scenario) -> CellResult {
 /// differential-exactness baseline ([`crate::sim::engine::Engine::reference`]).
 pub fn run_scenario_reference(sc: &Scenario) -> CellResult {
     run_cell(sc, true)
+}
+
+/// Run one scenario with a telemetry sink attached. The cell result is
+/// byte-identical to [`run_scenario`]'s — sinks are out-of-band by
+/// construction (`rust/tests/telemetry_trace.rs` proves it) — so traced
+/// re-runs of sweep cells never perturb a report.
+pub fn run_scenario_with_sink(sc: &Scenario, sink: Box<dyn TraceSink>) -> CellResult {
+    let mut engine = build_engine(sc);
+    engine.trace = Some(sink);
+    CellResult {
+        index: sc.index,
+        label: sc.label(),
+        engine_seed: sc.engine_seed,
+        metrics: engine.run(),
+    }
+}
+
+/// Run one scenario and collect its full event trace alongside the cell
+/// result (`zygarde trace`, `zygarde sweep --trace-dir`).
+pub fn run_scenario_traced(sc: &Scenario) -> (CellResult, Vec<TraceEvent>) {
+    let buf = TraceBuffer::new();
+    let cell = run_scenario_with_sink(sc, Box::new(buf.clone()));
+    (cell, buf.take())
 }
 
 /// Run a scenario list on `threads` workers; results come back in

@@ -63,6 +63,8 @@ pub enum Out {
 
 struct Lease {
     worker: WorkerId,
+    /// Dispatcher-clock grant time, for the lease-latency histogram.
+    granted_ms: u64,
     start: usize,
     /// Exclusive end as granted. Results in `start..end` are always
     /// acceptable from the lease owner, even past a stolen boundary.
@@ -92,14 +94,108 @@ struct WorkerState {
     active_leases: usize,
 }
 
-/// Counters the service layer reports when the sweep finishes.
-#[derive(Clone, Copy, Debug, Default)]
+/// Number of log2 buckets in the lease-latency histogram: bucket 0 holds
+/// 0 ms completions, bucket `b ≥ 1` holds `[2^(b-1), 2^b)` ms, and the
+/// last bucket is open-ended (≳ 16 s — a stalled or stolen-from lease).
+pub const LATENCY_BUCKETS: usize = 16;
+
+/// Per-worker accounting inside [`DispatchStats`].
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    /// Leases this worker completed with `LeaseDone`.
+    pub leases_done: u64,
+    /// Raw cells streamed back (duplicates included — the dedup verdict
+    /// is a dispatcher-side property, not the worker's fault).
+    pub cells: u64,
+    /// Sum of grant→`LeaseDone` latencies (dispatcher clock, ms).
+    pub lease_ms_sum: u64,
+    /// Worst single lease latency (ms).
+    pub lease_ms_max: u64,
+}
+
+/// Counters/histograms the dispatcher accumulates as pure state-machine
+/// data. The IO shell reads them for the stderr heartbeat and serializes
+/// them via [`DispatchStats::to_json`] for `--metrics-out`.
+#[derive(Clone, Debug, Default)]
 pub struct DispatchStats {
     pub leases_granted: u64,
     pub steals: u64,
     pub reissues: u64,
+    /// Late-duplicate cells dropped after per-index dedup (reissued or
+    /// stolen work arriving from both claimants). A high ratio against
+    /// `cells_received` means the lease timeout is too aggressive for the
+    /// workers' cell times.
     pub duplicates: u64,
     pub workers_seen: u64,
+    /// Every cell received, duplicates included (`cells_received -
+    /// duplicates` were ingested into the merge).
+    pub cells_received: u64,
+    /// Log2-bucketed grant→`LeaseDone` latency histogram
+    /// (see [`LATENCY_BUCKETS`]).
+    pub lease_latency_hist: [u64; LATENCY_BUCKETS],
+    pub per_worker: BTreeMap<WorkerId, WorkerStats>,
+}
+
+impl DispatchStats {
+    fn latency_bucket(ms: u64) -> usize {
+        (64 - ms.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    fn record_lease_done(&mut self, w: WorkerId, latency_ms: u64) {
+        self.lease_latency_hist[Self::latency_bucket(latency_ms)] += 1;
+        let ws = self.per_worker.entry(w).or_default();
+        ws.leases_done += 1;
+        ws.lease_ms_sum += latency_ms;
+        ws.lease_ms_max = ws.lease_ms_max.max(latency_ms);
+    }
+
+    /// Fraction of received cells that were late duplicates (0 when
+    /// nothing has arrived yet).
+    pub fn duplicate_ratio(&self) -> f64 {
+        if self.cells_received == 0 {
+            0.0
+        } else {
+            self.duplicates as f64 / self.cells_received as f64
+        }
+    }
+
+    /// JSON object for `--metrics-out` (field reference in README
+    /// § Observability).
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        let num = |m: &mut BTreeMap<String, Value>, k: &str, v: u64| {
+            m.insert(k.to_string(), Value::Num(v as f64));
+        };
+        num(&mut m, "leases_granted", self.leases_granted);
+        num(&mut m, "steals", self.steals);
+        num(&mut m, "reissues", self.reissues);
+        num(&mut m, "duplicates", self.duplicates);
+        num(&mut m, "workers_seen", self.workers_seen);
+        num(&mut m, "cells_received", self.cells_received);
+        m.insert(
+            "lease_latency_hist_ms".to_string(),
+            Value::Arr(
+                self.lease_latency_hist
+                    .iter()
+                    .map(|&c| Value::Num(c as f64))
+                    .collect(),
+            ),
+        );
+        let workers: BTreeMap<String, Value> = self
+            .per_worker
+            .iter()
+            .map(|(w, s)| {
+                let mut wm = BTreeMap::new();
+                num(&mut wm, "leases_done", s.leases_done);
+                num(&mut wm, "cells", s.cells);
+                num(&mut wm, "lease_ms_sum", s.lease_ms_sum);
+                num(&mut wm, "lease_ms_max", s.lease_ms_max);
+                (w.to_string(), Value::Obj(wm))
+            })
+            .collect();
+        m.insert("per_worker".to_string(), Value::Obj(workers));
+        Value::Obj(m)
+    }
 }
 
 /// The dispatcher state machine. See module docs for the event model.
@@ -160,6 +256,12 @@ impl DispatcherCore {
 
     pub fn cells_received(&self) -> usize {
         self.n_received
+    }
+
+    /// Leases currently outstanding (granted, not finished, not dead) —
+    /// a heartbeat figure, not part of the state machine's decisions.
+    pub fn leases_active(&self) -> usize {
+        self.leases.values().filter(|l| !l.dead && !l.done).count()
     }
 
     /// A connection appeared: open the handshake.
@@ -305,6 +407,8 @@ impl DispatcherCore {
                     }
                     expect += 1;
                 }
+                self.stats.cells_received += cells.len() as u64;
+                self.stats.per_worker.entry(w).or_default().cells += cells.len() as u64;
                 let l = self.leases.get_mut(&lease).expect("checked above");
                 l.last_activity_ms = now_ms;
                 for c in cells {
@@ -336,7 +440,9 @@ impl DispatcherCore {
                 }
                 let was_dead = l.dead;
                 l.done = true;
+                let latency_ms = now_ms.saturating_sub(l.granted_ms);
                 let (tail_start, tail_end) = l.tail();
+                self.stats.record_lease_done(w, latency_ms);
                 // Free the worker's lease slot even when the lease timed
                 // out underneath it (it was merely slow, not dead): the
                 // finished worker is immediately eligible for new work.
@@ -475,6 +581,7 @@ impl DispatcherCore {
             id,
             Lease {
                 worker: w,
+                granted_ms: now_ms,
                 start,
                 end,
                 hwm: start,
@@ -637,5 +744,77 @@ mod tests {
         let outs = admit(&mut c, 1);
         let (_, start, end) = lease_of(&outs);
         assert_eq!((start, end), (0, 6));
+    }
+
+    #[test]
+    fn stats_count_cells_latency_and_per_worker_shares() {
+        let mut c = core(4, 4);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        assert_eq!(c.leases_active(), 1);
+        c.on_message(0, Msg::Cells { lease: id, cells: (0..4).map(cell).collect() }, 5);
+        c.on_message(0, Msg::LeaseDone { lease: id }, 7);
+        assert_eq!(c.stats.cells_received, 4);
+        assert_eq!(c.stats.duplicates, 0);
+        assert_eq!(c.stats.duplicate_ratio(), 0.0);
+        assert_eq!(c.leases_active(), 0);
+        let ws = &c.stats.per_worker[&0];
+        assert_eq!(ws.cells, 4);
+        assert_eq!(ws.leases_done, 1);
+        assert_eq!(ws.lease_ms_sum, 7);
+        assert_eq!(ws.lease_ms_max, 7);
+        // 7 ms lands in bucket [4, 8).
+        assert_eq!(c.stats.lease_latency_hist[3], 1);
+        assert_eq!(c.stats.lease_latency_hist.iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn duplicates_count_against_received_cells() {
+        let mut c = core(4, 4);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        // Timeout, reissue to a second worker, then both deliver all 4.
+        c.on_tick(2_000);
+        let outs = admit(&mut c, 1);
+        let (id2, _, _) = lease_of(&outs);
+        c.on_message(1, Msg::Cells { lease: id2, cells: (0..4).map(cell).collect() }, 2_100);
+        c.on_message(0, Msg::Cells { lease: id, cells: (0..4).map(cell).collect() }, 2_200);
+        assert_eq!(c.stats.cells_received, 8);
+        assert_eq!(c.stats.duplicates, 4);
+        assert_eq!(c.stats.duplicate_ratio(), 0.5);
+        assert_eq!(c.stats.per_worker[&0].cells, 4);
+        assert_eq!(c.stats.per_worker[&1].cells, 4);
+    }
+
+    #[test]
+    fn latency_buckets_are_log2() {
+        assert_eq!(DispatchStats::latency_bucket(0), 0);
+        assert_eq!(DispatchStats::latency_bucket(1), 1);
+        assert_eq!(DispatchStats::latency_bucket(2), 2);
+        assert_eq!(DispatchStats::latency_bucket(3), 2);
+        assert_eq!(DispatchStats::latency_bucket(1_000), 10);
+        assert_eq!(DispatchStats::latency_bucket(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn stats_json_carries_every_field() {
+        let mut c = core(2, 2);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        c.on_message(0, Msg::Cells { lease: id, cells: (0..2).map(cell).collect() }, 3);
+        let v = c.stats.to_json();
+        for key in [
+            "leases_granted",
+            "steals",
+            "reissues",
+            "duplicates",
+            "workers_seen",
+            "cells_received",
+        ] {
+            assert!(v.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(v.req("cells_received").f64(), 2.0);
+        assert_eq!(v.req("lease_latency_hist_ms").arr().len(), LATENCY_BUCKETS);
+        assert_eq!(v.req("per_worker").req("0").req("cells").f64(), 2.0);
     }
 }

@@ -43,7 +43,7 @@ pub mod service;
 pub mod spill;
 pub mod worker;
 
-pub use dispatch::{DispatchStats, DispatcherCore, Out, WorkerId};
+pub use dispatch::{DispatchStats, DispatcherCore, Out, WorkerId, WorkerStats, LATENCY_BUCKETS};
 pub use protocol::{read_msg, write_msg, Msg};
 pub use service::{serve_to, ServeConfig, ServeOutcome};
 pub use spill::SpillMerger;

@@ -70,6 +70,14 @@ pub struct ServeConfig {
     /// no `work` subcommand.)
     pub worker_exe: Option<PathBuf>,
     pub quiet: bool,
+    /// Write the final [`DispatchStats`] JSON here after the report is
+    /// streamed out; `None` disables. A write failure only warns — the
+    /// report itself already left through `out` and must not be voided
+    /// by a metrics-file error.
+    pub metrics_out: Option<PathBuf>,
+    /// Emit a stderr heartbeat line at this period (wall-clock ms);
+    /// 0 disables. Suppressed by `quiet` like the progress lines.
+    pub heartbeat_ms: u64,
 }
 
 impl ServeConfig {
@@ -88,6 +96,8 @@ impl ServeConfig {
             spill_dir: None,
             worker_exe: None,
             quiet: true,
+            metrics_out: None,
+            heartbeat_ms: 5_000,
         }
     }
 }
@@ -279,6 +289,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
     let mut merge_err: Option<String> = None;
     let mut last_report = 0usize;
     let mut last_tick = Instant::now();
+    let mut last_heartbeat = Instant::now();
     {
         let route = |outs: Vec<Out>,
                      senders: &mut HashMap<WorkerId, mpsc::Sender<Msg>>,
@@ -377,6 +388,33 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                     eprintln!("serve: {got}/{n} cells");
                     last_report = got;
                 }
+                if cfg.heartbeat_ms > 0
+                    && last_heartbeat.elapsed() >= Duration::from_millis(cfg.heartbeat_ms)
+                {
+                    last_heartbeat = Instant::now();
+                    let s = &core.stats;
+                    eprintln!(
+                        "serve: heartbeat {got}/{n} cells | leases {} granted {} active | \
+                         steals {} reissues {} | dup {} | workers {} | spill runs {} peak {}",
+                        s.leases_granted,
+                        core.leases_active(),
+                        s.steals,
+                        s.reissues,
+                        s.duplicates,
+                        s.workers_seen,
+                        merger.as_ref().map_or(0, |m| m.runs_spilled()),
+                        merger.as_ref().map_or(0, |m| m.peak_buffered()),
+                    );
+                    if s.duplicate_ratio() > 0.01 {
+                        eprintln!(
+                            "serve: WARN duplicate cells at {:.1}% of deliveries ({} of {}) — \
+                             late post-reissue results are being dropped after dedup",
+                            s.duplicate_ratio() * 100.0,
+                            s.duplicates,
+                            s.cells_received
+                        );
+                    }
+                }
             }
         }
     }
@@ -411,6 +449,30 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
     let runs_spilled = merger.runs_spilled();
     let peak_buffered = merger.peak_buffered();
     let summary = merger.finalize(&cfg.matrix.name, cfg.matrix.seed, n, out)?;
+    if core.stats.duplicate_ratio() > 0.01 {
+        eprintln!(
+            "serve: WARN {:.1}% of delivered cells were late duplicates ({} of {}) — \
+             consider a longer --lease-timeout-ms",
+            core.stats.duplicate_ratio() * 100.0,
+            core.stats.duplicates,
+            core.stats.cells_received
+        );
+    }
+    if let Some(path) = &cfg.metrics_out {
+        let mut doc = core.stats.to_json();
+        if let Value::Obj(map) = &mut doc {
+            map.insert("n_scenarios".to_string(), Value::Num(n as f64));
+            map.insert("runs_spilled".to_string(), Value::Num(runs_spilled as f64));
+            map.insert("peak_buffered".to_string(), Value::Num(peak_buffered as f64));
+            map.insert("wall_ms".to_string(), Value::Num(now_ms(t0) as f64));
+        }
+        let body = format!("{}\n", doc.to_json());
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("serve: WARN could not write metrics to {}: {e}", path.display());
+        } else if !cfg.quiet {
+            eprintln!("serve: metrics written to {}", path.display());
+        }
+    }
     Ok(ServeOutcome {
         n_scenarios: n,
         workers_seen: core.stats.workers_seen,

@@ -1,0 +1,229 @@
+//! Trace exporters: Chrome `trace_event` JSON and line-delimited JSONL.
+//!
+//! The Chrome form loads directly into `chrome://tracing` or
+//! <https://ui.perfetto.dev>: each scenario is one track (`pid 0`,
+//! `tid` = scenario index, named via a `thread_name` metadata event),
+//! fragments are `B`/`E` duration pairs, bulk fast-forwards are `X`
+//! complete events spanning the replayed window, and everything else is
+//! a thread-scoped instant (`ph: "i"`, `s: "t"`). Timestamps are
+//! microseconds of *simulated* time (`ts = t_ms * 1000`), so the
+//! timeline you scrub is the scenario's own clock, not wall time.
+//!
+//! The JSONL form is one `TraceEvent::to_json` object per line — the
+//! compact, greppable stream for scripted analysis.
+//!
+//! `tools/trace_check.py` validates the Chrome output (phase vocabulary,
+//! `B`/`E` balance per track, monotone timestamps) and CI runs it
+//! against a traced sweep.
+
+use std::collections::BTreeMap;
+
+use super::{EventKind, TraceEvent};
+use crate::util::json::Value;
+
+/// One scenario's recorded events plus the identity of its track.
+pub struct ScenarioTrace {
+    /// Human-readable track name (the scenario label).
+    pub label: String,
+    /// Scenario index within its matrix — becomes the Chrome `tid`.
+    pub index: usize,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Compact JSONL: one event object per line, trailing newline.
+pub fn jsonl_string(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().to_json());
+        out.push('\n');
+    }
+    out
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn num(x: f64) -> Value {
+    Value::Num(x)
+}
+
+fn s(x: &str) -> Value {
+    Value::Str(x.to_string())
+}
+
+/// Common fields of every emitted Chrome event.
+fn base(ph: &str, name: &str, tid: usize, ts_us: f64) -> Vec<(&'static str, Value)> {
+    // Leak-free &'static str keys: use fixed key names, values vary.
+    vec![
+        ("ph", s(ph)),
+        ("name", s(name)),
+        ("pid", num(0.0)),
+        ("tid", num(tid as f64)),
+        ("ts", num(ts_us)),
+    ]
+}
+
+/// Chrome `trace_event` document for one or more scenario tracks.
+pub fn chrome_trace(traces: &[ScenarioTrace]) -> Value {
+    let mut events: Vec<Value> = Vec::new();
+    for tr in traces {
+        // Name the track after the scenario.
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("thread_name")),
+            ("pid", num(0.0)),
+            ("tid", num(tr.index as f64)),
+            ("args", obj(vec![("name", s(&tr.label))])),
+        ]));
+        for ev in &tr.events {
+            let ts = ev.t_ms * 1000.0;
+            let energy = ("energy_mj", num(ev.energy_mj));
+            match &ev.kind {
+                EventKind::FragmentStart { task, job, unit } => {
+                    let mut e =
+                        base("B", &format!("frag t{task} u{unit}"), tr.index, ts);
+                    e.push((
+                        "args",
+                        obj(vec![("job", num(*job as f64)), energy]),
+                    ));
+                    events.push(obj(e));
+                }
+                EventKind::FragmentEnd { task, unit, ok, .. } => {
+                    let mut e =
+                        base("E", &format!("frag t{task} u{unit}"), tr.index, ts);
+                    e.push(("args", obj(vec![("ok", Value::Bool(*ok)), energy])));
+                    events.push(obj(e));
+                }
+                EventKind::FastForward { regime, from_ms, ticks } => {
+                    let mut e = base(
+                        "X",
+                        &format!("ff {}", regime.name()),
+                        tr.index,
+                        from_ms * 1000.0,
+                    );
+                    e.push(("dur", num((ev.t_ms - from_ms) * 1000.0)));
+                    e.push((
+                        "args",
+                        obj(vec![("ticks", num(*ticks as f64)), energy]),
+                    ));
+                    events.push(obj(e));
+                }
+                _ => {
+                    // Everything else is a thread-scoped instant carrying
+                    // its JSONL payload as args.
+                    let mut e = base("i", ev.kind_name(), tr.index, ts);
+                    e.push(("s", s("t")));
+                    let mut args = ev.to_json();
+                    if let Value::Obj(m) = &mut args {
+                        // kind/t_ms are redundant with name/ts here.
+                        m.remove("kind");
+                        m.remove("t_ms");
+                    }
+                    e.push(("args", args));
+                    events.push(obj(e));
+                }
+            }
+        }
+    }
+    obj(vec![
+        ("displayTimeUnit", s("ms")),
+        ("traceEvents", Value::Arr(events)),
+    ])
+}
+
+/// [`chrome_trace`] serialized to a compact JSON string.
+pub fn chrome_string(traces: &[ScenarioTrace]) -> String {
+    chrome_trace(traces).to_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::FfRegime;
+    use super::*;
+
+    fn sample() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent {
+                t_ms: 0.0,
+                energy_mj: 2.0,
+                kind: EventKind::Boot { outage_ms: 0.0 },
+            },
+            TraceEvent {
+                t_ms: 10.0,
+                energy_mj: 1.9,
+                kind: EventKind::Release { task: 0, job: 0 },
+            },
+            TraceEvent {
+                t_ms: 10.0,
+                energy_mj: 1.9,
+                kind: EventKind::FragmentStart { task: 0, job: 0, unit: 0 },
+            },
+            TraceEvent {
+                t_ms: 15.0,
+                energy_mj: 1.7,
+                kind: EventKind::FragmentEnd { task: 0, job: 0, unit: 0, ok: true },
+            },
+            TraceEvent {
+                t_ms: 115.0,
+                energy_mj: 0.9,
+                kind: EventKind::FastForward {
+                    regime: FfRegime::Off,
+                    from_ms: 15.0,
+                    ticks: 20,
+                },
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_is_one_parseable_object_per_line() {
+        let text = jsonl_string(&sample());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 5);
+        for line in lines {
+            let v = Value::parse(line).expect("jsonl line parses");
+            assert!(v.get("kind").is_some());
+        }
+    }
+
+    #[test]
+    fn chrome_trace_has_balanced_durations_and_valid_phases() {
+        let doc = chrome_trace(&[ScenarioTrace {
+            label: "cell".to_string(),
+            index: 3,
+            events: sample(),
+        }]);
+        let evs = doc.req("traceEvents").arr();
+        // metadata + 5 events
+        assert_eq!(evs.len(), 6);
+        let mut depth = 0i64;
+        for e in evs {
+            let ph = e.req("ph").str();
+            assert!(matches!(ph, "B" | "E" | "X" | "i" | "M"), "bad ph {ph}");
+            match ph {
+                "B" => depth += 1,
+                "E" => {
+                    depth -= 1;
+                    assert!(depth >= 0);
+                }
+                "i" => assert!(e.get("s").is_some(), "instant without scope"),
+                "X" => assert!(e.req("dur").f64() >= 0.0),
+                _ => {}
+            }
+            if ph != "M" {
+                assert_eq!(e.req("tid").f64(), 3.0);
+            }
+        }
+        assert_eq!(depth, 0, "unbalanced B/E");
+        // Fast-forward span: ts = from_ms µs, dur = span µs.
+        let x = evs.iter().find(|e| e.req("ph").str() == "X").unwrap();
+        assert_eq!(x.req("ts").f64(), 15_000.0);
+        assert_eq!(x.req("dur").f64(), 100_000.0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Deterministic telemetry: typed engine event traces and their sinks.
+//!
+//! The sweep engine's headline invariant is that `Metrics` /
+//! `SweepReport::json_string()` are byte-identical across thread counts,
+//! shards, serve workers, and the fast vs. reference steppers. Telemetry
+//! must observe a run without ever joining it, so the contract here is
+//! strict:
+//!
+//! * **Out-of-band.** A [`TraceSink`] only *receives* [`TraceEvent`]s.
+//!   The engine's emission hooks read state (`now_ms`, capacitor energy,
+//!   job ids) and never mutate anything the simulation observes — no RNG
+//!   draws, no `Metrics` writes, no dispatch-path changes. Unlike
+//!   `Engine::probe` (which pins the engine to per-tick stepping so it
+//!   can observe every tick), an attached sink leaves the event-driven
+//!   fast-forward loops fully engaged; bulk replays surface as
+//!   [`EventKind::FastForward`] span events instead of per-tick samples.
+//! * **Zero-cost when disabled.** Every hook is guarded by a single
+//!   `Option` check on `Engine::trace`; with no sink attached nothing is
+//!   constructed. `benches/bench_sweep.rs` measures the enabled-path
+//!   (null sink) overhead against the disabled path and
+//!   `tools/bench_gate.py` gates the ratio — the disabled path does
+//!   strictly less work, so the gate bounds it too.
+//! * **Byte-exactness is enforced**, not assumed:
+//!   `rust/tests/telemetry_trace.rs` runs matrices traced and untraced
+//!   and asserts the report bytes are identical.
+//!
+//! Event timestamps are the engine's true simulated time (`t_ms`), and
+//! every event carries the capacitor energy at emission — the two axes
+//! the paper's timing/overhead analyses (§8) plot everything against.
+//! Exporters (Chrome `trace_event` JSON and line-delimited JSONL) live
+//! in [`export`]; `zygarde trace` / `zygarde sweep --trace-dir` are the
+//! CLI front-ends.
+
+pub mod export;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::util::json::Value;
+
+/// Which event-driven idle loop produced a [`EventKind::FastForward`]
+/// span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FfRegime {
+    /// `Engine::advance_off_phase`: MCU below boot voltage, dark window.
+    Off,
+    /// `Engine::advance_on_phase_idle`: MCU up but starved or idle.
+    OnIdle,
+}
+
+impl FfRegime {
+    pub fn name(self) -> &'static str {
+        match self {
+            FfRegime::Off => "off",
+            FfRegime::OnIdle => "on-idle",
+        }
+    }
+}
+
+/// The typed payload of one engine event. Fragment start/end pairs are
+/// the only duration-shaped events (they never nest: the engine executes
+/// one fragment at a time); everything else is an instant, except
+/// [`EventKind::FastForward`], which is a span *ending* at the event's
+/// `t_ms` and starting at `from_ms`.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// MCU crossed the boot voltage (off → on edge).
+    Boot { outage_ms: f64 },
+    /// MCU browned out (on → off edge); volatile progress died.
+    BrownOut { lost_fragments: u64 },
+    /// One job's uncommitted fragments rolled back at a brown-out
+    /// (emitted per affected job, right after the `BrownOut` instant).
+    Rollback { task: usize, job: u64, lost_fragments: u64 },
+    /// A job entered the queue (sensor event captured and released).
+    Release { task: usize, job: u64 },
+    /// An atomic fragment is about to execute.
+    FragmentStart { task: usize, job: u64, unit: usize },
+    /// The fragment finished (`ok`) or lost its work to a mid-fragment
+    /// power failure (`!ok` — it will re-execute, SONIC-style).
+    FragmentEnd { task: usize, job: u64, unit: usize, ok: bool },
+    /// An NVM commit transaction took effect (`jit`: fired by the
+    /// low-voltage trigger rather than a fragment/unit boundary).
+    Commit { jit: bool, e_mj: f64, t_ms: f64 },
+    /// A post-reboot NVM restore took effect.
+    Restore { e_mj: f64, t_ms: f64 },
+    /// A job left the system with its mandatory part done in time
+    /// (counted in `Metrics::scheduled`).
+    DeadlineMet { task: usize, job: u64 },
+    /// A job left the system late or incomplete
+    /// (counted in `Metrics::deadline_missed`).
+    DeadlineMissed { task: usize, job: u64 },
+    /// The per-tick probe (`Engine::probe`) observed this tick.
+    Probe,
+    /// A bulk fast-forward replayed `ticks` idle ticks in one call; the
+    /// span covers `[from_ms, t_ms]`. No other event can fall strictly
+    /// inside the span — that is exactly what the next-event budget
+    /// proves, and what the well-formedness property test checks.
+    FastForward { regime: FfRegime, from_ms: f64, ticks: u64 },
+}
+
+/// One recorded engine event: payload plus the true simulated time and
+/// the capacitor's stored energy at emission.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub t_ms: f64,
+    pub energy_mj: f64,
+    pub kind: EventKind,
+}
+
+impl TraceEvent {
+    /// Stable machine-readable event-type name (the `kind` field of the
+    /// JSONL form and the event name of the Chrome form).
+    pub fn kind_name(&self) -> &'static str {
+        match self.kind {
+            EventKind::Boot { .. } => "boot",
+            EventKind::BrownOut { .. } => "brown_out",
+            EventKind::Rollback { .. } => "rollback",
+            EventKind::Release { .. } => "release",
+            EventKind::FragmentStart { .. } => "fragment_start",
+            EventKind::FragmentEnd { .. } => "fragment_end",
+            EventKind::Commit { .. } => "commit",
+            EventKind::Restore { .. } => "restore",
+            EventKind::DeadlineMet { .. } => "deadline_met",
+            EventKind::DeadlineMissed { .. } => "deadline_missed",
+            EventKind::Probe => "probe",
+            EventKind::FastForward { .. } => "fast_forward",
+        }
+    }
+
+    /// Flat JSON object: `kind`, `t_ms`, `energy_mj`, plus the payload
+    /// fields of the variant. This is the JSONL line schema.
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        let mut num = |m: &mut BTreeMap<String, Value>, k: &str, v: f64| {
+            m.insert(k.to_string(), Value::Num(v));
+        };
+        m.insert("kind".to_string(), Value::Str(self.kind_name().to_string()));
+        num(&mut m, "t_ms", self.t_ms);
+        num(&mut m, "energy_mj", self.energy_mj);
+        match &self.kind {
+            EventKind::Boot { outage_ms } => num(&mut m, "outage_ms", *outage_ms),
+            EventKind::BrownOut { lost_fragments } => {
+                num(&mut m, "lost_fragments", *lost_fragments as f64)
+            }
+            EventKind::Rollback { task, job, lost_fragments } => {
+                num(&mut m, "task", *task as f64);
+                num(&mut m, "job", *job as f64);
+                num(&mut m, "lost_fragments", *lost_fragments as f64);
+            }
+            EventKind::Release { task, job }
+            | EventKind::DeadlineMet { task, job }
+            | EventKind::DeadlineMissed { task, job } => {
+                num(&mut m, "task", *task as f64);
+                num(&mut m, "job", *job as f64);
+            }
+            EventKind::FragmentStart { task, job, unit } => {
+                num(&mut m, "task", *task as f64);
+                num(&mut m, "job", *job as f64);
+                num(&mut m, "unit", *unit as f64);
+            }
+            EventKind::FragmentEnd { task, job, unit, ok } => {
+                num(&mut m, "task", *task as f64);
+                num(&mut m, "job", *job as f64);
+                num(&mut m, "unit", *unit as f64);
+                m.insert("ok".to_string(), Value::Bool(*ok));
+            }
+            EventKind::Commit { jit, e_mj, t_ms } => {
+                m.insert("jit".to_string(), Value::Bool(*jit));
+                num(&mut m, "e_mj", *e_mj);
+                num(&mut m, "cost_ms", *t_ms);
+            }
+            EventKind::Restore { e_mj, t_ms } => {
+                num(&mut m, "e_mj", *e_mj);
+                num(&mut m, "cost_ms", *t_ms);
+            }
+            EventKind::Probe => {}
+            EventKind::FastForward { regime, from_ms, ticks } => {
+                m.insert("regime".to_string(), Value::Str(regime.name().to_string()));
+                num(&mut m, "from_ms", *from_ms);
+                num(&mut m, "ticks", *ticks as f64);
+            }
+        }
+        Value::Obj(m)
+    }
+}
+
+/// Receives engine events. Implementations must be passive observers —
+/// the engine's byte-exactness contract assumes `record` has no way to
+/// influence the simulation (it gets the event by value and nothing
+/// else).
+pub trait TraceSink {
+    fn record(&mut self, ev: TraceEvent);
+}
+
+/// In-memory sink with a shared handle: clone it, hand one clone to the
+/// engine (`engine.trace = Some(Box::new(buf.clone()))`), and [`take`]
+/// the recorded events from the other after `Engine::run` consumed the
+/// engine (and with it, the boxed clone).
+///
+/// [`take`]: TraceBuffer::take
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuffer {
+    events: Rc<RefCell<Vec<TraceEvent>>>,
+}
+
+impl TraceBuffer {
+    pub fn new() -> TraceBuffer {
+        TraceBuffer::default()
+    }
+
+    /// Drain and return everything recorded so far.
+    pub fn take(&self) -> Vec<TraceEvent> {
+        self.events.borrow_mut().split_off(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl TraceSink for TraceBuffer {
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.borrow_mut().push(ev);
+    }
+}
+
+/// Sink that counts events and drops them — the bench harness's probe
+/// for the enabled-path overhead (hook firing + event construction,
+/// none of the storage).
+#[derive(Clone, Debug)]
+pub struct CountingSink {
+    count: Rc<Cell<u64>>,
+}
+
+impl CountingSink {
+    pub fn new(count: Rc<Cell<u64>>) -> CountingSink {
+        CountingSink { count }
+    }
+}
+
+impl TraceSink for CountingSink {
+    fn record(&mut self, _ev: TraceEvent) {
+        self.count.set(self.count.get() + 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_buffer_records_through_a_cloned_handle() {
+        let buf = TraceBuffer::new();
+        let mut sink: Box<dyn TraceSink> = Box::new(buf.clone());
+        sink.record(TraceEvent {
+            t_ms: 5.0,
+            energy_mj: 1.25,
+            kind: EventKind::Boot { outage_ms: 100.0 },
+        });
+        sink.record(TraceEvent {
+            t_ms: 10.0,
+            energy_mj: 1.0,
+            kind: EventKind::Release { task: 0, job: 3 },
+        });
+        assert_eq!(buf.len(), 2);
+        let evs = buf.take();
+        assert!(buf.is_empty());
+        assert_eq!(evs[0].kind_name(), "boot");
+        assert_eq!(evs[1].kind_name(), "release");
+    }
+
+    #[test]
+    fn jsonl_schema_carries_kind_and_payload() {
+        let ev = TraceEvent {
+            t_ms: 40.0,
+            energy_mj: 0.5,
+            kind: EventKind::FragmentEnd { task: 1, job: 9, unit: 2, ok: false },
+        };
+        let v = ev.to_json();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("fragment_end"));
+        assert_eq!(v.get("t_ms").unwrap().as_f64(), Some(40.0));
+        assert_eq!(v.get("unit").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn counting_sink_counts() {
+        let n = Rc::new(Cell::new(0u64));
+        let mut sink = CountingSink::new(n.clone());
+        for i in 0..7 {
+            sink.record(TraceEvent {
+                t_ms: i as f64,
+                energy_mj: 0.0,
+                kind: EventKind::Probe,
+            });
+        }
+        assert_eq!(n.get(), 7);
+    }
+}

@@ -1,0 +1,260 @@
+//! Telemetry contract suite: traced and untraced runs are byte-identical,
+//! and the traces themselves are well-formed.
+//!
+//! The first half pins the tentpole guarantee — attaching a `TraceSink`
+//! must not perturb the simulation (no RNG draws, no `Metrics` writes,
+//! no dispatch-path changes), proven by `SweepReport::json_string()`
+//! equality over a matrix that exercises both harvest regimes, brown-out
+//! injection, JIT commits, and a skewed CHRT clock. The second half is a
+//! property test over the recorded event streams: timestamps are
+//! monotone, fragment start/end pairs alternate and balance, bulk
+//! fast-forward spans tile exactly the gaps between surrounding events,
+//! power edges alternate, and every counted event class reconciles with
+//! the run's `Metrics` — the trace is a faithful journal, not a sample.
+
+use zygarde::clock::{ChrtTier, ClockSpec};
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::energy::harvester::HarvesterKind;
+use zygarde::nvm::NvmSpec;
+use zygarde::sim::sweep::{
+    run_matrix, run_scenario, run_scenario_traced, FaultPlan, HarvesterSpec, ScenarioMatrix,
+    SweepReport,
+};
+use zygarde::sim::Metrics;
+use zygarde::telemetry::export::{chrome_string, jsonl_string, ScenarioTrace};
+use zygarde::telemetry::{EventKind, TraceEvent};
+use zygarde::util::json::Value;
+
+/// A deliberately hostile little matrix: a bursty RF harvester and a
+/// steady piezo one, a capacitor small enough to brown out under load,
+/// ideal and JIT-voltage NVM policies, and a fault plan layering
+/// periodic forced outages over a Tier-3 CHRT clock's post-reboot skew.
+/// Every event kind the engine can emit occurs somewhere in this grid.
+fn mixed_matrix(seed: u64) -> ScenarioMatrix {
+    ScenarioMatrix::new("telemetry-mix", seed)
+        .harvesters(vec![
+            HarvesterSpec::Markov {
+                kind: HarvesterKind::Rf,
+                on_power_mw: 60.0,
+                q: 0.92,
+                duty: 0.25,
+                eta: 0.4,
+            },
+            HarvesterSpec::Piezo { eta: 0.3 },
+        ])
+        .capacitors_mf(vec![5.0])
+        .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+        .nvms(vec![NvmSpec::ideal(), NvmSpec::fram_jit()])
+        .faults(vec![
+            FaultPlan::none(),
+            FaultPlan::none()
+                .with_brownouts(9_000.0, 1_500.0, 2_000.0)
+                .with_clock(ClockSpec::Chrt(ChrtTier::Tier3)),
+        ])
+        .reps(1)
+        .duration_ms(60_000.0)
+}
+
+#[test]
+fn tracing_does_not_change_report_bytes() {
+    let m = mixed_matrix(0x7E1E);
+    let untraced = run_matrix(&m, 2).json_string();
+    let mut cells = Vec::new();
+    let mut total_events = 0usize;
+    for sc in m.expand() {
+        let (cell, events) = run_scenario_traced(&sc);
+        total_events += events.len();
+        cells.push(cell);
+    }
+    let traced = SweepReport::new(&m.name, m.seed, cells).json_string();
+    assert!(total_events > 0, "traced runs recorded nothing");
+    assert_eq!(
+        untraced, traced,
+        "attaching a trace sink changed the report bytes — telemetry is in-band"
+    );
+}
+
+/// Walk one scenario's event stream and enforce every structural
+/// invariant plus the `Metrics` reconciliation.
+fn check_trace(label: &str, events: &[TraceEvent], m: &Metrics) {
+    let mut prev_t = f64::NEG_INFINITY;
+    // (task, job, unit) of the currently-open fragment, if any.
+    let mut open_frag: Option<(usize, u64, usize)> = None;
+    // Some(true) after a Boot, Some(false) after a BrownOut.
+    let mut powered: Option<bool> = None;
+    let (mut frag_starts, mut frag_fails) = (0u64, 0u64);
+    let (mut releases, mut met, mut missed) = (0u64, 0u64, 0u64);
+    let (mut commits, mut jit_commits, mut restores) = (0u64, 0u64, 0u64);
+    let (mut brownout_lost, mut rollback_lost) = (0u64, 0u64);
+    for ev in events {
+        assert!(
+            ev.t_ms >= prev_t,
+            "{label}: t_ms went backwards ({} after {prev_t})",
+            ev.t_ms
+        );
+        match &ev.kind {
+            EventKind::FragmentStart { task, job, unit } => {
+                assert!(
+                    open_frag.is_none(),
+                    "{label}: fragment started inside fragment {open_frag:?}"
+                );
+                open_frag = Some((*task, *job, *unit));
+                frag_starts += 1;
+            }
+            EventKind::FragmentEnd { task, job, unit, ok } => {
+                assert_eq!(
+                    open_frag,
+                    Some((*task, *job, *unit)),
+                    "{label}: fragment end does not match the open fragment"
+                );
+                open_frag = None;
+                if !ok {
+                    frag_fails += 1;
+                }
+            }
+            EventKind::FastForward { from_ms, ticks, .. } => {
+                assert!(*ticks > 0, "{label}: empty fast-forward span");
+                assert!(
+                    *from_ms <= ev.t_ms,
+                    "{label}: fast-forward span ends before it starts"
+                );
+                // Emissions happen only outside bulk blocks, so a span
+                // starting at or after the previous event's timestamp
+                // means no event ever falls strictly inside a span —
+                // spans exactly tile the engine's idle gaps.
+                assert!(
+                    *from_ms >= prev_t,
+                    "{label}: fast-forward span [{from_ms}, {}] swallows the \
+                     event at {prev_t}",
+                    ev.t_ms
+                );
+            }
+            EventKind::Boot { .. } => {
+                assert_ne!(powered, Some(true), "{label}: two boots without a brown-out");
+                powered = Some(true);
+            }
+            EventKind::BrownOut { lost_fragments } => {
+                assert_ne!(powered, Some(false), "{label}: two brown-outs without a boot");
+                powered = Some(false);
+                brownout_lost += lost_fragments;
+            }
+            EventKind::Rollback { lost_fragments, .. } => {
+                assert!(*lost_fragments > 0, "{label}: empty rollback event");
+                rollback_lost += lost_fragments;
+            }
+            EventKind::Release { .. } => releases += 1,
+            EventKind::DeadlineMet { .. } => met += 1,
+            EventKind::DeadlineMissed { .. } => missed += 1,
+            EventKind::Commit { jit, .. } => {
+                commits += 1;
+                if *jit {
+                    jit_commits += 1;
+                }
+            }
+            EventKind::Restore { .. } => restores += 1,
+            EventKind::Probe => {
+                panic!("{label}: probe event recorded with no probe attached")
+            }
+        }
+        prev_t = ev.t_ms;
+    }
+    assert!(open_frag.is_none(), "{label}: fragment still open at end of run");
+    // Every counted event class reconciles with the run's Metrics. A
+    // released job that was queue-dropped never materializes, so it has
+    // no Release event.
+    assert_eq!(frag_starts, m.fragments, "{label}: fragment starts vs metrics");
+    assert_eq!(frag_fails, m.refragments, "{label}: failed fragments vs metrics");
+    assert_eq!(
+        releases,
+        m.released - m.queue_dropped,
+        "{label}: releases vs metrics"
+    );
+    assert_eq!(met, m.scheduled, "{label}: deadlines met vs metrics");
+    assert_eq!(missed, m.deadline_missed, "{label}: deadlines missed vs metrics");
+    assert_eq!(commits, m.commits, "{label}: commits vs metrics");
+    assert_eq!(jit_commits, m.jit_commits, "{label}: JIT commits vs metrics");
+    assert_eq!(restores, m.restores, "{label}: restores vs metrics");
+    assert_eq!(brownout_lost, m.lost_fragments, "{label}: lost fragments vs metrics");
+    assert_eq!(
+        rollback_lost, brownout_lost,
+        "{label}: per-job rollbacks do not sum to the brown-out totals"
+    );
+}
+
+#[test]
+fn traces_are_well_formed_across_randomized_matrices() {
+    let mut checked = 0usize;
+    let mut nonempty = 0usize;
+    for seed in [0xA11CEu64, 0x5EED2, 0xD00DAD] {
+        let m = mixed_matrix(seed);
+        for sc in m.expand() {
+            let (cell, events) = run_scenario_traced(&sc);
+            if !events.is_empty() {
+                nonempty += 1;
+            }
+            check_trace(&cell.label, &events, &cell.metrics);
+            checked += 1;
+        }
+    }
+    assert!(checked >= 48, "matrix shrank: only {checked} cells checked");
+    assert!(nonempty * 2 > checked, "most traces were empty — hooks are dead");
+}
+
+#[test]
+fn traced_cell_metrics_match_untraced_cell_by_cell() {
+    let m = mixed_matrix(0xCAFE);
+    for sc in m.expand().into_iter().take(4) {
+        let plain = run_scenario(&sc);
+        let (traced, _) = run_scenario_traced(&sc);
+        assert_eq!(
+            plain.metrics.to_json().to_json(),
+            traced.metrics.to_json().to_json(),
+            "{}: tracing changed the cell metrics",
+            plain.label
+        );
+    }
+}
+
+#[test]
+fn exporters_emit_valid_chrome_and_jsonl() {
+    let m = mixed_matrix(0xE49);
+    let scenarios = m.expand();
+    let sc = &scenarios[0];
+    let (cell, events) = run_scenario_traced(sc);
+    assert!(!events.is_empty(), "{}: no events to export", cell.label);
+
+    // JSONL: one parseable object per line, each with a kind.
+    let jsonl = jsonl_string(&events);
+    let lines: Vec<&str> = jsonl.lines().collect();
+    assert_eq!(lines.len(), events.len());
+    for line in &lines {
+        let v = Value::parse(line).expect("jsonl line parses");
+        assert!(v.get("kind").and_then(|k| k.as_str()).is_some());
+    }
+
+    // Chrome: parseable, valid phases, balanced B/E, spans well-formed.
+    let doc = Value::parse(&chrome_string(&[ScenarioTrace {
+        label: cell.label.clone(),
+        index: sc.index,
+        events,
+    }]))
+    .expect("chrome trace parses");
+    let evs = doc.req("traceEvents").arr();
+    assert!(!evs.is_empty());
+    let mut depth = 0i64;
+    for e in evs {
+        let ph = e.req("ph").str();
+        assert!(matches!(ph, "B" | "E" | "X" | "i" | "M"), "bad ph {ph}");
+        match ph {
+            "B" => depth += 1,
+            "E" => {
+                depth -= 1;
+                assert!(depth >= 0, "E without open B");
+            }
+            "X" => assert!(e.req("dur").f64() >= 0.0),
+            "i" => assert_eq!(e.req("s").str(), "t"),
+            _ => {}
+        }
+    }
+    assert_eq!(depth, 0, "unbalanced B/E pairs");
+}

@@ -32,11 +32,19 @@ workload with ``scenarios`` and ``duration_ms`` — a row lacking either
 is a hard error, because without them a silent bench-workload change
 could keep a stale floor "passing" against a different matrix.
 
+The ``trace`` rows are gated like the offphase floors — unconditionally,
+provisional or not. Each baseline row pins its workload and carries a
+``max_overhead``: the measured wall-clock ratio of a traced run (null
+sink attached — strictly more work than the disabled path) to an
+untraced run of the same matrix, again a within-run ratio needing no
+committed absolutes. A current overhead above the ceiling fails: it
+means the telemetry layer's disabled path is no longer ~free.
+
 ``--self-test`` runs the gate against built-in synthetic documents
 covering every verdict (pass, floor breach, disarmed floor, missing
-workload keys, drift, provisional, throughput drop) and exits nonzero if
-any scenario produces the wrong verdict — cheap CI insurance that the
-gate itself cannot rot into a silent no-op.
+workload keys, drift, provisional, throughput drop, trace-overhead
+breach) and exits nonzero if any scenario produces the wrong verdict —
+cheap CI insurance that the gate itself cannot rot into a silent no-op.
 """
 
 import argparse
@@ -44,6 +52,7 @@ import json
 import sys
 
 OFFPHASE_WORKLOAD_KEYS = ("scenarios", "duration_ms")
+TRACE_WORKLOAD_KEYS = ("scenarios", "duration_ms")
 
 
 def rows(doc):
@@ -124,11 +133,72 @@ def check_offphase_speedups(cur, base):
     return failures
 
 
+def check_trace_overhead(cur, base):
+    """Enforce each baseline trace row's max_overhead ceiling (armed
+    regardless of the provisional flag: like the offphase floors it is a
+    within-run ratio). The same hard errors apply — a baseline row
+    without max_overhead or the workload keys, workload drift, a missing
+    current row, or a current row without a measured overhead all fail
+    loudly rather than silently disarm the gate. Returns failures."""
+    current = {r["matrix"]: r for r in cur.get("trace", [])}
+    failures = []
+    for row in base.get("trace", []):
+        name, ceiling = row["matrix"], row.get("max_overhead")
+        if ceiling is None:
+            print(f"trace    {name:<16} baseline row has no max_overhead")
+            failures.append(
+                f"trace {name}: baseline row lacks max_overhead — keep the "
+                f"ceiling when promoting a measured BENCH_sweep.json")
+            continue
+        unpinned = [k for k in TRACE_WORKLOAD_KEYS if k not in row]
+        if unpinned:
+            print(f"trace    {name:<16} baseline row missing workload keys "
+                  f"{unpinned}")
+            failures.append(
+                f"trace {name}: baseline row lacks {unpinned} — every "
+                f"ceiling must pin its workload so drift cannot pass unseen")
+            continue
+        got = current.get(name)
+        if got is None:
+            print(f"trace    {name:<16} overhead ceiling {ceiling:.2f}x "
+                  f"{'missing':>12}")
+            failures.append(f"trace {name}: row missing from current run")
+            continue
+        drifted = [k for k in TRACE_WORKLOAD_KEYS
+                   if row.get(k) != got.get(k)]
+        if drifted:
+            print(f"trace    {name:<16} workload drifted on {drifted} "
+                  f"(baseline {[row.get(k) for k in drifted]} vs current "
+                  f"{[got.get(k) for k in drifted]})")
+            failures.append(
+                f"trace {name}: bench workload drifted on {drifted} — the "
+                f"ceiling is not comparable; update the baseline row "
+                f"alongside the bench change")
+            continue
+        overhead = got.get("overhead")
+        if overhead is None:
+            print(f"trace    {name:<16} current row has no measured overhead")
+            failures.append(
+                f"trace {name}: current row lacks `overhead` — the bench "
+                f"must measure traced vs untraced on every gated matrix")
+            continue
+        flag = "" if overhead <= ceiling else "  << ABOVE CEILING"
+        print(f"trace    {name:<16} overhead ceiling {ceiling:.2f}x "
+              f"measured {overhead:6.3f}x{flag}")
+        if overhead > ceiling:
+            failures.append(
+                f"trace {name}: telemetry overhead {overhead:.3f}x exceeded "
+                f"the {ceiling:.2f}x ceiling")
+    return failures
+
+
 def run_gate(cur, base, max_drop):
     """Gate `cur` against `base`; returns the process exit code."""
-    # The offphase speedup floors are workload- and machine-independent:
-    # check them first, and unconditionally.
+    # The offphase speedup floors and trace overhead ceilings are
+    # workload- and machine-independent: check them first, and
+    # unconditionally.
     off_failures = check_offphase_speedups(cur, base)
+    off_failures += check_trace_overhead(cur, base)
 
     mismatch = [k for k in ("scenarios", "duration_ms", "reps")
                 if cur.get(k) != base.get(k)]
@@ -169,7 +239,8 @@ def run_gate(cur, base, max_drop):
         print(f"bench-gate: FAIL: {'; '.join(failures)}", file=sys.stderr)
         return 1
     print(f"bench-gate: OK — no row dropped more than {max_drop:.0%} "
-          f"below baseline and every offphase speedup floor held")
+          f"below baseline, every offphase speedup floor held, and every "
+          f"trace overhead ceiling held")
     return 0
 
 
@@ -186,12 +257,25 @@ def self_test():
             row.pop(k, None)
         return row
 
-    def doc(offphase, threads=(), workload=(64, 4000.0, 1), provisional=False):
+    def trace_row(name, overhead=None, ceiling=None, scenarios=24,
+                  duration=4000.0, drop_keys=()):
+        row = {"matrix": name, "scenarios": scenarios, "duration_ms": duration}
+        if overhead is not None:
+            row["overhead"] = overhead
+        if ceiling is not None:
+            row["max_overhead"] = ceiling
+        for k in drop_keys:
+            row.pop(k, None)
+        return row
+
+    def doc(offphase, threads=(), workload=(64, 4000.0, 1), provisional=False,
+            trace=()):
         d = {"scenarios": workload[0], "duration_ms": workload[1],
              "reps": workload[2],
              "threads": [{"threads": t, "scenarios_per_s": s}
                          for (t, s) in threads],
-             "offphase": offphase}
+             "offphase": offphase,
+             "trace": list(trace)}
         if provisional:
             d["provisional"] = True
         return d
@@ -249,6 +333,41 @@ def self_test():
          doc([off_row("rf", floor=2.0)], threads=[(1, 100.0)],
              workload=(64, 4000.0, 1)),
          0),
+        ("trace overhead under the ceiling passes",
+         doc([], trace=[trace_row("bench", overhead=1.005)]),
+         doc([], trace=[trace_row("bench", ceiling=1.02)]),
+         0),
+        ("trace overhead breach fails even against a provisional baseline",
+         doc([], trace=[trace_row("bench", overhead=1.09)]),
+         doc([], trace=[trace_row("bench", ceiling=1.02)], provisional=True),
+         1),
+        ("baseline trace row without max_overhead is a hard error",
+         doc([], trace=[trace_row("bench", overhead=1.0)]),
+         doc([], trace=[trace_row("bench")]),
+         1),
+        ("baseline trace row without workload keys is a hard error",
+         doc([], trace=[trace_row("bench", overhead=1.0)]),
+         doc([], trace=[trace_row("bench", ceiling=1.02,
+                                  drop_keys=("duration_ms",))]),
+         1),
+        ("trace workload drift is a hard error",
+         doc([], trace=[trace_row("bench", overhead=1.0, scenarios=96)]),
+         doc([], trace=[trace_row("bench", ceiling=1.02, scenarios=24)]),
+         1),
+        ("trace row missing from the current run is a hard error",
+         doc([], trace=[]),
+         doc([], trace=[trace_row("bench", ceiling=1.02)]),
+         1),
+        ("current trace row without a measured overhead is a hard error",
+         doc([], trace=[trace_row("bench")]),
+         doc([], trace=[trace_row("bench", ceiling=1.02)]),
+         1),
+        ("trace ceilings stay armed across a workload mismatch",
+         doc([], trace=[trace_row("bench", overhead=1.09)],
+             workload=(8, 1000.0, 1)),
+         doc([], trace=[trace_row("bench", ceiling=1.02)],
+             workload=(64, 4000.0, 1)),
+         1),
     ]
     bad = 0
     for name, cur, base, want in cases:

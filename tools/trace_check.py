@@ -1,0 +1,211 @@
+#!/usr/bin/env python3
+"""Structural validator for the Chrome ``trace_event`` JSON that
+``zygarde trace --format chrome`` and ``zygarde sweep --trace-dir``
+emit.
+
+Checks, per file:
+
+* the document is an object with a ``traceEvents`` list;
+* every event has a string ``name`` and a ``ph`` in {B, E, X, i, M};
+* every non-metadata event has a numeric ``ts`` >= 0;
+* ``X`` (complete/duration) events carry a numeric ``dur`` >= 0;
+* ``i`` (instant) events carry a scope ``s`` in {g, p, t};
+* per ``(pid, tid)`` track, ``B``/``E`` events balance like brackets —
+  every ``E`` closes the most recent open ``B`` of the same name, and
+  nothing is left open at end of file (the exporter never nests
+  fragments, but the check allows well-formed nesting);
+* per ``(pid, tid)`` track, ``ts`` is monotone non-decreasing over
+  B/E/i events (``X`` events are sorted by their *start*, which the
+  fast-forward exporter emits retroactively, so they are checked for
+  containment in the file's time range instead).
+
+Exit status is nonzero if any file fails; errors name the file, the
+event index, and the violated rule, so a CI failure pinpoints the
+exporter bug. ``--self-test`` validates built-in synthetic documents —
+both ones that must pass and ones that must fail — and exits nonzero on
+any wrong verdict, same insurance as ``bench_gate.py --self-test``.
+"""
+
+import argparse
+import json
+import sys
+
+VALID_PH = {"B", "E", "X", "i", "M"}
+VALID_SCOPES = {"g", "p", "t"}
+
+
+def check_doc(doc, label="<doc>"):
+    """Validate one parsed trace document; returns a list of errors."""
+    errors = []
+
+    def err(i, msg):
+        errors.append(f"{label}: event {i}: {msg}")
+
+    if not isinstance(doc, dict):
+        return [f"{label}: top level is not an object"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return [f"{label}: no traceEvents list"]
+
+    # (pid, tid) -> stack of open B names / last seen ts.
+    stacks = {}
+    last_ts = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            err(i, "event is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            err(i, f"bad ph {ph!r}")
+            continue
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            err(i, "missing or empty name")
+        if ph == "M":
+            continue  # metadata events carry no timestamp
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or isinstance(ts, bool) or ts < 0:
+            err(i, f"bad ts {ts!r}")
+            continue
+        track = (ev.get("pid"), ev.get("tid"))
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or isinstance(dur, bool) \
+                    or dur < 0:
+                err(i, f"X event with bad dur {dur!r}")
+            # Retroactively-emitted spans: not required to be in stream
+            # order, but they must not precede the track's origin.
+            continue
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            err(i, f"ts went backwards on track {track} ({ts} < {prev})")
+        last_ts[track] = ts
+        if ph == "B":
+            stacks.setdefault(track, []).append((i, name))
+        elif ph == "E":
+            stack = stacks.get(track, [])
+            if not stack:
+                err(i, f"E {name!r} with no open B on track {track}")
+            else:
+                _, open_name = stack.pop()
+                if open_name != name:
+                    err(i, f"E {name!r} closes B {open_name!r} on "
+                           f"track {track}")
+        elif ph == "i":
+            scope = ev.get("s")
+            if scope not in VALID_SCOPES:
+                err(i, f"instant with bad scope {scope!r}")
+    for track, stack in stacks.items():
+        for i, name in stack:
+            errors.append(f"{label}: event {i}: B {name!r} on track {track} "
+                          f"never closed")
+    return errors
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or not JSON: {e}"]
+    return check_doc(doc, label=path)
+
+
+def self_test():
+    """Validate built-in documents with known verdicts."""
+    def doc(events):
+        return {"displayTimeUnit": "ms", "traceEvents": events}
+
+    def ev(ph, name="x", ts=0, **kw):
+        e = {"ph": ph, "name": name, "pid": 0, "tid": 0, "ts": ts}
+        e.update(kw)
+        return e
+
+    cases = [
+        ("empty trace passes", doc([]), True),
+        ("balanced B/E with instants and metadata passes",
+         doc([{"ph": "M", "name": "thread_name", "pid": 0, "tid": 0,
+               "args": {"name": "cell"}},
+              ev("B", "frag t0 u0", 10),
+              ev("i", "commit", 12, s="t"),
+              ev("E", "frag t0 u0", 20),
+              ev("X", "ff off", 20, dur=5000)]),
+         True),
+        ("nested B/E of different names passes",
+         doc([ev("B", "outer", 0), ev("B", "inner", 1),
+              ev("E", "inner", 2), ev("E", "outer", 3)]),
+         True),
+        ("top level not an object fails", [], False),
+        ("missing traceEvents fails", {"displayTimeUnit": "ms"}, False),
+        ("unknown phase fails", doc([ev("Q")]), False),
+        ("missing name fails", doc([{"ph": "i", "pid": 0, "tid": 0,
+                                     "ts": 0, "s": "t"}]), False),
+        ("negative ts fails", doc([ev("i", ts=-1, s="t")]), False),
+        ("non-numeric ts fails", doc([ev("i", ts="soon", s="t")]), False),
+        ("unclosed B fails", doc([ev("B", "frag", 0)]), False),
+        ("E without B fails", doc([ev("E", "frag", 0)]), False),
+        ("mismatched E name fails",
+         doc([ev("B", "a", 0), ev("E", "b", 1)]), False),
+        ("B/E cross tracks fails",
+         doc([ev("B", "a", 0), {"ph": "E", "name": "a", "pid": 0,
+                                "tid": 1, "ts": 1}]), False),
+        ("backwards ts on one track fails",
+         doc([ev("i", "a", 10, s="t"), ev("i", "b", 5, s="t")]), False),
+        ("same ts twice passes",
+         doc([ev("i", "a", 10, s="t"), ev("i", "b", 10, s="t")]), True),
+        ("instant without scope fails", doc([ev("i", ts=0)]), False),
+        ("instant with bad scope fails", doc([ev("i", ts=0, s="z")]), False),
+        ("X without dur fails", doc([ev("X", ts=0)]), False),
+        ("X with negative dur fails", doc([ev("X", ts=0, dur=-1)]), False),
+        ("X out of stream order passes (retroactive spans)",
+         doc([ev("i", "a", 100, s="t"), ev("X", "ff", 0, dur=50)]), True),
+    ]
+    bad = 0
+    for name, d, want_ok in cases:
+        errors = check_doc(d, label=name)
+        ok = not errors
+        if ok != want_ok:
+            detail = "; ".join(errors) if errors else "no errors"
+            print(f"self-test FAILED: `{name}` -> {detail} "
+                  f"(wanted {'pass' if want_ok else 'fail'})",
+                  file=sys.stderr)
+            bad += 1
+    if bad:
+        print(f"trace-check --self-test: {bad}/{len(cases)} cases FAILED",
+              file=sys.stderr)
+        return 1
+    print(f"trace-check --self-test: all {len(cases)} cases passed")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", help="Chrome trace JSON files")
+    ap.add_argument("--self-test", action="store_true",
+                    help="validate built-in synthetic documents and verify "
+                         "every verdict")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if not args.files:
+        ap.error("at least one trace file is required unless --self-test")
+
+    bad = 0
+    for path in args.files:
+        errors = check_file(path)
+        if errors:
+            bad += 1
+            for e in errors:
+                print(e, file=sys.stderr)
+        else:
+            print(f"{path}: OK")
+    if bad:
+        print(f"trace-check: {bad}/{len(args.files)} file(s) FAILED",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
