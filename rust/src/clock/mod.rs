@@ -13,6 +13,8 @@
 
 use crate::util::rng::Pcg32;
 
+pub mod wall;
+
 pub trait Clock {
     /// The time the scheduler believes it is, given true time `t_ms`.
     ///

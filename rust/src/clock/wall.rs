@@ -1,0 +1,104 @@
+//! Host wall-clock abstraction for the serve layer.
+//!
+//! Not to be confused with this module's parent [`super::Clock`], which
+//! models the *scheduler's* notion of simulated time inside a scenario
+//! (RTC vs. CHRT remanence clocks, §7/§8.7). [`WallClock`] is about the
+//! *dispatcher process*: lease timeouts, heartbeats, and the
+//! lease-latency histogram all need "how many milliseconds has this
+//! serve been running", and reading `Instant::now()` inline made those
+//! paths untestable without sleeping and non-deterministic under
+//! tracing. The IO shell takes a `Box<dyn WallClock>` instead:
+//!
+//! * [`SystemClock`] — the production clock: monotonic milliseconds
+//!   since construction (`Instant`-backed).
+//! * [`ManualClock`] — a hand-cranked clock for tests and the simnet
+//!   harness: shared-handle `set`/`advance`, no real waiting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Milliseconds elapsed on the dispatcher's own clock. Implementations
+/// must be monotone non-decreasing.
+pub trait WallClock: Send {
+    fn now_ms(&self) -> u64;
+}
+
+/// Monotonic wall time in milliseconds since the clock was created.
+pub struct SystemClock {
+    t0: Instant,
+}
+
+impl SystemClock {
+    pub fn new() -> SystemClock {
+        SystemClock { t0: Instant::now() }
+    }
+}
+
+impl Default for SystemClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WallClock for SystemClock {
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+}
+
+/// A clock that only moves when told to. Clones share the same time
+/// cell, so a test can hold one handle while the code under test holds
+/// the other (boxed) one.
+#[derive(Clone)]
+pub struct ManualClock {
+    ms: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    pub fn new(start_ms: u64) -> ManualClock {
+        ManualClock { ms: Arc::new(AtomicU64::new(start_ms)) }
+    }
+
+    /// Jump to an absolute time. Callers are responsible for keeping the
+    /// clock monotone (the trait contract).
+    pub fn set(&self, ms: u64) {
+        self.ms.store(ms, Ordering::SeqCst);
+    }
+
+    pub fn advance(&self, delta_ms: u64) {
+        self.ms.fetch_add(delta_ms, Ordering::SeqCst);
+    }
+}
+
+impl WallClock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.ms.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_clock_is_monotone_and_starts_near_zero() {
+        let c = SystemClock::new();
+        let a = c.now_ms();
+        let b = c.now_ms();
+        assert!(a <= b);
+        assert!(a < 60_000, "a fresh clock should read ~0, got {a}");
+    }
+
+    #[test]
+    fn manual_clock_shares_time_across_handles() {
+        let c = ManualClock::new(5);
+        let handle = c.clone();
+        let boxed: Box<dyn WallClock> = Box::new(c);
+        assert_eq!(boxed.now_ms(), 5);
+        handle.advance(95);
+        assert_eq!(boxed.now_ms(), 100);
+        handle.set(250);
+        assert_eq!(boxed.now_ms(), 250);
+    }
+}

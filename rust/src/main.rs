@@ -71,6 +71,19 @@ streaming execution (work-stealing dispatcher, out-of-core merge):
                  `-` speaks the protocol on stdin/stdout (what
                  `serve --workers N` spawns); HOST:PORT joins over TCP
 
+deterministic simulation (single thread, virtual clock, no sockets):
+  simtest        run a whole serve campaign over a seeded simulated
+                 network — latency, reordering, duplication, drops,
+                 partitions, worker crashes — and verify the streamed
+                 report is byte-identical to the single-process sweep
+                 [--seed N --workers N --faults SPEC|none --lease N
+                  --lease-timeout-ms X --spill-cells N --threads N
+                  --out report.json --log events.log
+                  + the sweep matrix flags (--reps/--duration-ms/...)]
+                 same seed -> same run, byte for byte; on failure prints
+                 the one-line seed entry to commit under
+                 rust/tests/seeds/serve/ as a permanent regression
+
 common flags: --seed N (default 7), --jobs N, --dataset NAME
 ";
 
@@ -158,6 +171,7 @@ fn main() {
         "merge" => run_merge(&args),
         "serve" => run_serve(&args, seed),
         "work" => run_work(&args),
+        "simtest" => run_simtest(&args, seed),
         "infer" => run_infer(&args),
         "all" => run_all(seed, &args),
         other => {
@@ -379,6 +393,83 @@ fn run_serve(args: &Args, seed: u64) {
             die(&format!("serve failed after dispatching over {n} cells: {e}"));
         }
     }
+}
+
+/// `zygarde simtest`: one campaign over the simulated network. Exit 0
+/// means the streamed report matched the single-process bytes (and the
+/// event log is a pure function of the seed); exit 1 prints everything
+/// needed to reproduce and to commit the seed as a regression.
+fn run_simtest(args: &Args, seed: u64) {
+    use zygarde::sim::sweep::serve::simnet::{run_campaign, FaultSpec, SimConfig};
+    let (name, _, matrix) = matrix_from_flags(args, seed);
+    let faults = args.str_or("faults", "").to_string();
+    let spec = FaultSpec::parse(&faults).unwrap_or_else(|e| die(&format!("--faults: {e}")));
+    let mut cfg = SimConfig::new(seed, args.usize_or("workers", 32));
+    cfg.spec = spec;
+    cfg.lease_size = args.usize_or("lease", 0);
+    cfg.lease_timeout_ms = args.u64_or("lease-timeout-ms", 300);
+    cfg.spill_cells = args.usize_or("spill-cells", 32);
+    cfg.threads = args.usize_or("threads", 0);
+    let fail = |detail: &str| {
+        eprintln!("simtest `{name}` seed {seed}: FAILED — {detail}");
+        eprintln!(
+            "reproduce: zygarde simtest --matrix {name} --seed {seed} --workers {} \
+             --faults \"{faults}\"",
+            cfg.workers
+        );
+        eprintln!(
+            "commit as a regression: echo \"seed={seed} workers={} faults={faults}\" \
+             > rust/tests/seeds/serve/seed_{seed}.seed",
+            cfg.workers
+        );
+        std::process::exit(1)
+    };
+    let outcome = run_campaign(&matrix, &cfg).unwrap_or_else(|e| fail(&e));
+    println!("simtest `{name}` seed {seed}: {}", outcome.plan.summary());
+    println!(
+        "  {} workers over the campaign, {} events in {} virtual ms, log hash {:016x}",
+        outcome.workers_spawned, outcome.events, outcome.virtual_ms, outcome.log_hash
+    );
+    let net = &outcome.net;
+    println!(
+        "  net: {} sent, {} delivered, {} dropped, {} duplicated, {} reordered, \
+         {} crashes, {} partitions, {} kicks, {} relief workers",
+        net.sent,
+        net.delivered,
+        net.dropped,
+        net.duplicated,
+        net.reordered,
+        net.crashes,
+        net.partitions,
+        net.kicks,
+        net.relief_spawns
+    );
+    let st = &outcome.stats;
+    println!(
+        "  core: {} leases, {} steals, {} reissues, {} duplicate cells",
+        st.leases_granted, st.steals, st.reissues, st.duplicates
+    );
+    if let Some(out) = args.opt_str("out") {
+        std::fs::write(out, &outcome.report).unwrap_or_else(|e| die(&format!("{out}: {e}")));
+        println!("  report -> {out}");
+    }
+    if let Some(path) = args.opt_str("log") {
+        let mut body = outcome.log.join("\n");
+        body.push('\n');
+        std::fs::write(path, body).unwrap_or_else(|e| die(&format!("{path}: {e}")));
+        println!("  event log ({} lines) -> {path}", outcome.log.len());
+    }
+    if !outcome.matches {
+        fail(&format!(
+            "report diverged from the single-process bytes ({} vs {} bytes)",
+            outcome.report.len(),
+            outcome.reference.len()
+        ));
+    }
+    println!(
+        "  report: byte-identical to the single-process sweep ({} bytes)",
+        outcome.report.len()
+    );
 }
 
 /// `zygarde work`: execute leases for a dispatcher — over stdin/stdout

@@ -19,6 +19,10 @@
 //!   the spill-run size, never the matrix size.
 //! * [`service`] — the IO shell behind `zygarde serve`: transports,
 //!   reader/writer threads, the event loop.
+//! * [`simnet`] — a seeded discrete-event network that drives the same
+//!   core and merger through latency, reordering, duplication, drops,
+//!   partitions, and crash/restart chaos on a virtual clock — the engine
+//!   behind `zygarde simtest` and the CI seed-corpus soak.
 //!
 //! The headline guarantee is inherited from the seed discipline
 //! (`(matrix_seed, index)`-derived streams make every cell
@@ -40,6 +44,7 @@
 pub mod dispatch;
 pub mod protocol;
 pub mod service;
+pub mod simnet;
 pub mod spill;
 pub mod worker;
 

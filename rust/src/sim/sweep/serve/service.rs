@@ -29,6 +29,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::clock::wall::{SystemClock, WallClock};
 use crate::sim::sweep::report::SummaryStats;
 use crate::sim::sweep::shard::fingerprint;
 use crate::sim::sweep::ScenarioMatrix;
@@ -78,6 +79,13 @@ pub struct ServeConfig {
     /// Emit a stderr heartbeat line at this period (wall-clock ms);
     /// 0 disables. Suppressed by `quiet` like the progress lines.
     pub heartbeat_ms: u64,
+    /// The dispatcher's wall clock: every time the core is told
+    /// (lease-timeout expiry, the lease-latency histogram) and every
+    /// shell pacing decision (tick rate limit, heartbeat period,
+    /// `wall_ms` in `--metrics-out`) reads this — never `Instant`
+    /// directly — so simulated/traced runs get deterministic latencies
+    /// instead of scheduler noise. Defaults to [`SystemClock`].
+    pub clock: Box<dyn WallClock>,
 }
 
 impl ServeConfig {
@@ -98,6 +106,7 @@ impl ServeConfig {
             quiet: true,
             metrics_out: None,
             heartbeat_ms: 5_000,
+            clock: Box::new(SystemClock::new()),
         }
     }
 }
@@ -283,13 +292,12 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
     }
 
     // --- main loop --------------------------------------------------------
-    let t0 = Instant::now();
-    let now_ms = |t0: Instant| t0.elapsed().as_millis() as u64;
+    let t_start = cfg.clock.now_ms();
     let mut done = false;
     let mut merge_err: Option<String> = None;
     let mut last_report = 0usize;
-    let mut last_tick = Instant::now();
-    let mut last_heartbeat = Instant::now();
+    let mut last_tick = t_start;
+    let mut last_heartbeat = t_start;
     {
         let route = |outs: Vec<Out>,
                      senders: &mut HashMap<WorkerId, mpsc::Sender<Msg>>,
@@ -350,7 +358,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                     route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
                 }
                 Ok(Event::Inbound(id, msg)) => {
-                    let outs = core.on_message(id, msg, now_ms(t0));
+                    let outs = core.on_message(id, msg, cfg.clock.now_ms());
                     route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
                 }
                 Ok(Event::Gone(id)) => {
@@ -359,7 +367,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                     if live.remove(&id) && !cfg.quiet {
                         eprintln!("serve: worker {id} disconnected");
                     }
-                    let outs = core.on_disconnect(id, now_ms(t0));
+                    let outs = core.on_disconnect(id, cfg.clock.now_ms());
                     route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
                     if live.is_empty() && cfg.listen.is_none() && !core.is_done() {
                         return Err(format!(
@@ -377,9 +385,10 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
             // an unconditional per-message tick would rescan every lease
             // and worker on each Cells batch — pure bookkeeping made
             // quadratic on big matrices.
-            if !done && last_tick.elapsed() >= Duration::from_millis(100) {
-                last_tick = Instant::now();
-                let outs = core.on_tick(now_ms(t0));
+            let now = cfg.clock.now_ms();
+            if !done && now.saturating_sub(last_tick) >= 100 {
+                last_tick = now;
+                let outs = core.on_tick(now);
                 route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
             }
             if !cfg.quiet {
@@ -388,10 +397,8 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                     eprintln!("serve: {got}/{n} cells");
                     last_report = got;
                 }
-                if cfg.heartbeat_ms > 0
-                    && last_heartbeat.elapsed() >= Duration::from_millis(cfg.heartbeat_ms)
-                {
-                    last_heartbeat = Instant::now();
+                if cfg.heartbeat_ms > 0 && now.saturating_sub(last_heartbeat) >= cfg.heartbeat_ms {
+                    last_heartbeat = now;
                     let s = &core.stats;
                     eprintln!(
                         "serve: heartbeat {got}/{n} cells | leases {} granted {} active | \
@@ -464,7 +471,10 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
             map.insert("n_scenarios".to_string(), Value::Num(n as f64));
             map.insert("runs_spilled".to_string(), Value::Num(runs_spilled as f64));
             map.insert("peak_buffered".to_string(), Value::Num(peak_buffered as f64));
-            map.insert("wall_ms".to_string(), Value::Num(now_ms(t0) as f64));
+            map.insert(
+                "wall_ms".to_string(),
+                Value::Num(cfg.clock.now_ms().saturating_sub(t_start) as f64),
+            );
         }
         let body = format!("{}\n", doc.to_json());
         if let Err(e) = std::fs::write(path, body) {

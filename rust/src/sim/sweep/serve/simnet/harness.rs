@@ -1,0 +1,774 @@
+//! The discrete-event transport: a whole serve campaign on one thread,
+//! over a virtual clock, under a seeded [`FaultPlan`].
+//!
+//! The harness owns the real [`DispatcherCore`] and the real
+//! [`SpillMerger`] — nothing is mocked on the dispatcher side. Workers
+//! are modeled in-process: a connected worker acks the matrix handshake,
+//! "computes" leased cells by replaying the precomputed single-process
+//! reference cells at seeded per-cell costs, and streams `Cells` batches
+//! plus a `LeaseDone`, exactly like `zygarde work` over a pipe. Every
+//! message crosses the simulated network, where the plan may delay,
+//! reorder, duplicate, drop, or partition it; planned crashes kill a
+//! lease-holding worker mid-flight and reconnect its slot later.
+//!
+//! Everything is driven off one `BinaryHeap` of timestamped events with
+//! a sequence-number tiebreaker and one `Pcg32` stream, so the whole
+//! campaign — dispatcher decisions, network chaos, the event log — is a
+//! pure function of `(matrix, SimConfig)`. [`run_campaign`] finalizes
+//! the merge into bytes and compares them against
+//! `SweepReport::json_string()`: `SimOutcome::matches` is the headline
+//! assertion, and `SimOutcome::log_hash` pins the dispatcher event
+//! schedule for same-seed reruns.
+//!
+//! Convergence is by construction, not hope: chaos probabilities switch
+//! off once `heal_permille` of the cells are ingested, partitions are
+//! finite, crashed workers restart, and a stalled or worker-less
+//! campaign gets deterministic "relief" workers — so any seed either
+//! completes byte-identical or fails loudly within the virtual horizon,
+//! and a failure message always carries the seed to commit to the
+//! corpus.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+
+use crate::sim::sweep::report::CellResult;
+use crate::sim::sweep::shard::{fingerprint, MatrixFingerprint};
+use crate::sim::sweep::{default_threads, run_matrix, ScenarioMatrix};
+use crate::util::json::Value;
+use crate::util::rng::Pcg32;
+
+use super::super::dispatch::{DispatchStats, DispatcherCore, Out, WorkerId};
+use super::super::protocol::Msg;
+use super::super::spill::SpillMerger;
+use super::plan::{FaultPlan, FaultSpec};
+
+/// Pcg32 stream id for transport draws (latency, drops, batch sizes) —
+/// distinct from the plan-derivation stream so the plan of seed N never
+/// shifts when the transport consumes a different number of draws.
+const NET_STREAM: u64 = 0x6E65_742D_7369_6D; // "net-sim"
+
+/// Hard virtual-time ceiling: a campaign that has not converged after
+/// ten virtual minutes is wedged, and the run fails with its seed.
+const HORIZON_MS: u64 = 600_000;
+
+/// With no progress for this long (virtual ms), spawn a relief worker.
+const RELIEF_AFTER_MS: u64 = 2_000;
+
+/// Disambiguates spill directories when parallel tests in one process
+/// run campaigns with the same seed.
+static RUN_SERIAL: AtomicU64 = AtomicU64::new(0);
+
+/// One simulated campaign's knobs. `seed` drives *everything*: the
+/// fault plan (under `spec`'s overrides) and every transport draw.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub seed: u64,
+    /// Initial worker count (restarted crash victims reuse their slot;
+    /// relief workers get fresh slots beyond this range).
+    pub workers: usize,
+    pub spec: FaultSpec,
+    /// Cells per lease; 0 picks `n / (workers * 4)` clamped to 1..=32.
+    pub lease_size: usize,
+    /// Virtual-ms lease timeout handed to the core.
+    pub lease_timeout_ms: u64,
+    /// Virtual-ms period of the dispatcher maintenance tick.
+    pub tick_ms: u64,
+    /// Spill-run size for the out-of-core merger (small by default so
+    /// every campaign exercises the spill path).
+    pub spill_cells: usize,
+    /// Threads for the single-process reference run; 0 = all cores.
+    pub threads: usize,
+    /// Keep the per-event dispatcher log (the reproducibility artifact).
+    pub collect_log: bool,
+}
+
+impl SimConfig {
+    pub fn new(seed: u64, workers: usize) -> SimConfig {
+        SimConfig {
+            seed,
+            workers,
+            spec: FaultSpec::default(),
+            lease_size: 0,
+            lease_timeout_ms: 300,
+            tick_ms: 50,
+            spill_cells: 32,
+            threads: 0,
+            collect_log: true,
+        }
+    }
+}
+
+/// Transport-level tallies, separate from the core's [`DispatchStats`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetCounters {
+    /// Messages handed to the network (both directions).
+    pub sent: u64,
+    /// Messages actually processed by a live endpoint.
+    pub delivered: u64,
+    /// Dropped by chance or a partition window.
+    pub dropped: u64,
+    /// Messages the network delivered twice.
+    pub duplicated: u64,
+    /// Messages given pathological extra latency (overtaken in flight).
+    pub reordered: u64,
+    /// Planned crashes that found a victim.
+    pub crashes: u64,
+    /// Partition windows that opened.
+    pub partitions: u64,
+    /// Workers the core kicked for protocol violations (reordered or
+    /// duplicated streams trip the contiguous-ascending cells check).
+    pub kicks: u64,
+    /// Relief workers spawned against stalls.
+    pub relief_spawns: u64,
+}
+
+/// What a simulated campaign produced. `report` vs `reference` is the
+/// byte-identity check; `log`/`log_hash` pin the event schedule.
+pub struct SimOutcome {
+    /// `report == reference.as_bytes()` — the headline guarantee.
+    pub matches: bool,
+    /// The streamed, merged report bytes out of the real [`SpillMerger`].
+    pub report: Vec<u8>,
+    /// `SweepReport::json_string()` of the single-process run.
+    pub reference: String,
+    /// Dispatcher event log (empty unless `collect_log`).
+    pub log: Vec<String>,
+    /// FNV-1a over the log lines — the compact schedule fingerprint.
+    pub log_hash: u64,
+    /// Virtual milliseconds the campaign took.
+    pub virtual_ms: u64,
+    /// Discrete events processed.
+    pub events: u64,
+    pub stats: DispatchStats,
+    pub net: NetCounters,
+    pub plan: FaultPlan,
+    /// Connections made over the campaign's lifetime (initial workers +
+    /// crash restarts + relief workers).
+    pub workers_spawned: usize,
+}
+
+enum Ev {
+    /// A worker process starts and its connection reaches the dispatcher.
+    Connect { slot: usize },
+    /// Network delivery, dispatcher → worker.
+    ToWorker { w: WorkerId, msg: Msg },
+    /// Network delivery, worker → dispatcher.
+    ToDispatcher { w: WorkerId, msg: Msg },
+    /// A worker finished composing `msg`; hand it to the network (the
+    /// chaos draws happen here, not at composition time).
+    Emit { w: WorkerId, msg: Msg },
+    /// The transport notices a closed connection.
+    Gone { w: WorkerId },
+    PartitionEnd { idx: usize },
+    Tick,
+}
+
+struct Scheduled {
+    t: u64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    /// Reversed so the max-heap pops the earliest `(t, seq)` — the seq
+    /// tiebreaker makes same-instant ordering deterministic.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.t.cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct Conn {
+    slot: usize,
+    /// The process is running and its connection is open.
+    alive: bool,
+    /// The dispatcher-side transport processed this connection's EOF.
+    gone: bool,
+    /// Best-effort "currently holds a live lease" (set at grant
+    /// transmission, cleared at `LeaseDone` receipt or death) — only
+    /// used to pick crash victims that die mid-lease.
+    holding: bool,
+}
+
+struct Sim {
+    plan: FaultPlan,
+    fp: MatrixFingerprint,
+    cells: Vec<CellResult>,
+    n: usize,
+    tick_ms: u64,
+    collect_log: bool,
+    core: DispatcherCore,
+    merger: Option<SpillMerger>,
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+    now: u64,
+    rng: Pcg32,
+    conns: Vec<Conn>,
+    /// Latency multiplier per slot (slow links); relief slots append 1s.
+    slot_factor: Vec<u64>,
+    next_slot: usize,
+    partition_active: Vec<bool>,
+    crash_cursor: usize,
+    partition_cursor: usize,
+    /// Ingested-cell thresholds the permille triggers resolve to.
+    crash_at: Vec<usize>,
+    partition_at: Vec<usize>,
+    heal_cells: usize,
+    pending_connects: usize,
+    done: bool,
+    merge_err: Option<String>,
+    log: Vec<String>,
+    net: NetCounters,
+    last_progress_ms: u64,
+    events: u64,
+}
+
+impl Sim {
+    fn schedule(&mut self, t: u64, ev: Ev) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { t, seq, ev });
+    }
+
+    fn note(&mut self, line: String) {
+        if self.collect_log {
+            self.log.push(line);
+        }
+    }
+
+    /// Chaos probabilities only apply before the heal point (see plan).
+    fn chaos_active(&self) -> bool {
+        self.core.cells_received() < self.heal_cells
+    }
+
+    fn in_partition(&self, slot: usize) -> bool {
+        self.partition_active.iter().enumerate().any(|(i, &on)| {
+            on && {
+                let p = &self.plan.partitions[i];
+                p.lo_slot <= slot && slot < p.hi_slot
+            }
+        })
+    }
+
+    fn latency(&mut self, slot: usize) -> u64 {
+        let (lo, hi) = self.plan.latency_ms;
+        let base = lo + self.rng.below(hi - lo + 1);
+        base * self.slot_factor.get(slot).copied().unwrap_or(1)
+    }
+
+    /// Push one message through the simulated network. All chaos draws
+    /// happen here, in event order, on the single seeded stream.
+    fn transmit(&mut self, w: WorkerId, to_dispatcher: bool, msg: Msg) {
+        self.net.sent += 1;
+        let slot = self.conns[w].slot;
+        if self.in_partition(slot) {
+            self.net.dropped += 1;
+            return;
+        }
+        let chaos = self.chaos_active();
+        if chaos && self.rng.chance(self.plan.drop_p) {
+            self.net.dropped += 1;
+            return;
+        }
+        let mut delay = self.latency(slot);
+        if chaos && self.rng.chance(self.plan.reorder_p) {
+            // Enough extra latency that later messages on the same link
+            // overtake this one — the pathological-WAN case the
+            // contiguous-cells protocol check exists for.
+            delay += 1 + self.rng.below(4 * self.plan.latency_ms.1.max(2));
+            self.net.reordered += 1;
+        }
+        let copies = if chaos && self.rng.chance(self.plan.dup_p) {
+            self.net.duplicated += 1;
+            2
+        } else {
+            1
+        };
+        for i in 0..copies {
+            let extra =
+                if i == 0 { 0 } else { 1 + self.rng.below(2 * self.plan.latency_ms.1.max(2)) };
+            let ev = if to_dispatcher {
+                Ev::ToDispatcher { w, msg: msg.clone() }
+            } else {
+                Ev::ToWorker { w, msg: msg.clone() }
+            };
+            self.schedule(self.now + delay + extra, ev);
+        }
+    }
+
+    /// A worker process dies (crash, kick, shutdown): cancel its future
+    /// emissions and let the dispatcher notice the EOF one latency later.
+    fn kill_conn(&mut self, w: WorkerId) {
+        if !self.conns[w].alive {
+            return;
+        }
+        self.conns[w].alive = false;
+        self.conns[w].holding = false;
+        let slot = self.conns[w].slot;
+        let delay = self.latency(slot);
+        self.schedule(self.now + delay, Ev::Gone { w });
+    }
+
+    /// Apply the core's effects; log a one-line summary when anything
+    /// happened, then fire any progress-triggered faults.
+    fn apply(&mut self, tag: &str, outs: Vec<Out>) {
+        if !outs.is_empty() {
+            if self.collect_log {
+                self.log.push(format!("t={} {tag} -> {}", self.now, fmt_outs(&outs)));
+            }
+            self.last_progress_ms = self.now;
+            self.route(outs);
+        }
+        self.fire_progress_faults();
+    }
+
+    fn route(&mut self, outs: Vec<Out>) {
+        for o in outs {
+            match o {
+                Out::Send(w, msg) => {
+                    if self.conns[w].alive {
+                        if let Msg::Lease { .. } = &msg {
+                            self.conns[w].holding = true;
+                        }
+                        self.transmit(w, false, msg);
+                    }
+                }
+                Out::Ingest(cell) => {
+                    if let Some(m) = self.merger.as_mut() {
+                        if let Err(e) = m.push(cell) {
+                            self.merge_err = Some(e);
+                            self.done = true;
+                        }
+                    }
+                }
+                Out::Kick(w) => {
+                    self.net.kicks += 1;
+                    let line = format!("t={} kick w{w}", self.now);
+                    self.note(line);
+                    self.kill_conn(w);
+                }
+                Out::Done => {
+                    self.done = true;
+                    let line = format!("t={} done", self.now);
+                    self.note(line);
+                }
+            }
+        }
+    }
+
+    /// Fire every planned fault whose ingested-cell threshold has been
+    /// crossed. Progress-triggered (not time-triggered) so "crash
+    /// mid-campaign" holds for any matrix size or worker count.
+    fn fire_progress_faults(&mut self) {
+        let got = self.core.cells_received();
+        while self.crash_cursor < self.crash_at.len() && got >= self.crash_at[self.crash_cursor] {
+            let idx = self.crash_cursor;
+            self.crash_cursor += 1;
+            let restart_after = self.plan.crashes[idx].restart_after_ms;
+            // Victim: lowest-id live worker currently holding a lease —
+            // a genuine mid-lease crash — falling back to any live one.
+            let victim = self
+                .conns
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.alive)
+                .min_by_key(|(i, c)| (!c.holding, *i))
+                .map(|(i, _)| i);
+            let Some(v) = victim else { continue };
+            self.net.crashes += 1;
+            let slot = self.conns[v].slot;
+            let line =
+                format!("t={} crash w{v} slot{slot} restart=+{restart_after}ms", self.now);
+            self.note(line);
+            self.kill_conn(v);
+            self.pending_connects += 1;
+            self.schedule(self.now + restart_after, Ev::Connect { slot });
+        }
+        while self.partition_cursor < self.partition_at.len()
+            && got >= self.partition_at[self.partition_cursor]
+        {
+            let idx = self.partition_cursor;
+            self.partition_cursor += 1;
+            self.partition_active[idx] = true;
+            self.net.partitions += 1;
+            let (lo, hi, dur) = {
+                let p = &self.plan.partitions[idx];
+                (p.lo_slot, p.hi_slot, p.duration_ms)
+            };
+            let line = format!("t={} partition#{idx} slots {lo}..{hi} for {dur}ms", self.now);
+            self.note(line);
+            self.schedule(self.now + dur, Ev::PartitionEnd { idx });
+        }
+    }
+
+    fn on_connect_event(&mut self, slot: usize) {
+        self.pending_connects = self.pending_connects.saturating_sub(1);
+        let w = self.conns.len();
+        while self.slot_factor.len() <= slot {
+            self.slot_factor.push(1);
+        }
+        self.conns.push(Conn { slot, alive: true, gone: false, holding: false });
+        let line = format!("t={} connect w{w} slot{slot}", self.now);
+        self.note(line);
+        let outs = self.core.on_connect(w);
+        self.apply("connect", outs);
+    }
+
+    /// The in-process worker model: matrix → Ready, lease → seeded
+    /// compute schedule of Cells batches then LeaseDone, shutdown → die.
+    fn worker_receive(&mut self, w: WorkerId, msg: Msg) {
+        if !self.conns[w].alive {
+            return;
+        }
+        self.net.delivered += 1;
+        match msg {
+            Msg::Matrix { .. } => {
+                // Cells are precomputed per campaign, so the "rebuild"
+                // is a small seeded think time before the Ready ack.
+                let delay = 1 + self.rng.below(3);
+                let fp = self.fp.clone();
+                self.schedule(
+                    self.now + delay,
+                    Ev::Emit { w, msg: Msg::Ready { fingerprint: fp } },
+                );
+            }
+            Msg::Lease { id, start, end } => {
+                let mut t = self.now;
+                let mut at = start;
+                while at < end {
+                    let stop = (at + 1 + self.rng.below(4) as usize).min(end);
+                    for _ in at..stop {
+                        t += 1 + self.rng.below(3);
+                    }
+                    let cells = self.cells[at..stop].to_vec();
+                    self.schedule(t, Ev::Emit { w, msg: Msg::Cells { lease: id, cells } });
+                    at = stop;
+                }
+                self.schedule(t + 1, Ev::Emit { w, msg: Msg::LeaseDone { lease: id } });
+            }
+            Msg::Shutdown | Msg::Error { .. } => {
+                self.kill_conn(w);
+            }
+            // Worker-bound streams never carry these; a duplicated
+            // delivery of one is simply ignored.
+            Msg::Ready { .. } | Msg::Cells { .. } | Msg::LeaseDone { .. } => {}
+        }
+    }
+
+    fn dispatcher_receive(&mut self, w: WorkerId, msg: Msg) {
+        if self.conns[w].gone {
+            // The transport already processed this connection's EOF;
+            // stragglers never reach the core — same as a closed socket.
+            return;
+        }
+        self.net.delivered += 1;
+        if let Msg::LeaseDone { .. } = msg {
+            self.conns[w].holding = false;
+        }
+        let tag = format!("w{w} {}", fmt_msg(&msg));
+        let now = self.now;
+        let outs = self.core.on_message(w, msg, now);
+        self.apply(&tag, outs);
+    }
+
+    fn on_gone_event(&mut self, w: WorkerId) {
+        if self.conns[w].gone {
+            return;
+        }
+        self.conns[w].gone = true;
+        self.conns[w].alive = false;
+        self.conns[w].holding = false;
+        let now = self.now;
+        let outs = self.core.on_disconnect(w, now);
+        let line = format!("t={} gone w{w} reissues={}", self.now, self.core.stats.reissues);
+        self.note(line);
+        self.apply("gone", outs);
+    }
+
+    fn on_tick_event(&mut self) {
+        let now = self.now;
+        let outs = self.core.on_tick(now);
+        self.apply("tick", outs);
+        if self.done {
+            return;
+        }
+        // Stall relief: every connection dead with none pending (e.g. a
+        // kick storm before the heal point), or no effect applied for a
+        // long virtual while — connect a fresh worker on a fresh slot
+        // (outside every partition range and slow link). This is what
+        // makes convergence unconditional.
+        let alive = self.conns.iter().filter(|c| c.alive).count();
+        let stalled = now.saturating_sub(self.last_progress_ms) >= RELIEF_AFTER_MS;
+        if (alive == 0 && self.pending_connects == 0) || stalled {
+            let slot = self.next_slot;
+            self.next_slot += 1;
+            self.net.relief_spawns += 1;
+            self.pending_connects += 1;
+            self.last_progress_ms = now;
+            let line = format!("t={} relief slot{slot}", self.now);
+            self.note(line);
+            self.schedule(now + 1, Ev::Connect { slot });
+        }
+        self.schedule(now + self.tick_ms, Ev::Tick);
+    }
+
+    fn dispatch(&mut self, ev: Ev) {
+        match ev {
+            Ev::Connect { slot } => self.on_connect_event(slot),
+            Ev::ToWorker { w, msg } => self.worker_receive(w, msg),
+            Ev::ToDispatcher { w, msg } => self.dispatcher_receive(w, msg),
+            Ev::Emit { w, msg } => {
+                // Composition was cancelled if the worker died meanwhile.
+                if self.conns[w].alive {
+                    self.transmit(w, true, msg);
+                }
+            }
+            Ev::Gone { w } => self.on_gone_event(w),
+            Ev::PartitionEnd { idx } => {
+                self.partition_active[idx] = false;
+                let line = format!("t={} partition#{idx} healed", self.now);
+                self.note(line);
+            }
+            Ev::Tick => self.on_tick_event(),
+        }
+    }
+
+    fn run(&mut self) -> Result<(), String> {
+        while !self.done {
+            let Some(sc) = self.heap.pop() else {
+                return Err(format!(
+                    "simnet seed {}: event queue drained with {}/{} cells ingested",
+                    self.plan.seed,
+                    self.core.cells_received(),
+                    self.n
+                ));
+            };
+            self.now = sc.t;
+            self.events += 1;
+            if self.now > HORIZON_MS {
+                return Err(format!(
+                    "simnet seed {}: virtual horizon {HORIZON_MS} ms exceeded with {}/{} \
+                     cells ingested",
+                    self.plan.seed,
+                    self.core.cells_received(),
+                    self.n
+                ));
+            }
+            self.dispatch(sc.ev);
+        }
+        match self.merge_err.take() {
+            Some(e) => Err(format!("simnet seed {}: merge failed: {e}", self.plan.seed)),
+            None => Ok(()),
+        }
+    }
+}
+
+fn fmt_msg(msg: &Msg) -> String {
+    match msg {
+        Msg::Matrix { .. } => "matrix".to_string(),
+        Msg::Lease { id, start, end } => format!("lease{id}[{start}..{end})"),
+        Msg::Shutdown => "shutdown".to_string(),
+        Msg::Ready { .. } => "ready".to_string(),
+        Msg::Cells { lease, cells } => format!("cells lease{lease} n={}", cells.len()),
+        Msg::LeaseDone { lease } => format!("lease_done lease{lease}"),
+        Msg::Error { .. } => "error".to_string(),
+    }
+}
+
+fn fmt_outs(outs: &[Out]) -> String {
+    let mut sends: Vec<String> = Vec::new();
+    let mut ingests = 0usize;
+    let mut kicks = 0usize;
+    let mut done = false;
+    for o in outs {
+        match o {
+            Out::Send(w, m) => sends.push(format!("w{w}:{}", fmt_msg(m))),
+            Out::Ingest(_) => ingests += 1,
+            Out::Kick(_) => kicks += 1,
+            Out::Done => done = true,
+        }
+    }
+    let mut parts = Vec::new();
+    if !sends.is_empty() {
+        parts.push(sends.join(" "));
+    }
+    if ingests > 0 {
+        parts.push(format!("ingest={ingests}"));
+    }
+    if kicks > 0 {
+        parts.push(format!("kick={kicks}"));
+    }
+    if done {
+        parts.push("done".to_string());
+    }
+    parts.join(" | ")
+}
+
+/// FNV-1a over the log lines (newline-folded): the compact fingerprint
+/// of the dispatcher event schedule.
+pub fn log_fingerprint(lines: &[String]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    for line in lines {
+        for &b in line.as_bytes() {
+            eat(b);
+        }
+        eat(b'\n');
+    }
+    h
+}
+
+/// Run one simulated campaign of `matrix` under `cfg` and check the
+/// streamed report against the single-process reference. See module
+/// docs; errors always embed the seed.
+pub fn run_campaign(matrix: &ScenarioMatrix, cfg: &SimConfig) -> Result<SimOutcome, String> {
+    let workers = cfg.workers.max(1);
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    // The single-process reference run doubles as the cell store: the
+    // simulated workers replay these cells (determinism makes recompute
+    // and replay indistinguishable), so a 200-worker fault campaign
+    // costs one sweep plus bookkeeping.
+    let reference = run_matrix(matrix, threads);
+    let want = reference.json_string();
+    let cells = reference.cells;
+    let n = cells.len();
+    let plan = FaultPlan::from_seed(cfg.seed, workers, &cfg.spec);
+    let lease_size =
+        if cfg.lease_size > 0 { cfg.lease_size } else { (n / (workers * 4)).clamp(1, 32) };
+    let fp = fingerprint(matrix);
+    let core = DispatcherCore::new(
+        &matrix.name,
+        // Simulated workers never rebuild the matrix from the registry,
+        // so no options ship over the simulated wire.
+        Value::Null,
+        fp.clone(),
+        lease_size,
+        cfg.lease_timeout_ms.max(1),
+    );
+    let serial = RUN_SERIAL.fetch_add(1, AtomicOrdering::Relaxed);
+    let spill_dir = std::env::temp_dir().join(format!(
+        "zygarde_simnet_{}_{}_{serial}",
+        std::process::id(),
+        cfg.seed
+    ));
+    let merger = SpillMerger::new(spill_dir.clone(), cfg.spill_cells.max(1))?;
+    let heal_cells = (n * plan.heal_permille as usize).div_euclid(1000);
+    let crash_at: Vec<usize> =
+        plan.crashes.iter().map(|c| (n * c.at_permille as usize / 1000).max(1)).collect();
+    let partition_at: Vec<usize> =
+        plan.partitions.iter().map(|p| (n * p.at_permille as usize / 1000).max(1)).collect();
+    let mut slot_factor = vec![1u64; workers];
+    for &(slot, factor) in &plan.slow_links {
+        slot_factor[slot] = factor;
+    }
+    let n_partitions = plan.partitions.len();
+    let mut sim = Sim {
+        plan,
+        fp,
+        cells,
+        n,
+        tick_ms: cfg.tick_ms.max(1),
+        collect_log: cfg.collect_log,
+        core,
+        merger: Some(merger),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        now: 0,
+        rng: Pcg32::new(cfg.seed, NET_STREAM),
+        conns: Vec::new(),
+        slot_factor,
+        next_slot: workers,
+        partition_active: vec![false; n_partitions],
+        crash_cursor: 0,
+        partition_cursor: 0,
+        crash_at,
+        partition_at,
+        heal_cells,
+        pending_connects: 0,
+        done: false,
+        merge_err: None,
+        log: Vec::new(),
+        net: NetCounters::default(),
+        last_progress_ms: 0,
+        events: 0,
+    };
+    // Stagger the initial connects a little so hundreds of workers do
+    // not handshake on the same virtual instant.
+    for slot in 0..workers {
+        sim.pending_connects += 1;
+        sim.schedule(1 + (slot as u64 % 5), Ev::Connect { slot });
+    }
+    sim.schedule(sim.tick_ms, Ev::Tick);
+    if let Err(e) = sim.run() {
+        let _ = std::fs::remove_dir_all(&spill_dir);
+        return Err(e);
+    }
+    let merger = sim.merger.take().expect("merger present at finalize");
+    let mut report: Vec<u8> = Vec::with_capacity(want.len());
+    let finalize = merger.finalize(&matrix.name, matrix.seed, n, &mut report);
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    finalize.map_err(|e| format!("simnet seed {}: finalize failed: {e}", cfg.seed))?;
+    let matches = report == want.as_bytes();
+    let log_hash = log_fingerprint(&sim.log);
+    Ok(SimOutcome {
+        matches,
+        report,
+        reference: want,
+        log: std::mem::take(&mut sim.log),
+        log_hash,
+        virtual_ms: sim.now,
+        events: sim.events,
+        stats: sim.core.stats.clone(),
+        net: sim.net,
+        plan: sim.plan,
+        workers_spawned: sim.conns.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_pops_by_time_then_sequence() {
+        let mut heap = BinaryHeap::new();
+        heap.push(Scheduled { t: 9, seq: 0, ev: Ev::Tick });
+        heap.push(Scheduled { t: 3, seq: 2, ev: Ev::Tick });
+        heap.push(Scheduled { t: 3, seq: 1, ev: Ev::Tick });
+        heap.push(Scheduled { t: 0, seq: 3, ev: Ev::Tick });
+        let order: Vec<(u64, u64)> = std::iter::from_fn(|| heap.pop())
+            .map(|s| (s.t, s.seq))
+            .collect();
+        assert_eq!(order, vec![(0, 3), (3, 1), (3, 2), (9, 0)]);
+    }
+
+    #[test]
+    fn log_fingerprint_is_stable_and_line_sensitive() {
+        let a = vec!["t=1 connect w0 slot0".to_string(), "t=2 done".to_string()];
+        let b = a.clone();
+        assert_eq!(log_fingerprint(&a), log_fingerprint(&b));
+        let mut c = a.clone();
+        c[1] = "t=3 done".to_string();
+        assert_ne!(log_fingerprint(&a), log_fingerprint(&c));
+        // Folding must distinguish line boundaries from concatenation.
+        let joined = vec![format!("{}\n{}", a[0], a[1])];
+        assert_ne!(log_fingerprint(&a), log_fingerprint(&joined));
+    }
+}

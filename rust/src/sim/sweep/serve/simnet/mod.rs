@@ -1,0 +1,30 @@
+//! Deterministic simulated network for the serve layer.
+//!
+//! `rust/tests/sweep_serve.rs` already drives [`super::DispatcherCore`]
+//! through seeded interleavings, and CI kills one real worker process
+//! mid-run — but neither explores what a *hostile network* does to a
+//! campaign: latency spikes that reorder batches, duplicated delivery,
+//! silent drops, link partitions, slow links, and crash/restart cycles,
+//! all interleaved. Standing up real sockets for that makes the search
+//! slow and the failures unreproducible.
+//!
+//! This module is the alternative: a single-threaded discrete-event
+//! transport over a virtual clock. A `u64` seed derives a [`FaultPlan`]
+//! ([`plan`]) and drives every transport decision ([`harness`]), so a
+//! campaign of hundreds of workers runs in milliseconds of real time and
+//! **the same seed reproduces the same run, byte for byte** — the report
+//! out of the real [`super::SpillMerger`] must equal the single-process
+//! `SweepReport::json_string()`, and the dispatcher event log hashes to
+//! the same fingerprint every rerun.
+//!
+//! Entry points: `zygarde simtest --seed N` on the CLI, the committed
+//! seed corpus in `rust/tests/seeds/serve/` (replayed forever by
+//! `rust/tests/sweep_simnet.rs` and the CI `sim-soak` job), and
+//! `tools/simnet_soak.py` for random-seed exploration — a failing seed
+//! is one line to commit as a permanent regression test.
+
+pub mod harness;
+pub mod plan;
+
+pub use harness::{log_fingerprint, run_campaign, NetCounters, SimConfig, SimOutcome};
+pub use plan::{CrashPlan, FaultPlan, FaultSpec, PartitionPlan};

@@ -1,0 +1,292 @@
+//! Deterministic-simnet suite: whole serve campaigns over the seeded
+//! simulated network (`sim::sweep::serve::simnet`), replayed from the
+//! committed corpus in `rust/tests/seeds/serve/` plus property checks.
+//!
+//! The invariants under test:
+//!
+//! 1. **Byte identity** — every campaign's streamed report equals the
+//!    single-process `SweepReport::json_string()`, whatever the network
+//!    did (latency, reordering, duplication, drops, partitions, worker
+//!    crashes mid-lease).
+//! 2. **Seed determinism** — same seed, same run: the dispatcher event
+//!    log (and its hash) is a pure function of the seed; disjoint seeds
+//!    produce distinct plans and schedules.
+//! 3. **Fidelity** — on a fault-free network the simnet, the real
+//!    pipes-and-processes `zygarde serve`, and the in-process sweep all
+//!    agree byte for byte.
+//!
+//! A failing seed found anywhere (CI exploration, local fuzzing) becomes
+//! a one-line `.seed` file here and is then replayed forever.
+
+use std::path::{Path, PathBuf};
+
+use zygarde::exp::sweep_cli::{build_matrix, SweepOpts};
+use zygarde::sim::sweep::serve::simnet::{run_campaign, FaultPlan, FaultSpec, SimConfig};
+use zygarde::sim::sweep::{run_matrix, ScenarioMatrix};
+
+/// One line of a committed `.seed` file: whitespace-separated
+/// `key=value` tokens (the `faults` value may itself contain `=`/`,`).
+/// Defaults mirror the `zygarde simtest` CLI defaults so a seed file and
+/// the printed reproduce command mean the same campaign.
+struct SeedEntry {
+    seed: u64,
+    workers: usize,
+    reps: u64,
+    duration_ms: f64,
+    faults: String,
+    lease: usize,
+    lease_timeout_ms: u64,
+    spill_cells: usize,
+}
+
+fn parse_seed_entry(text: &str, origin: &Path) -> SeedEntry {
+    let mut e = SeedEntry {
+        seed: 0,
+        workers: 32,
+        reps: 2,
+        duration_ms: 6_000.0,
+        faults: String::new(),
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 32,
+    };
+    let mut saw_seed = false;
+    for tok in text.split_whitespace() {
+        let (key, val) = tok
+            .split_once('=')
+            .unwrap_or_else(|| panic!("{}: `{tok}` is not key=value", origin.display()));
+        match key {
+            "seed" => {
+                e.seed = val.parse().unwrap();
+                saw_seed = true;
+            }
+            "workers" => e.workers = val.parse().unwrap(),
+            "reps" => e.reps = val.parse().unwrap(),
+            "duration-ms" => e.duration_ms = val.parse().unwrap(),
+            "faults" => e.faults = val.to_string(),
+            "lease" => e.lease = val.parse().unwrap(),
+            "lease-timeout-ms" => e.lease_timeout_ms = val.parse().unwrap(),
+            "spill-cells" => e.spill_cells = val.parse().unwrap(),
+            other => panic!("{}: unknown seed key `{other}`", origin.display()),
+        }
+    }
+    assert!(saw_seed, "{}: no seed= token", origin.display());
+    e
+}
+
+/// The matrix a seed entry means: always `synthetic` (no artifacts, so
+/// the corpus replays on any machine), tuned by the entry's fields.
+fn entry_matrix(e: &SeedEntry) -> ScenarioMatrix {
+    let opts = SweepOpts {
+        seed: e.seed,
+        reps: e.reps,
+        duration_ms: Some(e.duration_ms),
+        ..Default::default()
+    };
+    build_matrix("synthetic", &opts).unwrap()
+}
+
+fn entry_config(e: &SeedEntry, origin: &Path) -> SimConfig {
+    let spec = FaultSpec::parse(&e.faults)
+        .unwrap_or_else(|err| panic!("{}: {err}", origin.display()));
+    let mut cfg = SimConfig::new(e.seed, e.workers);
+    cfg.spec = spec;
+    cfg.lease_size = e.lease;
+    cfg.lease_timeout_ms = e.lease_timeout_ms;
+    cfg.spill_cells = e.spill_cells;
+    cfg.threads = 2;
+    cfg
+}
+
+fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/seeds/serve")
+}
+
+/// Replay every committed seed: each campaign must complete and stream
+/// bytes identical to the single-process report. This is the permanent
+/// regression net — a seed that ever failed stays here forever.
+#[test]
+fn committed_seed_corpus_replays_byte_identical() {
+    let dir = corpus_dir();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|ent| ent.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "seed"))
+        .collect();
+    paths.sort();
+    assert!(!paths.is_empty(), "seed corpus at {} is empty", dir.display());
+    for path in paths {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let entry = parse_seed_entry(&text, &path);
+        let matrix = entry_matrix(&entry);
+        let cfg = entry_config(&entry, &path);
+        let outcome = run_campaign(&matrix, &cfg)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(
+            outcome.matches,
+            "{}: seed {} diverged from the single-process bytes ({} vs {})",
+            path.display(),
+            entry.seed,
+            outcome.report.len(),
+            outcome.reference.len()
+        );
+    }
+}
+
+/// The CI flagship: ≥200 workers, injected partition, three crashes (the
+/// victim preferentially holds a live lease — a genuine mid-lease kill),
+/// duplicated and reordered delivery — and the report still comes out
+/// byte-identical, with every planned fault observed by the transport.
+#[test]
+fn flagship_200_worker_fault_campaign_is_byte_identical() {
+    let entry = SeedEntry {
+        seed: 11,
+        workers: 200,
+        reps: 2,
+        duration_ms: 1_200.0,
+        faults: "latency=1..20,drop=0.02,dup=0.04,reorder=0.08,crash=3,partition=1,slow=2"
+            .to_string(),
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 32,
+    };
+    let origin = PathBuf::from("flagship");
+    let matrix = entry_matrix(&entry);
+    let cfg = entry_config(&entry, &origin);
+    let outcome = run_campaign(&matrix, &cfg).unwrap();
+    assert!(outcome.matches, "flagship campaign diverged");
+    assert!(outcome.workers_spawned >= 200);
+    assert!(outcome.net.crashes >= 1, "no crash fired: {:?}", outcome.net);
+    assert!(outcome.net.partitions >= 1, "no partition opened: {:?}", outcome.net);
+    assert!(
+        outcome.net.dropped + outcome.net.duplicated + outcome.net.reordered >= 1,
+        "the chaotic network did nothing: {:?}",
+        outcome.net
+    );
+}
+
+/// Same seed → same run: report bytes, the full event log, its hash, and
+/// the core's stats all replay exactly.
+#[test]
+fn same_seed_reproduces_the_identical_event_log() {
+    let entry = SeedEntry {
+        seed: 0xD5,
+        workers: 40,
+        reps: 1,
+        duration_ms: 900.0,
+        faults: String::new(), // seed-derived chaos
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 16,
+    };
+    let origin = PathBuf::from("same-seed");
+    let matrix = entry_matrix(&entry);
+    let cfg = entry_config(&entry, &origin);
+    let a = run_campaign(&matrix, &cfg).unwrap();
+    let b = run_campaign(&matrix, &cfg).unwrap();
+    assert!(a.matches && b.matches);
+    assert_eq!(a.report, b.report);
+    assert_eq!(a.log, b.log, "event logs diverged between identical runs");
+    assert_eq!(a.log_hash, b.log_hash);
+    assert_eq!(a.virtual_ms, b.virtual_ms);
+    assert_eq!(a.events, b.events);
+    assert_eq!(format!("{:?}", a.stats), format!("{:?}", b.stats));
+    assert_eq!(a.net, b.net);
+    assert!(!a.log.is_empty(), "collect_log was on; the log cannot be empty");
+}
+
+/// Disjoint seeds → distinct fault plans and distinct schedules (both
+/// reports still byte-identical to their references, of course).
+#[test]
+fn disjoint_seeds_produce_distinct_schedules() {
+    let mk = |seed: u64| SeedEntry {
+        seed,
+        workers: 16,
+        reps: 1,
+        duration_ms: 900.0,
+        faults: String::new(),
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 32,
+    };
+    let origin = PathBuf::from("disjoint");
+    let (ea, eb) = (mk(1), mk(2));
+    let a = run_campaign(&entry_matrix(&ea), &entry_config(&ea, &origin)).unwrap();
+    let b = run_campaign(&entry_matrix(&eb), &entry_config(&eb, &origin)).unwrap();
+    assert!(a.matches && b.matches);
+    assert_ne!(a.plan, b.plan, "two seeds drew the same fault plan");
+    assert_ne!(a.log_hash, b.log_hash, "two seeds replayed the same schedule");
+}
+
+/// Plan derivation is a pure function of `(seed, workers, spec)` across
+/// a spread of seeds — and neighbouring seeds never collide.
+#[test]
+fn fault_plans_are_deterministic_across_seeds() {
+    let spec = FaultSpec::default();
+    for seed in (0..25u64).map(|i| 0x5EED_0000 + i * 0x9E37) {
+        let a = FaultPlan::from_seed(seed, 64, &spec);
+        let b = FaultPlan::from_seed(seed, 64, &spec);
+        assert_eq!(a, b, "seed {seed:#x} is not reproducible");
+        let c = FaultPlan::from_seed(seed + 1, 64, &spec);
+        assert_ne!(a, c, "seeds {seed:#x} and {:#x} collided", seed + 1);
+    }
+}
+
+/// Fidelity cross-check: on a fault-free network, the simnet campaign,
+/// the real pipes-and-processes `zygarde serve`, and the in-process
+/// single-thread sweep produce the same bytes.
+#[test]
+fn simnet_matches_real_pipes_on_a_clean_network() {
+    let entry = SeedEntry {
+        seed: 29,
+        workers: 2,
+        reps: 1,
+        duration_ms: 900.0,
+        faults: "none".to_string(),
+        lease: 3,
+        lease_timeout_ms: 300,
+        spill_cells: 6,
+    };
+    let origin = PathBuf::from("cross-check");
+    let matrix = entry_matrix(&entry);
+    let want = run_matrix(&matrix, 1).json_string();
+
+    let sim = run_campaign(&matrix, &entry_config(&entry, &origin)).unwrap();
+    assert!(sim.matches);
+    assert_eq!(String::from_utf8(sim.report.clone()).unwrap(), want);
+    // A clean network does exactly nothing to the traffic.
+    assert_eq!(sim.net.dropped, 0, "{:?}", sim.net);
+    assert_eq!(sim.net.duplicated + sim.net.reordered, 0, "{:?}", sim.net);
+    assert_eq!(sim.net.crashes + sim.net.partitions + sim.net.kicks, 0, "{:?}", sim.net);
+
+    let exe = env!("CARGO_BIN_EXE_zygarde");
+    let out = std::env::temp_dir()
+        .join(format!("zygarde_simnet_cross_{}.json", std::process::id()));
+    let status = std::process::Command::new(exe)
+        .args([
+            "serve",
+            "--matrix",
+            "synthetic",
+            "--seed",
+            "29",
+            "--reps",
+            "1",
+            "--duration-ms",
+            "900",
+            "--workers",
+            "2",
+            "--lease",
+            "3",
+            "--spill-cells",
+            "6",
+            "--quiet=true",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawning zygarde serve");
+    assert!(status.success(), "serve exited with {status}");
+    let piped = std::fs::read_to_string(&out).expect("serve wrote the report");
+    let _ = std::fs::remove_file(&out);
+    assert_eq!(piped, want, "real pipes diverged from the single-process bytes");
+}

@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""Seeded-failure soak driver for the deterministic simnet.
+
+Runs ``zygarde simtest`` campaigns — whole serve sessions over the
+seeded, single-threaded simulated network (virtual clock, no sockets, no
+worker processes) — in two phases:
+
+1. **Corpus replay.** Every ``*.seed`` file under the corpus directory
+   (default ``rust/tests/seeds/serve``) is one line of whitespace-
+   separated ``key=value`` tokens describing a campaign (``seed`` is
+   required; ``workers``, ``reps``, ``duration-ms``, ``faults``,
+   ``lease``, ``lease-timeout-ms``, ``spill-cells`` override the
+   ``simtest`` defaults; the ``faults`` value may itself contain ``=``
+   and ``,``). Committed seeds are campaigns that once failed or that
+   pin tricky fault mixes — they are replayed forever.
+
+2. **Exploration.** ``--explore N`` fresh seeds derived from
+   ``--explore-base`` (pass e.g. the CI run number so every run probes
+   new schedules) with seed-derived fault plans and a rotating worker
+   count. Campaigns are deterministic in the seed, so any failure is
+   perfectly reproducible: the script prints the exact one-line seed
+   file to commit, which turns the find into a permanent regression.
+
+``zygarde simtest`` itself verifies the invariant — the streamed report
+must be byte-identical to the single-process sweep — and exits nonzero
+(printing reproduce/commit instructions) on any divergence, wedge, or
+virtual-horizon overrun.
+
+``--self-test`` checks the seed-line parser and argument translation
+against built-in good and bad lines (no binary needed) and exits nonzero
+on any wrong verdict.
+"""
+
+import argparse
+import glob
+import os
+import subprocess
+import sys
+
+# Keep in sync with `zygarde simtest` flag defaults and the parser in
+# rust/tests/sweep_simnet.rs — the three views of a seed line must mean
+# the same campaign.
+DEFAULTS = {
+    "workers": "32",
+    "reps": "2",
+    "duration-ms": "6000",
+    "faults": "",
+    "lease": "0",
+    "lease-timeout-ms": "300",
+    "spill-cells": "32",
+}
+KNOWN_KEYS = {"seed"} | set(DEFAULTS)
+
+
+def parse_seed_line(text, origin):
+    """Parse one seed line into a full key->value dict (defaults filled)."""
+    entry = dict(DEFAULTS)
+    saw_seed = False
+    for tok in text.split():
+        if "=" not in tok:
+            raise ValueError(f"{origin}: `{tok}` is not key=value")
+        key, val = tok.split("=", 1)
+        if key not in KNOWN_KEYS:
+            raise ValueError(f"{origin}: unknown seed key `{key}`")
+        if key == "seed":
+            int(val)  # must be an integer
+            saw_seed = True
+        entry[key] = val
+    if not saw_seed:
+        raise ValueError(f"{origin}: no seed= token")
+    return entry
+
+
+def entry_args(entry):
+    """Translate a parsed entry into the `zygarde simtest` argv tail."""
+    args = ["simtest", "--matrix", "synthetic", "--seed", entry["seed"]]
+    for key in ("workers", "reps", "duration-ms", "lease",
+                "lease-timeout-ms", "spill-cells"):
+        args += [f"--{key}", entry[key]]
+    if entry["faults"]:
+        args += ["--faults", entry["faults"]]
+    return args
+
+
+def run_campaign(binary, entry, label):
+    argv = [binary] + entry_args(entry)
+    print(f"--- {label}: {' '.join(argv[1:])}", flush=True)
+    proc = subprocess.run(argv)
+    return proc.returncode == 0
+
+
+def replay_corpus(binary, corpus):
+    paths = sorted(glob.glob(os.path.join(corpus, "*.seed")))
+    if not paths:
+        print(f"::error::seed corpus {corpus} is empty")
+        return False
+    ok = True
+    for path in paths:
+        with open(path) as f:
+            entry = parse_seed_line(f.read(), path)
+        if not run_campaign(binary, entry, f"corpus {os.path.basename(path)}"):
+            print(f"::error::committed seed {entry['seed']} ({path}) regressed")
+            ok = False
+    print(f"corpus: {len(paths)} committed seed(s) replayed")
+    return ok
+
+
+def explore(binary, binary_count, base):
+    """Run `binary_count` fresh seeds; report the commit line on failure."""
+    worker_rotation = (8, 24, 64, 200)
+    for i in range(binary_count):
+        # Spread seeds deterministically from the base so consecutive CI
+        # runs (base = run number) never repeat a schedule.
+        seed = (base * 1_000_003 + i * 7_919) & 0xFFFF_FFFF
+        entry = dict(DEFAULTS)
+        entry.update({
+            "seed": str(seed),
+            "workers": str(worker_rotation[i % len(worker_rotation)]),
+            "reps": "1",
+            "duration-ms": "800",
+        })
+        if not run_campaign(binary, entry, f"explore {i + 1}/{binary_count}"):
+            line = (f"seed={seed} workers={entry['workers']} reps=1 "
+                    f"duration-ms=800")
+            print(f"::error::simnet exploration found a failing seed: {seed}")
+            print("commit it as a permanent regression:")
+            print(f'  echo "{line}" > rust/tests/seeds/serve/seed_{seed}.seed')
+            return False
+    print(f"exploration: {binary_count} fresh seed(s) passed")
+    return True
+
+
+def self_test():
+    failures = []
+
+    def check(name, cond):
+        if not cond:
+            failures.append(name)
+
+    e = parse_seed_line(
+        "seed=11 workers=200 reps=2 duration-ms=1200 "
+        "faults=latency=1..20,drop=0.02,crash=3", "<good>")
+    check("seed kept", e["seed"] == "11")
+    check("workers kept", e["workers"] == "200")
+    check("faults keeps = and ,", e["faults"] == "latency=1..20,drop=0.02,crash=3")
+    check("defaults filled", e["lease-timeout-ms"] == "300" and e["lease"] == "0")
+
+    e = parse_seed_line("seed=7", "<minimal>")
+    check("minimal gets all defaults", e["workers"] == "32" and e["faults"] == "")
+
+    argv = entry_args(e)
+    check("argv names the matrix", argv[:3] == ["simtest", "--matrix", "synthetic"])
+    check("argv carries the seed", "--seed" in argv and "7" in argv)
+    check("empty faults omitted", "--faults" not in argv)
+    argv = entry_args(parse_seed_line("seed=1 faults=none", "<none>"))
+    check("explicit faults passed", argv[-2:] == ["--faults", "none"])
+
+    for bad in ("workers=3", "seed=x", "seed=1 warp=9", "seed=1 bare"):
+        try:
+            parse_seed_line(bad, "<bad>")
+            failures.append(f"accepted bad line `{bad}`")
+        except ValueError:
+            pass
+
+    if failures:
+        for f in failures:
+            print(f"self-test FAILED: {f}")
+        return False
+    print("simnet_soak self-test passed")
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--bin", default="./target/release/zygarde",
+                    help="zygarde binary to drive")
+    ap.add_argument("--corpus", default="rust/tests/seeds/serve",
+                    help="directory of committed *.seed files")
+    ap.add_argument("--explore", type=int, default=0, metavar="N",
+                    help="additionally run N fresh exploration seeds")
+    ap.add_argument("--explore-base", type=int, default=1,
+                    help="base the exploration seeds derive from "
+                         "(pass the CI run number for fresh schedules)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="validate the parser/translator and exit")
+    args = ap.parse_args()
+
+    if args.self_test:
+        sys.exit(0 if self_test() else 1)
+
+    ok = replay_corpus(args.bin, args.corpus)
+    if ok and args.explore > 0:
+        ok = explore(args.bin, args.explore, args.explore_base)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()
