@@ -65,17 +65,30 @@ streaming execution (work-stealing dispatcher, out-of-core merge):
                   --listen HOST:PORT --lease N --lease-timeout-ms X
                   --spill-cells N --spill-dir DIR --out report.json --quiet
                   --metrics-out metrics.json --heartbeat-ms X
+                  --journal FILE | --resume FILE
                   + the sweep matrix flags (--seed/--jobs/--reps/...)]
+                 --journal: checksummed write-ahead log of received ranges
+                 + spill runs; after a crash, --resume FILE rebuilds the
+                 received bitmap, re-admits the persisted runs, and leases
+                 out only the missing cells — the report stays
+                 byte-identical (see README \"Crash recovery\")
   work           run leases for a dispatcher until it shuts us down
-                 [--connect -|HOST:PORT --threads N --batch N]
+                 [--connect -|HOST:PORT --threads N --batch N
+                  --retry N --retry-base-ms X --retry-seed N]
                  `-` speaks the protocol on stdin/stdout (what
                  `serve --workers N` spawns); HOST:PORT joins over TCP
+                 --retry: survive a dispatcher restart — reconnect with
+                 bounded exponential backoff (jitter from a seeded rng)
+                 and re-handshake; a refused reconnect after real work
+                 exits 0 (\"dispatcher finalized\")
 
 deterministic simulation (single thread, virtual clock, no sockets):
   simtest        run a whole serve campaign over a seeded simulated
                  network — latency, reordering, duplication, drops,
-                 partitions, worker crashes — and verify the streamed
-                 report is byte-identical to the single-process sweep
+                 partitions, worker crashes, dispatcher crash+resume
+                 (faults key dcrash=N, recovered through the real
+                 journal) — and verify the streamed report is
+                 byte-identical to the single-process sweep
                  [--seed N --workers N --faults SPEC|none --lease N
                   --lease-timeout-ms X --spill-cells N --threads N
                   --out report.json --log events.log
@@ -362,6 +375,15 @@ fn run_serve(args: &Args, seed: u64) {
     cfg.lease_timeout_ms = args.u64_or("lease-timeout-ms", 30_000);
     cfg.spill_cells = args.usize_or("spill-cells", 10_000);
     cfg.spill_dir = args.opt_str("spill-dir").map(std::path::PathBuf::from);
+    cfg.journal = args.opt_str("journal").map(std::path::PathBuf::from);
+    if let Some(j) = args.opt_str("resume") {
+        if cfg.journal.is_some() {
+            die("--journal and --resume are mutually exclusive: --resume FILE \
+                 recovers FILE and keeps journaling to it");
+        }
+        cfg.journal = Some(std::path::PathBuf::from(j));
+        cfg.resume = true;
+    }
     cfg.quiet = args.bool_or("quiet", false);
     cfg.metrics_out = args.opt_str("metrics-out").map(std::path::PathBuf::from);
     cfg.heartbeat_ms = args.u64_or("heartbeat-ms", 5_000);
@@ -433,13 +455,14 @@ fn run_simtest(args: &Args, seed: u64) {
     let net = &outcome.net;
     println!(
         "  net: {} sent, {} delivered, {} dropped, {} duplicated, {} reordered, \
-         {} crashes, {} partitions, {} kicks, {} relief workers",
+         {} crashes, {} dispatcher crashes, {} partitions, {} kicks, {} relief workers",
         net.sent,
         net.delivered,
         net.dropped,
         net.duplicated,
         net.reordered,
         net.crashes,
+        net.dcrashes,
         net.partitions,
         net.kicks,
         net.relief_spawns
@@ -477,7 +500,8 @@ fn run_simtest(args: &Args, seed: u64) {
 /// (`--connect host:port`). All diagnostics go to stderr; stdout may be
 /// the protocol stream.
 fn run_work(args: &Args) {
-    use zygarde::sim::sweep::serve::run_worker;
+    use zygarde::sim::sweep::serve::{backoff_ms, run_worker};
+    use zygarde::util::rng::Pcg32;
     let threads = args.usize_or("threads", sweep::default_threads());
     let batch = args.usize_or("batch", 4);
     let resolve = |name: &str, opts: &zygarde::util::json::Value| {
@@ -485,25 +509,86 @@ fn run_work(args: &Args) {
         sweep_cli::build_matrix(name, &opts)
     };
     let connect = args.str_or("connect", "-").to_string();
-    let outcome = if connect == "-" {
+    if connect == "-" {
+        // Pipe workers live and die with the dispatcher that spawned
+        // them — there is nothing to reconnect to.
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
         let mut rx = stdin.lock();
         let mut tx = stdout.lock();
-        run_worker(&mut rx, &mut tx, threads, batch, &resolve)
-    } else {
-        let stream = std::net::TcpStream::connect(&connect)
-            .unwrap_or_else(|e| die(&format!("connect {connect}: {e}")));
-        let read_half = stream
-            .try_clone()
-            .unwrap_or_else(|e| die(&format!("clone {connect}: {e}")));
-        let mut rx = std::io::BufReader::new(read_half);
-        let mut tx = stream;
-        run_worker(&mut rx, &mut tx, threads, batch, &resolve)
-    };
-    match outcome {
-        Ok(o) => eprintln!("work: {} cells over {} leases, clean shutdown", o.cells_run, o.leases),
-        Err(e) => die(&format!("work: {e}")),
+        match run_worker(&mut rx, &mut tx, threads, batch, &resolve) {
+            Ok(o) => {
+                eprintln!("work: {} cells over {} leases, clean shutdown", o.cells_run, o.leases)
+            }
+            Err(e) => die(&format!("work: {e}")),
+        }
+        return;
+    }
+    // TCP, with bounded exponential-backoff reconnect: a dispatcher that
+    // was kill -9'd and restarted with `serve --resume` looks like an
+    // EOF or a refused connect from here, and the worker should
+    // re-handshake rather than die. The jitter stream is seeded
+    // (--retry-seed) so tests are deterministic.
+    let retries = args.usize_or("retry", 0) as u32;
+    let retry_base = args.u64_or("retry-base-ms", 100);
+    let mut rng = Pcg32::new(args.u64_or("retry-seed", 0x7e77), 0x6261_636b_6f66_66);
+    let mut attempt: u32 = 0;
+    let mut handshaken_once = false;
+    loop {
+        // Distinguishes "the dispatcher is gone" (refused connect — after
+        // real work that means it finalized and exited, a clean ending)
+        // from "the dispatcher is there and rejected us" (an error).
+        let mut dispatcher_absent = false;
+        let failure = match std::net::TcpStream::connect(&connect) {
+            Ok(stream) => {
+                // A live dispatcher resets the retry budget: only
+                // *consecutive* failures count against --retry.
+                attempt = 0;
+                match stream.try_clone() {
+                    Ok(read_half) => {
+                        let mut rx = std::io::BufReader::new(read_half);
+                        let mut tx = stream;
+                        match run_worker(&mut rx, &mut tx, threads, batch, &resolve) {
+                            Ok(o) => {
+                                eprintln!(
+                                    "work: {} cells over {} leases, clean shutdown",
+                                    o.cells_run, o.leases
+                                );
+                                return;
+                            }
+                            Err(e) => {
+                                handshaken_once |= e.handshaken;
+                                format!("work: {e}")
+                            }
+                        }
+                    }
+                    Err(e) => format!("clone {connect}: {e}"),
+                }
+            }
+            Err(e) => {
+                dispatcher_absent = true;
+                format!("connect {connect}: {e}")
+            }
+        };
+        if attempt >= retries {
+            if handshaken_once && dispatcher_absent {
+                // We did real work for a dispatcher that has since gone
+                // away for good — overwhelmingly because it finalized
+                // its report and exited. A worker outliving a finished
+                // campaign is a success, not an error.
+                eprintln!("work: {failure}");
+                eprintln!("work: dispatcher finalized or left; exiting cleanly");
+                return;
+            }
+            if retries == 0 {
+                die(&failure);
+            }
+            die(&format!("{failure} (after {attempt} reconnect attempt(s))"));
+        }
+        let delay = backoff_ms(attempt, retry_base, &mut rng);
+        attempt += 1;
+        eprintln!("work: {failure}; reconnect attempt {attempt}/{retries} in {delay} ms");
+        std::thread::sleep(std::time::Duration::from_millis(delay));
     }
 }
 

@@ -250,6 +250,55 @@ impl DispatcherCore {
         }
     }
 
+    /// Rebuild a dispatcher from a recovered journal's received bitmap
+    /// (`super::journal::recover`): the pending queue holds exactly the
+    /// maximal runs of missing indices, so a restarted dispatcher leases
+    /// out only what the journal does not already cover. If the bitmap
+    /// is complete the core starts `done` and the shell goes straight to
+    /// the merge — no workers needed.
+    pub fn resume(
+        matrix_name: &str,
+        opts: Value,
+        fingerprint: MatrixFingerprint,
+        lease_size: usize,
+        lease_timeout_ms: u64,
+        received: Vec<bool>,
+    ) -> DispatcherCore {
+        let n = fingerprint.n_scenarios;
+        assert!(n > 0, "cannot serve an empty matrix");
+        assert_eq!(received.len(), n, "recovered bitmap does not match the matrix");
+        let n_received = received.iter().filter(|&&got| got).count();
+        let mut pending = VecDeque::new();
+        let mut i = 0;
+        while i < n {
+            if received[i] {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            while i < n && !received[i] {
+                i += 1;
+            }
+            pending.push_back((start, i));
+        }
+        DispatcherCore {
+            matrix_name: matrix_name.to_string(),
+            opts,
+            fingerprint,
+            n,
+            received,
+            n_received,
+            pending,
+            leases: BTreeMap::new(),
+            next_lease_id: 0,
+            workers: BTreeMap::new(),
+            lease_size: lease_size.max(1),
+            lease_timeout_ms,
+            done: n_received == n,
+            stats: DispatchStats::default(),
+        }
+    }
+
     pub fn is_done(&self) -> bool {
         self.done
     }
@@ -632,6 +681,38 @@ mod tests {
             }
         }
         panic!("no lease in {outs:?}");
+    }
+
+    #[test]
+    fn resumed_core_leases_only_the_gaps() {
+        let mut received = vec![false; 10];
+        for i in [0, 1, 2, 5, 8] {
+            received[i] = true;
+        }
+        let mut c =
+            DispatcherCore::resume("t", Value::Null, fp(10), 64, 1_000, received);
+        assert!(!c.is_done());
+        assert_eq!(c.cells_received(), 5);
+        // Gaps are 3..5, 6..8, 9..10; lease_size 64 grants each maximal
+        // gap whole, one lease at a time.
+        let mut outs = admit(&mut c, 0);
+        let mut got = Vec::new();
+        while !c.is_done() {
+            let (id, s, e) = lease_of(&outs);
+            got.push((s, e));
+            let cells: Vec<CellResult> = (s..e).map(cell).collect();
+            c.on_message(0, Msg::Cells { lease: id, cells }, 1);
+            outs = c.on_message(0, Msg::LeaseDone { lease: id }, 1);
+        }
+        assert_eq!(got, vec![(3, 5), (6, 8), (9, 10)]);
+        assert_eq!(c.stats.cells_received, 5, "no covered cell recomputed");
+    }
+
+    #[test]
+    fn resumed_core_with_a_complete_bitmap_is_born_done() {
+        let c = DispatcherCore::resume("t", Value::Null, fp(4), 8, 0, vec![true; 4]);
+        assert!(c.is_done());
+        assert_eq!(c.cells_received(), 4);
     }
 
     #[test]

@@ -1,0 +1,672 @@
+//! The dispatcher's write-ahead journal: crash recovery for `serve`.
+//!
+//! Zygarde's engine survives brown-outs by committing progress to NVM
+//! and rolling back to the last durable checkpoint; this module applies
+//! the same commit-then-crash-then-restore discipline to the dispatcher
+//! itself. A journaled serve appends one record per durable state
+//! change; a killed dispatcher restarted with `--resume` rebuilds the
+//! received-index bitmap and re-admits the spilled runs, leases out
+//! only the missing indices, and still streams a report byte-identical
+//! to the single-process `SweepReport::json_string()`.
+//!
+//! # Record format
+//!
+//! The journal is line-delimited text. Each record is one line:
+//!
+//! ```text
+//! <payload-json>#<fnv1a-64 of the payload, 16 lowercase hex digits>\n
+//! ```
+//!
+//! Payloads are `util::json` objects tagged by `"type"`:
+//!
+//! * `header` — first record, exactly once: the [`MatrixFingerprint`]
+//!   plus the sweep opts JSON, pinning *which* campaign this journal
+//!   belongs to. Resume refuses a journal whose fingerprint or opts
+//!   differ from the command line's matrix.
+//! * `range` — a half-open index range `[start, end)` whose cells went
+//!   into the spill run committed by the *next* `run` record. Ranges
+//!   are **provisional** until that `run` record lands (see below).
+//! * `run` — the commit marker for one spilled run: file path, index
+//!   span, cell count, and an FNV-1a content hash of the file bytes.
+//!   Committing marks every preceding provisional range as received.
+//! * `finalize` — the report was fully streamed; the journal is spent
+//!   and cannot be resumed.
+//!
+//! # Torn-tail rule
+//!
+//! `kill -9` can land mid-write, so recovery **truncates at the first
+//! bad checksum** (or missing trailing newline) and resumes from the
+//! last intact record. Likewise, provisional `range` records with no
+//! committing `run` record behind them are dropped — a run file whose
+//! manifest never landed is ignored entirely, so a crash *between*
+//! writing a spill file and journaling it can only cause recomputation,
+//! never a duplicate index in the merge. Everything else — a record
+//! that checksums correctly but is semantically corrupt (overlapping
+//! ranges, counts outside the matrix, malformed payload) — fails
+//! loudly with the offending record's byte offset: a journal either
+//! recovers or errors, it never yields a divergent report.
+
+use std::fs::OpenOptions;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::sim::sweep::shard::MatrixFingerprint;
+use crate::util::json::Value;
+
+/// FNV-1a 64-bit offset basis — the same dependency-free hash the shard
+/// fingerprint and the simnet log fingerprint use.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into a running FNV-1a state (start from [`FNV_OFFSET`]).
+pub fn fnv1a_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_extend(FNV_OFFSET, bytes)
+}
+
+/// One committed spill run, as journaled and as re-admitted on resume.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RunRecord {
+    /// The run file as the crashed dispatcher wrote it (resume adopts
+    /// it in place — spill directories are per-pid, so a restarted
+    /// process reads the old dir's runs and spills new ones elsewhere).
+    pub path: PathBuf,
+    /// Smallest index in the run.
+    pub start: usize,
+    /// Largest index in the run, plus one.
+    pub end: usize,
+    /// Lines in the run file. Runs may have interior index gaps (dedup,
+    /// interleaved leases), so `cells <= end - start`; the exact indices
+    /// are the preceding `range` records.
+    pub cells: usize,
+    /// FNV-1a over the file's raw bytes.
+    pub hash: u64,
+}
+
+/// What `recover` rebuilt from an intact journal prefix.
+#[derive(Clone, Debug)]
+pub struct Recovery {
+    pub fingerprint: MatrixFingerprint,
+    /// The sweep opts JSON pinned by the header, compared verbatim.
+    pub opts: Value,
+    /// Per-index "durably spilled" bitmap (length `n_scenarios`).
+    pub received: Vec<bool>,
+    pub n_received: usize,
+    /// Committed runs, in journal order.
+    pub runs: Vec<RunRecord>,
+    pub finalized: bool,
+    /// Byte length of the intact prefix; `Journal::resume` truncates
+    /// the file here before appending.
+    pub intact_len: u64,
+    /// Bytes dropped off the tail (torn write or uncommitted ranges);
+    /// 0 means the journal was clean.
+    pub torn_bytes: u64,
+}
+
+impl Recovery {
+    pub fn is_complete(&self) -> bool {
+        self.n_received == self.received.len()
+    }
+
+    /// Reject a journal that belongs to a different campaign. Byte 0 is
+    /// cited because the header record is always the first line.
+    pub fn verify_matches(
+        &self,
+        fp: &MatrixFingerprint,
+        opts: &Value,
+        path: &Path,
+    ) -> Result<(), String> {
+        if self.fingerprint != *fp {
+            return Err(format!(
+                "journal {} at byte 0: fingerprint mismatch: journal pins {:?}, \
+                 this serve expands {:?} — mixed binaries or drifted options",
+                path.display(),
+                self.fingerprint,
+                fp
+            ));
+        }
+        if self.opts.to_json() != opts.to_json() {
+            return Err(format!(
+                "journal {} at byte 0: sweep opts mismatch: journal pins {}, \
+                 this serve was given {}",
+                path.display(),
+                self.opts.to_json(),
+                opts.to_json()
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Append handle over a journal file. Every append is checksummed and
+/// flushed to the OS before it returns, so a `kill -9` at any instant
+/// leaves at worst one torn record at the tail.
+pub struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+fn io_err(path: &Path, e: std::io::Error) -> String {
+    format!("journal {}: {e}", path.display())
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+impl Journal {
+    /// Start a fresh journal: refuses to clobber an existing file (it
+    /// may be a resumable crash artifact — `--resume` it or delete it).
+    pub fn create(
+        path: &Path,
+        fp: &MatrixFingerprint,
+        opts: &Value,
+    ) -> Result<Journal, String> {
+        let file = OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(path)
+            .map_err(|e| {
+                format!(
+                    "journal {}: {e} (an existing journal is never overwritten — \
+                     resume it with --resume or remove it first)",
+                    path.display()
+                )
+            })?;
+        let mut j = Journal { file, path: path.to_path_buf() };
+        j.append(&obj(vec![
+            ("fingerprint", fp.to_json()),
+            ("opts", opts.clone()),
+            ("type", Value::Str("header".into())),
+        ]))?;
+        Ok(j)
+    }
+
+    /// Reopen a recovered journal for appending: truncates the torn /
+    /// uncommitted tail to `rec.intact_len`, then appends continue.
+    pub fn resume(path: &Path, rec: &Recovery) -> Result<Journal, String> {
+        let file = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .map_err(|e| io_err(path, e))?;
+        file.set_len(rec.intact_len).map_err(|e| io_err(path, e))?;
+        let mut j = Journal { file, path: path.to_path_buf() };
+        j.file.seek(SeekFrom::End(0)).map_err(|e| io_err(path, e))?;
+        Ok(j)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&mut self, payload: &Value) -> Result<(), String> {
+        let body = payload.to_json();
+        let line = format!("{body}#{:016x}\n", fnv1a(body.as_bytes()));
+        self.file
+            .write_all(line.as_bytes())
+            .map_err(|e| io_err(&self.path, e))?;
+        self.file.sync_data().map_err(|e| io_err(&self.path, e))
+    }
+
+    /// Journal one provisional received range (committed by the next
+    /// [`Journal::append_run`]).
+    pub fn append_range(&mut self, start: usize, end: usize) -> Result<(), String> {
+        self.append(&obj(vec![
+            ("end", Value::Num(end as f64)),
+            ("start", Value::Num(start as f64)),
+            ("type", Value::Str("range".into())),
+        ]))
+    }
+
+    /// Journal one run manifest — the commit marker for every range
+    /// record appended since the previous run record.
+    pub fn append_run(&mut self, run: &RunRecord) -> Result<(), String> {
+        self.append(&obj(vec![
+            ("cells", Value::Num(run.cells as f64)),
+            ("end", Value::Num(run.end as f64)),
+            ("hash", Value::Str(format!("{:016x}", run.hash))),
+            ("path", Value::Str(run.path.display().to_string())),
+            ("start", Value::Num(run.start as f64)),
+            ("type", Value::Str("run".into())),
+        ]))
+    }
+
+    /// One committed spill, atomically enough for `kill -9`: the exact
+    /// index ranges first, then the run manifest that commits them.
+    pub fn append_spill(
+        &mut self,
+        ranges: &[(usize, usize)],
+        run: &RunRecord,
+    ) -> Result<(), String> {
+        for &(s, e) in ranges {
+            self.append_range(s, e)?;
+        }
+        self.append_run(run)
+    }
+
+    /// Mark the report fully streamed; the journal can no longer resume.
+    pub fn append_finalize(&mut self, received: usize) -> Result<(), String> {
+        self.append(&obj(vec![
+            ("received", Value::Num(received as f64)),
+            ("type", Value::Str("finalize".into())),
+        ]))
+    }
+}
+
+/// Split one line into its checksummed payload; `None` = torn record.
+fn checksummed_payload(line: &[u8]) -> Option<&[u8]> {
+    if line.len() < 18 {
+        return None;
+    }
+    let (payload, tail) = line.split_at(line.len() - 17);
+    if tail[0] != b'#' {
+        return None;
+    }
+    let hex = std::str::from_utf8(&tail[1..]).ok()?;
+    let want = u64::from_str_radix(hex, 16).ok()?;
+    (fnv1a(payload) == want).then_some(payload)
+}
+
+/// Mirror of `CellResult::from_json`'s index hardening: a count field
+/// must be a non-negative exact integer within the matrix.
+fn exact_usize(v: &Value, what: &str, at: &str) -> Result<usize, String> {
+    let raw = v
+        .as_f64()
+        .ok_or_else(|| format!("{at}: `{what}` is not a number"))?;
+    if !raw.is_finite() || raw < 0.0 || raw.fract() != 0.0 || raw > (1u64 << 53) as f64 {
+        return Err(format!(
+            "{at}: `{what}` {raw} is not a non-negative exact integer"
+        ));
+    }
+    Ok(raw as usize)
+}
+
+/// Read and validate a journal: torn tails (bad checksum, missing
+/// newline, uncommitted ranges) are tolerated by truncation; semantic
+/// corruption in an intact record fails loudly with its byte offset.
+pub fn recover(path: &Path) -> Result<Recovery, String> {
+    let bytes = std::fs::read(path).map_err(|e| io_err(path, e))?;
+    let mut off = 0usize;
+    let mut intact = 0usize;
+    let mut rec: Option<Recovery> = None;
+    // Provisional ranges since the last committing run record.
+    let mut pending: Vec<(usize, usize)> = Vec::new();
+    while off < bytes.len() {
+        let at = format!("journal {} at byte {off}", path.display());
+        let Some(rel_nl) = bytes[off..].iter().position(|&b| b == b'\n') else {
+            break; // torn tail: record never got its newline
+        };
+        let line = &bytes[off..off + rel_nl];
+        let next = off + rel_nl + 1;
+        let Some(payload) = checksummed_payload(line) else {
+            break; // torn tail: bad checksum — truncate here
+        };
+        let text = std::str::from_utf8(payload)
+            .map_err(|_| format!("{at}: record is not UTF-8"))?;
+        let v = Value::parse(text).map_err(|e| format!("{at}: {e}"))?;
+        let kind = v
+            .get("type")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("{at}: record has no `type`"))?
+            .to_string();
+        match (kind.as_str(), rec.as_mut()) {
+            ("header", None) => {
+                let fp = MatrixFingerprint::from_json(
+                    v.get("fingerprint")
+                        .ok_or_else(|| format!("{at}: header has no `fingerprint`"))?,
+                )
+                .map_err(|e| format!("{at}: {e}"))?;
+                if fp.n_scenarios == 0 {
+                    return Err(format!("{at}: header pins an empty matrix"));
+                }
+                let opts = v
+                    .get("opts")
+                    .ok_or_else(|| format!("{at}: header has no `opts`"))?
+                    .clone();
+                let n = fp.n_scenarios;
+                rec = Some(Recovery {
+                    fingerprint: fp,
+                    opts,
+                    received: vec![false; n],
+                    n_received: 0,
+                    runs: Vec::new(),
+                    finalized: false,
+                    intact_len: 0,
+                    torn_bytes: 0,
+                });
+                intact = next;
+            }
+            ("header", Some(_)) => {
+                return Err(format!("{at}: second header record"));
+            }
+            (_, None) => {
+                return Err(format!(
+                    "{at}: first record is `{kind}`, expected `header`"
+                ));
+            }
+            ("range", Some(r)) => {
+                if r.finalized {
+                    return Err(format!("{at}: record after finalize"));
+                }
+                let start = exact_usize(v.req("start"), "start", &at)?;
+                let end = exact_usize(v.req("end"), "end", &at)?;
+                let n = r.received.len();
+                if start >= end || end > n {
+                    return Err(format!(
+                        "{at}: range {start}..{end} outside the {n}-cell matrix"
+                    ));
+                }
+                for i in start..end {
+                    if r.received[i] || pending.iter().any(|&(s, e)| s <= i && i < e) {
+                        return Err(format!(
+                            "{at}: range {start}..{end} duplicates/overlaps index {i} \
+                             already journaled as received"
+                        ));
+                    }
+                }
+                pending.push((start, end));
+                // Provisional: `intact` only advances when a run record
+                // commits this group (torn-tail rule in module docs).
+            }
+            ("run", Some(r)) => {
+                if r.finalized {
+                    return Err(format!("{at}: record after finalize"));
+                }
+                if pending.is_empty() {
+                    return Err(format!(
+                        "{at}: run manifest with no preceding range records"
+                    ));
+                }
+                let start = exact_usize(v.req("start"), "start", &at)?;
+                let end = exact_usize(v.req("end"), "end", &at)?;
+                let cells = exact_usize(v.req("cells"), "cells", &at)?;
+                let n = r.received.len();
+                if start >= end || end > n {
+                    return Err(format!(
+                        "{at}: run span {start}..{end} outside the {n}-cell matrix"
+                    ));
+                }
+                if cells == 0 || cells > end - start {
+                    return Err(format!(
+                        "{at}: run cell count {cells} outside its span {start}..{end}"
+                    ));
+                }
+                let covered: usize = pending.iter().map(|&(s, e)| e - s).sum();
+                if covered != cells {
+                    return Err(format!(
+                        "{at}: run commits {cells} cells but its range records \
+                         cover {covered}"
+                    ));
+                }
+                if pending.iter().any(|&(s, e)| s < start || e > end) {
+                    return Err(format!(
+                        "{at}: a committed range escapes the run span {start}..{end}"
+                    ));
+                }
+                let hash_str = v
+                    .get("hash")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| format!("{at}: run has no `hash`"))?;
+                let hash = u64::from_str_radix(hash_str, 16)
+                    .map_err(|_| format!("{at}: bad run hash `{hash_str}`"))?;
+                let run_path = v
+                    .get("path")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| format!("{at}: run has no `path`"))?;
+                for &(s, e) in &pending {
+                    for i in s..e {
+                        r.received[i] = true;
+                    }
+                    r.n_received += e - s;
+                }
+                pending.clear();
+                r.runs.push(RunRecord {
+                    path: PathBuf::from(run_path),
+                    start,
+                    end,
+                    cells,
+                    hash,
+                });
+                intact = next;
+            }
+            ("finalize", Some(r)) => {
+                if r.finalized {
+                    return Err(format!("{at}: second finalize record"));
+                }
+                if !pending.is_empty() {
+                    return Err(format!(
+                        "{at}: finalize with {} uncommitted range record(s)",
+                        pending.len()
+                    ));
+                }
+                let received = exact_usize(v.req("received"), "received", &at)?;
+                if received != r.received.len() || r.n_received != r.received.len() {
+                    return Err(format!(
+                        "{at}: finalize claims {received} cells but the journal \
+                         covers {} of {}",
+                        r.n_received,
+                        r.received.len()
+                    ));
+                }
+                r.finalized = true;
+                intact = next;
+            }
+            (other, Some(_)) => {
+                return Err(format!("{at}: unknown record type `{other}`"));
+            }
+        }
+        off = next;
+    }
+    let mut rec = rec.ok_or_else(|| {
+        format!(
+            "journal {} at byte 0: no intact header record — not a journal, \
+             or torn before the first write completed",
+            path.display()
+        )
+    })?;
+    rec.intact_len = intact as u64;
+    rec.torn_bytes = bytes.len() as u64 - rec.intact_len;
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(n: usize) -> MatrixFingerprint {
+        MatrixFingerprint { name: "jt".into(), seed: 5, n_scenarios: n, axes_hash: 0xabc }
+    }
+
+    fn temp(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("zygarde_journal_{tag}_{}.wal", std::process::id()))
+    }
+
+    fn fresh(tag: &str, n: usize) -> (PathBuf, Journal) {
+        let path = temp(tag);
+        let _ = std::fs::remove_file(&path);
+        let j = Journal::create(&path, &fp(n), &Value::Null).unwrap();
+        (path, j)
+    }
+
+    fn run(path: &str, start: usize, end: usize, cells: usize) -> RunRecord {
+        RunRecord { path: PathBuf::from(path), start, end, cells, hash: 0x1234 }
+    }
+
+    #[test]
+    fn roundtrip_header_ranges_runs_finalize() {
+        let (path, mut j) = fresh("roundtrip", 10);
+        j.append_spill(&[(0, 3), (5, 7)], &run("r0", 0, 7, 5)).unwrap();
+        j.append_spill(&[(3, 5), (7, 10)], &run("r1", 3, 10, 5)).unwrap();
+        j.append_finalize(10).unwrap();
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.fingerprint, fp(10));
+        assert_eq!(rec.n_received, 10);
+        assert!(rec.is_complete() && rec.finalized);
+        assert_eq!(rec.runs.len(), 2);
+        assert_eq!(rec.runs[0], run("r0", 0, 7, 5));
+        assert_eq!(rec.torn_bytes, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn create_refuses_to_clobber_an_existing_journal() {
+        let (path, j) = fresh("clobber", 4);
+        drop(j);
+        let err = Journal::create(&path, &fp(4), &Value::Null).unwrap_err();
+        assert!(err.contains("never overwritten"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_truncates_to_the_last_intact_record() {
+        let (path, mut j) = fresh("torn", 8);
+        j.append_spill(&[(0, 4)], &run("r0", 0, 4, 4)).unwrap();
+        j.append_spill(&[(4, 8)], &run("r1", 4, 8, 4)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let clean = recover(&path).unwrap();
+        assert_eq!(clean.n_received, 8);
+        // Truncate at every byte: recovery must never error (the header
+        // is intact) and must recover a monotone prefix of the state.
+        let header_len = full.iter().position(|&b| b == b'\n').unwrap() + 1;
+        for cut in header_len..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let rec = recover(&path).unwrap();
+            assert!(rec.n_received <= clean.n_received);
+            assert!(rec.runs.len() <= clean.runs.len());
+            assert!(rec.intact_len <= cut as u64);
+            for (i, &got) in rec.received.iter().enumerate() {
+                assert!(!got || clean.received[i], "cut={cut} index {i}");
+            }
+            // Resume truncates to the intact prefix and recovery of the
+            // truncated file is byte-stable.
+            let j2 = Journal::resume(&path, &rec).unwrap();
+            drop(j2);
+            let again = recover(&path).unwrap();
+            assert_eq!(again.n_received, rec.n_received);
+            assert_eq!(again.torn_bytes, 0);
+            std::fs::write(&path, &full).unwrap();
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn uncommitted_ranges_are_dropped_not_trusted() {
+        let (path, mut j) = fresh("uncommitted", 8);
+        j.append_spill(&[(0, 4)], &run("r0", 0, 4, 4)).unwrap();
+        j.append_range(4, 8).unwrap(); // crash before the run record
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.n_received, 4, "uncommitted range must not count");
+        assert!(rec.torn_bytes > 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn mid_file_corruption_truncates_at_the_bad_checksum() {
+        let (path, mut j) = fresh("midflip", 8);
+        j.append_spill(&[(0, 4)], &run("r0", 0, 4, 4)).unwrap();
+        j.append_spill(&[(4, 8)], &run("r1", 4, 8, 4)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one payload byte of the second spill's range record.
+        let header_end = bytes.iter().position(|&b| b == b'\n').unwrap() + 1;
+        let mut line_starts = vec![header_end];
+        for (i, &b) in bytes.iter().enumerate().skip(header_end) {
+            if b == b'\n' && i + 1 < bytes.len() {
+                line_starts.push(i + 1);
+            }
+        }
+        let third = line_starts[2]; // header, range, run, [range], run
+        bytes[third + 2] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.n_received, 4);
+        assert_eq!(rec.runs.len(), 1);
+        assert!(rec.torn_bytes > 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn overlapping_ranges_fail_loudly_with_the_byte_offset() {
+        let (path, mut j) = fresh("overlap", 8);
+        j.append_spill(&[(0, 4)], &run("r0", 0, 4, 4)).unwrap();
+        j.append_spill(&[(2, 6)], &run("r1", 2, 6, 4)).unwrap();
+        let err = recover(&path).unwrap_err();
+        assert!(err.contains("duplicates/overlaps"), "{err}");
+        assert!(err.contains("at byte"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn out_of_range_counts_fail_loudly() {
+        let (path, mut j) = fresh("oob", 4);
+        j.append_spill(&[(0, 9)], &run("r0", 0, 9, 9)).unwrap();
+        let err = recover(&path).unwrap_err();
+        assert!(err.contains("outside the 4-cell matrix"), "{err}");
+        assert!(err.contains("at byte"), "{err}");
+
+        let (path2, mut j2) = fresh("count", 8);
+        j2.append_range(0, 4).unwrap();
+        j2.append_run(&run("r0", 0, 4, 3)).unwrap(); // count lies
+        let err = recover(&path2).unwrap_err();
+        assert!(err.contains("commits 3 cells"), "{err}");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&path2);
+    }
+
+    #[test]
+    fn run_without_ranges_fails_loudly() {
+        let (path, mut j) = fresh("norange", 4);
+        j.append_run(&run("r0", 0, 4, 4)).unwrap();
+        let err = recover(&path).unwrap_err();
+        assert!(err.contains("no preceding range records"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fingerprint_and_opts_mismatch_are_rejected() {
+        let (path, j) = fresh("fpmm", 4);
+        drop(j);
+        let rec = recover(&path).unwrap();
+        let err = rec.verify_matches(&fp(9), &Value::Null, &path).unwrap_err();
+        assert!(err.contains("fingerprint mismatch"), "{err}");
+        let err = rec
+            .verify_matches(&fp(4), &Value::Str("other".into()), &path)
+            .unwrap_err();
+        assert!(err.contains("opts mismatch"), "{err}");
+        assert!(rec.verify_matches(&fp(4), &Value::Null, &path).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_appends_continue_a_recovered_journal() {
+        let (path, mut j) = fresh("resumeapp", 8);
+        j.append_spill(&[(0, 4)], &run("r0", 0, 4, 4)).unwrap();
+        j.append_range(4, 6).unwrap(); // torn group
+        drop(j);
+        let rec = recover(&path).unwrap();
+        let mut j2 = Journal::resume(&path, &rec).unwrap();
+        j2.append_spill(&[(4, 8)], &run("r1", 4, 8, 4)).unwrap();
+        j2.append_finalize(8).unwrap();
+        let done = recover(&path).unwrap();
+        assert!(done.finalized && done.is_complete());
+        assert_eq!(done.runs.len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fnv_is_the_shared_constant_stream() {
+        // Pinned: the same bytes must hash identically to the simnet
+        // log fingerprint's inline FNV-1a.
+        assert_eq!(fnv1a(b""), FNV_OFFSET);
+        assert_eq!(fnv1a(b"a"), fnv1a_extend(FNV_OFFSET, b"a"));
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+}

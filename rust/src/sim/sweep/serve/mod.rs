@@ -17,6 +17,10 @@
 //! * [`spill`] — [`SpillMerger`], the out-of-core merger: sorted runs
 //!   spilled to disk, k-way merged, report streamed out — peak memory is
 //!   the spill-run size, never the matrix size.
+//! * [`journal`] — the checksummed write-ahead log behind
+//!   `zygarde serve --journal/--resume`: every spilled run is committed
+//!   as provisional range records plus a manifest, torn tails truncate,
+//!   and a restarted dispatcher leases out only the missing indices.
 //! * [`service`] — the IO shell behind `zygarde serve`: transports,
 //!   reader/writer threads, the event loop.
 //! * [`simnet`] — a seeded discrete-event network that drives the same
@@ -42,6 +46,7 @@
 //! ```
 
 pub mod dispatch;
+pub mod journal;
 pub mod protocol;
 pub mod service;
 pub mod simnet;
@@ -49,7 +54,8 @@ pub mod spill;
 pub mod worker;
 
 pub use dispatch::{DispatchStats, DispatcherCore, Out, WorkerId, WorkerStats, LATENCY_BUCKETS};
+pub use journal::{recover, Journal, Recovery, RunRecord};
 pub use protocol::{read_msg, write_msg, Msg};
 pub use service::{serve_to, ServeConfig, ServeOutcome};
-pub use spill::SpillMerger;
-pub use worker::{run_worker, MatrixResolver, WorkerOutcome};
+pub use spill::{RunInfo, SpillMerger};
+pub use worker::{backoff_ms, run_worker, MatrixResolver, WorkerError, WorkerOutcome};

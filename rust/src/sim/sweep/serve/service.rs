@@ -36,6 +36,7 @@ use crate::sim::sweep::ScenarioMatrix;
 use crate::util::json::Value;
 
 use super::dispatch::{DispatcherCore, Out, WorkerId};
+use super::journal::{recover as recover_journal, Journal};
 use super::protocol::{read_msg, write_msg, Msg};
 use super::spill::SpillMerger;
 
@@ -66,6 +67,16 @@ pub struct ServeConfig {
     pub spill_cells: usize,
     /// Where run files go; default: a per-pid dir under the temp dir.
     pub spill_dir: Option<PathBuf>,
+    /// Write-ahead journal path (`--journal F` / `--resume F`): every
+    /// spilled run is committed to it, run files are preserved across
+    /// crashes, and a restarted dispatcher can `--resume` instead of
+    /// recomputing. `None` = no journal (exactly the old behavior).
+    pub journal: Option<PathBuf>,
+    /// `--resume F`: `journal` holds an existing journal to recover.
+    /// The received bitmap is rebuilt, persisted spill runs re-admitted,
+    /// only missing indices leased out — and journaling continues to the
+    /// same file.
+    pub resume: bool,
     /// Binary to spawn pipe workers from; default: this executable.
     /// (Tests pass `CARGO_BIN_EXE_zygarde` — a test harness binary has
     /// no `work` subcommand.)
@@ -102,6 +113,8 @@ impl ServeConfig {
             lease_timeout_ms: 30_000,
             spill_cells: 10_000,
             spill_dir: None,
+            journal: None,
+            resume: false,
             worker_exe: None,
             quiet: true,
             metrics_out: None,
@@ -199,26 +212,97 @@ impl Drop for Reaper {
 pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, String> {
     let n = cfg.matrix.len();
     let fp = fingerprint(&cfg.matrix);
-    let expected_workers = cfg.spawn_workers + usize::from(cfg.listen.is_some());
-    if expected_workers == 0 {
-        return Err("serve needs pipe workers (--workers) or a --listen address".to_string());
+    let t_start = cfg.clock.now_ms();
+
+    // --- journal / resume --------------------------------------------------
+    let mut journal: Option<Journal> = None;
+    let mut recovered = None;
+    if let Some(jpath) = &cfg.journal {
+        if cfg.resume {
+            let rec = recover_journal(jpath)?;
+            rec.verify_matches(&fp, &cfg.opts, jpath)?;
+            if rec.finalized {
+                return Err(format!(
+                    "journal {} is already finalized — its report was fully streamed; \
+                     start a fresh serve (new --journal) instead of resuming",
+                    jpath.display()
+                ));
+            }
+            if !cfg.quiet {
+                let torn = if rec.torn_bytes > 0 {
+                    format!(" (dropped {} torn tail byte(s))", rec.torn_bytes)
+                } else {
+                    String::new()
+                };
+                eprintln!(
+                    "serve: resuming from {} — {}/{n} cells journaled in {} run(s){torn}",
+                    jpath.display(),
+                    rec.n_received,
+                    rec.runs.len(),
+                );
+            }
+            journal = Some(Journal::resume(jpath, &rec)?);
+            recovered = Some(rec);
+        } else {
+            journal = Some(Journal::create(jpath, &fp, &cfg.opts)?);
+        }
+    } else if cfg.resume {
+        return Err("--resume requires a journal path".to_string());
     }
+
     let lease_size = if cfg.lease_size > 0 {
         cfg.lease_size
     } else {
         auto_lease_size(n, cfg.spawn_workers.max(1))
     };
-    let mut core = DispatcherCore::new(
-        &cfg.matrix_name,
-        cfg.opts.clone(),
-        fp,
-        lease_size,
-        cfg.lease_timeout_ms,
-    );
+    let mut core = match &recovered {
+        Some(rec) => DispatcherCore::resume(
+            &cfg.matrix_name,
+            cfg.opts.clone(),
+            fp.clone(),
+            lease_size,
+            cfg.lease_timeout_ms,
+            rec.received.clone(),
+        ),
+        None => DispatcherCore::new(
+            &cfg.matrix_name,
+            cfg.opts.clone(),
+            fp.clone(),
+            lease_size,
+            cfg.lease_timeout_ms,
+        ),
+    };
     let spill_dir = cfg.spill_dir.clone().unwrap_or_else(|| {
         std::env::temp_dir().join(format!("zygarde_serve_{}", std::process::id()))
     });
     let mut merger = Some(SpillMerger::new(spill_dir, cfg.spill_cells)?);
+    if let Some(m) = merger.as_mut() {
+        if journal.is_some() {
+            // Journaled run files must survive this process: the journal
+            // references them by path and a restarted dispatcher adopts
+            // them. They are deleted only after the finalize marker.
+            m.set_preserve(true);
+        }
+        if let Some(rec) = &recovered {
+            for run in &rec.runs {
+                m.adopt_run(run)?;
+            }
+        }
+    }
+
+    // A journal that already covers every cell: nothing to lease, go
+    // straight to the merge — no workers needed or spawned.
+    if core.is_done() {
+        if !cfg.quiet {
+            eprintln!("serve: journal already covers all {n} cells — finalizing without workers");
+        }
+        return finish(&cfg, &core, merger.take().expect("merger"), &mut journal, t_start, out);
+    }
+
+    let expected_workers = cfg.spawn_workers + usize::from(cfg.listen.is_some());
+    if expected_workers == 0 {
+        return Err("serve needs pipe workers (--workers) or a --listen address".to_string());
+    }
 
     let (events_tx, events_rx) = mpsc::channel::<Event>();
     let next_id = Arc::new(AtomicUsize::new(0));
@@ -292,7 +376,6 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
     }
 
     // --- main loop --------------------------------------------------------
-    let t_start = cfg.clock.now_ms();
     let mut done = false;
     let mut merge_err: Option<String> = None;
     let mut last_report = 0usize;
@@ -303,6 +386,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                      senders: &mut HashMap<WorkerId, mpsc::Sender<Msg>>,
                      closers: &mut HashMap<WorkerId, TcpStream>,
                      merger: &mut Option<SpillMerger>,
+                     journal: &mut Option<Journal>,
                      done: &mut bool,
                      merge_err: &mut Option<String>| {
             for o in outs {
@@ -319,6 +403,23 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                             if let Err(e) = m.push(cell) {
                                 *merge_err = Some(e);
                                 *done = true;
+                            } else {
+                                // Commit freshly spilled runs to the WAL
+                                // before anything else happens: ranges
+                                // first (provisional), then the manifest
+                                // that makes them durable. A journal that
+                                // cannot commit voids the resume guarantee
+                                // — abort loudly rather than serve on.
+                                for info in m.take_spilled() {
+                                    if let Some(j) = journal.as_mut() {
+                                        if let Err(e) =
+                                            j.append_spill(&info.ranges, &info.record)
+                                        {
+                                            *merge_err = Some(e);
+                                            *done = true;
+                                        }
+                                    }
+                                }
                             }
                         }
                     }
@@ -342,7 +443,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
 
         for id in pending_connects {
             let outs = core.on_connect(id);
-            route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+            route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
         }
 
         while !done {
@@ -355,11 +456,11 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                         eprintln!("serve: worker {id} connected");
                     }
                     let outs = core.on_connect(id);
-                    route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+                    route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
                 }
                 Ok(Event::Inbound(id, msg)) => {
                     let outs = core.on_message(id, msg, cfg.clock.now_ms());
-                    route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+                    route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
                 }
                 Ok(Event::Gone(id)) => {
                     senders.remove(&id);
@@ -368,7 +469,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                         eprintln!("serve: worker {id} disconnected");
                     }
                     let outs = core.on_disconnect(id, cfg.clock.now_ms());
-                    route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+                    route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
                     if live.is_empty() && cfg.listen.is_none() && !core.is_done() {
                         return Err(format!(
                             "all workers exited with {} of {n} cells ingested",
@@ -389,7 +490,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
             if !done && now.saturating_sub(last_tick) >= 100 {
                 last_tick = now;
                 let outs = core.on_tick(now);
-                route(outs, &mut senders, &mut closers, &mut merger, &mut done, &mut merge_err);
+                route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
             }
             if !cfg.quiet {
                 let got = core.cells_received();
@@ -452,10 +553,42 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
         }
     }
 
-    let merger = merger.expect("merger still present at finalize");
+    let merger = merger.take().expect("merger still present at finalize");
+    finish(&cfg, &core, merger, &mut journal, t_start, out)
+}
+
+/// Stream the merged report, retire the journal, and assemble the
+/// outcome — shared by the normal loop exit and the resumed-complete
+/// fast path (a journal that already covers every cell).
+fn finish(
+    cfg: &ServeConfig,
+    core: &DispatcherCore,
+    merger: SpillMerger,
+    journal: &mut Option<Journal>,
+    t_start: u64,
+    out: &mut dyn Write,
+) -> Result<ServeOutcome, String> {
+    let n = cfg.matrix.len();
     let runs_spilled = merger.runs_spilled();
     let peak_buffered = merger.peak_buffered();
+    let run_paths = merger.run_paths();
+    let run_dir = merger.dir().to_path_buf();
     let summary = merger.finalize(&cfg.matrix.name, cfg.matrix.seed, n, out)?;
+    if let Some(j) = journal.as_mut() {
+        // The report has fully left through `out`: mark the journal
+        // spent, then the preserved run files (possibly adopted from a
+        // crashed pid's spill dir) can finally go. The journal file
+        // itself stays — it is the durable record that this campaign
+        // completed, and `--resume` on it fails loudly.
+        j.append_finalize(n)?;
+        for p in &run_paths {
+            let _ = std::fs::remove_file(p);
+            if let Some(parent) = p.parent() {
+                let _ = std::fs::remove_dir(parent);
+            }
+        }
+        let _ = std::fs::remove_dir(&run_dir);
+    }
     if core.stats.duplicate_ratio() > 0.01 {
         eprintln!(
             "serve: WARN {:.1}% of delivered cells were late duplicates ({} of {}) — \

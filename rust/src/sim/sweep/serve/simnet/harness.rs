@@ -30,6 +30,7 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 
 use crate::sim::sweep::report::CellResult;
@@ -39,6 +40,7 @@ use crate::util::json::Value;
 use crate::util::rng::Pcg32;
 
 use super::super::dispatch::{DispatchStats, DispatcherCore, Out, WorkerId};
+use super::super::journal::{recover as recover_journal, Journal};
 use super::super::protocol::Msg;
 use super::super::spill::SpillMerger;
 use super::plan::{FaultPlan, FaultSpec};
@@ -114,6 +116,9 @@ pub struct NetCounters {
     pub reordered: u64,
     /// Planned crashes that found a victim.
     pub crashes: u64,
+    /// Planned dispatcher crash+resume cycles that fired (each one runs
+    /// the real `journal::recover` / `DispatcherCore::resume` path).
+    pub dcrashes: u64,
     /// Partition windows that opened.
     pub partitions: u64,
     /// Workers the core kicked for protocol violations (reordered or
@@ -161,6 +166,8 @@ enum Ev {
     /// The transport notices a closed connection.
     Gone { w: WorkerId },
     PartitionEnd { idx: usize },
+    /// A crashed dispatcher comes back up and recovers its journal.
+    DispatcherRestart,
     Tick,
 }
 
@@ -213,6 +220,17 @@ struct Sim {
     collect_log: bool,
     core: DispatcherCore,
     merger: Option<SpillMerger>,
+    /// Write-ahead journal, present only for campaigns with planned
+    /// dispatcher crashes (mirrors `serve --journal`).
+    journal: Option<Journal>,
+    journal_path: Option<PathBuf>,
+    /// Everything a restarted dispatcher needs to rebuild its core and
+    /// merger exactly the way `serve --resume` does.
+    matrix_name: String,
+    spill_dir: PathBuf,
+    spill_cells: usize,
+    lease_size: usize,
+    lease_timeout_ms: u64,
     heap: BinaryHeap<Scheduled>,
     seq: u64,
     now: u64,
@@ -224,9 +242,17 @@ struct Sim {
     partition_active: Vec<bool>,
     crash_cursor: usize,
     partition_cursor: usize,
+    dcrash_cursor: usize,
     /// Ingested-cell thresholds the permille triggers resolve to.
     crash_at: Vec<usize>,
     partition_at: Vec<usize>,
+    dcrash_at: Vec<usize>,
+    /// The dispatcher process is down (between a dcrash and its restart):
+    /// connects are refused and no core exists to make progress.
+    dispatcher_down: bool,
+    /// Slots of the workers that were alive at dcrash time — they retry
+    /// their connection after the restart, like `work --retry`.
+    reconnect_slots: Vec<usize>,
     heal_cells: usize,
     pending_connects: usize,
     done: bool,
@@ -352,6 +378,16 @@ impl Sim {
                         if let Err(e) = m.push(cell) {
                             self.merge_err = Some(e);
                             self.done = true;
+                        } else if self.journal.is_some() {
+                            // Same write-through as the serve shell:
+                            // ranges first, then the committing manifest.
+                            for info in m.take_spilled() {
+                                let j = self.journal.as_mut().expect("journal present");
+                                if let Err(e) = j.append_spill(&info.ranges, &info.record) {
+                                    self.merge_err = Some(e);
+                                    self.done = true;
+                                }
+                            }
                         }
                     }
                 }
@@ -413,9 +449,125 @@ impl Sim {
             self.note(line);
             self.schedule(self.now + dur, Ev::PartitionEnd { idx });
         }
+        // At most one dispatcher crash per apply; if a later threshold is
+        // already crossed when the restarted dispatcher makes progress,
+        // the next apply fires it. Never after `done`: a finalizing
+        // campaign has consumed its merger.
+        if !self.done
+            && !self.dispatcher_down
+            && self.dcrash_cursor < self.dcrash_at.len()
+            && got >= self.dcrash_at[self.dcrash_cursor]
+        {
+            self.crash_dispatcher();
+        }
+    }
+
+    /// kill -9 the dispatcher: the core and the merger's in-memory buffer
+    /// vanish, the journal handle closes wherever it stands, and every
+    /// connection drops without ceremony (no `on_disconnect` — there is
+    /// no core left to tell). Only journaled spill runs survive on disk.
+    fn crash_dispatcher(&mut self) {
+        let idx = self.dcrash_cursor;
+        self.dcrash_cursor += 1;
+        let restart_after = self.plan.dcrashes[idx].restart_after_ms;
+        self.net.dcrashes += 1;
+        self.dispatcher_down = true;
+        let line = format!(
+            "t={} dcrash#{idx} received={} restart=+{restart_after}ms",
+            self.now,
+            self.core.cells_received()
+        );
+        self.note(line);
+        // Preserved run files outlive this drop; buffered cells die here,
+        // exactly like the real process's heap.
+        self.merger = None;
+        self.journal = None;
+        self.reconnect_slots =
+            self.conns.iter().filter(|c| c.alive).map(|c| c.slot).collect();
+        for c in self.conns.iter_mut() {
+            c.alive = false;
+            c.gone = true;
+            c.holding = false;
+        }
+        self.schedule(self.now + restart_after, Ev::DispatcherRestart);
+    }
+
+    /// The restarted dispatcher: recover the journal, rebuild the core
+    /// from the received bitmap, re-admit the committed runs — the exact
+    /// code path behind `zygarde serve --resume`, nothing simulated.
+    fn on_dispatcher_restart(&mut self) {
+        let path = self.journal_path.clone().expect("dcrash campaigns always journal");
+        let fail = |s: &mut Sim, e: String| {
+            s.merge_err = Some(e);
+            s.done = true;
+        };
+        let rec = match recover_journal(&path) {
+            Ok(r) => r,
+            Err(e) => return fail(self, e),
+        };
+        if let Err(e) = rec.verify_matches(&self.fp, &Value::Null, &path) {
+            return fail(self, e);
+        }
+        let mut merger = match SpillMerger::new(self.spill_dir.clone(), self.spill_cells) {
+            Ok(m) => m,
+            Err(e) => return fail(self, e),
+        };
+        merger.set_preserve(true);
+        for run in &rec.runs {
+            if let Err(e) = merger.adopt_run(run) {
+                return fail(self, e);
+            }
+        }
+        let journal = match Journal::resume(&path, &rec) {
+            Ok(j) => j,
+            Err(e) => return fail(self, e),
+        };
+        self.core = DispatcherCore::resume(
+            &self.matrix_name,
+            Value::Null,
+            self.fp.clone(),
+            self.lease_size,
+            self.lease_timeout_ms,
+            rec.received.clone(),
+        );
+        self.merger = Some(merger);
+        self.journal = Some(journal);
+        self.dispatcher_down = false;
+        self.last_progress_ms = self.now;
+        let line = format!(
+            "t={} dispatcher resumed {}/{} cells from {} journaled run(s)",
+            self.now,
+            rec.n_received,
+            self.n,
+            rec.runs.len()
+        );
+        self.note(line);
+        if self.core.is_done() {
+            // Every cell was durably spilled before the crash: the resumed
+            // serve goes straight to finalize, no workers needed.
+            self.done = true;
+            let line = format!("t={} done (journal already complete)", self.now);
+            self.note(line);
+            return;
+        }
+        // The crashed-out workers reconnect with the same stagger the
+        // campaign opened with (the `work --retry` backoff analogue),
+        // getting fresh WorkerIds like any new connection.
+        let slots = std::mem::take(&mut self.reconnect_slots);
+        for slot in slots {
+            self.pending_connects += 1;
+            let delay = 1 + (slot as u64 % 5);
+            self.schedule(self.now + delay, Ev::Connect { slot });
+        }
     }
 
     fn on_connect_event(&mut self, slot: usize) {
+        if self.dispatcher_down {
+            // Connection refused; the worker backs off and retries —
+            // `pending_connects` stays claimed so relief logic holds off.
+            self.schedule(self.now + 10, Ev::Connect { slot });
+            return;
+        }
         self.pending_connects = self.pending_connects.saturating_sub(1);
         let w = self.conns.len();
         while self.slot_factor.len() <= slot {
@@ -501,6 +653,12 @@ impl Sim {
 
     fn on_tick_event(&mut self) {
         let now = self.now;
+        if self.dispatcher_down {
+            // No process, no maintenance and no relief — just keep the
+            // clock alive until the restart event fires.
+            self.schedule(now + self.tick_ms, Ev::Tick);
+            return;
+        }
         let outs = self.core.on_tick(now);
         self.apply("tick", outs);
         if self.done {
@@ -538,6 +696,7 @@ impl Sim {
                 }
             }
             Ev::Gone { w } => self.on_gone_event(w),
+            Ev::DispatcherRestart => self.on_dispatcher_restart(),
             Ev::PartitionEnd { idx } => {
                 self.partition_active[idx] = false;
                 let line = format!("t={} partition#{idx} healed", self.now);
@@ -668,12 +827,33 @@ pub fn run_campaign(matrix: &ScenarioMatrix, cfg: &SimConfig) -> Result<SimOutco
         std::process::id(),
         cfg.seed
     ));
-    let merger = SpillMerger::new(spill_dir.clone(), cfg.spill_cells.max(1))?;
+    let mut merger = SpillMerger::new(spill_dir.clone(), cfg.spill_cells.max(1))?;
+    // Campaigns with planned dispatcher crashes run the real journal:
+    // preserved spill runs plus a write-ahead log inside the (per-run)
+    // spill dir, all removed together after finalize.
+    let journal_path =
+        (!plan.dcrashes.is_empty()).then(|| spill_dir.join("journal.wal"));
+    let journal = match &journal_path {
+        Some(p) => {
+            merger.set_preserve(true);
+            match Journal::create(p, &fp, &Value::Null) {
+                Ok(j) => Some(j),
+                Err(e) => {
+                    drop(merger);
+                    let _ = std::fs::remove_dir_all(&spill_dir);
+                    return Err(format!("simnet seed {}: {e}", cfg.seed));
+                }
+            }
+        }
+        None => None,
+    };
     let heal_cells = (n * plan.heal_permille as usize).div_euclid(1000);
     let crash_at: Vec<usize> =
         plan.crashes.iter().map(|c| (n * c.at_permille as usize / 1000).max(1)).collect();
     let partition_at: Vec<usize> =
         plan.partitions.iter().map(|p| (n * p.at_permille as usize / 1000).max(1)).collect();
+    let dcrash_at: Vec<usize> =
+        plan.dcrashes.iter().map(|c| (n * c.at_permille as usize / 1000).max(1)).collect();
     let mut slot_factor = vec![1u64; workers];
     for &(slot, factor) in &plan.slow_links {
         slot_factor[slot] = factor;
@@ -688,6 +868,13 @@ pub fn run_campaign(matrix: &ScenarioMatrix, cfg: &SimConfig) -> Result<SimOutco
         collect_log: cfg.collect_log,
         core,
         merger: Some(merger),
+        journal,
+        journal_path,
+        matrix_name: matrix.name.clone(),
+        spill_dir: spill_dir.clone(),
+        spill_cells: cfg.spill_cells.max(1),
+        lease_size,
+        lease_timeout_ms: cfg.lease_timeout_ms.max(1),
         heap: BinaryHeap::new(),
         seq: 0,
         now: 0,
@@ -698,8 +885,12 @@ pub fn run_campaign(matrix: &ScenarioMatrix, cfg: &SimConfig) -> Result<SimOutco
         partition_active: vec![false; n_partitions],
         crash_cursor: 0,
         partition_cursor: 0,
+        dcrash_cursor: 0,
         crash_at,
         partition_at,
+        dcrash_at,
+        dispatcher_down: false,
+        reconnect_slots: Vec::new(),
         heal_cells,
         pending_connects: 0,
         done: false,
@@ -723,6 +914,14 @@ pub fn run_campaign(matrix: &ScenarioMatrix, cfg: &SimConfig) -> Result<SimOutco
     let merger = sim.merger.take().expect("merger present at finalize");
     let mut report: Vec<u8> = Vec::with_capacity(want.len());
     let finalize = merger.finalize(&matrix.name, matrix.seed, n, &mut report);
+    if finalize.is_ok() {
+        // Keep the record sequence faithful to the serve shell (spent
+        // journals end in a finalize marker) even though the whole spill
+        // dir — journal included — is removed right below.
+        if let Some(j) = sim.journal.as_mut() {
+            let _ = j.append_finalize(n);
+        }
+    }
     let _ = std::fs::remove_dir_all(&spill_dir);
     finalize.map_err(|e| format!("simnet seed {}: finalize failed: {e}", cfg.seed))?;
     let matches = report == want.as_bytes();

@@ -25,6 +25,8 @@
 //! partition=N      link partitions (a slot range goes dark for a while)
 //! slow=N           slow links (a slot's latency multiplied 2–8x)
 //! heal=PERMILLE    progress point after which the network behaves
+//! dcrash=N         dispatcher crashes (recovered through the real
+//!                  `--journal`/`--resume` code path; defaults to 0)
 //! none             shorthand for a clean network (all of the above off)
 //! ```
 
@@ -46,6 +48,11 @@ pub struct FaultSpec {
     pub partitions: Option<usize>,
     pub slow: Option<usize>,
     pub heal: Option<u32>,
+    /// Dispatcher crash+resume cycles. Unlike every other field this
+    /// defaults to **0**, not a seeded draw: dispatcher crashes route the
+    /// campaign through journal recovery, and the pre-journal seed corpus
+    /// must keep replaying byte-identically.
+    pub dcrashes: Option<usize>,
 }
 
 impl FaultSpec {
@@ -61,6 +68,7 @@ impl FaultSpec {
             partitions: Some(0),
             slow: Some(0),
             heal: Some(0),
+            dcrashes: Some(0),
         }
     }
 
@@ -118,6 +126,7 @@ impl FaultSpec {
                 "dup" => spec.dup = Some(prob(val)?),
                 "reorder" => spec.reorder = Some(prob(val)?),
                 "crash" => spec.crashes = Some(count(val)?),
+                "dcrash" => spec.dcrashes = Some(count(val)?),
                 "partition" => spec.partitions = Some(count(val)?),
                 "slow" => spec.slow = Some(count(val)?),
                 "heal" => {
@@ -131,7 +140,7 @@ impl FaultSpec {
                 other => {
                     return Err(format!(
                         "fault spec: unknown key `{other}` (known: latency, drop, dup, \
-                         reorder, crash, partition, slow, heal, none)"
+                         reorder, crash, dcrash, partition, slow, heal, none)"
                     ))
                 }
             }
@@ -182,6 +191,12 @@ pub struct FaultPlan {
     /// this permille of the matrix; past it the network is clean, which
     /// (with lease reissue) guarantees every campaign converges.
     pub heal_permille: u32,
+    /// Dispatcher crash+resume cycles, sorted by `at_permille`. The
+    /// harness runs each one through the real journal code: drop the
+    /// core and merger on the floor, `journal::recover`, resume. Drawn
+    /// *after* every legacy field — and only when `dcrash=` is present —
+    /// so pre-journal corpus seeds replay byte-identically.
+    pub dcrashes: Vec<CrashPlan>,
 }
 
 impl FaultPlan {
@@ -229,6 +244,18 @@ impl FaultPlan {
             .map(|_| (rng.below(workers as u64) as usize, 2 + rng.below(7)))
             .collect();
         let heal_permille = spec.heal.unwrap_or(850).min(1000);
+        // Dispatcher crashes come last in the draw order and the count is
+        // never seeded (`unwrap_or(0)`, not a draw): a spec without
+        // `dcrash=` consumes exactly the same rng stream as before the
+        // feature existed, so the committed seed corpus stays stable.
+        let n_dcrashes = spec.dcrashes.unwrap_or(0);
+        let mut dcrashes: Vec<CrashPlan> = (0..n_dcrashes)
+            .map(|_| CrashPlan {
+                at_permille: 50 + rng.below(700) as u32,
+                restart_after_ms: 20 + rng.below(200),
+            })
+            .collect();
+        dcrashes.sort_by_key(|c| c.at_permille);
         FaultPlan {
             seed,
             latency_ms,
@@ -239,6 +266,7 @@ impl FaultPlan {
             partitions,
             slow_links,
             heal_permille,
+            dcrashes,
         }
     }
 
@@ -246,13 +274,14 @@ impl FaultPlan {
     pub fn summary(&self) -> String {
         format!(
             "latency {}..{} ms, drop {:.2}%, dup {:.2}%, reorder {:.2}%, crashes {}, \
-             partitions {}, slow links {}, heal at {}/1000 cells",
+             dispatcher crashes {}, partitions {}, slow links {}, heal at {}/1000 cells",
             self.latency_ms.0,
             self.latency_ms.1,
             self.drop_p * 100.0,
             self.dup_p * 100.0,
             self.reorder_p * 100.0,
             self.crashes.len(),
+            self.dcrashes.len(),
             self.partitions.len(),
             self.slow_links.len(),
             self.heal_permille,
@@ -322,6 +351,33 @@ mod tests {
         assert_eq!(plan.drop_p, 0.0);
         assert!(plan.crashes.is_empty() && plan.partitions.is_empty());
         assert!(plan.slow_links.is_empty());
+        assert!(plan.dcrashes.is_empty());
+    }
+
+    #[test]
+    fn dcrash_draws_do_not_disturb_legacy_fields() {
+        // The whole point of appending the dcrash draws: a spec that only
+        // adds `dcrash=` must leave every pre-existing planned fault
+        // byte-identical, or the committed seed corpus would shift.
+        let base = FaultSpec::parse("crash=2,partition=1").unwrap();
+        let with = FaultSpec::parse("crash=2,partition=1,dcrash=3").unwrap();
+        let a = FaultPlan::from_seed(0xD15, 64, &base);
+        let b = FaultPlan::from_seed(0xD15, 64, &with);
+        assert_eq!(a.latency_ms, b.latency_ms);
+        assert_eq!(a.drop_p, b.drop_p);
+        assert_eq!(a.dup_p, b.dup_p);
+        assert_eq!(a.reorder_p, b.reorder_p);
+        assert_eq!(a.crashes, b.crashes);
+        assert_eq!(a.partitions, b.partitions);
+        assert_eq!(a.slow_links, b.slow_links);
+        assert!(a.dcrashes.is_empty());
+        assert_eq!(b.dcrashes.len(), 3);
+        assert!(b.dcrashes.windows(2).all(|w| w[0].at_permille <= w[1].at_permille));
+        for c in &b.dcrashes {
+            assert!((50..750).contains(&c.at_permille));
+            assert!((20..220).contains(&c.restart_after_ms));
+        }
+        assert!(b.summary().contains("dispatcher crashes 3"), "{}", b.summary());
     }
 
     #[test]
@@ -338,6 +394,7 @@ mod tests {
         assert!(FaultSpec::parse("latency=9..2").is_err());
         assert!(FaultSpec::parse("heal=2000").is_err());
         assert!(FaultSpec::parse("crash=-1").is_err());
+        assert!(FaultSpec::parse("dcrash=x").is_err());
     }
 
     #[test]

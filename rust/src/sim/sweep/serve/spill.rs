@@ -32,10 +32,24 @@
 use std::collections::BinaryHeap;
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::sim::sweep::report::{CellResult, SummaryAccumulator, SummaryStats};
 use crate::util::json::Value;
+
+use super::journal::{fnv1a, fnv1a_extend, RunRecord, FNV_OFFSET};
+
+/// One freshly spilled run plus the bookkeeping the serve shell needs to
+/// commit it to the write-ahead journal (drained via
+/// [`SpillMerger::take_spilled`]).
+#[derive(Clone, Debug)]
+pub struct RunInfo {
+    /// The journal manifest (path, index span, cell count, content hash).
+    pub record: RunRecord,
+    /// The run's maximal contiguous index sub-ranges, ascending —
+    /// journaled as provisional `range` records ahead of the manifest.
+    pub ranges: Vec<(usize, usize)>,
+}
 
 /// One spilled run or the final buffer, as an index-ordered line stream.
 enum RunSource {
@@ -82,6 +96,13 @@ pub struct SpillMerger {
     runs: Vec<PathBuf>,
     total_pushed: usize,
     peak_buffered: usize,
+    /// Manifests of runs spilled since the last `take_spilled` drain.
+    pending_manifests: Vec<RunInfo>,
+    /// Journaled serves keep their run files on disk after `Drop` — the
+    /// journal references them by path and a restarted dispatcher
+    /// re-admits them; the serve shell deletes them only after the
+    /// finalize marker lands.
+    preserve: bool,
 }
 
 impl SpillMerger {
@@ -96,7 +117,30 @@ impl SpillMerger {
             runs: Vec::new(),
             total_pushed: 0,
             peak_buffered: 0,
+            pending_manifests: Vec::new(),
+            preserve: false,
         })
+    }
+
+    /// Keep (or stop keeping) run files on disk when this merger drops.
+    pub fn set_preserve(&mut self, preserve: bool) {
+        self.preserve = preserve;
+    }
+
+    /// Every run file currently part of the merge (spilled + adopted).
+    pub fn run_paths(&self) -> Vec<PathBuf> {
+        self.runs.clone()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Drain the manifests of runs spilled since the last drain, for the
+    /// journal. Callers that don't journal may simply never call this —
+    /// the backlog is one small struct per run.
+    pub fn take_spilled(&mut self) -> Vec<RunInfo> {
+        std::mem::take(&mut self.pending_manifests)
     }
 
     /// Cells pushed so far (across buffer and spilled runs).
@@ -139,14 +183,117 @@ impl SpillMerger {
         let path = self.dir.join(format!("run_{:06}.jsonl", self.runs.len()));
         let file = File::create(&path).map_err(|e| format!("{}: {e}", path.display()))?;
         let mut w = BufWriter::new(file);
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        for c in &self.buf {
+            match ranges.last_mut() {
+                Some((_, e)) if *e == c.index => *e += 1,
+                _ => ranges.push((c.index, c.index + 1)),
+            }
+        }
+        let start = self.buf.first().expect("non-empty").index;
+        let end = self.buf.last().expect("non-empty").index + 1;
+        let cells = self.buf.len();
+        let mut hash = FNV_OFFSET;
         for c in self.buf.drain(..) {
             let mut line = c.to_json().to_json();
             line.push('\n');
+            hash = fnv1a_extend(hash, line.as_bytes());
             w.write_all(line.as_bytes())
                 .map_err(|e| format!("{}: {e}", path.display()))?;
         }
         w.flush().map_err(|e| format!("{}: {e}", path.display()))?;
+        self.pending_manifests.push(RunInfo {
+            record: RunRecord { path: path.clone(), start, end, cells, hash },
+            ranges,
+        });
         self.runs.push(path);
+        Ok(())
+    }
+
+    /// Re-admit a run file journaled by a crashed dispatcher. The file
+    /// is fully re-verified before it joins the merge — content hash,
+    /// per-line cell parse, strictly ascending indices pinned to the
+    /// journaled span and count — and any mismatch fails loudly with the
+    /// offending record's byte offset (same discipline as the shard-file
+    /// `index` corruption checks): a resumed serve either merges exactly
+    /// what the journal committed or refuses to produce a report.
+    pub fn adopt_run(&mut self, rec: &RunRecord) -> Result<(), String> {
+        let at =
+            |off: usize, detail: String| format!("{} at byte {off}: {detail}", rec.path.display());
+        let bytes =
+            std::fs::read(&rec.path).map_err(|e| format!("{}: {e}", rec.path.display()))?;
+        let hash = fnv1a(&bytes);
+        if hash != rec.hash {
+            return Err(format!(
+                "{}: content hash {hash:016x} does not match the journaled {:016x} — \
+                 the run file changed after it was committed",
+                rec.path.display(),
+                rec.hash
+            ));
+        }
+        let mut off = 0usize;
+        let mut count = 0usize;
+        let mut prev: Option<usize> = None;
+        for line in bytes.split(|&b| b == b'\n') {
+            if !line.is_empty() {
+                let text = std::str::from_utf8(line)
+                    .map_err(|_| at(off, "run line is not UTF-8".into()))?;
+                let v = Value::parse(text).map_err(|e| at(off, format!("{e}")))?;
+                let cell = CellResult::from_json(&v).map_err(|e| at(off, e))?;
+                if cell.index < rec.start || cell.index >= rec.end {
+                    return Err(at(
+                        off,
+                        format!(
+                            "cell index {} outside the journaled span {}..{}",
+                            cell.index, rec.start, rec.end
+                        ),
+                    ));
+                }
+                match prev {
+                    Some(p) if cell.index <= p => {
+                        return Err(at(
+                            off,
+                            format!(
+                                "cell index {} not ascending after {p} \
+                                 (duplicate or shuffled run)",
+                                cell.index
+                            ),
+                        ));
+                    }
+                    None if cell.index != rec.start => {
+                        return Err(at(
+                            off,
+                            format!(
+                                "first cell index {} does not open the journaled \
+                                 span {}..{}",
+                                cell.index, rec.start, rec.end
+                            ),
+                        ));
+                    }
+                    _ => {}
+                }
+                prev = Some(cell.index);
+                count += 1;
+            }
+            off += line.len() + 1;
+        }
+        if prev.map(|p| p + 1) != Some(rec.end) {
+            return Err(format!(
+                "{}: the run does not close its journaled span {}..{}",
+                rec.path.display(),
+                rec.start,
+                rec.end
+            ));
+        }
+        if count != rec.cells {
+            return Err(format!(
+                "{}: {count} cells on disk, journal committed {}",
+                rec.path.display(),
+                rec.cells
+            ));
+        }
+        self.total_pushed += count;
+        self.runs.push(rec.path.clone());
         Ok(())
     }
 
@@ -233,7 +380,12 @@ impl Drop for SpillMerger {
     /// every error path (a failed serve must not leave a matrix worth of
     /// JSONL in the temp dir). The dir is only removed once empty, in
     /// case the caller pointed several mergers at a shared directory.
+    /// Journaled serves set `preserve` — their run files outlive the
+    /// process on purpose.
     fn drop(&mut self) {
+        if self.preserve {
+            return;
+        }
         for path in &self.runs {
             let _ = std::fs::remove_file(path);
         }
@@ -279,6 +431,105 @@ mod tests {
         let summary = merger.finalize(&m.name, m.seed, report.n_scenarios, &mut bytes).unwrap();
         assert_eq!(String::from_utf8(bytes).unwrap(), report.json_string());
         assert_eq!(summary.released, report.summary.released);
+    }
+
+    #[test]
+    fn spilled_manifests_pin_hash_span_and_contiguous_ranges() {
+        let m = matrix();
+        let report = run_matrix(&m, 1);
+        let mut merger = SpillMerger::new(temp_dir("manifest"), 4).unwrap();
+        // Push 2,3,0,1 then 7,5: first run is contiguous 0..4, second
+        // (forced by a manual drain at finalize) has a gap.
+        for i in [2usize, 3, 0, 1] {
+            merger.push(report.cells[i].clone()).unwrap();
+        }
+        let infos = merger.take_spilled();
+        assert_eq!(infos.len(), 1);
+        let info = &infos[0];
+        assert_eq!((info.record.start, info.record.end, info.record.cells), (0, 4, 4));
+        assert_eq!(info.ranges, vec![(0, 4)]);
+        let disk = std::fs::read(&info.record.path).unwrap();
+        assert_eq!(super::fnv1a(&disk), info.record.hash);
+        assert!(merger.take_spilled().is_empty(), "drain is one-shot");
+    }
+
+    #[test]
+    fn adopted_runs_merge_byte_identically_and_survive_preserve() {
+        let m = matrix();
+        let report = run_matrix(&m, 2);
+        // First merger spills everything and preserves its runs (the
+        // crashed dispatcher).
+        let mut first = SpillMerger::new(temp_dir("adopt_src"), 3).unwrap();
+        first.set_preserve(true);
+        for c in report.cells.iter().rev().take(11).cloned() {
+            first.push(c).unwrap();
+        }
+        let infos = first.take_spilled();
+        assert!(infos.len() >= 3);
+        assert!(!first.is_empty());
+        // Cells still buffered in `first` die with it — only spilled
+        // runs are durable, exactly like a kill -9.
+        let durable: Vec<usize> = infos
+            .iter()
+            .flat_map(|i| i.ranges.iter().flat_map(|&(s, e)| s..e))
+            .collect();
+        drop(first);
+        // Second merger (the restarted dispatcher) adopts the runs and
+        // takes the remaining cells as fresh pushes.
+        let mut second = SpillMerger::new(temp_dir("adopt_dst"), 3).unwrap();
+        for info in &infos {
+            second.adopt_run(&info.record).unwrap();
+        }
+        for c in &report.cells {
+            if !durable.contains(&c.index) {
+                second.push(c.clone()).unwrap();
+            }
+        }
+        let mut bytes = Vec::new();
+        second.finalize(&m.name, m.seed, report.n_scenarios, &mut bytes).unwrap();
+        assert_eq!(String::from_utf8(bytes).unwrap(), report.json_string());
+        for info in &infos {
+            let _ = std::fs::remove_file(&info.record.path);
+        }
+    }
+
+    #[test]
+    fn adopt_run_rejects_corruption_with_byte_offsets() {
+        let m = matrix();
+        let report = run_matrix(&m, 1);
+        let mut merger = SpillMerger::new(temp_dir("adopt_bad"), 4).unwrap();
+        merger.set_preserve(true);
+        for c in report.cells.iter().take(4).cloned() {
+            merger.push(c).unwrap();
+        }
+        let info = merger.take_spilled().pop().unwrap();
+        drop(merger);
+        let good = std::fs::read(&info.record.path).unwrap();
+
+        // Content tampering: hash check fires first.
+        let mut bad = good.clone();
+        bad[10] ^= 0x01;
+        std::fs::write(&info.record.path, &bad).unwrap();
+        let mut fresh = SpillMerger::new(temp_dir("adopt_bad2"), 4).unwrap();
+        let err = fresh.adopt_run(&info.record).unwrap_err();
+        assert!(err.contains("content hash"), "{err}");
+
+        // A journaled count that lies about the (hash-intact) file.
+        std::fs::write(&info.record.path, &good).unwrap();
+        let mut lying = info.record.clone();
+        lying.cells = 3;
+        let err = fresh.adopt_run(&lying).unwrap_err();
+        assert!(err.contains("not ascending") || err.contains("cells on disk"), "{err}");
+
+        // A journaled span the file does not open.
+        let mut shifted = info.record.clone();
+        shifted.start += 1;
+        shifted.end += 1;
+        shifted.cells = info.record.cells;
+        let err = fresh.adopt_run(&shifted).unwrap_err();
+        assert!(err.contains("at byte 0"), "{err}");
+        assert!(err.contains("outside the journaled span"), "{err}");
+        let _ = std::fs::remove_file(&info.record.path);
     }
 
     #[test]

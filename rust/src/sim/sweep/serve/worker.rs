@@ -22,6 +22,7 @@ use crate::sim::sweep::runner;
 use crate::sim::sweep::shard::fingerprint;
 use crate::sim::sweep::{Scenario, ScenarioMatrix};
 use crate::util::json::Value;
+use crate::util::rng::Pcg32;
 
 use super::protocol::{read_msg, write_msg, Msg};
 
@@ -31,6 +32,35 @@ use super::protocol::{read_msg, write_msg, Msg};
 pub struct WorkerOutcome {
     pub leases: usize,
     pub cells_run: usize,
+}
+
+/// Why a worker session ended without a clean `Shutdown`. `handshaken`
+/// is the reconnect policy's pivot: once a session completed the matrix
+/// handshake, a later refused reconnect most likely means the dispatcher
+/// finalized its report and exited — the CLI's retry loop then exits
+/// cleanly instead of reporting an error (`work --retry`).
+#[derive(Clone, Debug)]
+pub struct WorkerError {
+    /// The `Ready` reply had been sent before the session died.
+    pub handshaken: bool,
+    pub msg: String,
+}
+
+impl std::fmt::Display for WorkerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// Exponential backoff with deterministic jitter for `work --retry`:
+/// attempt `a` sleeps in `[cap/2, cap]` ms where `cap = base << min(a, 6)`
+/// — jittered from a seeded [`Pcg32`] so tests (and the simnet analogue)
+/// are reproducible, halved-floor so retries never collapse to zero and
+/// hammer a restarting dispatcher.
+pub fn backoff_ms(attempt: u32, base_ms: u64, rng: &mut Pcg32) -> u64 {
+    let cap = base_ms.max(1).saturating_mul(1u64 << attempt.min(6));
+    let lo = (cap / 2).max(1);
+    lo + rng.below(cap - lo + 1)
 }
 
 /// Serve-side matrix registry hook: `(name, opts-json) -> matrix`.
@@ -45,15 +75,20 @@ pub fn run_worker(
     threads: usize,
     batch: usize,
     resolve: &MatrixResolver,
-) -> Result<WorkerOutcome, String> {
+) -> Result<WorkerOutcome, WorkerError> {
     let batch = batch.max(1);
     let mut scenarios: Vec<Scenario> = Vec::new();
     let mut outcome = WorkerOutcome::default();
+    let mut handshaken = false;
+    let fail = |handshaken: bool, msg: String| Err(WorkerError { handshaken, msg });
     loop {
-        let msg = match read_msg(rx)? {
+        let msg = match read_msg(rx).map_err(|msg| WorkerError { handshaken, msg })? {
             Some(m) => m,
             None => {
-                return Err("dispatcher closed the connection before shutdown".to_string());
+                return fail(
+                    handshaken,
+                    "dispatcher closed the connection before shutdown".to_string(),
+                );
             }
         };
         match msg {
@@ -63,7 +98,7 @@ pub fn run_worker(
                     Err(e) => {
                         let reason = format!("cannot rebuild matrix `{name}`: {e}");
                         let _ = write_msg(tx, &Msg::Error { reason: reason.clone() });
-                        return Err(reason);
+                        return fail(handshaken, reason);
                     }
                 };
                 let fp = fingerprint(&matrix);
@@ -76,20 +111,25 @@ pub fn run_worker(
                          {announced:?} — mixed binaries or drifted options"
                     );
                     let _ = write_msg(tx, &Msg::Error { reason: reason.clone() });
-                    return Err(reason);
+                    return fail(handshaken, reason);
                 }
                 scenarios = matrix.expand();
-                write_msg(tx, &Msg::Ready { fingerprint: fp }).map_err(|e| e.to_string())?;
+                write_msg(tx, &Msg::Ready { fingerprint: fp })
+                    .map_err(|e| WorkerError { handshaken, msg: e.to_string() })?;
+                handshaken = true;
             }
             Msg::Lease { id, start, end } => {
                 if scenarios.is_empty() {
-                    return Err("lease before matrix handshake".to_string());
+                    return fail(handshaken, "lease before matrix handshake".to_string());
                 }
                 if start >= end || end > scenarios.len() {
-                    return Err(format!(
-                        "lease {id} range {start}..{end} exceeds the {}-cell expansion",
-                        scenarios.len()
-                    ));
+                    return fail(
+                        handshaken,
+                        format!(
+                            "lease {id} range {start}..{end} exceeds the {}-cell expansion",
+                            scenarios.len()
+                        ),
+                    );
                 }
                 let mut at = start;
                 while at < end {
@@ -97,18 +137,22 @@ pub fn run_worker(
                     let cells = runner::run_scenarios(&scenarios[at..stop], threads);
                     outcome.cells_run += cells.len();
                     write_msg(tx, &Msg::Cells { lease: id, cells })
-                        .map_err(|e| e.to_string())?;
+                        .map_err(|e| WorkerError { handshaken, msg: e.to_string() })?;
                     at = stop;
                 }
-                write_msg(tx, &Msg::LeaseDone { lease: id }).map_err(|e| e.to_string())?;
+                write_msg(tx, &Msg::LeaseDone { lease: id })
+                    .map_err(|e| WorkerError { handshaken, msg: e.to_string() })?;
                 outcome.leases += 1;
             }
             Msg::Shutdown => return Ok(outcome),
             Msg::Error { reason } => {
-                return Err(format!("dispatcher aborted: {reason}"));
+                return fail(handshaken, format!("dispatcher aborted: {reason}"));
             }
             Msg::Ready { .. } | Msg::Cells { .. } | Msg::LeaseDone { .. } => {
-                return Err("worker-bound stream got a dispatcher-bound message".to_string());
+                return fail(
+                    handshaken,
+                    "worker-bound stream got a dispatcher-bound message".to_string(),
+                );
             }
         }
     }
@@ -186,11 +230,47 @@ mod tests {
         let mut tx = Vec::new();
         let resolve = |_: &str, _: &Value| Ok(matrix());
         let err = run_worker(&mut rx, &mut tx, 1, 4, &resolve).unwrap_err();
-        assert!(err.contains("fingerprint mismatch"), "{err}");
+        assert!(err.msg.contains("fingerprint mismatch"), "{err}");
+        assert!(!err.handshaken, "handshake never completed");
         let text = String::from_utf8(tx).unwrap();
         assert!(
             matches!(Msg::parse_line(text.lines().next().unwrap()), Ok(Msg::Error { .. })),
             "worker should tell the dispatcher why it left"
         );
+    }
+
+    #[test]
+    fn eof_after_handshake_is_marked_handshaken() {
+        let m = matrix();
+        let fp = fingerprint(&m);
+        let script = scripted(&[Msg::Matrix {
+            name: "any".into(),
+            opts: Value::Null,
+            fingerprint: fp,
+        }]);
+        let mut rx = std::io::BufReader::new(&script[..]);
+        let mut tx = Vec::new();
+        let resolve = |_: &str, _: &Value| Ok(matrix());
+        let err = run_worker(&mut rx, &mut tx, 1, 4, &resolve).unwrap_err();
+        assert!(err.msg.contains("closed the connection"), "{err}");
+        assert!(err.handshaken, "the Ready reply had been sent");
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_never_zero() {
+        let mut a = Pcg32::new(0x7e77, 9);
+        let mut b = Pcg32::new(0x7e77, 9);
+        for attempt in 0..12 {
+            let base = 50;
+            let d1 = backoff_ms(attempt, base, &mut a);
+            let d2 = backoff_ms(attempt, base, &mut b);
+            assert_eq!(d1, d2, "same seed, same jitter");
+            let cap = base * (1u64 << attempt.min(6));
+            assert!(d1 >= cap / 2 && d1 <= cap, "attempt {attempt}: {d1} vs cap {cap}");
+            assert!(d1 > 0);
+        }
+        // Degenerate bases never collapse to a zero sleep.
+        assert_eq!(backoff_ms(0, 0, &mut a), 1);
+        assert_eq!(backoff_ms(0, 1, &mut a), 1);
     }
 }

@@ -1,0 +1,296 @@
+//! Property suite for resumable serves: crash the dispatcher at random
+//! points, recover the write-ahead journal, and assert the resumed
+//! campaign (a) streams a report **byte-identical** to the single-process
+//! `SweepReport::json_string()` and (b) never recomputes a cell the
+//! journal already covers (`DispatchStats::cells_received` of the resumed
+//! core counts exactly the missing cells). Torn tails are exercised by
+//! truncating the journal at arbitrary byte offsets: every cut either
+//! recovers to a byte-identical report or fails loudly with the offending
+//! byte offset — never a divergent report.
+//!
+//! The driver below mirrors the serve shell's wiring exactly — a
+//! preserving [`SpillMerger`] whose freshly spilled runs are committed to
+//! the [`Journal`] the moment they land — so what crashes here is the
+//! same state machine `zygarde serve --journal`/`--resume` runs. The
+//! real-process path (pipes, `kill -9`, TCP reconnect) is covered by the
+//! CI serve job; the seeded `dcrash` fault in `sweep_simnet.rs` covers
+//! crash+resume at scale.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::sim::sweep::serve::{
+    recover, DispatchStats, DispatcherCore, Journal, Msg, Out, SpillMerger,
+};
+use zygarde::sim::sweep::shard::fingerprint;
+use zygarde::sim::sweep::{run_matrix, CellResult, HarvesterSpec, ScenarioMatrix};
+use zygarde::util::json::Value;
+use zygarde::util::rng::Pcg32;
+
+fn matrix(seed: u64) -> ScenarioMatrix {
+    ScenarioMatrix::new("resume-test", seed)
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 600.0 },
+            HarvesterSpec::Persistent { power_mw: 150.0 },
+        ])
+        .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+        .reps(3)
+        .duration_ms(1_500.0)
+}
+
+fn temp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("zygarde_resume_{tag}_{}", std::process::id()))
+}
+
+fn cleanup(paths: &[&Path]) {
+    for p in paths {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_dir_all(p);
+    }
+}
+
+/// Drive one journaled serve session with a single simulated worker that
+/// replays the precomputed reference cells (determinism makes replay and
+/// recompute indistinguishable). `resume` recovers `journal_path` first,
+/// exactly like `serve --resume`; `stop_after` kills the session (no
+/// finalize, handles dropped where they stand) once that many cells have
+/// been ingested. Returns the report (None if crashed) and the stats of
+/// this core instance — the recompute-count witness.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    m: &ScenarioMatrix,
+    cells: &[CellResult],
+    journal_path: &Path,
+    spill_dir: &Path,
+    spill_limit: usize,
+    resume: bool,
+    stop_after: Option<usize>,
+    rng_seed: u64,
+) -> (Option<String>, DispatchStats) {
+    let fp = fingerprint(m);
+    let n = fp.n_scenarios;
+    let (mut core, mut merger, mut journal) = if resume {
+        let rec = recover(journal_path).unwrap();
+        rec.verify_matches(&fp, &Value::Null, journal_path).unwrap();
+        assert!(!rec.finalized, "a finalized journal cannot resume");
+        let mut merger = SpillMerger::new(spill_dir.to_path_buf(), spill_limit).unwrap();
+        merger.set_preserve(true);
+        for run in &rec.runs {
+            merger.adopt_run(run).unwrap();
+        }
+        let journal = Journal::resume(journal_path, &rec).unwrap();
+        let core = DispatcherCore::resume(
+            &m.name,
+            Value::Null,
+            fp.clone(),
+            4,
+            0,
+            rec.received.clone(),
+        );
+        (core, merger, journal)
+    } else {
+        let journal = Journal::create(journal_path, &fp, &Value::Null).unwrap();
+        let mut merger = SpillMerger::new(spill_dir.to_path_buf(), spill_limit).unwrap();
+        merger.set_preserve(true);
+        let core = DispatcherCore::new(&m.name, Value::Null, fp.clone(), 4, 0);
+        (core, merger, journal)
+    };
+    let mut rng = Pcg32::new(rng_seed, 0x7357);
+    let mut done = core.is_done();
+    // A journal that already covers every cell needs no worker at all.
+    let mut inflight: Vec<Out> = if done { Vec::new() } else { core.on_connect(0) };
+    let mut outbox: VecDeque<Msg> = VecDeque::new();
+    let mut now = 0u64;
+    while !done {
+        now += 1;
+        for o in std::mem::take(&mut inflight) {
+            match o {
+                Out::Send(_, Msg::Matrix { .. }) => {
+                    outbox.push_back(Msg::Ready { fingerprint: fp.clone() });
+                }
+                Out::Send(_, Msg::Lease { id, start, end }) => {
+                    let mut at = start;
+                    while at < end {
+                        let stop = (at + 1 + rng.below(3) as usize).min(end);
+                        outbox.push_back(Msg::Cells {
+                            lease: id,
+                            cells: cells[at..stop].to_vec(),
+                        });
+                        at = stop;
+                    }
+                    outbox.push_back(Msg::LeaseDone { lease: id });
+                }
+                Out::Send(_, Msg::Shutdown) => outbox.clear(),
+                Out::Send(_, other) => panic!("unexpected dispatcher send {other:?}"),
+                Out::Ingest(cell) => {
+                    merger.push(cell).unwrap();
+                    // The serve shell's write-through: ranges first, then
+                    // the run manifest that commits them.
+                    for info in merger.take_spilled() {
+                        journal.append_spill(&info.ranges, &info.record).unwrap();
+                    }
+                }
+                Out::Done => done = true,
+                Out::Kick(w) => panic!("unexpected kick of w{w}"),
+            }
+        }
+        if done {
+            break;
+        }
+        if let Some(stop) = stop_after {
+            if core.cells_received() >= stop {
+                // kill -9: nothing flushes, nothing finalizes. The
+                // preserved run files and the journal are all that's left.
+                return (None, core.stats.clone());
+            }
+        }
+        let Some(msg) = outbox.pop_front() else {
+            panic!("worker idle with {}/{} cells", core.cells_received(), n);
+        };
+        inflight.extend(core.on_message(0, msg, now));
+    }
+    let mut bytes = Vec::new();
+    merger.finalize(&m.name, m.seed, n, &mut bytes).unwrap();
+    journal.append_finalize(n).unwrap();
+    (Some(String::from_utf8(bytes).unwrap()), core.stats.clone())
+}
+
+/// Strip the last journal record (its line, newline included).
+fn strip_last_record(journal_path: &Path) {
+    let bytes = std::fs::read(journal_path).unwrap();
+    assert_eq!(bytes.last(), Some(&b'\n'), "journals end in a newline");
+    let cut = bytes[..bytes.len() - 1]
+        .iter()
+        .rposition(|&b| b == b'\n')
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    std::fs::write(journal_path, &bytes[..cut]).unwrap();
+}
+
+#[test]
+fn crash_at_random_points_then_resume_is_byte_identical_without_recompute() {
+    let m = matrix(0xE5);
+    let reference = run_matrix(&m, 2);
+    let want = reference.json_string();
+    let n = reference.cells.len();
+    let mut rng = Pcg32::new(0xC4A5, 11);
+    for trial in 0..6u64 {
+        let jp = temp(&format!("crash{trial}.wal"));
+        let d1 = temp(&format!("crash{trial}_a"));
+        let d2 = temp(&format!("crash{trial}_b"));
+        cleanup(&[&jp, &d1, &d2]);
+        // Cap the crash point so it always fires: one Cells message
+        // carries at most 3 cells, so received can overshoot `stop` by 2
+        // before the crash check runs — keep that short of completion.
+        let stop = 1 + rng.below(n as u64 - 3) as usize;
+        let (none, _) =
+            drive(&m, &reference.cells, &jp, &d1, 3, false, Some(stop), 0x111 + trial);
+        assert!(none.is_none(), "trial {trial} was supposed to crash");
+        let rec = recover(&jp).unwrap();
+        assert!(rec.n_received < n, "buffered cells must not be journaled");
+        let (got, stats) =
+            drive(&m, &reference.cells, &jp, &d2, 3, true, None, 0x222 + trial);
+        assert_eq!(got.unwrap(), want, "trial {trial}: stop {stop}");
+        assert_eq!(
+            stats.cells_received,
+            (n - rec.n_received) as u64,
+            "trial {trial}: the resumed core must lease out only the gaps"
+        );
+        let spent = recover(&jp).unwrap();
+        assert!(spent.finalized && spent.is_complete());
+        cleanup(&[&jp, &d1, &d2]);
+    }
+}
+
+#[test]
+fn crash_mid_spill_write_drops_the_uncommitted_group_and_recomputes_it() {
+    let m = matrix(0xE6);
+    let reference = run_matrix(&m, 2);
+    let want = reference.json_string();
+    let n = reference.cells.len();
+    let (jp, d1, d2) = (temp("midspill.wal"), temp("midspill_a"), temp("midspill_b"));
+    cleanup(&[&jp, &d1, &d2]);
+    // Crash with two committed spill groups in the journal (limit 3,
+    // stop 8 → runs at 3 and 6 cells, 2 buffered cells lost outright).
+    drive(&m, &reference.cells, &jp, &d1, 3, false, Some(8), 0x333);
+    let whole = recover(&jp).unwrap();
+    assert!(whole.runs.len() >= 2, "need at least two committed runs");
+    // Now tear the crash mid-spill-write: drop the last run manifest so
+    // its range records sit uncommitted, exactly as if the process died
+    // between writing the run file and committing it.
+    strip_last_record(&jp);
+    let torn = recover(&jp).unwrap();
+    let lost = whole.runs.last().unwrap().cells;
+    assert_eq!(torn.runs.len(), whole.runs.len() - 1);
+    assert_eq!(torn.n_received, whole.n_received - lost);
+    assert!(torn.torn_bytes > 0, "uncommitted ranges count as torn tail");
+    // The orphaned run file is ignored; resume recomputes its cells and
+    // still streams the byte-identical report.
+    let (got, stats) = drive(&m, &reference.cells, &jp, &d2, 3, true, None, 0x444);
+    assert_eq!(got.unwrap(), want);
+    assert_eq!(stats.cells_received, (n - torn.n_received) as u64);
+    cleanup(&[&jp, &d1, &d2]);
+}
+
+#[test]
+fn journal_truncated_at_arbitrary_bytes_recovers_or_fails_loudly() {
+    let m = matrix(0xE7);
+    let reference = run_matrix(&m, 2);
+    let want = reference.json_string();
+    let n = reference.cells.len();
+    let (jp, d1) = (temp("trunc.wal"), temp("trunc_a"));
+    cleanup(&[&jp, &d1]);
+    drive(&m, &reference.cells, &jp, &d1, 3, false, Some(8), 0x555);
+    let full = std::fs::read(&jp).unwrap();
+    let copy = temp("trunc_cut.wal");
+    let mut rng = Pcg32::new(0xCC7, 3);
+    for sample in 0..10u64 {
+        let cut = rng.below(full.len() as u64 + 1) as usize;
+        std::fs::write(&copy, &full[..cut]).unwrap();
+        match recover(&copy) {
+            Err(e) => {
+                // Only an unreadable header may hard-fail a pure
+                // truncation, and it must cite the offset.
+                assert!(e.contains("at byte 0"), "cut {cut}: {e}");
+            }
+            Ok(rec) => {
+                assert!(rec.n_received < n);
+                let dir = temp(&format!("trunc_b{sample}"));
+                cleanup(&[&dir]);
+                let (got, stats) =
+                    drive(&m, &reference.cells, &copy, &dir, 3, true, None, 0x666 + sample);
+                assert_eq!(got.unwrap(), want, "cut {cut} diverged");
+                assert_eq!(stats.cells_received, (n - rec.n_received) as u64, "cut {cut}");
+                cleanup(&[&dir]);
+            }
+        }
+    }
+    cleanup(&[&jp, &d1, &copy]);
+}
+
+#[test]
+fn fully_journaled_serve_resumes_to_finalize_without_any_worker() {
+    let m = matrix(0xE8);
+    let reference = run_matrix(&m, 2);
+    let want = reference.json_string();
+    let n = reference.cells.len();
+    let (jp, d1, d2) = (temp("full.wal"), temp("full_a"), temp("full_b"));
+    cleanup(&[&jp, &d1, &d2]);
+    // Spill limit 1: every cell is durable the instant it is ingested.
+    let (got, _) = drive(&m, &reference.cells, &jp, &d1, 1, false, None, 0x777);
+    assert_eq!(got.unwrap(), want);
+    let spent = recover(&jp).unwrap();
+    assert!(spent.finalized, "a completed journal carries the finalize marker");
+    // Pretend the crash hit after the last spill but before finalize:
+    // strip the marker. The journal then covers all n cells and the
+    // resumed serve goes straight to the report — zero cells recomputed.
+    strip_last_record(&jp);
+    let rec = recover(&jp).unwrap();
+    assert!(rec.is_complete() && !rec.finalized);
+    assert_eq!(rec.n_received, n);
+    let (got, stats) = drive(&m, &reference.cells, &jp, &d2, 1, true, None, 0x888);
+    assert_eq!(got.unwrap(), want);
+    assert_eq!(stats.cells_received, 0, "nothing to lease, nothing recomputed");
+    cleanup(&[&jp, &d1, &d2]);
+}

@@ -7,7 +7,8 @@
 //! 1. **Byte identity** — every campaign's streamed report equals the
 //!    single-process `SweepReport::json_string()`, whatever the network
 //!    did (latency, reordering, duplication, drops, partitions, worker
-//!    crashes mid-lease).
+//!    crashes mid-lease, dispatcher crash+resume through the real
+//!    journal).
 //! 2. **Seed determinism** — same seed, same run: the dispatcher event
 //!    log (and its hash) is a pure function of the seed; disjoint seeds
 //!    produce distinct plans and schedules.
@@ -163,6 +164,51 @@ fn flagship_200_worker_fault_campaign_is_byte_identical() {
         "the chaotic network did nothing: {:?}",
         outcome.net
     );
+}
+
+/// Dispatcher crash+resume at 200 workers, through the real journal
+/// code: the `dcrash` fault kills the dispatcher mid-campaign (core,
+/// journal handle, and the merger's in-memory buffer all die; preserved
+/// spill runs and the write-ahead log survive), then restarts it via
+/// `journal::recover` + `DispatcherCore::resume` + `adopt_run` — the
+/// exact `serve --resume` path — and the report must still come out
+/// byte-identical, deterministically.
+#[test]
+fn dispatcher_crash_and_resume_campaign_is_byte_identical() {
+    let entry = SeedEntry {
+        seed: 13,
+        workers: 200,
+        reps: 2,
+        duration_ms: 1_200.0,
+        faults: "latency=1..20,drop=0.02,dcrash=2".to_string(),
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 8,
+    };
+    let origin = PathBuf::from("dcrash");
+    let matrix = entry_matrix(&entry);
+    let cfg = entry_config(&entry, &origin);
+    let outcome = run_campaign(&matrix, &cfg).unwrap();
+    assert!(outcome.matches, "resumed campaign diverged");
+    assert!(outcome.net.dcrashes >= 1, "no dispatcher crash fired: {:?}", outcome.net);
+    assert!(
+        outcome.log.iter().any(|l| l.contains("dcrash#0")),
+        "the crash must be in the event log"
+    );
+    assert!(
+        outcome.log.iter().any(|l| l.contains("dispatcher resumed")),
+        "the journal recovery must be in the event log"
+    );
+    assert!(
+        outcome.workers_spawned > 200,
+        "crashed-out workers reconnect under fresh ids ({} spawned)",
+        outcome.workers_spawned
+    );
+    // Crash+resume is still a pure function of the seed.
+    let again = run_campaign(&matrix, &cfg).unwrap();
+    assert_eq!(outcome.report, again.report);
+    assert_eq!(outcome.log_hash, again.log_hash);
+    assert_eq!(outcome.net, again.net);
 }
 
 /// Same seed → same run: report bytes, the full event log, its hash, and

@@ -155,6 +155,18 @@ def self_test():
     argv = entry_args(parse_seed_line("seed=1 faults=none", "<none>"))
     check("explicit faults passed", argv[-2:] == ["--faults", "none"])
 
+    # Dispatcher-crash grammar (`dcrash=N`) rides inside the faults value
+    # verbatim — the binary's FaultSpec parser owns the grammar, so the
+    # soak driver must pass it through untouched.
+    e = parse_seed_line(
+        "seed=13 workers=200 reps=2 duration-ms=1200 "
+        "faults=latency=1..20,drop=0.02,dcrash=2 spill-cells=8", "<dcrash>")
+    check("dcrash passes through", e["faults"] == "latency=1..20,drop=0.02,dcrash=2")
+    check("spill-cells kept", e["spill-cells"] == "8")
+    argv = entry_args(e)
+    check("dcrash reaches argv",
+          argv[-1] == "latency=1..20,drop=0.02,dcrash=2")
+
     for bad in ("workers=3", "seed=x", "seed=1 warp=9", "seed=1 bare"):
         try:
             parse_seed_line(bad, "<bad>")
