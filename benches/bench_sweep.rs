@@ -19,7 +19,7 @@
 //! `tools/bench_gate.py` diffs it against the committed
 //! `BENCH_baseline.json` in CI and fails on a >30 % throughput drop.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::process::Command;
 use std::rc::Rc;
@@ -31,10 +31,12 @@ use zygarde::energy::harvester::HarvesterKind;
 use zygarde::exp::sweep_cli::bench_matrix;
 use zygarde::nvm::NvmSpec;
 use zygarde::sim::sweep::{
-    merge, run_matrix, run_matrix_reference, run_scenario, run_scenario_with_sink, CellResult,
-    FaultPlan, HarvesterSpec, PartialReport, ScenarioMatrix, SweepReport, TaskMix,
+    merge, run_matrix, run_matrix_reference, run_scenario, run_scenario_profiled,
+    run_scenario_with_sink, CellResult, FaultPlan, HarvesterSpec, PartialReport, ScenarioMatrix,
+    SweepReport, TaskMix,
 };
 use zygarde::sim::workload::synthetic_task;
+use zygarde::telemetry::registry::{Counter, Registry};
 use zygarde::telemetry::CountingSink;
 use zygarde::util::json::Value;
 
@@ -418,6 +420,47 @@ fn main() {
          overhead {trace_overhead:.3}x  ({trace_events} events/run), byte-identical"
     );
 
+    // --- metrics-registry overhead: profiled vs disabled -----------------
+    // Same structure as the trace row: the bench times the strictly MORE
+    // expensive enabled path — a registry attached, every hot-loop counter
+    // bumped and every fast-forward jump binned — against the disabled
+    // path already timed above (`registry = None`, one branch per
+    // would-be bump). Gating the ratio under the committed `max_overhead`
+    // upper-bounds the disabled-path cost. The profiled leg must also
+    // reproduce the reference report byte for byte: the registry is a
+    // passive observer or this bench fails before it times.
+    let merged_reg = RefCell::new(Registry::new());
+    let (profiled_cells, profiled_dt) = timed_cells(&|| {
+        let mut acc = Registry::new();
+        let cells: Vec<CellResult> = scenarios
+            .iter()
+            .map(|sc| {
+                let (cell, reg) = run_scenario_profiled(sc);
+                acc.merge(&reg);
+                cell
+            })
+            .collect();
+        *merged_reg.borrow_mut() = acc;
+        cells
+    });
+    let profiled_report = SweepReport::new(&matrix.name, matrix.seed, profiled_cells);
+    assert_eq!(
+        profiled_report.json_string(),
+        reference,
+        "attaching a registry changed the report bytes — the registry is not a passive observer"
+    );
+    let merged_reg = merged_reg.into_inner();
+    assert!(!merged_reg.is_zero(), "profiled run accumulated no metrics");
+    let registry_commits = merged_reg.get(Counter::Commits);
+    let registry_ff_jumps =
+        merged_reg.get(Counter::FfOffJumps) + merged_reg.get(Counter::FfOnIdleJumps);
+    let registry_overhead = profiled_dt / untraced_dt;
+    println!(
+        "registry disabled {untraced_dt:.3} s  profiled {profiled_dt:.3} s  \
+         overhead {registry_overhead:.3}x  ({registry_commits} commits, \
+         {registry_ff_jumps} ff jumps), byte-identical"
+    );
+
     // --- machine-readable trajectory ------------------------------------
     let out = obj(vec![
         ("bench", Value::Str("bench_sweep".to_string())),
@@ -496,6 +539,19 @@ fn main() {
                 ("traced_secs", Value::Num(traced_dt)),
                 ("overhead", Value::Num(trace_overhead)),
                 ("events", Value::Num(trace_events as f64)),
+            ])]),
+        ),
+        (
+            "registry",
+            Value::Arr(vec![obj(vec![
+                ("matrix", Value::Str("bench".to_string())),
+                ("scenarios", Value::Num(n as f64)),
+                ("duration_ms", Value::Num(duration_ms)),
+                ("disabled_secs", Value::Num(untraced_dt)),
+                ("profiled_secs", Value::Num(profiled_dt)),
+                ("overhead", Value::Num(registry_overhead)),
+                ("commits", Value::Num(registry_commits as f64)),
+                ("ff_jumps", Value::Num(registry_ff_jumps as f64)),
             ])]),
         ),
         (

@@ -31,9 +31,15 @@
 //!   functions ζ and ζ_I, Zygarde/EDF/EDF-M/RR schedulers, schedulability.
 //! * [`sim`] — discrete-event intermittently-powered MCU simulator, plus
 //!   the deterministic parallel scenario-sweep engine ([`sim::sweep`]).
-//! * [`telemetry`] — out-of-band engine event traces (typed events, sinks,
-//!   Chrome `trace_event` / JSONL exporters); provably byte-neutral to
-//!   reports, surfaced as `zygarde trace` and `zygarde sweep --trace-dir`.
+//! * [`telemetry`] — three observability layers, all provably byte-neutral
+//!   to reports: per-cell engine event traces (typed events, sinks, Chrome
+//!   `trace_event` / JSONL exporters; `zygarde trace`, `zygarde sweep
+//!   --trace-dir`), the campaign metrics registry
+//!   ([`telemetry::registry`]: deterministic counters/log2-histograms with
+//!   order-independent merge, surfaced as `zygarde profile --by AXIS`),
+//!   and the cross-layer serve timeline ([`telemetry::timeline`]: lease
+//!   lifecycle spans, journal recovery, and simnet fault events on one
+//!   Chrome trace via `zygarde serve|simtest --trace-out F`).
 //! * [`classifiers`] — KNN / k-means / SVM / random-forest baselines
 //!   (Table 7).
 //! * [`exp`] — one driver per paper table/figure (the scheduler,

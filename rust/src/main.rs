@@ -44,7 +44,9 @@ sharded execution (scale any sweep across processes / hosts):
                  shard_I_of_N.json); without: writes/prints the SweepReport
                  [--trace-dir DIR --trace-every N] additionally re-runs every
                  Nth cell (default 8) with tracing and writes Chrome JSON
-                 traces into DIR (out-of-band: the report bytes don't change)
+                 traces into DIR (out-of-band: the report bytes don't change);
+                 under --shard I/N only the shard's own cells are traced,
+                 into trace_sI_cXXXXX.json (shards can share one DIR)
   merge          zygarde merge shard_*.json [--out report.json] [--table]
                  reassembles shards into the byte-identical single-process
                  report; rejects shards from mismatched matrices
@@ -56,6 +58,17 @@ observability:
                   + the sweep matrix flags (--seed/--jobs/--reps/...)]
                  chrome: load in chrome://tracing or ui.perfetto.dev;
                  jsonl: one flat event object per line (see README)
+  profile        run a named matrix with the metric registry attached to
+                 every cell and print the per-axis time-and-energy
+                 waterfall: tick occupancy per regime (off / on-idle /
+                 probed / active), bulk fast-forward jumps by bounding
+                 event, NVM commit/rollback/restore costs
+                 [--matrix NAME --by mix|harvester|cap|sched|exit|fault|
+                  nvm|rep (default harvester) --threads N --out FILE
+                  + the sweep matrix flags (--seed/--jobs/--reps/...)]
+                 table to stdout; --out writes the snapshot JSON (schema
+                 in README \"Observability\"); registries are passive, so
+                 the sweep itself is byte-identical to an unprofiled run
 
 streaming execution (work-stealing dispatcher, out-of-core merge):
   serve          dispatch a named matrix as fine-grained leases to workers
@@ -65,8 +78,11 @@ streaming execution (work-stealing dispatcher, out-of-core merge):
                   --listen HOST:PORT --lease N --lease-timeout-ms X
                   --spill-cells N --spill-dir DIR --out report.json --quiet
                   --metrics-out metrics.json --heartbeat-ms X
-                  --journal FILE | --resume FILE
+                  --trace-out trace.json --journal FILE | --resume FILE
                   + the sweep matrix flags (--seed/--jobs/--reps/...)]
+                 --trace-out: Chrome trace_event timeline of the campaign
+                 (lease spans per worker, spill/journal instants), stamped
+                 with wall-clock ms since serve start
                  --journal: checksummed write-ahead log of received ranges
                  + spill runs; after a crash, --resume FILE rebuilds the
                  received bitmap, re-admits the persisted runs, and leases
@@ -91,8 +107,11 @@ deterministic simulation (single thread, virtual clock, no sockets):
                  byte-identical to the single-process sweep
                  [--seed N --workers N --faults SPEC|none --lease N
                   --lease-timeout-ms X --spill-cells N --threads N
-                  --out report.json --log events.log
+                  --out report.json --log events.log --trace-out trace.json
                   + the sweep matrix flags (--reps/--duration-ms/...)]
+                 --trace-out: the campaign timeline on the virtual clock —
+                 lease spans, journal recovery, fault markers — a pure
+                 function of the seed (CI byte-compares repeat runs)
                  same seed -> same run, byte for byte; on failure prints
                  the one-line seed entry to commit under
                  rust/tests/seeds/serve/ as a permanent regression
@@ -181,6 +200,7 @@ fn main() {
         }
         "sweep" => run_sweep(&args, seed),
         "trace" => run_trace(&args, seed),
+        "profile" => run_profile(&args, seed),
         "merge" => run_merge(&args),
         "serve" => run_serve(&args, seed),
         "work" => run_work(&args),
@@ -285,30 +305,64 @@ fn run_trace(args: &Args, seed: u64) {
     }
 }
 
+/// `zygarde profile`: run a named matrix with a metric registry attached
+/// to every cell's engine and print the per-axis waterfall. Registries
+/// are passive observers — the cells computed here are byte-identical to
+/// an unprofiled sweep's.
+fn run_profile(args: &Args, seed: u64) {
+    use zygarde::sim::sweep::{profile_matrix, DEFAULT_AXIS};
+    let (name, _, matrix) = matrix_from_flags(args, seed);
+    let threads = args.usize_or("threads", sweep::default_threads());
+    let by = args.str_or("by", DEFAULT_AXIS).to_string();
+    let report = profile_matrix(&matrix, threads, &by).unwrap_or_else(|e| die(&e));
+    print!("{}", report.render_table());
+    if let Some(out) = args.opt_str("out") {
+        let mut body = report.json_string();
+        body.push('\n');
+        std::fs::write(out, body).unwrap_or_else(|e| die(&format!("{out}: {e}")));
+        println!("profile `{name}` by {by}: {} cells -> {out}", report.n_cells);
+    }
+}
+
 /// Re-run every `every`-th cell with the telemetry sink on and drop one
 /// Chrome-format trace file per sampled cell into `dir`. Runs after the
 /// sweep so the report is untouched by construction — traced re-runs are
 /// byte-identical anyway, and deterministic re-execution is cheaper than
-/// plumbing sinks through the parallel runner.
-fn write_sampled_traces(dir: &str, every: usize, matrix: &sweep::ScenarioMatrix) {
+/// plumbing sinks through the parallel runner. Under `--shard` only the
+/// shard's own cells are sampled and files carry the shard index
+/// (`trace_sI_cXXXXX.json`), so N shards can share one directory without
+/// clobbering each other.
+fn write_sampled_traces(
+    dir: &str,
+    every: usize,
+    matrix: &sweep::ScenarioMatrix,
+    shard: Option<ShardSpec>,
+) {
     use zygarde::telemetry::export::{chrome_string, ScenarioTrace};
     std::fs::create_dir_all(dir).unwrap_or_else(|e| die(&format!("--trace-dir {dir}: {e}")));
     let scenarios = matrix.expand();
+    let owned: Vec<_> = scenarios
+        .iter()
+        .filter(|sc| shard.map_or(true, |s| s.owns(sc.index)))
+        .collect();
     let mut written = 0usize;
-    for sc in scenarios.iter().step_by(every.max(1)) {
+    for sc in owned.iter().step_by(every.max(1)) {
         let (cell, events) = sweep::run_scenario_traced(sc);
         let body = chrome_string(&[ScenarioTrace {
             label: cell.label.clone(),
             index: sc.index,
             events,
         }]);
-        let path = format!("{dir}/cell_{:05}.trace.json", sc.index);
+        let path = match shard {
+            Some(s) => format!("{dir}/trace_s{}_c{:05}.json", s.shard_index, sc.index),
+            None => format!("{dir}/cell_{:05}.trace.json", sc.index),
+        };
         std::fs::write(&path, body).unwrap_or_else(|e| die(&format!("{path}: {e}")));
         written += 1;
     }
     println!(
         "traces: {written} of {} cells (every {every}th) -> {dir}",
-        scenarios.len()
+        owned.len()
     );
 }
 
@@ -319,9 +373,6 @@ fn run_sweep(args: &Args, seed: u64) {
     let threads = args.usize_or("threads", sweep::default_threads());
     match args.opt_str("shard") {
         Some(spec) => {
-            if args.has("trace-dir") {
-                eprintln!("warning: --trace-dir is ignored with --shard (trace the merged run)");
-            }
             let shard = ShardSpec::parse(spec).unwrap_or_else(|e| die(&format!("--shard: {e}")));
             let part = sweep::run_shard(&matrix, shard, threads);
             let out = args.opt_str("out").map(String::from).unwrap_or_else(|| {
@@ -335,6 +386,9 @@ fn run_sweep(args: &Args, seed: u64) {
                 part.cells.len(),
                 part.fingerprint.n_scenarios
             );
+            if let Some(dir) = args.opt_str("trace-dir") {
+                write_sampled_traces(dir, args.usize_or("trace-every", 8), &matrix, Some(shard));
+            }
         }
         None => {
             let report = sweep::run_matrix(&matrix, threads);
@@ -349,7 +403,7 @@ fn run_sweep(args: &Args, seed: u64) {
                 None => report.print(),
             }
             if let Some(dir) = args.opt_str("trace-dir") {
-                write_sampled_traces(dir, args.usize_or("trace-every", 8), &matrix);
+                write_sampled_traces(dir, args.usize_or("trace-every", 8), &matrix, None);
             }
         }
     }
@@ -387,6 +441,7 @@ fn run_serve(args: &Args, seed: u64) {
     cfg.quiet = args.bool_or("quiet", false);
     cfg.metrics_out = args.opt_str("metrics-out").map(std::path::PathBuf::from);
     cfg.heartbeat_ms = args.u64_or("heartbeat-ms", 5_000);
+    cfg.trace_out = args.opt_str("trace-out").map(std::path::PathBuf::from);
     let out_path = args.str_or("out", "report.json").to_string();
     let file = std::fs::File::create(&out_path)
         .unwrap_or_else(|e| die(&format!("{out_path}: {e}")));
@@ -432,6 +487,7 @@ fn run_simtest(args: &Args, seed: u64) {
     cfg.lease_timeout_ms = args.u64_or("lease-timeout-ms", 300);
     cfg.spill_cells = args.usize_or("spill-cells", 32);
     cfg.threads = args.usize_or("threads", 0);
+    cfg.trace = args.has("trace-out");
     let fail = |detail: &str| {
         eprintln!("simtest `{name}` seed {seed}: FAILED — {detail}");
         eprintln!(
@@ -481,6 +537,11 @@ fn run_simtest(args: &Args, seed: u64) {
         body.push('\n');
         std::fs::write(path, body).unwrap_or_else(|e| die(&format!("{path}: {e}")));
         println!("  event log ({} lines) -> {path}", outcome.log.len());
+    }
+    if let Some(path) = args.opt_str("trace-out") {
+        let tl = outcome.timeline.as_ref().expect("--trace-out sets cfg.trace");
+        std::fs::write(path, format!("{tl}\n")).unwrap_or_else(|e| die(&format!("{path}: {e}")));
+        println!("  timeline ({} bytes, virtual clock) -> {path}", tl.len());
     }
     if !outcome.matches {
         fail(&format!(

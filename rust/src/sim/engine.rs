@@ -73,6 +73,7 @@ use crate::coordinator::task::{Job, JobState, TaskSpec};
 use crate::energy::conservative_ticks;
 use crate::energy::manager::EnergyManager;
 use crate::nvm::{CommitPolicy, Nvm};
+use crate::telemetry::registry::{mj_to_uj, Counter, Hist, RegistryHandle};
 use crate::telemetry::{EventKind, FfRegime, TraceEvent, TraceSink};
 use crate::util::rng::Pcg32;
 
@@ -159,6 +160,16 @@ pub struct Engine {
     /// [`EventKind::FastForward`] span events instead of per-tick samples.
     /// Disabled cost: one `Option` discriminant check per hook site.
     pub trace: Option<Box<dyn TraceSink>>,
+    /// Optional metrics registry (see [`crate::telemetry::registry`]).
+    /// Same passivity contract as `trace`: hooks only read sim state and
+    /// bump integer counters, never feed anything back into dispatch, so
+    /// profiled and unprofiled runs are byte-identical and the
+    /// accumulated registry is a pure function of the scenario. Regime
+    /// occupancy, fast-forward jump attribution, and NVM
+    /// commit/rollback/restore costs land here. Disabled cost: one
+    /// `Option` discriminant check per hook site (bulk loops accumulate
+    /// into the existing `n` and add once).
+    pub registry: Option<RegistryHandle>,
 }
 
 impl Engine {
@@ -203,6 +214,24 @@ impl Engine {
             reference: false,
             probe: None,
             trace: None,
+            registry: None,
+        }
+    }
+
+    /// Registry hooks: `Option` check on the disabled path, one shared-
+    /// handle add on the enabled one. Multi-metric sites guard the whole
+    /// block with `self.registry.is_some()` first.
+    #[inline]
+    fn reg_add(&self, c: Counter, n: u64) {
+        if let Some(r) = self.registry.as_ref() {
+            r.add(c, n);
+        }
+    }
+
+    #[inline]
+    fn reg_observe(&self, h: Hist, v: u64) {
+        if let Some(r) = self.registry.as_ref() {
+            r.observe(h, v);
         }
     }
 
@@ -346,6 +375,10 @@ impl Engine {
                 }
             }
             self.metrics.lost_fragments += lost;
+            if self.registry.is_some() {
+                self.reg_add(Counter::Rollbacks, 1);
+                self.reg_add(Counter::RollbackLostFragments, lost);
+            }
             if any_committed {
                 self.nvm.pending_restore = true;
             }
@@ -410,6 +443,10 @@ impl Engine {
         self.metrics.commits += 1;
         self.metrics.commit_mj += e_mj;
         self.metrics.commit_ms += t_ms;
+        if self.registry.is_some() {
+            self.reg_add(Counter::Commits, 1);
+            self.reg_add(Counter::CommitUj, mj_to_uj(e_mj));
+        }
         if self.trace.is_some() {
             self.emit(EventKind::Commit { jit: false, e_mj, t_ms });
         }
@@ -444,6 +481,11 @@ impl Engine {
         self.metrics.jit_commits += 1;
         self.metrics.commit_mj += e_mj;
         self.metrics.commit_ms += t_ms;
+        if self.registry.is_some() {
+            self.reg_add(Counter::Commits, 1);
+            self.reg_add(Counter::JitCommits, 1);
+            self.reg_add(Counter::CommitUj, mj_to_uj(e_mj));
+        }
         self.nvm.jit_armed = false;
         if self.trace.is_some() {
             self.emit(EventKind::Commit { jit: true, e_mj, t_ms });
@@ -504,6 +546,10 @@ impl Engine {
         self.metrics.restores += 1;
         self.metrics.restore_mj += e_mj;
         self.metrics.restore_ms += t_ms;
+        if self.registry.is_some() {
+            self.reg_add(Counter::Restores, 1);
+            self.reg_add(Counter::RestoreUj, mj_to_uj(e_mj));
+        }
         if self.trace.is_some() {
             self.emit(EventKind::Restore { e_mj, t_ms });
         }
@@ -737,6 +783,12 @@ impl Engine {
             self.now_ms += frag_ms;
             self.metrics.on_time_ms += frag_ms;
             self.metrics.fragments += 1;
+            if self.registry.is_some() {
+                // Tick-equivalents: fragment times are not tick-quantized,
+                // so occupancy charges round(frag_ms / dt), min 1.
+                let t = (frag_ms / self.cfg.idle_tick_ms).round().max(1.0) as u64;
+                self.reg_add(Counter::TicksActive, t);
+            }
             if self.energy.capacitor.draw(frag_mj) {
                 self.queue[idx].fragments_done += 1;
                 if self.trace.is_some() {
@@ -877,7 +929,8 @@ impl Engine {
         let dt = self.cfg.idle_tick_ms;
         self.energy.tick(dt);
         self.energy.capacitor.idle_drain(self.cfg.idle_power_mw, dt);
-        if self.energy.capacitor.mcu_on() {
+        let on = self.energy.capacitor.mcu_on();
+        if on {
             self.metrics.on_time_ms += dt;
             // The capacitor can sag through the JIT threshold while idle
             // (e.g. parked volatile progress under a closed ζ_I gate):
@@ -885,6 +938,19 @@ impl Engine {
             let _ = self.jit_check();
         }
         self.now_ms += dt;
+        if self.registry.is_some() {
+            // Occupancy attribution follows the on-time accrual above
+            // (post-drain MCU state); a probed tick is its own regime —
+            // the probe pinned the engine to genuine per-tick stepping.
+            let c = if self.probe.is_some() {
+                Counter::TicksProbed
+            } else if on {
+                Counter::TicksOnIdle
+            } else {
+                Counter::TicksOff
+            };
+            self.reg_add(c, 1);
+        }
         if let Some(p) = self.probe.as_mut() {
             p(self.now_ms, &self.energy, &self.metrics);
         }
@@ -961,20 +1027,37 @@ impl Engine {
             return;
         }
         loop {
-            // Analytic next-event budget: whole dark ΔT stretches at once.
-            let n = self
-                .energy
-                .harvester
-                .off_ticks_hint(dt)
-                .min(conservative_ticks(self.cfg.duration_ms - self.now_ms, dt))
-                .min(conservative_ticks(self.next_release_min - self.now_ms, dt))
-                .min(watch.ticks_until_due(self.now_ms, dt));
+            // Analytic next-event budget: whole dark ΔT stretches at
+            // once. Legs are named so an attached registry can attribute
+            // the jump to its bounding event (the chained `.min()`s are
+            // unchanged — same operations, same order, same value).
+            let b_window = self.energy.harvester.off_ticks_hint(dt);
+            let b_horizon = conservative_ticks(self.cfg.duration_ms - self.now_ms, dt);
+            let b_release = conservative_ticks(self.next_release_min - self.now_ms, dt);
+            let b_deadline = watch.ticks_until_due(self.now_ms, dt);
+            let n = b_window.min(b_horizon).min(b_release).min(b_deadline);
             if n > 0 {
                 let from_ms = self.now_ms;
                 self.energy.fast_forward_dark(n, dt);
                 // Sequential adds, exactly as the naive ticks would.
                 for _ in 0..n {
                     self.now_ms += dt;
+                }
+                if self.registry.is_some() {
+                    // Fixed tie-break priority (release → deadline →
+                    // window → horizon) keeps attribution deterministic.
+                    let bound = if b_release == n {
+                        Hist::FfRelease
+                    } else if b_deadline == n {
+                        Hist::FfDeadline
+                    } else if b_window == n {
+                        Hist::FfWindow
+                    } else {
+                        Hist::FfHorizon
+                    };
+                    self.reg_add(Counter::FfOffJumps, 1);
+                    self.reg_add(Counter::TicksOff, n);
+                    self.reg_observe(bound, n);
                 }
                 if self.trace.is_some() {
                     self.emit(EventKind::FastForward {
@@ -987,6 +1070,7 @@ impl Engine {
             // Exact tail: zero-power per-tick steps onto the event.
             while self.energy.off_tick(dt) {
                 self.now_ms += dt;
+                self.reg_add(Counter::TicksOff, 1);
                 if self.now_ms >= self.cfg.duration_ms
                     || self.next_release_min <= self.now_ms
                     || watch.due(self.now_ms)
@@ -1005,6 +1089,10 @@ impl Engine {
                 let _ = self.jit_check();
             }
             self.now_ms += dt;
+            self.reg_add(
+                if booted { Counter::TicksOnIdle } else { Counter::TicksOff },
+                1,
+            );
             if booted
                 || self.now_ms >= self.cfg.duration_ms
                 || self.next_release_min <= self.now_ms
@@ -1087,21 +1175,24 @@ impl Engine {
             return;
         }
         loop {
-            let n = self
-                .energy
-                .harvester
-                .off_ticks_hint(dt)
-                .min(conservative_ticks(self.cfg.duration_ms - self.now_ms, dt))
-                .min(conservative_ticks(self.next_release_min - self.now_ms, dt))
-                .min(watch.ticks_until_due(self.now_ms, dt))
-                // Brown-out: stay provably above v_off, padded two drain
-                // quanta past the √V comparison (zero idle power never
-                // crosses — the predictor saturates).
-                .min(self.energy.capacitor.idle_ticks_above(
-                    self.energy.capacitor.floor_mj() + 2.0 * drain_mj,
-                    drain_mj,
-                ))
-                .min(self.jit_idle_budget(drain_mj));
+            let b_window = self.energy.harvester.off_ticks_hint(dt);
+            let b_horizon = conservative_ticks(self.cfg.duration_ms - self.now_ms, dt);
+            let b_release = conservative_ticks(self.next_release_min - self.now_ms, dt);
+            let b_deadline = watch.ticks_until_due(self.now_ms, dt);
+            // Brown-out: stay provably above v_off, padded two drain
+            // quanta past the √V comparison (zero idle power never
+            // crosses — the predictor saturates).
+            let b_boot = self.energy.capacitor.idle_ticks_above(
+                self.energy.capacitor.floor_mj() + 2.0 * drain_mj,
+                drain_mj,
+            );
+            let b_jit = self.jit_idle_budget(drain_mj);
+            let n = b_window
+                .min(b_horizon)
+                .min(b_release)
+                .min(b_deadline)
+                .min(b_boot)
+                .min(b_jit);
             if n > 0 {
                 // Bulk replay of n dark idle ticks: harvester window
                 // clock, capacitor drain, on-time, and now — each the
@@ -1115,6 +1206,26 @@ impl Engine {
                 for _ in 0..n {
                     self.metrics.on_time_ms += dt;
                     self.now_ms += dt;
+                }
+                if self.registry.is_some() {
+                    // Tie-break priority: release → deadline → boot →
+                    // window → jit → horizon.
+                    let bound = if b_release == n {
+                        Hist::FfRelease
+                    } else if b_deadline == n {
+                        Hist::FfDeadline
+                    } else if b_boot == n {
+                        Hist::FfBoot
+                    } else if b_window == n {
+                        Hist::FfWindow
+                    } else if b_jit == n {
+                        Hist::FfJit
+                    } else {
+                        Hist::FfHorizon
+                    };
+                    self.reg_add(Counter::FfOnIdleJumps, 1);
+                    self.reg_add(Counter::TicksOnIdle, n);
+                    self.reg_observe(bound, n);
                 }
                 if self.trace.is_some() {
                     self.emit(EventKind::FastForward {

@@ -27,6 +27,10 @@
 //!   fine-grained index-range leases to worker processes (pipes or TCP),
 //!   reissues them on death or timeout, and merges results out-of-core —
 //!   still byte-identical (`zygarde serve` / `zygarde work`).
+//! * [`profile`] — campaign observability: the same sweep with a
+//!   [`crate::telemetry::registry::Registry`] attached per cell,
+//!   grouped into a per-axis time/energy waterfall that merges across
+//!   shards exactly like reports do (`zygarde profile`).
 //!
 //! Seed discipline: by default every scenario's engine seed is an
 //! independent function of `(matrix_seed, scenario_index)`
@@ -38,17 +42,19 @@
 //! size see identical release and harvest streams.
 
 pub mod faults;
+pub mod profile;
 pub mod report;
 pub mod runner;
 pub mod serve;
 pub mod shard;
 
 pub use faults::FaultPlan;
+pub use profile::{profile_matrix, profile_scenarios, ProfileGroup, ProfileReport, AXES, DEFAULT_AXIS};
 pub use report::{CellResult, SummaryStats, SweepReport};
 pub use runner::{
     build_engine, default_threads, run_matrix, run_matrix_reference, run_scenario,
-    run_scenario_reference, run_scenario_traced, run_scenario_with_sink, run_scenarios,
-    run_scenarios_reference,
+    run_scenario_profiled, run_scenario_reference, run_scenario_traced,
+    run_scenario_with_sink, run_scenarios, run_scenarios_profiled, run_scenarios_reference,
 };
 pub use shard::{
     fingerprint, merge, run_shard, MatrixFingerprint, MergeError, PartialReport, ShardSpec,

@@ -1,0 +1,332 @@
+//! Campaign profiling: per-axis time-and-energy waterfalls over a sweep.
+//!
+//! `zygarde profile --matrix M [--by AXIS]` runs the matrix with a
+//! [`Registry`] attached to every cell's engine and groups the per-cell
+//! registries by one label axis — which harvester / capacitor /
+//! scheduler / NVM policy burns its ticks where (off, on-idle, probed,
+//! active), how its bulk fast-forwards are bounded, and what its NVM
+//! commits/rollbacks/restores cost. The report side of a profiled sweep
+//! is byte-identical to an unprofiled one (registries are passive
+//! observers), and the profile itself composes exactly like reports do:
+//! grouping is per-label and [`Registry::merge`] is order-independent
+//! integer addition, so any sharding of the expansion, merged in any
+//! order, yields the same bytes (`rust/tests/registry_determinism.rs`).
+//!
+//! Axes index the slash-separated scenario label
+//! `{mix}/{harvester}/{cap}mF/{sched}/{exit}/{fault}/{nvm}/r{rep}` —
+//! see [`AXES`].
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::registry::{Counter, Hist, Registry, SCHEMA_VERSION};
+use crate::util::json::Value;
+
+use super::runner::run_scenarios_profiled;
+use super::{Scenario, ScenarioMatrix};
+
+/// Groupable axes, in label-component order.
+pub const AXES: [&str; 8] =
+    ["mix", "harvester", "cap", "sched", "exit", "fault", "nvm", "rep"];
+
+/// The default `--by` axis.
+pub const DEFAULT_AXIS: &str = "harvester";
+
+fn axis_index(by: &str) -> Option<usize> {
+    AXES.iter().position(|a| *a == by)
+}
+
+/// One axis value's merged registry.
+pub struct ProfileGroup {
+    pub value: String,
+    pub n_cells: usize,
+    pub registry: Registry,
+}
+
+/// A grouped campaign profile. `groups` is sorted by axis value;
+/// `total` is every cell merged regardless of group.
+pub struct ProfileReport {
+    pub matrix_name: String,
+    pub seed: u64,
+    pub by: String,
+    pub n_cells: usize,
+    pub groups: Vec<ProfileGroup>,
+    pub total: Registry,
+}
+
+impl ProfileReport {
+    /// Group labeled per-cell registries by the `by` axis. Pure fold:
+    /// input order never matters (BTreeMap grouping + order-independent
+    /// merges), which is what lets shard-split profiles reassemble
+    /// byte-identically.
+    pub fn from_cells(
+        matrix_name: &str,
+        seed: u64,
+        by: &str,
+        cells: impl IntoIterator<Item = (String, Registry)>,
+    ) -> Result<ProfileReport, String> {
+        let Some(axis) = axis_index(by) else {
+            return Err(format!(
+                "unknown profile axis '{by}' (expected one of: {})",
+                AXES.join(", ")
+            ));
+        };
+        let mut groups: BTreeMap<String, (usize, Registry)> = BTreeMap::new();
+        let mut total = Registry::new();
+        let mut n_cells = 0usize;
+        for (label, reg) in cells {
+            let value = label.split('/').nth(axis).unwrap_or("?").to_string();
+            let slot = groups.entry(value).or_insert_with(|| (0, Registry::new()));
+            slot.0 += 1;
+            slot.1.merge(&reg);
+            total.merge(&reg);
+            n_cells += 1;
+        }
+        Ok(ProfileReport {
+            matrix_name: matrix_name.to_string(),
+            seed,
+            by: by.to_string(),
+            n_cells,
+            groups: groups
+                .into_iter()
+                .map(|(value, (n, registry))| ProfileGroup { value, n_cells: n, registry })
+                .collect(),
+            total,
+        })
+    }
+
+    /// The profile document: versioned header, one registry snapshot per
+    /// group, one for the campaign total.
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("schema_version".to_string(), Value::Num(SCHEMA_VERSION as f64));
+        m.insert("matrix".to_string(), Value::Str(self.matrix_name.clone()));
+        m.insert("seed".to_string(), Value::Num(self.seed as f64));
+        m.insert("by".to_string(), Value::Str(self.by.clone()));
+        m.insert("n_cells".to_string(), Value::Num(self.n_cells as f64));
+        let groups = self
+            .groups
+            .iter()
+            .map(|g| {
+                let mut o = BTreeMap::new();
+                o.insert("value".to_string(), Value::Str(g.value.clone()));
+                o.insert("n_cells".to_string(), Value::Num(g.n_cells as f64));
+                o.insert("registry".to_string(), g.registry.snapshot());
+                Value::Obj(o)
+            })
+            .collect();
+        m.insert("groups".to_string(), Value::Arr(groups));
+        m.insert("total".to_string(), self.total.snapshot());
+        Value::Obj(m)
+    }
+
+    /// Canonical byte form — the unit of every determinism comparison.
+    pub fn json_string(&self) -> String {
+        self.to_json().to_json()
+    }
+
+    /// Aligned human table: the tick waterfall (percent of each group's
+    /// occupancy per regime) and the NVM cost columns. Display only —
+    /// the JSON above is the machine-readable artifact.
+    pub fn render_table(&self) -> String {
+        let mut out = format!(
+            "profile matrix={} seed={} by={} cells={}\n",
+            self.matrix_name, self.seed, self.by, self.n_cells
+        );
+        let rows: Vec<[String; 11]> = self
+            .groups
+            .iter()
+            .map(|g| profile_row(&g.value, g.n_cells, &g.registry))
+            .chain(std::iter::once(profile_row("TOTAL", self.n_cells, &self.total)))
+            .collect();
+        let header = [
+            "value", "cells", "ticks", "off%", "idle%", "probe%", "active%", "ff_jumps",
+            "commits", "rollbacks", "nvm_mj",
+        ];
+        let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+        for r in &rows {
+            for (w, cell) in widths.iter_mut().zip(r.iter()) {
+                *w = (*w).max(cell.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for (i, (cell, &w)) in cells.iter().zip(widths.iter()).enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                if i == 0 {
+                    // Left-align the value column, right-align numbers.
+                    line.push_str(&format!("{cell:<w$}"));
+                } else {
+                    line.push_str(&format!("{cell:>w$}"));
+                }
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(
+            &header.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+        ));
+        for r in &rows {
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+}
+
+fn profile_row(value: &str, n_cells: usize, r: &Registry) -> [String; 11] {
+    let off = r.get(Counter::TicksOff);
+    let idle = r.get(Counter::TicksOnIdle);
+    let probed = r.get(Counter::TicksProbed);
+    let active = r.get(Counter::TicksActive);
+    let ticks = off + idle + probed + active;
+    let pct = |v: u64| {
+        if ticks == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.1}", v as f64 * 100.0 / ticks as f64)
+        }
+    };
+    let ff = r.get(Counter::FfOffJumps) + r.get(Counter::FfOnIdleJumps);
+    let nvm_uj = r.get(Counter::CommitUj) + r.get(Counter::RestoreUj);
+    [
+        value.to_string(),
+        n_cells.to_string(),
+        ticks.to_string(),
+        pct(off),
+        pct(idle),
+        pct(probed),
+        pct(active),
+        ff.to_string(),
+        r.get(Counter::Commits).to_string(),
+        r.get(Counter::Rollbacks).to_string(),
+        format!("{:.3}", nvm_uj as f64 / 1000.0),
+    ]
+}
+
+/// Profile an explicit scenario list (a shard of an expansion, or the
+/// whole of one).
+pub fn profile_scenarios(
+    matrix_name: &str,
+    seed: u64,
+    scenarios: &[Scenario],
+    threads: usize,
+    by: &str,
+) -> Result<ProfileReport, String> {
+    // Validate the axis before burning compute on the sweep.
+    if axis_index(by).is_none() {
+        return Err(format!(
+            "unknown profile axis '{by}' (expected one of: {})",
+            AXES.join(", ")
+        ));
+    }
+    let cells = run_scenarios_profiled(scenarios, threads);
+    ProfileReport::from_cells(
+        matrix_name,
+        seed,
+        by,
+        cells.into_iter().map(|(c, r)| (c.label, r)),
+    )
+}
+
+/// Expand and profile a whole matrix (`zygarde profile`).
+pub fn profile_matrix(
+    matrix: &ScenarioMatrix,
+    threads: usize,
+    by: &str,
+) -> Result<ProfileReport, String> {
+    let scenarios = matrix.expand();
+    profile_scenarios(&matrix.name, matrix.seed, &scenarios, threads, by)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::SchedulerKind;
+    use crate::sim::sweep::{HarvesterSpec, ScenarioMatrix};
+
+    fn tiny() -> ScenarioMatrix {
+        ScenarioMatrix::new("profile-test", 0x5EED)
+            .harvesters(vec![
+                HarvesterSpec::Persistent { power_mw: 600.0 },
+                HarvesterSpec::Piezo { eta: 0.3 },
+            ])
+            .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+            .duration_ms(5_000.0)
+    }
+
+    #[test]
+    fn groups_follow_the_axis_and_counts_add_up() {
+        let p = profile_matrix(&tiny(), 2, "harvester").unwrap();
+        assert_eq!(p.n_cells, 4);
+        assert_eq!(p.groups.len(), 2, "two harvesters");
+        assert!(p.groups.iter().all(|g| g.n_cells == 2));
+        let by_sched = profile_matrix(&tiny(), 2, "sched").unwrap();
+        assert_eq!(by_sched.groups.len(), 2, "two schedulers");
+        // Same cells, different grouping: the campaign total is the same
+        // registry either way.
+        assert_eq!(p.total.snapshot_string(), by_sched.total.snapshot_string());
+        assert!(!p.total.is_zero());
+    }
+
+    #[test]
+    fn unknown_axis_is_rejected() {
+        assert!(profile_matrix(&tiny(), 1, "voltage").is_err());
+        for axis in AXES {
+            assert!(profile_matrix(&tiny(), 1, axis).is_ok(), "axis {axis}");
+        }
+    }
+
+    #[test]
+    fn json_carries_schema_version_and_groups() {
+        let p = profile_matrix(&tiny(), 1, "sched").unwrap();
+        let v = p.to_json();
+        assert_eq!(v.get("schema_version").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("by").unwrap().as_str(), Some("sched"));
+        let groups = v.get("groups").unwrap().as_arr().unwrap();
+        assert_eq!(groups.len(), 2);
+        for g in groups {
+            let reg = g.get("registry").unwrap();
+            assert!(reg.get("counters").unwrap().get("engine.ticks_off").is_some());
+        }
+        assert!(v.get("total").unwrap().get("hists").is_some());
+    }
+
+    #[test]
+    fn profiled_report_half_is_byte_identical_to_plain_sweep() {
+        let m = tiny();
+        let plain = crate::sim::sweep::run_matrix(&m, 2);
+        let scenarios = m.expand();
+        let profiled = run_scenarios_profiled(&scenarios, 2);
+        let report = crate::sim::sweep::SweepReport::new(
+            &m.name,
+            m.seed,
+            profiled.into_iter().map(|(c, _)| c).collect(),
+        );
+        assert_eq!(plain.json_string(), report.json_string());
+    }
+
+    #[test]
+    fn table_renders_a_total_row_per_axis() {
+        let p = profile_matrix(&tiny(), 1, "harvester").unwrap();
+        let t = p.render_table();
+        assert!(t.contains("TOTAL"));
+        assert!(t.contains("piezo"));
+        assert!(t.starts_with("profile matrix=profile-test"));
+        // Hist sanity through the public accessors: every observed jump
+        // landed under exactly one bounding event.
+        let jumps: u64 = [
+            Hist::FfRelease,
+            Hist::FfDeadline,
+            Hist::FfBoot,
+            Hist::FfWindow,
+            Hist::FfJit,
+            Hist::FfHorizon,
+        ]
+        .iter()
+        .map(|&h| p.total.hist(h).count)
+        .sum();
+        let calls = p.total.get(Counter::FfOffJumps) + p.total.get(Counter::FfOnIdleJumps);
+        assert_eq!(jumps, calls, "each bulk jump attributed exactly once");
+    }
+}

@@ -14,6 +14,7 @@ use crate::coordinator::sched::Scheduler;
 use crate::energy::capacitor::Capacitor;
 use crate::energy::manager::EnergyManager;
 use crate::sim::engine::{Engine, SimConfig};
+use crate::telemetry::registry::{Registry, RegistryHandle};
 use crate::telemetry::{TraceBuffer, TraceEvent, TraceSink};
 
 use super::report::{CellResult, SweepReport};
@@ -136,6 +137,23 @@ pub fn run_scenario_traced(sc: &Scenario) -> (CellResult, Vec<TraceEvent>) {
     (cell, buf.take())
 }
 
+/// Run one scenario with a metrics registry attached and return the
+/// accumulated per-cell [`Registry`] alongside the (byte-identical)
+/// cell result. The registry is a pure function of the scenario — see
+/// `rust/tests/registry_determinism.rs`.
+pub fn run_scenario_profiled(sc: &Scenario) -> (CellResult, Registry) {
+    let handle = RegistryHandle::new();
+    let mut engine = build_engine(sc);
+    engine.registry = Some(handle.clone());
+    let cell = CellResult {
+        index: sc.index,
+        label: sc.label(),
+        engine_seed: sc.engine_seed,
+        metrics: engine.run(),
+    };
+    (cell, handle.take())
+}
+
 /// Run a scenario list on `threads` workers; results come back in
 /// scenario-index order regardless of completion order.
 pub fn run_scenarios(scenarios: &[Scenario], threads: usize) -> Vec<CellResult> {
@@ -150,6 +168,29 @@ pub fn run_scenarios_reference(scenarios: &[Scenario], threads: usize) -> Vec<Ce
 }
 
 fn run_scenarios_impl(scenarios: &[Scenario], threads: usize, reference: bool) -> Vec<CellResult> {
+    run_scenarios_map(scenarios, threads, |sc| run_cell(sc, reference))
+}
+
+/// Run every scenario with a registry attached; results (and their
+/// per-cell registries) come back in scenario-index order. The work
+/// queue, chunking, and prewarm are identical to [`run_scenarios`] —
+/// only the per-cell closure differs — so the report half is
+/// byte-identical to an unprofiled sweep.
+pub fn run_scenarios_profiled(
+    scenarios: &[Scenario],
+    threads: usize,
+) -> Vec<(CellResult, Registry)> {
+    run_scenarios_map(scenarios, threads, run_scenario_profiled)
+}
+
+/// The shared sweep executor: plain scoped workers pulling fixed-size
+/// chunks off an atomic cursor, writing results back by scenario index.
+/// `run` must be a pure function of the scenario (every caller's is).
+fn run_scenarios_map<T, F>(scenarios: &[Scenario], threads: usize, run: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Scenario) -> T + Sync,
+{
     // Warm the harvester-calibration memo serially, once per unique
     // system spec per sweep: parallel workers then only ever take the
     // shared read lock instead of racing to duplicate the (identical)
@@ -167,10 +208,10 @@ fn run_scenarios_impl(scenarios: &[Scenario], threads: usize, reference: bool) -
     }
     let threads = threads.clamp(1, scenarios.len().max(1));
     if threads <= 1 {
-        return scenarios.iter().map(|sc| run_cell(sc, reference)).collect();
+        return scenarios.iter().map(run).collect();
     }
     let next = AtomicUsize::new(0);
-    let mut slots: Vec<Option<CellResult>> = (0..scenarios.len()).map(|_| None).collect();
+    let mut slots: Vec<Option<T>> = (0..scenarios.len()).map(|_| None).collect();
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
@@ -183,7 +224,7 @@ fn run_scenarios_impl(scenarios: &[Scenario], threads: usize, reference: bool) -
                         }
                         let end = (start + CHUNK).min(scenarios.len());
                         for i in start..end {
-                            local.push((i, run_cell(&scenarios[i], reference)));
+                            local.push((i, run(&scenarios[i])));
                         }
                     }
                     local

@@ -196,6 +196,33 @@ impl DispatchStats {
         m.insert("per_worker".to_string(), Value::Obj(workers));
         Value::Obj(m)
     }
+
+    /// The dispatcher's registry view (`serve.*` metric ids): the same
+    /// counters as [`to_json`], folded into a
+    /// [`crate::telemetry::registry::Registry`] so the stderr heartbeat,
+    /// `--metrics-out`, and `zygarde profile` all share one snapshot
+    /// schema. The lease-latency buckets inject whole — the bucketing
+    /// rule is identical ([`LATENCY_BUCKETS`] log2 buckets, bucket 0 for
+    /// zero) — with the exact total reconstructed from the per-worker
+    /// latency sums (every histogram observation also added there).
+    ///
+    /// [`to_json`]: DispatchStats::to_json
+    pub fn to_registry(&self) -> crate::telemetry::registry::Registry {
+        use crate::telemetry::registry::{Counter, Hist, HistData, Registry};
+        let mut r = Registry::new();
+        r.add(Counter::ServeLeasesGranted, self.leases_granted);
+        r.add(Counter::ServeSteals, self.steals);
+        r.add(Counter::ServeReissues, self.reissues);
+        r.add(Counter::ServeDuplicates, self.duplicates);
+        r.add(Counter::ServeWorkersSeen, self.workers_seen);
+        r.add(Counter::ServeCellsReceived, self.cells_received);
+        *r.hist_mut(Hist::ServeLeaseLatencyMs) = HistData {
+            buckets: self.lease_latency_hist,
+            count: self.lease_latency_hist.iter().sum(),
+            total: self.per_worker.values().map(|w| w.lease_ms_sum).sum(),
+        };
+        r
+    }
 }
 
 /// The dispatcher state machine. See module docs for the event model.
@@ -897,5 +924,30 @@ mod tests {
         assert_eq!(v.req("cells_received").f64(), 2.0);
         assert_eq!(v.req("lease_latency_hist_ms").arr().len(), LATENCY_BUCKETS);
         assert_eq!(v.req("per_worker").req("0").req("cells").f64(), 2.0);
+    }
+
+    #[test]
+    fn stats_registry_mirrors_the_counters_and_injects_the_histogram() {
+        use crate::telemetry::registry::{Counter, Hist};
+        let mut c = core(4, 4);
+        let outs = admit(&mut c, 0);
+        let (id, _, _) = lease_of(&outs);
+        c.on_message(0, Msg::Cells { lease: id, cells: (0..4).map(cell).collect() }, 5);
+        c.on_message(0, Msg::LeaseDone { lease: id }, 7);
+        let r = c.stats.to_registry();
+        assert_eq!(r.get(Counter::ServeLeasesGranted), c.stats.leases_granted);
+        assert_eq!(r.get(Counter::ServeCellsReceived), 4);
+        assert_eq!(r.get(Counter::ServeWorkersSeen), 1);
+        let h = r.hist(Hist::ServeLeaseLatencyMs);
+        assert_eq!(h.buckets, c.stats.lease_latency_hist);
+        assert_eq!(h.count, 1);
+        assert_eq!(h.total, 7, "exact total reconstructed from worker sums");
+        // Engine-side ids stay zero: the two layers share one schema.
+        assert_eq!(r.get(Counter::TicksOff), 0);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.req("counters").req("serve.cells_received").f64(),
+            4.0
+        );
     }
 }

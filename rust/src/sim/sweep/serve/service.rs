@@ -33,6 +33,8 @@ use crate::clock::wall::{SystemClock, WallClock};
 use crate::sim::sweep::report::SummaryStats;
 use crate::sim::sweep::shard::fingerprint;
 use crate::sim::sweep::ScenarioMatrix;
+use crate::telemetry::registry::{Counter, SCHEMA_VERSION};
+use crate::telemetry::timeline::Timeline;
 use crate::util::json::Value;
 
 use super::dispatch::{DispatcherCore, Out, WorkerId};
@@ -90,6 +92,16 @@ pub struct ServeConfig {
     /// Emit a stderr heartbeat line at this period (wall-clock ms);
     /// 0 disables. Suppressed by `quiet` like the progress lines.
     pub heartbeat_ms: u64,
+    /// `--trace-out F`: write a Chrome `trace_event` timeline of the
+    /// campaign here after the report is streamed — lease lifecycle
+    /// spans per worker, dispatcher/journal instants (see
+    /// [`Timeline`]). Events are stamped with wall-clock milliseconds
+    /// since serve start (the dispatcher clock, so a [`ManualClock`]
+    /// makes the file deterministic). Like `metrics_out`, a write
+    /// failure only warns.
+    ///
+    /// [`ManualClock`]: crate::clock::wall::ManualClock
+    pub trace_out: Option<PathBuf>,
     /// The dispatcher's wall clock: every time the core is told
     /// (lease-timeout expiry, the lease-latency histogram) and every
     /// shell pacing decision (tick rate limit, heartbeat period,
@@ -119,6 +131,7 @@ impl ServeConfig {
             quiet: true,
             metrics_out: None,
             heartbeat_ms: 5_000,
+            trace_out: None,
             clock: Box::new(SystemClock::new()),
         }
     }
@@ -213,6 +226,11 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
     let n = cfg.matrix.len();
     let fp = fingerprint(&cfg.matrix);
     let t_start = cfg.clock.now_ms();
+    // The campaign timeline (`--trace-out`): stamped relative to
+    // `t_start`, recorded inline by the single main loop — no locks,
+    // no extra threads, rendered once at finalize.
+    let mut timeline: Option<Timeline> =
+        cfg.trace_out.as_ref().map(|_| Timeline::new(&format!("serve {}", cfg.matrix_name)));
 
     // --- journal / resume --------------------------------------------------
     let mut journal: Option<Journal> = None;
@@ -221,6 +239,15 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
         if cfg.resume {
             let rec = recover_journal(jpath)?;
             rec.verify_matches(&fp, &cfg.opts, jpath)?;
+            if let Some(tl) = timeline.as_mut() {
+                tl.journal_recovered(
+                    cfg.clock.now_ms().saturating_sub(t_start),
+                    rec.intact_len,
+                    rec.torn_bytes,
+                    rec.runs.len(),
+                    rec.n_received,
+                );
+            }
             if rec.finalized {
                 return Err(format!(
                     "journal {} is already finalized — its report was fully streamed; \
@@ -286,6 +313,12 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
         if let Some(rec) = &recovered {
             for run in &rec.runs {
                 m.adopt_run(run)?;
+                if let Some(tl) = timeline.as_mut() {
+                    tl.journal_run_adopted(
+                        cfg.clock.now_ms().saturating_sub(t_start),
+                        run.cells,
+                    );
+                }
             }
         }
     }
@@ -296,7 +329,15 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
         if !cfg.quiet {
             eprintln!("serve: journal already covers all {n} cells — finalizing without workers");
         }
-        return finish(&cfg, &core, merger.take().expect("merger"), &mut journal, t_start, out);
+        return finish(
+            &cfg,
+            &core,
+            merger.take().expect("merger"),
+            &mut journal,
+            &mut timeline,
+            t_start,
+            out,
+        );
     }
 
     let expected_workers = cfg.spawn_workers + usize::from(cfg.listen.is_some());
@@ -383,15 +424,26 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
     let mut last_heartbeat = t_start;
     {
         let route = |outs: Vec<Out>,
+                     now_ms: u64,
                      senders: &mut HashMap<WorkerId, mpsc::Sender<Msg>>,
                      closers: &mut HashMap<WorkerId, TcpStream>,
                      merger: &mut Option<SpillMerger>,
                      journal: &mut Option<Journal>,
+                     timeline: &mut Option<Timeline>,
                      done: &mut bool,
                      merge_err: &mut Option<String>| {
+            let t_rel = now_ms.saturating_sub(t_start);
             for o in outs {
                 match o {
                     Out::Send(w, msg) => {
+                        // A lease leaving the dispatcher opens its span
+                        // (stolen ranges included — they are ordinary
+                        // grants of a split tail).
+                        if let (Some(tl), Msg::Lease { id, start, end }) =
+                            (timeline.as_mut(), &msg)
+                        {
+                            tl.lease_granted(*id, w as u64, *start, *end, t_rel);
+                        }
                         // A closed channel means the worker already died;
                         // its Gone event will requeue everything.
                         if let Some(tx) = senders.get(&w) {
@@ -410,7 +462,13 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                                 // that makes them durable. A journal that
                                 // cannot commit voids the resume guarantee
                                 // — abort loudly rather than serve on.
-                                for info in m.take_spilled() {
+                                let spilled = m.take_spilled();
+                                if !spilled.is_empty() {
+                                    if let Some(tl) = timeline.as_mut() {
+                                        tl.spill_run(m.runs_spilled(), t_rel);
+                                    }
+                                }
+                                for info in spilled {
                                     if let Some(j) = journal.as_mut() {
                                         if let Err(e) =
                                             j.append_spill(&info.ranges, &info.record)
@@ -436,14 +494,22 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                             let _ = s.shutdown(Shutdown::Read);
                         }
                     }
-                    Out::Done => *done = true,
+                    Out::Done => {
+                        if let Some(tl) = timeline.as_mut() {
+                            tl.dispatch_done(n, t_rel);
+                        }
+                        *done = true;
+                    }
                 }
             }
         };
 
         for id in pending_connects {
+            if let Some(tl) = timeline.as_mut() {
+                tl.worker_connected(id as u64, cfg.clock.now_ms().saturating_sub(t_start));
+            }
             let outs = core.on_connect(id);
-            route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
+            route(outs, cfg.clock.now_ms(), &mut senders, &mut closers, &mut merger, &mut journal, &mut timeline, &mut done, &mut merge_err);
         }
 
         while !done {
@@ -455,12 +521,31 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                     if !cfg.quiet {
                         eprintln!("serve: worker {id} connected");
                     }
+                    if let Some(tl) = timeline.as_mut() {
+                        tl.worker_connected(id as u64, cfg.clock.now_ms().saturating_sub(t_start));
+                    }
                     let outs = core.on_connect(id);
-                    route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
+                    route(outs, cfg.clock.now_ms(), &mut senders, &mut closers, &mut merger, &mut journal, &mut timeline, &mut done, &mut merge_err);
                 }
                 Ok(Event::Inbound(id, msg)) => {
-                    let outs = core.on_message(id, msg, cfg.clock.now_ms());
-                    route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
+                    let now = cfg.clock.now_ms();
+                    if let Some(tl) = timeline.as_mut() {
+                        // Record against the inbound message itself: a
+                        // batch under an unknown lease (a violation the
+                        // core will kick) is a no-op on the open-lease
+                        // map, so the timeline never invents spans.
+                        match &msg {
+                            Msg::Cells { lease, cells } => {
+                                tl.lease_cells(*lease, cells.len() as u64, now.saturating_sub(t_start));
+                            }
+                            Msg::LeaseDone { lease } => {
+                                tl.lease_closed(*lease, now.saturating_sub(t_start), "done");
+                            }
+                            _ => {}
+                        }
+                    }
+                    let outs = core.on_message(id, msg, now);
+                    route(outs, now, &mut senders, &mut closers, &mut merger, &mut journal, &mut timeline, &mut done, &mut merge_err);
                 }
                 Ok(Event::Gone(id)) => {
                     senders.remove(&id);
@@ -468,8 +553,11 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                     if live.remove(&id) && !cfg.quiet {
                         eprintln!("serve: worker {id} disconnected");
                     }
+                    if let Some(tl) = timeline.as_mut() {
+                        tl.worker_gone(id as u64, cfg.clock.now_ms().saturating_sub(t_start));
+                    }
                     let outs = core.on_disconnect(id, cfg.clock.now_ms());
-                    route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
+                    route(outs, cfg.clock.now_ms(), &mut senders, &mut closers, &mut merger, &mut journal, &mut timeline, &mut done, &mut merge_err);
                     if live.is_empty() && cfg.listen.is_none() && !core.is_done() {
                         return Err(format!(
                             "all workers exited with {} of {n} cells ingested",
@@ -490,7 +578,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
             if !done && now.saturating_sub(last_tick) >= 100 {
                 last_tick = now;
                 let outs = core.on_tick(now);
-                route(outs, &mut senders, &mut closers, &mut merger, &mut journal, &mut done, &mut merge_err);
+                route(outs, now, &mut senders, &mut closers, &mut merger, &mut journal, &mut timeline, &mut done, &mut merge_err);
             }
             if !cfg.quiet {
                 let got = core.cells_received();
@@ -500,26 +588,29 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
                 }
                 if cfg.heartbeat_ms > 0 && now.saturating_sub(last_heartbeat) >= cfg.heartbeat_ms {
                     last_heartbeat = now;
-                    let s = &core.stats;
+                    // The heartbeat reads the same registry snapshot that
+                    // `--metrics-out` and `zygarde profile` serialize —
+                    // one `serve.*` schema, three consumers.
+                    let reg = core.stats.to_registry();
                     eprintln!(
                         "serve: heartbeat {got}/{n} cells | leases {} granted {} active | \
                          steals {} reissues {} | dup {} | workers {} | spill runs {} peak {}",
-                        s.leases_granted,
+                        reg.get(Counter::ServeLeasesGranted),
                         core.leases_active(),
-                        s.steals,
-                        s.reissues,
-                        s.duplicates,
-                        s.workers_seen,
+                        reg.get(Counter::ServeSteals),
+                        reg.get(Counter::ServeReissues),
+                        reg.get(Counter::ServeDuplicates),
+                        reg.get(Counter::ServeWorkersSeen),
                         merger.as_ref().map_or(0, |m| m.runs_spilled()),
                         merger.as_ref().map_or(0, |m| m.peak_buffered()),
                     );
-                    if s.duplicate_ratio() > 0.01 {
+                    let dup = reg.get(Counter::ServeDuplicates);
+                    let recv = reg.get(Counter::ServeCellsReceived);
+                    if recv > 0 && dup as f64 / recv as f64 > 0.01 {
                         eprintln!(
-                            "serve: WARN duplicate cells at {:.1}% of deliveries ({} of {}) — \
+                            "serve: WARN duplicate cells at {:.1}% of deliveries ({dup} of {recv}) — \
                              late post-reissue results are being dropped after dedup",
-                            s.duplicate_ratio() * 100.0,
-                            s.duplicates,
-                            s.cells_received
+                            dup as f64 * 100.0 / recv as f64,
                         );
                     }
                 }
@@ -554,7 +645,7 @@ pub fn serve_to(cfg: ServeConfig, out: &mut dyn Write) -> Result<ServeOutcome, S
     }
 
     let merger = merger.take().expect("merger still present at finalize");
-    finish(&cfg, &core, merger, &mut journal, t_start, out)
+    finish(&cfg, &core, merger, &mut journal, &mut timeline, t_start, out)
 }
 
 /// Stream the merged report, retire the journal, and assemble the
@@ -565,6 +656,7 @@ fn finish(
     core: &DispatcherCore,
     merger: SpillMerger,
     journal: &mut Option<Journal>,
+    timeline: &mut Option<Timeline>,
     t_start: u64,
     out: &mut dyn Write,
 ) -> Result<ServeOutcome, String> {
@@ -581,6 +673,9 @@ fn finish(
         // itself stays — it is the durable record that this campaign
         // completed, and `--resume` on it fails loudly.
         j.append_finalize(n)?;
+        if let Some(tl) = timeline.as_mut() {
+            tl.journal_finalized(cfg.clock.now_ms().saturating_sub(t_start), n);
+        }
         for p in &run_paths {
             let _ = std::fs::remove_file(p);
             if let Some(parent) = p.parent() {
@@ -599,8 +694,13 @@ fn finish(
         );
     }
     if let Some(path) = &cfg.metrics_out {
+        // The flat legacy keys stay for existing consumers; the
+        // versioned `registry` snapshot is the shared schema (`serve.*`
+        // ids, same bytes `zygarde profile` and the heartbeat read).
         let mut doc = core.stats.to_json();
         if let Value::Obj(map) = &mut doc {
+            map.insert("schema_version".to_string(), Value::Num(SCHEMA_VERSION as f64));
+            map.insert("registry".to_string(), core.stats.to_registry().snapshot());
             map.insert("n_scenarios".to_string(), Value::Num(n as f64));
             map.insert("runs_spilled".to_string(), Value::Num(runs_spilled as f64));
             map.insert("peak_buffered".to_string(), Value::Num(peak_buffered as f64));
@@ -614,6 +714,15 @@ fn finish(
             eprintln!("serve: WARN could not write metrics to {}: {e}", path.display());
         } else if !cfg.quiet {
             eprintln!("serve: metrics written to {}", path.display());
+        }
+    }
+    if let Some(path) = &cfg.trace_out {
+        let tl = timeline.take().expect("trace_out implies a timeline");
+        let body = format!("{}\n", tl.finish(cfg.clock.now_ms().saturating_sub(t_start)));
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("serve: WARN could not write trace to {}: {e}", path.display());
+        } else if !cfg.quiet {
+            eprintln!("serve: timeline written to {}", path.display());
         }
     }
     Ok(ServeOutcome {

@@ -36,6 +36,7 @@ use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use crate::sim::sweep::report::CellResult;
 use crate::sim::sweep::shard::{fingerprint, MatrixFingerprint};
 use crate::sim::sweep::{default_threads, run_matrix, ScenarioMatrix};
+use crate::telemetry::timeline::Timeline;
 use crate::util::json::Value;
 use crate::util::rng::Pcg32;
 
@@ -83,6 +84,11 @@ pub struct SimConfig {
     pub threads: usize,
     /// Keep the per-event dispatcher log (the reproducibility artifact).
     pub collect_log: bool,
+    /// Record a [`Timeline`] of the campaign (`simtest --trace-out`).
+    /// Every event is stamped with the virtual clock, so the rendered
+    /// document in [`SimOutcome::timeline`] is a pure function of the
+    /// seed — CI byte-compares repeat runs.
+    pub trace: bool,
 }
 
 impl SimConfig {
@@ -97,6 +103,7 @@ impl SimConfig {
             spill_cells: 32,
             threads: 0,
             collect_log: true,
+            trace: false,
         }
     }
 }
@@ -151,6 +158,10 @@ pub struct SimOutcome {
     /// Connections made over the campaign's lifetime (initial workers +
     /// crash restarts + relief workers).
     pub workers_spawned: usize,
+    /// The rendered Chrome `trace_event` document (`SimConfig::trace`):
+    /// lease spans per worker, journal recovery, and fault-plan markers,
+    /// all on the virtual clock — byte-identical across same-seed runs.
+    pub timeline: Option<String>,
 }
 
 enum Ev {
@@ -261,6 +272,8 @@ struct Sim {
     net: NetCounters,
     last_progress_ms: u64,
     events: u64,
+    /// `SimConfig::trace`: the campaign timeline, stamped with `now`.
+    timeline: Option<Timeline>,
 }
 
 impl Sim {
@@ -367,8 +380,11 @@ impl Sim {
             match o {
                 Out::Send(w, msg) => {
                     if self.conns[w].alive {
-                        if let Msg::Lease { .. } = &msg {
+                        if let Msg::Lease { id, start, end } = &msg {
                             self.conns[w].holding = true;
+                            if let Some(tl) = self.timeline.as_mut() {
+                                tl.lease_granted(*id, w as u64, *start, *end, self.now);
+                            }
                         }
                         self.transmit(w, false, msg);
                     }
@@ -378,14 +394,22 @@ impl Sim {
                         if let Err(e) = m.push(cell) {
                             self.merge_err = Some(e);
                             self.done = true;
-                        } else if self.journal.is_some() {
+                        } else {
+                            let spilled = m.take_spilled();
+                            if !spilled.is_empty() {
+                                if let Some(tl) = self.timeline.as_mut() {
+                                    tl.spill_run(m.runs_spilled(), self.now);
+                                }
+                            }
                             // Same write-through as the serve shell:
                             // ranges first, then the committing manifest.
-                            for info in m.take_spilled() {
-                                let j = self.journal.as_mut().expect("journal present");
-                                if let Err(e) = j.append_spill(&info.ranges, &info.record) {
-                                    self.merge_err = Some(e);
-                                    self.done = true;
+                            if self.journal.is_some() {
+                                for info in spilled {
+                                    let j = self.journal.as_mut().expect("journal present");
+                                    if let Err(e) = j.append_spill(&info.ranges, &info.record) {
+                                        self.merge_err = Some(e);
+                                        self.done = true;
+                                    }
                                 }
                             }
                         }
@@ -395,12 +419,18 @@ impl Sim {
                     self.net.kicks += 1;
                     let line = format!("t={} kick w{w}", self.now);
                     self.note(line);
+                    if let Some(tl) = self.timeline.as_mut() {
+                        tl.fault("kick", self.now, &format!("w{w}"));
+                    }
                     self.kill_conn(w);
                 }
                 Out::Done => {
                     self.done = true;
                     let line = format!("t={} done", self.now);
                     self.note(line);
+                    if let Some(tl) = self.timeline.as_mut() {
+                        tl.dispatch_done(self.n, self.now);
+                    }
                 }
             }
         }
@@ -430,6 +460,9 @@ impl Sim {
             let line =
                 format!("t={} crash w{v} slot{slot} restart=+{restart_after}ms", self.now);
             self.note(line);
+            if let Some(tl) = self.timeline.as_mut() {
+                tl.fault("crash", self.now, &format!("w{v} slot{slot}"));
+            }
             self.kill_conn(v);
             self.pending_connects += 1;
             self.schedule(self.now + restart_after, Ev::Connect { slot });
@@ -447,6 +480,9 @@ impl Sim {
             };
             let line = format!("t={} partition#{idx} slots {lo}..{hi} for {dur}ms", self.now);
             self.note(line);
+            if let Some(tl) = self.timeline.as_mut() {
+                tl.fault("partition", self.now, &format!("#{idx} slots {lo}..{hi} {dur}ms"));
+            }
             self.schedule(self.now + dur, Ev::PartitionEnd { idx });
         }
         // At most one dispatcher crash per apply; if a later threshold is
@@ -478,6 +514,21 @@ impl Sim {
             self.core.cells_received()
         );
         self.note(line);
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.fault(
+                "dcrash",
+                self.now,
+                &format!("#{idx} received={} restart=+{restart_after}ms", self.core.cells_received()),
+            );
+            // Every connection dies with the process; their held leases
+            // resolve as `gone` here — the resumed dispatcher grants
+            // fresh lease ids for whatever the journal did not cover.
+            for (w, c) in self.conns.iter().enumerate() {
+                if c.alive {
+                    tl.worker_gone(w as u64, self.now);
+                }
+            }
+        }
         // Preserved run files outlive this drop; buffered cells die here,
         // exactly like the real process's heap.
         self.merger = None;
@@ -508,6 +559,15 @@ impl Sim {
         if let Err(e) = rec.verify_matches(&self.fp, &Value::Null, &path) {
             return fail(self, e);
         }
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.journal_recovered(
+                self.now,
+                rec.intact_len,
+                rec.torn_bytes,
+                rec.runs.len(),
+                rec.n_received,
+            );
+        }
         let mut merger = match SpillMerger::new(self.spill_dir.clone(), self.spill_cells) {
             Ok(m) => m,
             Err(e) => return fail(self, e),
@@ -516,6 +576,9 @@ impl Sim {
         for run in &rec.runs {
             if let Err(e) = merger.adopt_run(run) {
                 return fail(self, e);
+            }
+            if let Some(tl) = self.timeline.as_mut() {
+                tl.journal_run_adopted(self.now, run.cells);
             }
         }
         let journal = match Journal::resume(&path, &rec) {
@@ -576,6 +639,9 @@ impl Sim {
         self.conns.push(Conn { slot, alive: true, gone: false, holding: false });
         let line = format!("t={} connect w{w} slot{slot}", self.now);
         self.note(line);
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.worker_connected(w as u64, self.now);
+        }
         let outs = self.core.on_connect(w);
         self.apply("connect", outs);
     }
@@ -631,6 +697,20 @@ impl Sim {
         if let Msg::LeaseDone { .. } = msg {
             self.conns[w].holding = false;
         }
+        if let Some(tl) = self.timeline.as_mut() {
+            // Keyed by lease id, so a batch for a reissued-away or
+            // unknown lease is a no-op on the open-span map — the
+            // timeline never invents spans the dispatcher refused.
+            match &msg {
+                Msg::Cells { lease, cells } => {
+                    tl.lease_cells(*lease, cells.len() as u64, self.now);
+                }
+                Msg::LeaseDone { lease } => {
+                    tl.lease_closed(*lease, self.now, "done");
+                }
+                _ => {}
+            }
+        }
         let tag = format!("w{w} {}", fmt_msg(&msg));
         let now = self.now;
         let outs = self.core.on_message(w, msg, now);
@@ -644,6 +724,9 @@ impl Sim {
         self.conns[w].gone = true;
         self.conns[w].alive = false;
         self.conns[w].holding = false;
+        if let Some(tl) = self.timeline.as_mut() {
+            tl.worker_gone(w as u64, self.now);
+        }
         let now = self.now;
         let outs = self.core.on_disconnect(w, now);
         let line = format!("t={} gone w{w} reissues={}", self.now, self.core.stats.reissues);
@@ -679,6 +762,9 @@ impl Sim {
             self.last_progress_ms = now;
             let line = format!("t={} relief slot{slot}", self.now);
             self.note(line);
+            if let Some(tl) = self.timeline.as_mut() {
+                tl.fault("relief", now, &format!("slot{slot}"));
+            }
             self.schedule(now + 1, Ev::Connect { slot });
         }
         self.schedule(now + self.tick_ms, Ev::Tick);
@@ -701,6 +787,9 @@ impl Sim {
                 self.partition_active[idx] = false;
                 let line = format!("t={} partition#{idx} healed", self.now);
                 self.note(line);
+                if let Some(tl) = self.timeline.as_mut() {
+                    tl.fault("heal", self.now, &format!("partition#{idx}"));
+                }
             }
             Ev::Tick => self.on_tick_event(),
         }
@@ -899,6 +988,9 @@ pub fn run_campaign(matrix: &ScenarioMatrix, cfg: &SimConfig) -> Result<SimOutco
         net: NetCounters::default(),
         last_progress_ms: 0,
         events: 0,
+        timeline: cfg
+            .trace
+            .then(|| Timeline::new(&format!("simnet seed {} {}", cfg.seed, matrix.name))),
     };
     // Stagger the initial connects a little so hundreds of workers do
     // not handshake on the same virtual instant.
@@ -920,24 +1012,30 @@ pub fn run_campaign(matrix: &ScenarioMatrix, cfg: &SimConfig) -> Result<SimOutco
         // dir — journal included — is removed right below.
         if let Some(j) = sim.journal.as_mut() {
             let _ = j.append_finalize(n);
+            if let Some(tl) = sim.timeline.as_mut() {
+                tl.journal_finalized(sim.now, n);
+            }
         }
     }
     let _ = std::fs::remove_dir_all(&spill_dir);
     finalize.map_err(|e| format!("simnet seed {}: finalize failed: {e}", cfg.seed))?;
     let matches = report == want.as_bytes();
     let log_hash = log_fingerprint(&sim.log);
+    let virtual_ms = sim.now;
+    let timeline = sim.timeline.take().map(|tl| tl.finish(virtual_ms));
     Ok(SimOutcome {
         matches,
         report,
         reference: want,
         log: std::mem::take(&mut sim.log),
         log_hash,
-        virtual_ms: sim.now,
+        virtual_ms,
         events: sim.events,
         stats: sim.core.stats.clone(),
         net: sim.net,
         plan: sim.plan,
         workers_spawned: sim.conns.len(),
+        timeline,
     })
 }
 

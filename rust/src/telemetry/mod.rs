@@ -30,8 +30,20 @@
 //! Exporters (Chrome `trace_event` JSON and line-delimited JSONL) live
 //! in [`export`]; `zygarde trace` / `zygarde sweep --trace-dir` are the
 //! CLI front-ends.
+//!
+//! Two campaign-scale siblings share the contract. [`registry`] is the
+//! aggregate view: a deterministic counters/histograms [`registry::Registry`]
+//! attached to the engine the same way a sink is (passive, `Option`-guarded,
+//! byte-identical snapshots at any thread/shard count) and merged across
+//! cells/shards by pure integer addition — `zygarde profile` is its
+//! front-end. [`timeline`] is the serving-layer view: one Chrome
+//! `trace_event` document per campaign (lease lifecycle spans, journal
+//! recovery, simnet fault markers) behind `zygarde serve --trace-out` /
+//! `zygarde simtest --trace-out`.
 
 pub mod export;
+pub mod registry;
+pub mod timeline;
 
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;

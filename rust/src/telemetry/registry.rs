@@ -1,0 +1,479 @@
+//! Deterministic counters/histograms registry — the campaign-scale half
+//! of the telemetry layer.
+//!
+//! A [`Registry`] is a fixed pair of arrays indexed by typed metric ids
+//! ([`Counter`], [`Hist`]): no allocation on the record path, no string
+//! lookups, no hashing. Like a [`TraceSink`], an attached registry is a
+//! passive observer — every engine hook reads simulation state and adds
+//! to a `u64`, so same seed ⇒ byte-identical [`snapshot`] at any thread
+//! or shard count. Two design rules make that exact rather than
+//! approximate:
+//!
+//! * **Integer units only.** Energy totals accumulate as *per-event
+//!   rounded* microjoules (`(e_mj * 1000.0).round() as u64`), never as
+//!   `f64` running sums — float addition is not associative, and the
+//!   merge below must be order-independent the way `shard::merge` is.
+//! * **Merge is pure `u64` addition.** [`Registry::merge`] adds
+//!   counters, bucket counts, and totals element-wise, so any grouping
+//!   of per-cell registries into shards, merged in any order, yields the
+//!   same bytes as the single-process accumulation. `zygarde profile`
+//!   composes across shards exactly like `zygarde merge` composes
+//!   reports.
+//!
+//! # Snapshot JSON schema
+//!
+//! ```text
+//! {
+//!   "schema_version": 1,
+//!   "counters": { "<metric-id>": <u64>, ... },
+//!   "hists":    { "<metric-id>": { "buckets": [<u64>; 16],
+//!                                   "count": <u64>,
+//!                                   "total": <u64> }, ... }
+//! }
+//! ```
+//!
+//! Metric ids are dotted lowercase `layer.noun[_unit]` — `engine.*` for
+//! the simulation core, `serve.*` for the dispatcher (see
+//! [`DispatchStats::to_registry`]). Counters whose unit is not "events"
+//! carry a suffix: `_uj` (microjoules), `_ticks`, `_ms`. Histograms use
+//! log2 buckets: value `v` lands in bucket `floor(log2(v)) + 1`, clamped
+//! to 15, with bucket 0 reserved for `v == 0` — the same bucketing as
+//! the dispatcher's lease-latency histogram.
+//!
+//! [`snapshot`]: Registry::snapshot
+//! [`TraceSink`]: super::TraceSink
+//! [`DispatchStats::to_registry`]: crate::sim::sweep::serve::DispatchStats::to_registry
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::util::json::Value;
+
+/// Version stamp carried by every snapshot (and by the compat
+/// `--metrics-out` document): consumers can key parsing off it when the
+/// schema grows.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Log2 histogram width, shared with `DispatchStats::lease_latency_hist`.
+pub const HIST_BUCKETS: usize = 16;
+
+/// Typed counter ids. The `usize` discriminant is the array index;
+/// `name()` is the snapshot key. Keep [`Counter::ALL`] in declaration
+/// order — the snapshot iterates it (BTreeMap re-sorts by name anyway,
+/// but `ALL` is also the exhaustiveness anchor for tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Ticks spent with the MCU below boot voltage (dark window).
+    TicksOff,
+    /// Ticks spent powered on but idle (no runnable fragment).
+    TicksOnIdle,
+    /// Ticks observed by the per-tick probe path (probe pins the engine
+    /// to naive stepping, so these are genuine single ticks).
+    TicksProbed,
+    /// Tick-equivalents spent executing fragments (`frag_ms / dt`,
+    /// rounded per fragment).
+    TicksActive,
+    /// Boundary/JIT NVM commit transactions.
+    Commits,
+    /// The subset of commits fired by the low-voltage JIT trigger.
+    JitCommits,
+    /// Brown-out rollbacks (one per on→off edge that lost progress).
+    Rollbacks,
+    /// Uncommitted fragments lost across all rollbacks.
+    RollbackLostFragments,
+    /// Post-reboot NVM restore transactions.
+    Restores,
+    /// Energy spent in commit transactions, microjoules (rounded per
+    /// event).
+    CommitUj,
+    /// Energy spent in restore transactions, microjoules.
+    RestoreUj,
+    /// Bulk fast-forward calls in the off regime.
+    FfOffJumps,
+    /// Bulk fast-forward calls in the powered-on idle regime.
+    FfOnIdleJumps,
+    /// Dispatcher: leases granted (initial grants + steals + reissues).
+    ServeLeasesGranted,
+    /// Dispatcher: tail-steal grants.
+    ServeSteals,
+    /// Dispatcher: timed-out leases reissued.
+    ServeReissues,
+    /// Dispatcher: duplicate cell deliveries dropped by per-index dedup.
+    ServeDuplicates,
+    /// Dispatcher: distinct workers that completed the handshake.
+    ServeWorkersSeen,
+    /// Dispatcher: cells accepted (first delivery per index).
+    ServeCellsReceived,
+}
+
+impl Counter {
+    pub const ALL: &'static [Counter] = &[
+        Counter::TicksOff,
+        Counter::TicksOnIdle,
+        Counter::TicksProbed,
+        Counter::TicksActive,
+        Counter::Commits,
+        Counter::JitCommits,
+        Counter::Rollbacks,
+        Counter::RollbackLostFragments,
+        Counter::Restores,
+        Counter::CommitUj,
+        Counter::RestoreUj,
+        Counter::FfOffJumps,
+        Counter::FfOnIdleJumps,
+        Counter::ServeLeasesGranted,
+        Counter::ServeSteals,
+        Counter::ServeReissues,
+        Counter::ServeDuplicates,
+        Counter::ServeWorkersSeen,
+        Counter::ServeCellsReceived,
+    ];
+
+    pub const COUNT: usize = Counter::ALL.len();
+
+    /// Snapshot key: dotted lowercase `layer.noun[_unit]`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::TicksOff => "engine.ticks_off",
+            Counter::TicksOnIdle => "engine.ticks_on_idle",
+            Counter::TicksProbed => "engine.ticks_probed",
+            Counter::TicksActive => "engine.ticks_active",
+            Counter::Commits => "engine.commits",
+            Counter::JitCommits => "engine.jit_commits",
+            Counter::Rollbacks => "engine.rollbacks",
+            Counter::RollbackLostFragments => "engine.rollback_lost_fragments",
+            Counter::Restores => "engine.restores",
+            Counter::CommitUj => "engine.commit_uj",
+            Counter::RestoreUj => "engine.restore_uj",
+            Counter::FfOffJumps => "engine.ff_off_jumps",
+            Counter::FfOnIdleJumps => "engine.ff_on_idle_jumps",
+            Counter::ServeLeasesGranted => "serve.leases_granted",
+            Counter::ServeSteals => "serve.steals",
+            Counter::ServeReissues => "serve.reissues",
+            Counter::ServeDuplicates => "serve.duplicates",
+            Counter::ServeWorkersSeen => "serve.workers_seen",
+            Counter::ServeCellsReceived => "serve.cells_received",
+        }
+    }
+}
+
+/// Typed histogram ids. The six `Ff*` histograms record bulk
+/// fast-forward jump sizes (in ticks) *attributed by the bounding
+/// event*: each jump's budget is the minimum over the active next-event
+/// legs, and the jump is observed under the leg that bound it
+/// (tie-break priority is declaration order here — release first,
+/// horizon last — fixed so attribution is deterministic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// Bound by the next task release.
+    FfRelease,
+    /// Bound by the earliest believed deadline (clock-skew adjusted).
+    FfDeadline,
+    /// Bound by a predicted boot / brown-out voltage crossing.
+    FfBoot,
+    /// Bound by a harvester window edge (duty-cycle transition).
+    FfWindow,
+    /// Bound by the JIT commit trigger voltage crossing.
+    FfJit,
+    /// Bound by the scenario horizon (`duration_ms`).
+    FfHorizon,
+    /// Dispatcher lease grant→completion latency, milliseconds (injected
+    /// whole by [`DispatchStats::to_registry`], same bucketing).
+    ///
+    /// [`DispatchStats::to_registry`]: crate::sim::sweep::serve::DispatchStats::to_registry
+    ServeLeaseLatencyMs,
+}
+
+impl Hist {
+    pub const ALL: &'static [Hist] = &[
+        Hist::FfRelease,
+        Hist::FfDeadline,
+        Hist::FfBoot,
+        Hist::FfWindow,
+        Hist::FfJit,
+        Hist::FfHorizon,
+        Hist::ServeLeaseLatencyMs,
+    ];
+
+    pub const COUNT: usize = Hist::ALL.len();
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Hist::FfRelease => "engine.ff_ticks_release",
+            Hist::FfDeadline => "engine.ff_ticks_deadline",
+            Hist::FfBoot => "engine.ff_ticks_boot",
+            Hist::FfWindow => "engine.ff_ticks_window",
+            Hist::FfJit => "engine.ff_ticks_jit",
+            Hist::FfHorizon => "engine.ff_ticks_horizon",
+            Hist::ServeLeaseLatencyMs => "serve.lease_latency_ms",
+        }
+    }
+}
+
+/// One log2 histogram: bucket counts plus exact count/total so means
+/// survive the bucketing.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistData {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    /// Sum of observed values (saturating — ticks never approach 2^64).
+    pub total: u64,
+}
+
+impl HistData {
+    pub fn observe(&mut self, v: u64) {
+        self.buckets[log2_bucket(v)] += 1;
+        self.count += 1;
+        self.total = self.total.saturating_add(v);
+    }
+
+    pub fn merge(&mut self, other: &HistData) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total = self.total.saturating_add(other.total);
+    }
+}
+
+/// Bucket index for a log2 histogram: 0 holds exactly the zeros, bucket
+/// `b >= 1` holds `[2^(b-1), 2^b)`, and the last bucket absorbs the
+/// tail. Mirrors `DispatchStats::latency_bucket`.
+pub fn log2_bucket(v: u64) -> usize {
+    if v == 0 {
+        return 0;
+    }
+    ((64 - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Round a millijoule quantity to integer microjoules — the per-event
+/// conversion every energy counter goes through, so merges stay pure
+/// integer addition.
+pub fn mj_to_uj(e_mj: f64) -> u64 {
+    let uj = (e_mj * 1000.0).round();
+    if uj <= 0.0 {
+        0
+    } else {
+        uj as u64
+    }
+}
+
+/// The registry itself: two fixed arrays. `Default`/`new` start all-zero.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Registry {
+    counters: [u64; Counter::COUNT],
+    hists: [HistData; Hist::COUNT],
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Counter, n: u64) {
+        self.counters[c as usize] += n;
+    }
+
+    #[inline]
+    pub fn observe(&mut self, h: Hist, v: u64) {
+        self.hists[h as usize].observe(v);
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn hist(&self, h: Hist) -> &HistData {
+        &self.hists[h as usize]
+    }
+
+    /// Mutable histogram access for layers that maintain their own
+    /// bucket arrays and inject them whole (the dispatcher's
+    /// lease-latency histogram) rather than observing per event.
+    pub fn hist_mut(&mut self, h: Hist) -> &mut HistData {
+        &mut self.hists[h as usize]
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_zero(&self) -> bool {
+        self.counters.iter().all(|&c| c == 0) && self.hists.iter().all(|h| h.count == 0)
+    }
+
+    /// Fold `other` into `self`. Pure element-wise `u64` addition:
+    /// commutative and associative, so any merge tree over any grouping
+    /// of registries produces identical bytes.
+    pub fn merge(&mut self, other: &Registry) {
+        for (a, b) in self.counters.iter_mut().zip(other.counters.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.hists.iter_mut().zip(other.hists.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// The snapshot document (see the module docs for the schema).
+    /// Counters serialize as JSON numbers — every value here is far
+    /// below 2^53, and the in-crate writer prints integral floats as
+    /// integers, so the bytes are stable.
+    pub fn snapshot(&self) -> Value {
+        let mut counters = BTreeMap::new();
+        for &c in Counter::ALL {
+            counters.insert(c.name().to_string(), Value::Num(self.get(c) as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for &h in Hist::ALL {
+            let d = self.hist(h);
+            let mut obj = BTreeMap::new();
+            obj.insert(
+                "buckets".to_string(),
+                Value::Arr(d.buckets.iter().map(|&b| Value::Num(b as f64)).collect()),
+            );
+            obj.insert("count".to_string(), Value::Num(d.count as f64));
+            obj.insert("total".to_string(), Value::Num(d.total as f64));
+            hists.insert(h.name().to_string(), Value::Obj(obj));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("schema_version".to_string(), Value::Num(SCHEMA_VERSION as f64));
+        m.insert("counters".to_string(), Value::Obj(counters));
+        m.insert("hists".to_string(), Value::Obj(hists));
+        Value::Obj(m)
+    }
+
+    /// Snapshot rendered to its canonical byte form — the unit of every
+    /// determinism comparison.
+    pub fn snapshot_string(&self) -> String {
+        self.snapshot().to_json()
+    }
+}
+
+/// Shared handle for attaching a [`Registry`] to an engine whose `run`
+/// consumes it — the same retrieval idiom as [`TraceBuffer`]: clone the
+/// handle, hand one clone to the engine, `take()` the accumulated
+/// registry afterwards. Engines are single-threaded per cell, so a
+/// plain `Rc<RefCell<..>>` suffices (the extracted [`Registry`] itself
+/// is `Send` and crosses sweep-worker joins by value).
+///
+/// [`TraceBuffer`]: super::TraceBuffer
+#[derive(Clone, Debug, Default)]
+pub struct RegistryHandle {
+    inner: Rc<RefCell<Registry>>,
+}
+
+impl RegistryHandle {
+    pub fn new() -> RegistryHandle {
+        RegistryHandle::default()
+    }
+
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        self.inner.borrow_mut().add(c, n);
+    }
+
+    #[inline]
+    pub fn observe(&self, h: Hist, v: u64) {
+        self.inner.borrow_mut().observe(h, v);
+    }
+
+    /// Extract the accumulated registry, leaving the handle zeroed.
+    pub fn take(&self) -> Registry {
+        self.inner.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_buckets_have_the_documented_edges() {
+        assert_eq!(log2_bucket(0), 0);
+        assert_eq!(log2_bucket(1), 1);
+        assert_eq!(log2_bucket(2), 2);
+        assert_eq!(log2_bucket(3), 2);
+        assert_eq!(log2_bucket(4), 3);
+        assert_eq!(log2_bucket(1 << 13), 14);
+        assert_eq!(log2_bucket(1 << 14), 15);
+        assert_eq!(log2_bucket(u64::MAX), 15);
+    }
+
+    #[test]
+    fn mj_rounds_to_integer_microjoules() {
+        assert_eq!(mj_to_uj(0.0), 0);
+        assert_eq!(mj_to_uj(0.0004), 0);
+        assert_eq!(mj_to_uj(0.0006), 1);
+        assert_eq!(mj_to_uj(1.25), 1250);
+        assert_eq!(mj_to_uj(-1.0), 0);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let mk = |seed: u64| {
+            let mut r = Registry::new();
+            for i in 0..20u64 {
+                let v = seed.wrapping_mul(0x9E37_79B9).wrapping_add(i * 7) % 1000;
+                r.add(Counter::TicksOff, v);
+                r.observe(Hist::FfRelease, v);
+                r.add(Counter::CommitUj, mj_to_uj(v as f64 * 0.123));
+            }
+            r
+        };
+        let parts: Vec<Registry> = (0..5).map(mk).collect();
+        let mut fwd = Registry::new();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = Registry::new();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        // Pairwise tree: ((0+3)+(4+1))+2
+        let mut a = parts[0].clone();
+        a.merge(&parts[3]);
+        let mut b = parts[4].clone();
+        b.merge(&parts[1]);
+        a.merge(&b);
+        a.merge(&parts[2]);
+        assert_eq!(fwd.snapshot_string(), rev.snapshot_string());
+        assert_eq!(fwd.snapshot_string(), a.snapshot_string());
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn snapshot_schema_is_stable_and_versioned() {
+        let mut r = Registry::new();
+        r.add(Counter::Commits, 3);
+        r.observe(Hist::FfHorizon, 1024);
+        let v = r.snapshot();
+        assert_eq!(v.get("schema_version").unwrap().as_f64(), Some(1.0));
+        let counters = v.get("counters").unwrap();
+        assert_eq!(counters.get("engine.commits").unwrap().as_f64(), Some(3.0));
+        assert_eq!(counters.get("engine.ticks_off").unwrap().as_f64(), Some(0.0));
+        let h = v.get("hists").unwrap().get("engine.ff_ticks_horizon").unwrap();
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(1.0));
+        assert_eq!(h.get("total").unwrap().as_f64(), Some(1024.0));
+        let buckets = h.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), HIST_BUCKETS);
+        assert_eq!(buckets[11].as_f64(), Some(1.0));
+        // Every declared id appears exactly once; names are dotted
+        // lowercase (the naming convention the README documents).
+        for &c in Counter::ALL {
+            assert!(counters.get(c.name()).is_some(), "missing {}", c.name());
+            assert!(c.name().contains('.') && c.name() == c.name().to_lowercase());
+        }
+        for &h in Hist::ALL {
+            assert!(v.get("hists").unwrap().get(h.name()).is_some());
+        }
+        // Byte-stability: same registry, same string.
+        assert_eq!(r.snapshot_string(), r.snapshot_string());
+    }
+
+    #[test]
+    fn zero_registry_knows_it_is_zero() {
+        let mut r = Registry::new();
+        assert!(r.is_zero());
+        r.observe(Hist::FfJit, 0);
+        assert!(!r.is_zero(), "a zero-valued observation still counts");
+    }
+}

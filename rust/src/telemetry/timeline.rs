@@ -1,0 +1,404 @@
+//! Unified cross-layer serve timeline: one Chrome `trace_event` document
+//! for a whole campaign — lease lifecycle spans on per-worker tracks,
+//! dispatcher progress, journal recovery, and simnet fault-plan markers.
+//!
+//! Where [`export`] renders one *cell's* engine events, this module
+//! records the *serving* layer around the cells: which worker held which
+//! lease when, where cells streamed in, when spill runs hit disk, what
+//! the journal trusted after a crash, and when the (simulated) network
+//! injected faults. `zygarde serve --trace-out F` stamps events with
+//! wall-clock milliseconds since serve start; `zygarde simtest
+//! --trace-out F` stamps them with the virtual clock, making the whole
+//! file a pure function of the seed.
+//!
+//! # Track layout
+//!
+//! Everything lives in one process (`pid` [`PID`]):
+//!
+//! | tid                    | track        | events                          |
+//! |------------------------|--------------|---------------------------------|
+//! | [`TID_DISPATCH`]       | `dispatcher` | spill/progress/done instants    |
+//! | [`TID_JOURNAL`]        | `journal`    | recovery + finalize instants    |
+//! | [`TID_FAULTS`]         | `faults`     | crash/partition/dcrash/heal/... |
+//! | [`TID_WORKER_BASE`]+w  | `worker w`   | lease spans, cells, connect/gone|
+//!
+//! Lease lifecycle spans are **retroactive `X` events**: opened in
+//! memory at grant time, emitted with their full duration when the lease
+//! resolves (`LeaseDone`, the holder's death, or campaign finalize), so
+//! they are exempt from per-track stream order exactly like the engine
+//! exporter's fast-forward spans. Every lease span carries `args` with
+//! the lease id, its index range, the cells streamed under it, and an
+//! `outcome` in `{done, gone, unresolved}` — `tools/trace_check.py
+//! --timeline` validates all of this structurally.
+//!
+//! [`export`]: super::export
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Value;
+
+/// The single pid every track lives under.
+pub const PID: u64 = 0;
+/// Dispatcher progress track.
+pub const TID_DISPATCH: u64 = 0;
+/// Journal recovery/finalize track.
+pub const TID_JOURNAL: u64 = 1;
+/// Fault-plan marker track (simnet campaigns; empty under real serve).
+pub const TID_FAULTS: u64 = 2;
+/// Per-worker tracks start here: worker `w` is tid `TID_WORKER_BASE + w`.
+pub const TID_WORKER_BASE: u64 = 100;
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn s(v: &str) -> Value {
+    Value::Str(v.to_string())
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Value::Obj(m)
+}
+
+/// An in-flight lease: everything the eventual `X` span needs.
+struct OpenLease {
+    worker: u64,
+    start: usize,
+    end: usize,
+    t_ms: u64,
+    cells: u64,
+}
+
+/// Records campaign events and renders the Chrome document. All
+/// timestamps are caller-provided milliseconds on one monotone clock
+/// (wall-since-start or virtual), so the output bytes are a pure
+/// function of the recorded sequence.
+pub struct Timeline {
+    label: String,
+    events: Vec<Value>,
+    open: BTreeMap<u64, OpenLease>,
+    workers: std::collections::BTreeSet<u64>,
+    used_journal: bool,
+    used_faults: bool,
+}
+
+impl Timeline {
+    pub fn new(label: &str) -> Timeline {
+        Timeline {
+            label: label.to_string(),
+            events: Vec::new(),
+            open: BTreeMap::new(),
+            workers: std::collections::BTreeSet::new(),
+            used_journal: false,
+            used_faults: false,
+        }
+    }
+
+    fn instant(&mut self, tid: u64, name: &str, t_ms: u64, args: Value) {
+        let mut pairs = vec![
+            ("ph", s("i")),
+            ("name", s(name)),
+            ("pid", num(PID as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(t_ms as f64 * 1000.0)),
+            ("s", s("t")),
+        ];
+        if !matches!(args, Value::Null) {
+            pairs.push(("args", args));
+        }
+        self.events.push(obj(pairs));
+    }
+
+    fn worker_tid(&mut self, worker: u64) -> u64 {
+        self.workers.insert(worker);
+        TID_WORKER_BASE + worker
+    }
+
+    // --- worker / lease lifecycle -------------------------------------
+
+    pub fn worker_connected(&mut self, worker: u64, t_ms: u64) {
+        let tid = self.worker_tid(worker);
+        self.instant(tid, "connect", t_ms, Value::Null);
+    }
+
+    pub fn worker_gone(&mut self, worker: u64, t_ms: u64) {
+        let tid = self.worker_tid(worker);
+        self.instant(tid, "gone", t_ms, Value::Null);
+        // Every lease the dead worker still held resolves here: the
+        // dispatcher will reissue the range under a fresh lease id.
+        let held: Vec<u64> = self
+            .open
+            .iter()
+            .filter(|(_, l)| l.worker == worker)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in held {
+            self.lease_closed(id, t_ms, "gone");
+        }
+    }
+
+    /// A lease left the dispatcher for `worker` (granted or stolen work;
+    /// the span opens here and closes at `lease_closed`).
+    pub fn lease_granted(&mut self, lease: u64, worker: u64, start: usize, end: usize, t_ms: u64) {
+        self.worker_tid(worker);
+        self.open.insert(lease, OpenLease { worker, start, end, t_ms, cells: 0 });
+    }
+
+    /// A `Cells` batch arrived under `lease`.
+    pub fn lease_cells(&mut self, lease: u64, n: u64, t_ms: u64) {
+        let Some(l) = self.open.get_mut(&lease) else { return };
+        l.cells += n;
+        let (worker, lease_id) = (l.worker, lease);
+        let tid = self.worker_tid(worker);
+        self.instant(
+            tid,
+            "cells",
+            t_ms,
+            obj(vec![("lease", num(lease_id as f64)), ("n", num(n as f64))]),
+        );
+    }
+
+    /// The lease resolved; emit its retroactive span. `outcome` is one
+    /// of `done` (LeaseDone received), `gone` (holder died), or
+    /// `unresolved` (campaign finalized around it). Double closes (e.g.
+    /// a duplicated LeaseDone delivery) are ignored.
+    pub fn lease_closed(&mut self, lease: u64, t_ms: u64, outcome: &str) {
+        let Some(l) = self.open.remove(&lease) else { return };
+        let tid = TID_WORKER_BASE + l.worker;
+        let dur_ms = t_ms.saturating_sub(l.t_ms);
+        self.events.push(obj(vec![
+            ("ph", s("X")),
+            ("name", s(&format!("lease {lease}"))),
+            ("pid", num(PID as f64)),
+            ("tid", num(tid as f64)),
+            ("ts", num(l.t_ms as f64 * 1000.0)),
+            ("dur", num(dur_ms as f64 * 1000.0)),
+            (
+                "args",
+                obj(vec![
+                    ("lease", num(lease as f64)),
+                    ("start", num(l.start as f64)),
+                    ("end", num(l.end as f64)),
+                    ("cells", num(l.cells as f64)),
+                    ("outcome", s(outcome)),
+                ]),
+            ),
+        ]));
+    }
+
+    // --- dispatcher ----------------------------------------------------
+
+    /// A spill run hit disk (`runs` is the new total).
+    pub fn spill_run(&mut self, runs: usize, t_ms: u64) {
+        self.instant(
+            TID_DISPATCH,
+            "spill-run",
+            t_ms,
+            obj(vec![("runs", num(runs as f64))]),
+        );
+    }
+
+    /// Every cell is ingested; the merge begins.
+    pub fn dispatch_done(&mut self, cells: usize, t_ms: u64) {
+        self.instant(
+            TID_DISPATCH,
+            "done",
+            t_ms,
+            obj(vec![("cells", num(cells as f64))]),
+        );
+    }
+
+    // --- journal -------------------------------------------------------
+
+    /// `journal::recover` finished: what the intact prefix yielded.
+    pub fn journal_recovered(
+        &mut self,
+        t_ms: u64,
+        intact_len: u64,
+        torn_bytes: u64,
+        runs: usize,
+        n_received: usize,
+    ) {
+        self.used_journal = true;
+        self.instant(
+            TID_JOURNAL,
+            "recover",
+            t_ms,
+            obj(vec![
+                ("intact_len", num(intact_len as f64)),
+                ("torn_bytes", num(torn_bytes as f64)),
+                ("runs", num(runs as f64)),
+                ("n_received", num(n_received as f64)),
+            ]),
+        );
+    }
+
+    /// One persisted spill run re-admitted (content hash re-verified).
+    pub fn journal_run_adopted(&mut self, t_ms: u64, cells: usize) {
+        self.used_journal = true;
+        self.instant(
+            TID_JOURNAL,
+            "run-adopted",
+            t_ms,
+            obj(vec![("cells", num(cells as f64))]),
+        );
+    }
+
+    /// The finalize marker landed; the journal is spent.
+    pub fn journal_finalized(&mut self, t_ms: u64, n: usize) {
+        self.used_journal = true;
+        self.instant(
+            TID_JOURNAL,
+            "finalize",
+            t_ms,
+            obj(vec![("n_scenarios", num(n as f64))]),
+        );
+    }
+
+    // --- faults (simnet) ----------------------------------------------
+
+    /// A fault-plan event fired. `kind` is one of the marker names
+    /// `tools/trace_check.py --timeline` accepts: `crash`, `partition`,
+    /// `dcrash`, `heal`, `kick`, `relief`.
+    pub fn fault(&mut self, kind: &str, t_ms: u64, detail: &str) {
+        self.used_faults = true;
+        let args = if detail.is_empty() {
+            Value::Null
+        } else {
+            obj(vec![("detail", s(detail))])
+        };
+        self.instant(TID_FAULTS, kind, t_ms, args);
+    }
+
+    // --- render --------------------------------------------------------
+
+    /// Close every still-open lease at `t_ms` and render the document.
+    pub fn finish(mut self, t_ms: u64) -> String {
+        let open: Vec<u64> = self.open.keys().copied().collect();
+        for id in open {
+            self.lease_closed(id, t_ms, "unresolved");
+        }
+        let mut events: Vec<Value> = Vec::with_capacity(self.events.len() + 8);
+        let meta = |tid: u64, name: &str| {
+            obj(vec![
+                ("ph", s("M")),
+                ("name", s("thread_name")),
+                ("pid", num(PID as f64)),
+                ("tid", num(tid as f64)),
+                ("args", obj(vec![("name", s(name))])),
+            ])
+        };
+        events.push(obj(vec![
+            ("ph", s("M")),
+            ("name", s("process_name")),
+            ("pid", num(PID as f64)),
+            ("tid", num(TID_DISPATCH as f64)),
+            ("args", obj(vec![("name", s(&self.label))])),
+        ]));
+        events.push(meta(TID_DISPATCH, "dispatcher"));
+        if self.used_journal {
+            events.push(meta(TID_JOURNAL, "journal"));
+        }
+        if self.used_faults {
+            events.push(meta(TID_FAULTS, "faults"));
+        }
+        for &w in &self.workers {
+            events.push(meta(TID_WORKER_BASE + w, &format!("worker {w}")));
+        }
+        events.append(&mut self.events);
+        let doc = obj(vec![
+            ("displayTimeUnit", s("ms")),
+            ("traceEvents", Value::Arr(events)),
+        ]);
+        doc.to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_lifecycle_renders_a_span_with_args() {
+        let mut tl = Timeline::new("test");
+        tl.worker_connected(3, 1);
+        tl.lease_granted(7, 3, 0, 4, 2);
+        tl.lease_cells(7, 2, 5);
+        tl.lease_cells(7, 2, 6);
+        tl.lease_closed(7, 9, "done");
+        // A duplicated LeaseDone must be a no-op.
+        tl.lease_closed(7, 11, "done");
+        let body = tl.finish(20);
+        let doc = Value::parse(&body).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .expect("one lease span");
+        assert_eq!(span.get("name").and_then(Value::as_str), Some("lease 7"));
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(2000.0));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(7000.0));
+        let args = span.get("args").unwrap();
+        assert_eq!(args.get("cells").unwrap().as_f64(), Some(4.0));
+        assert_eq!(args.get("outcome").and_then(Value::as_str), Some("done"));
+        assert_eq!(
+            events.iter().filter(|e| e.get("ph").and_then(Value::as_str) == Some("X")).count(),
+            1,
+            "the duplicate close must not emit a second span"
+        );
+    }
+
+    #[test]
+    fn dead_workers_resolve_their_leases_and_finalize_closes_the_rest() {
+        let mut tl = Timeline::new("test");
+        tl.lease_granted(1, 0, 0, 8, 10);
+        tl.lease_granted(2, 1, 8, 16, 10);
+        tl.worker_gone(0, 30);
+        let body = tl.finish(50);
+        let doc = Value::parse(&body).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let outcomes: Vec<String> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .map(|e| e.get("args").unwrap().get("outcome").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(outcomes, vec!["gone".to_string(), "unresolved".to_string()]);
+    }
+
+    #[test]
+    fn tracks_are_named_only_when_used() {
+        let mut tl = Timeline::new("quiet");
+        tl.dispatch_done(4, 9);
+        let body = tl.finish(9);
+        assert!(body.contains("dispatcher"));
+        assert!(!body.contains("\"journal\""));
+        assert!(!body.contains("\"faults\""));
+
+        let mut tl = Timeline::new("loud");
+        tl.journal_recovered(5, 100, 3, 2, 16);
+        tl.fault("dcrash", 6, "dcrash#0");
+        let body = tl.finish(9);
+        assert!(body.contains("\"journal\""));
+        assert!(body.contains("\"faults\""));
+        assert!(body.contains("intact_len"));
+    }
+
+    #[test]
+    fn rendering_is_deterministic_in_the_recorded_sequence() {
+        let build = || {
+            let mut tl = Timeline::new("det");
+            tl.worker_connected(0, 1);
+            tl.lease_granted(1, 0, 0, 2, 2);
+            tl.lease_cells(1, 2, 3);
+            tl.lease_closed(1, 4, "done");
+            tl.spill_run(1, 5);
+            tl.dispatch_done(2, 6);
+            tl.finish(6)
+        };
+        assert_eq!(build(), build());
+    }
+}

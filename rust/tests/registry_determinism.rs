@@ -1,0 +1,151 @@
+//! Metrics-registry determinism suite: the campaign profile
+//! (`zygarde profile`, `sim::sweep::profile`) must be a pure function of
+//! the matrix — byte-identical at any thread count, and reassembled
+//! byte-identically from any shard split merged in any order. That holds
+//! because per-cell registries are themselves pure functions of their
+//! scenario and [`Registry::merge`] is order-independent integer
+//! addition; this suite pins both legs plus the passivity contract (a
+//! profiled sweep's report bytes equal an unprofiled one's).
+
+use zygarde::coordinator::sched::SchedulerKind;
+use zygarde::sim::sweep::{
+    profile_matrix, run_matrix, run_scenario_profiled, run_scenarios_profiled, HarvesterSpec,
+    ProfileReport, ScenarioMatrix, ShardSpec, SweepReport, AXES,
+};
+use zygarde::telemetry::registry::Registry;
+
+/// 16 cells across two harvesters, two schedulers, two capacitor sizes,
+/// and two reps — enough that 8 threads and 7-way shards all get real
+/// work, small enough to stay quick in debug builds.
+fn matrix() -> ScenarioMatrix {
+    ScenarioMatrix::new("registry-det", 0xDE7)
+        .harvesters(vec![
+            HarvesterSpec::Persistent { power_mw: 600.0 },
+            HarvesterSpec::Piezo { eta: 0.3 },
+        ])
+        .capacitors_mf(vec![10.0, 50.0])
+        .schedulers(vec![SchedulerKind::Zygarde, SchedulerKind::Edf])
+        .reps(2)
+        .duration_ms(5_000.0)
+}
+
+#[test]
+fn profile_json_is_byte_identical_at_any_thread_count() {
+    let m = matrix();
+    let reference = profile_matrix(&m, 1, "harvester").unwrap().json_string();
+    for threads in [2usize, 4, 8] {
+        let got = profile_matrix(&m, threads, "harvester").unwrap().json_string();
+        assert_eq!(got, reference, "{threads} threads changed the profile bytes");
+    }
+}
+
+#[test]
+fn per_cell_registries_are_pure_functions_of_the_scenario() {
+    let m = matrix();
+    let scenarios = m.expand();
+    for sc in scenarios.iter().step_by(5) {
+        let (c1, r1) = run_scenario_profiled(sc);
+        let (c2, r2) = run_scenario_profiled(sc);
+        assert_eq!(c1.label, c2.label);
+        assert_eq!(
+            r1.snapshot_string(),
+            r2.snapshot_string(),
+            "registry for {} is not reproducible",
+            c1.label
+        );
+        assert!(!r1.is_zero(), "{} recorded nothing", c1.label);
+    }
+}
+
+/// Run each shard of a {1,3,7}-way split as its own profiled execution
+/// (what `zygarde profile` on that shard would do), then reassemble the
+/// shard outputs in forward, reverse, and interleaved order — every
+/// grouping must reproduce the whole-matrix profile byte for byte.
+#[test]
+fn shard_splits_reassemble_byte_identically_in_any_merge_order() {
+    let m = matrix();
+    let reference = profile_matrix(&m, 2, "sched").unwrap().json_string();
+    let scenarios = m.expand();
+    for shard_count in [1usize, 3, 7] {
+        let shards: Vec<Vec<(String, Registry)>> = (0..shard_count)
+            .map(|shard_index| {
+                let spec = ShardSpec { shard_index, shard_count };
+                let owned: Vec<_> =
+                    scenarios.iter().filter(|sc| spec.owns(sc.index)).cloned().collect();
+                run_scenarios_profiled(&owned, 1)
+                    .into_iter()
+                    .map(|(c, r)| (c.label, r))
+                    .collect()
+            })
+            .collect();
+        let assemble = |order: Vec<usize>| {
+            ProfileReport::from_cells(
+                &m.name,
+                m.seed,
+                "sched",
+                order.into_iter().flat_map(|i| shards[i].iter().cloned()),
+            )
+            .unwrap()
+            .json_string()
+        };
+        let fwd = assemble((0..shard_count).collect());
+        let rev = assemble((0..shard_count).rev().collect());
+        let interleaved = {
+            // Round-robin one cell at a time across shards — the order a
+            // streaming merge would see them in.
+            let mut cursors = vec![0usize; shard_count];
+            let mut cells = Vec::new();
+            loop {
+                let mut any = false;
+                for (s, cur) in cursors.iter_mut().enumerate() {
+                    if let Some(cell) = shards[s].get(*cur) {
+                        cells.push(cell.clone());
+                        *cur += 1;
+                        any = true;
+                    }
+                }
+                if !any {
+                    break;
+                }
+            }
+            ProfileReport::from_cells(&m.name, m.seed, "sched", cells).unwrap().json_string()
+        };
+        assert_eq!(fwd, reference, "{shard_count}-way split diverged");
+        assert_eq!(rev, reference, "{shard_count}-way reverse merge diverged");
+        assert_eq!(interleaved, reference, "{shard_count}-way interleave diverged");
+    }
+}
+
+/// Passivity: attaching a registry to every engine must not change one
+/// byte of the sweep report.
+#[test]
+fn profiled_sweep_report_is_byte_identical_to_plain() {
+    let m = matrix();
+    let plain = run_matrix(&m, 2).json_string();
+    let profiled = run_scenarios_profiled(&m.expand(), 2);
+    let report = SweepReport::new(
+        &m.name,
+        m.seed,
+        profiled.into_iter().map(|(c, _)| c).collect(),
+    );
+    assert_eq!(report.json_string(), plain, "the registry is not a passive observer");
+}
+
+/// The grouped totals are conserved: whatever axis the cells are grouped
+/// by, the campaign-total registry is the same bytes, and group counts
+/// sum to the cell count.
+#[test]
+fn grouping_axis_never_changes_the_campaign_total() {
+    let m = matrix();
+    let reference = profile_matrix(&m, 2, AXES[0]).unwrap();
+    for axis in &AXES[1..] {
+        let p = profile_matrix(&m, 2, axis).unwrap();
+        assert_eq!(
+            p.total.snapshot_string(),
+            reference.total.snapshot_string(),
+            "axis {axis} changed the total"
+        );
+        assert_eq!(p.n_cells, reference.n_cells);
+        assert_eq!(p.groups.iter().map(|g| g.n_cells).sum::<usize>(), p.n_cells);
+    }
+}

@@ -1,0 +1,329 @@
+//! Serve-timeline suite: the unified campaign trace
+//! (`telemetry::timeline`, `zygarde simtest --trace-out`) over the
+//! committed simnet seed corpus. Every corpus campaign is replayed with
+//! the timeline recorder attached; the rendered Chrome document must be
+//! structurally well-formed (the same rules `tools/trace_check.py
+//! --timeline` enforces in CI), byte-identical across repeat runs of the
+//! same seed (virtual-clock stamps make it a pure function of the seed),
+//! and recording it must not change one byte of the campaign itself.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use zygarde::exp::sweep_cli::{build_matrix, SweepOpts};
+use zygarde::sim::sweep::serve::simnet::{run_campaign, FaultSpec, SimConfig};
+use zygarde::sim::sweep::ScenarioMatrix;
+use zygarde::util::json::Value;
+
+const TID_DISPATCH: u64 = 0;
+const TID_JOURNAL: u64 = 1;
+const TID_FAULTS: u64 = 2;
+const TID_WORKER_BASE: u64 = 100;
+const FAULT_KINDS: [&str; 6] = ["crash", "partition", "dcrash", "heal", "kick", "relief"];
+const DISPATCH_INSTANTS: [&str; 2] = ["spill-run", "done"];
+const JOURNAL_INSTANTS: [&str; 3] = ["recover", "run-adopted", "finalize"];
+const WORKER_INSTANTS: [&str; 3] = ["connect", "gone", "cells"];
+const LEASE_OUTCOMES: [&str; 3] = ["done", "gone", "unresolved"];
+
+/// Minimal mirror of the corpus line format (see `sweep_simnet.rs`,
+/// which owns the full replay contract): whitespace-separated
+/// `key=value` tokens with `zygarde simtest` defaults.
+struct SeedEntry {
+    seed: u64,
+    workers: usize,
+    reps: u64,
+    duration_ms: f64,
+    faults: String,
+    lease: usize,
+    lease_timeout_ms: u64,
+    spill_cells: usize,
+}
+
+fn parse_seed_entry(text: &str, origin: &Path) -> SeedEntry {
+    let mut e = SeedEntry {
+        seed: 0,
+        workers: 32,
+        reps: 2,
+        duration_ms: 6_000.0,
+        faults: String::new(),
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 32,
+    };
+    for tok in text.split_whitespace() {
+        let (key, val) = tok
+            .split_once('=')
+            .unwrap_or_else(|| panic!("{}: `{tok}` is not key=value", origin.display()));
+        match key {
+            "seed" => e.seed = val.parse().unwrap(),
+            "workers" => e.workers = val.parse().unwrap(),
+            "reps" => e.reps = val.parse().unwrap(),
+            "duration-ms" => e.duration_ms = val.parse().unwrap(),
+            "faults" => e.faults = val.to_string(),
+            "lease" => e.lease = val.parse().unwrap(),
+            "lease-timeout-ms" => e.lease_timeout_ms = val.parse().unwrap(),
+            "spill-cells" => e.spill_cells = val.parse().unwrap(),
+            other => panic!("{}: unknown seed key `{other}`", origin.display()),
+        }
+    }
+    e
+}
+
+fn entry_matrix(e: &SeedEntry) -> ScenarioMatrix {
+    let opts = SweepOpts {
+        seed: e.seed,
+        reps: e.reps,
+        duration_ms: Some(e.duration_ms),
+        ..Default::default()
+    };
+    build_matrix("synthetic", &opts).unwrap()
+}
+
+fn entry_config(e: &SeedEntry, origin: &Path) -> SimConfig {
+    let spec = FaultSpec::parse(&e.faults)
+        .unwrap_or_else(|err| panic!("{}: {err}", origin.display()));
+    let mut cfg = SimConfig::new(e.seed, e.workers);
+    cfg.spec = spec;
+    cfg.lease_size = e.lease;
+    cfg.lease_timeout_ms = e.lease_timeout_ms;
+    cfg.spill_cells = e.spill_cells;
+    cfg.threads = 2;
+    cfg.trace = true;
+    cfg
+}
+
+fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/seeds/serve")
+}
+
+fn num(e: &Value, key: &str) -> f64 {
+    e.get(key)
+        .and_then(Value::as_f64)
+        .unwrap_or_else(|| panic!("event lacks numeric {key}: {}", e.to_json()))
+}
+
+/// Structural well-formedness — the Rust twin of `trace_check.py
+/// --timeline`. Returns the `tid -> thread_name` map for extra asserts.
+fn check_timeline(body: &str, origin: &str) -> BTreeMap<u64, String> {
+    let doc = Value::parse(body).unwrap_or_else(|e| panic!("{origin}: not JSON: {e}"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_arr)
+        .unwrap_or_else(|| panic!("{origin}: no traceEvents list"));
+
+    let mut tracks: BTreeMap<u64, String> = BTreeMap::new();
+    let mut used: Vec<u64> = Vec::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    for e in events {
+        let ph = e.get("ph").and_then(Value::as_str).expect("ph");
+        let name = e.get("name").and_then(Value::as_str).expect("name");
+        let tid = num(e, "tid") as u64;
+        if ph == "M" {
+            if name == "thread_name" {
+                let n = e.get("args").unwrap().get("name").unwrap().as_str().unwrap();
+                tracks.insert(tid, n.to_string());
+            }
+            continue;
+        }
+        used.push(tid);
+        let ts = num(e, "ts");
+        assert!(ts >= 0.0, "{origin}: negative ts on {name}");
+        match ph {
+            "X" => {
+                assert!(tid >= TID_WORKER_BASE, "{origin}: X span {name} off worker tracks");
+                let args = e.get("args").unwrap_or_else(|| panic!("{origin}: {name} has no args"));
+                let (start, end) = (num(args, "start"), num(args, "end"));
+                assert!(end >= start, "{origin}: {name} has end < start");
+                assert_eq!(
+                    name,
+                    format!("lease {}", num(args, "lease") as u64),
+                    "{origin}: span name does not match args.lease"
+                );
+                assert!(num(args, "cells") >= 0.0);
+                assert!(num(e, "dur") >= 0.0, "{origin}: negative dur on {name}");
+                let outcome = args.get("outcome").and_then(Value::as_str).unwrap_or("");
+                assert!(
+                    LEASE_OUTCOMES.contains(&outcome),
+                    "{origin}: {name} outcome {outcome:?} not in {LEASE_OUTCOMES:?}"
+                );
+            }
+            "i" => {
+                // Instants must be in stream order per track (X spans
+                // are retroactive and exempt).
+                if let Some(&prev) = last_ts.get(&tid) {
+                    assert!(ts >= prev, "{origin}: ts went backwards on tid {tid}");
+                }
+                last_ts.insert(tid, ts);
+                let vocab: &[&str] = if tid == TID_DISPATCH {
+                    &DISPATCH_INSTANTS
+                } else if tid == TID_JOURNAL {
+                    &JOURNAL_INSTANTS
+                } else if tid == TID_FAULTS {
+                    &FAULT_KINDS
+                } else if tid >= TID_WORKER_BASE {
+                    &WORKER_INSTANTS
+                } else {
+                    panic!("{origin}: instant {name} on unknown tid {tid}");
+                };
+                assert!(vocab.contains(&name), "{origin}: {name:?} not in tid {tid}'s vocabulary");
+            }
+            other => panic!("{origin}: unexpected phase {other:?}"),
+        }
+    }
+    assert_eq!(
+        tracks.get(&TID_DISPATCH).map(String::as_str),
+        Some("dispatcher"),
+        "{origin}: tid 0 is not named dispatcher"
+    );
+    for tid in used {
+        let want = if tid == TID_JOURNAL {
+            Some("journal".to_string())
+        } else if tid == TID_FAULTS {
+            Some("faults".to_string())
+        } else if tid >= TID_WORKER_BASE {
+            Some(format!("worker {}", tid - TID_WORKER_BASE))
+        } else {
+            None
+        };
+        if let Some(want) = want {
+            assert_eq!(
+                tracks.get(&tid),
+                Some(&want),
+                "{origin}: tid {tid} carries events but is not named {want:?}"
+            );
+        }
+    }
+    tracks
+}
+
+/// Every committed seed replays with the timeline attached: the campaign
+/// still streams byte-identical, the document is well-formed, and a
+/// second run of the same seed renders the identical bytes (virtual
+/// clock — no wall time anywhere).
+#[test]
+fn corpus_timelines_are_well_formed_and_pure_functions_of_the_seed() {
+    let dir = corpus_dir();
+    let mut paths: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("{}: {e}", dir.display()))
+        .map(|ent| ent.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "seed"))
+        .collect();
+    paths.sort();
+    assert!(!paths.is_empty(), "seed corpus at {} is empty", dir.display());
+    for path in paths {
+        let origin = path.display().to_string();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let entry = parse_seed_entry(&text, &path);
+        let matrix = entry_matrix(&entry);
+        let cfg = entry_config(&entry, &path);
+        let outcome = run_campaign(&matrix, &cfg).unwrap_or_else(|e| panic!("{origin}: {e}"));
+        assert!(outcome.matches, "{origin}: traced campaign diverged");
+        let timeline = outcome.timeline.as_ref().unwrap_or_else(|| {
+            panic!("{origin}: cfg.trace was on but no timeline came back")
+        });
+        check_timeline(timeline, &origin);
+        let again = run_campaign(&matrix, &cfg).unwrap();
+        assert_eq!(
+            Some(timeline),
+            again.timeline.as_ref(),
+            "{origin}: same seed rendered different timeline bytes"
+        );
+    }
+}
+
+/// The dcrash flagship (the committed seed_13 campaign): the timeline
+/// must put the dispatcher crashes, the journal recoveries, and the
+/// per-worker lease spans on one time axis, stamped by the virtual
+/// clock.
+#[test]
+fn dcrash_flagship_timeline_shows_recovery_across_all_tracks() {
+    let entry = SeedEntry {
+        seed: 13,
+        workers: 200,
+        reps: 2,
+        duration_ms: 1_200.0,
+        faults: "latency=1..20,drop=0.02,dcrash=2".to_string(),
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 8,
+    };
+    let origin = PathBuf::from("dcrash-flagship");
+    let matrix = entry_matrix(&entry);
+    let cfg = entry_config(&entry, &origin);
+    let outcome = run_campaign(&matrix, &cfg).unwrap();
+    assert!(outcome.matches);
+    let body = outcome.timeline.as_ref().unwrap();
+    let tracks = check_timeline(body, "dcrash-flagship");
+    assert_eq!(tracks.get(&TID_JOURNAL).map(String::as_str), Some("journal"));
+    assert_eq!(tracks.get(&TID_FAULTS).map(String::as_str), Some("faults"));
+    let workers = tracks.keys().filter(|&&t| t >= TID_WORKER_BASE).count();
+    assert!(workers >= 200, "only {workers} worker tracks for 200 workers");
+
+    let doc = Value::parse(body).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let on_tid = |tid: u64, name: &str| {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("tid").and_then(Value::as_f64) == Some(tid as f64)
+                    && e.get("name").and_then(Value::as_str) == Some(name)
+            })
+            .count()
+    };
+    let dcrashes = on_tid(TID_FAULTS, "dcrash");
+    assert!(dcrashes >= 1, "no dcrash marker on the faults track");
+    assert_eq!(dcrashes as u64, outcome.net.dcrashes, "marker count vs transport count");
+    assert_eq!(
+        on_tid(TID_JOURNAL, "recover"),
+        dcrashes,
+        "every dispatcher crash must be followed by a journal recovery"
+    );
+    // Every timestamp (and span end) fits inside the campaign's virtual
+    // duration — wall time never leaks in.
+    let end_us = outcome.virtual_ms as f64 * 1000.0;
+    for e in events {
+        if e.get("ph").and_then(Value::as_str) == Some("M") {
+            continue;
+        }
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        let dur = e.get("dur").and_then(Value::as_f64).unwrap_or(0.0);
+        assert!(ts + dur <= end_us, "event past the virtual clock: {}", e.to_json());
+    }
+    // The crashes killed lease holders, so some spans resolved `gone`.
+    let outcomes: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+        .map(|e| e.get("args").unwrap().get("outcome").unwrap().as_str().unwrap())
+        .collect();
+    assert!(!outcomes.is_empty(), "no lease spans");
+    assert!(outcomes.contains(&"gone"), "no lease resolved as gone under dcrash");
+}
+
+/// Recording the timeline must not perturb the campaign: same report
+/// bytes, same event-log hash, with and without the recorder.
+#[test]
+fn timeline_recording_is_a_passive_observer() {
+    let entry = SeedEntry {
+        seed: 7,
+        workers: 24,
+        reps: 1,
+        duration_ms: 900.0,
+        faults: String::new(),
+        lease: 0,
+        lease_timeout_ms: 300,
+        spill_cells: 16,
+    };
+    let origin = PathBuf::from("passive");
+    let matrix = entry_matrix(&entry);
+    let traced_cfg = entry_config(&entry, &origin);
+    let mut plain_cfg = entry_config(&entry, &origin);
+    plain_cfg.trace = false;
+    let traced = run_campaign(&matrix, &traced_cfg).unwrap();
+    let plain = run_campaign(&matrix, &plain_cfg).unwrap();
+    assert!(traced.matches && plain.matches);
+    assert!(traced.timeline.is_some());
+    assert!(plain.timeline.is_none(), "trace off must not render a timeline");
+    assert_eq!(traced.report, plain.report, "recording changed the report bytes");
+    assert_eq!(traced.log_hash, plain.log_hash, "recording changed the schedule");
+    assert_eq!(traced.virtual_ms, plain.virtual_ms);
+}

@@ -32,19 +32,21 @@ workload with ``scenarios`` and ``duration_ms`` — a row lacking either
 is a hard error, because without them a silent bench-workload change
 could keep a stale floor "passing" against a different matrix.
 
-The ``trace`` rows are gated like the offphase floors — unconditionally,
-provisional or not. Each baseline row pins its workload and carries a
-``max_overhead``: the measured wall-clock ratio of a traced run (null
-sink attached — strictly more work than the disabled path) to an
-untraced run of the same matrix, again a within-run ratio needing no
+The ``trace`` and ``registry`` rows are gated like the offphase floors
+— unconditionally, provisional or not. Each baseline row pins its
+workload and carries a ``max_overhead``: the measured wall-clock ratio
+of an enabled run (``trace``: null sink attached; ``registry``: metrics
+registry attached — both strictly more work than the disabled path) to
+a disabled run of the same matrix, again a within-run ratio needing no
 committed absolutes. A current overhead above the ceiling fails: it
-means the telemetry layer's disabled path is no longer ~free.
+means that observability layer's disabled path is no longer ~free.
 
 ``--self-test`` runs the gate against built-in synthetic documents
 covering every verdict (pass, floor breach, disarmed floor, missing
-workload keys, drift, provisional, throughput drop, trace-overhead
-breach) and exits nonzero if any scenario produces the wrong verdict —
-cheap CI insurance that the gate itself cannot rot into a silent no-op.
+workload keys, drift, provisional, throughput drop, trace- and
+registry-overhead breach) and exits nonzero if any scenario produces
+the wrong verdict — cheap CI insurance that the gate itself cannot rot
+into a silent no-op.
 """
 
 import argparse
@@ -133,72 +135,75 @@ def check_offphase_speedups(cur, base):
     return failures
 
 
-def check_trace_overhead(cur, base):
-    """Enforce each baseline trace row's max_overhead ceiling (armed
-    regardless of the provisional flag: like the offphase floors it is a
-    within-run ratio). The same hard errors apply — a baseline row
-    without max_overhead or the workload keys, workload drift, a missing
-    current row, or a current row without a measured overhead all fail
-    loudly rather than silently disarm the gate. Returns failures."""
-    current = {r["matrix"]: r for r in cur.get("trace", [])}
+def check_overhead_ceilings(cur, base, section):
+    """Enforce each baseline row's max_overhead ceiling in `section`
+    ("trace" or "registry"; armed regardless of the provisional flag:
+    like the offphase floors it is a within-run ratio). The same hard
+    errors apply — a baseline row without max_overhead or the workload
+    keys, workload drift, a missing current row, or a current row
+    without a measured overhead all fail loudly rather than silently
+    disarm the gate. Returns failures."""
+    current = {r["matrix"]: r for r in cur.get(section, [])}
     failures = []
-    for row in base.get("trace", []):
+    for row in base.get(section, []):
         name, ceiling = row["matrix"], row.get("max_overhead")
         if ceiling is None:
-            print(f"trace    {name:<16} baseline row has no max_overhead")
+            print(f"{section:<8} {name:<16} baseline row has no max_overhead")
             failures.append(
-                f"trace {name}: baseline row lacks max_overhead — keep the "
-                f"ceiling when promoting a measured BENCH_sweep.json")
+                f"{section} {name}: baseline row lacks max_overhead — keep "
+                f"the ceiling when promoting a measured BENCH_sweep.json")
             continue
         unpinned = [k for k in TRACE_WORKLOAD_KEYS if k not in row]
         if unpinned:
-            print(f"trace    {name:<16} baseline row missing workload keys "
-                  f"{unpinned}")
+            print(f"{section:<8} {name:<16} baseline row missing workload "
+                  f"keys {unpinned}")
             failures.append(
-                f"trace {name}: baseline row lacks {unpinned} — every "
+                f"{section} {name}: baseline row lacks {unpinned} — every "
                 f"ceiling must pin its workload so drift cannot pass unseen")
             continue
         got = current.get(name)
         if got is None:
-            print(f"trace    {name:<16} overhead ceiling {ceiling:.2f}x "
+            print(f"{section:<8} {name:<16} overhead ceiling {ceiling:.2f}x "
                   f"{'missing':>12}")
-            failures.append(f"trace {name}: row missing from current run")
+            failures.append(f"{section} {name}: row missing from current run")
             continue
         drifted = [k for k in TRACE_WORKLOAD_KEYS
                    if row.get(k) != got.get(k)]
         if drifted:
-            print(f"trace    {name:<16} workload drifted on {drifted} "
+            print(f"{section:<8} {name:<16} workload drifted on {drifted} "
                   f"(baseline {[row.get(k) for k in drifted]} vs current "
                   f"{[got.get(k) for k in drifted]})")
             failures.append(
-                f"trace {name}: bench workload drifted on {drifted} — the "
-                f"ceiling is not comparable; update the baseline row "
+                f"{section} {name}: bench workload drifted on {drifted} — "
+                f"the ceiling is not comparable; update the baseline row "
                 f"alongside the bench change")
             continue
         overhead = got.get("overhead")
         if overhead is None:
-            print(f"trace    {name:<16} current row has no measured overhead")
+            print(f"{section:<8} {name:<16} current row has no measured "
+                  f"overhead")
             failures.append(
-                f"trace {name}: current row lacks `overhead` — the bench "
-                f"must measure traced vs untraced on every gated matrix")
+                f"{section} {name}: current row lacks `overhead` — the bench "
+                f"must measure enabled vs disabled on every gated matrix")
             continue
         flag = "" if overhead <= ceiling else "  << ABOVE CEILING"
-        print(f"trace    {name:<16} overhead ceiling {ceiling:.2f}x "
+        print(f"{section:<8} {name:<16} overhead ceiling {ceiling:.2f}x "
               f"measured {overhead:6.3f}x{flag}")
         if overhead > ceiling:
             failures.append(
-                f"trace {name}: telemetry overhead {overhead:.3f}x exceeded "
+                f"{section} {name}: overhead {overhead:.3f}x exceeded "
                 f"the {ceiling:.2f}x ceiling")
     return failures
 
 
 def run_gate(cur, base, max_drop):
     """Gate `cur` against `base`; returns the process exit code."""
-    # The offphase speedup floors and trace overhead ceilings are
-    # workload- and machine-independent: check them first, and
-    # unconditionally.
+    # The offphase speedup floors and the trace/registry overhead
+    # ceilings are workload- and machine-independent: check them first,
+    # and unconditionally.
     off_failures = check_offphase_speedups(cur, base)
-    off_failures += check_trace_overhead(cur, base)
+    off_failures += check_overhead_ceilings(cur, base, "trace")
+    off_failures += check_overhead_ceilings(cur, base, "registry")
 
     mismatch = [k for k in ("scenarios", "duration_ms", "reps")
                 if cur.get(k) != base.get(k)]
@@ -240,7 +245,7 @@ def run_gate(cur, base, max_drop):
         return 1
     print(f"bench-gate: OK — no row dropped more than {max_drop:.0%} "
           f"below baseline, every offphase speedup floor held, and every "
-          f"trace overhead ceiling held")
+          f"trace/registry overhead ceiling held")
     return 0
 
 
@@ -269,13 +274,14 @@ def self_test():
         return row
 
     def doc(offphase, threads=(), workload=(64, 4000.0, 1), provisional=False,
-            trace=()):
+            trace=(), registry=()):
         d = {"scenarios": workload[0], "duration_ms": workload[1],
              "reps": workload[2],
              "threads": [{"threads": t, "scenarios_per_s": s}
                          for (t, s) in threads],
              "offphase": offphase,
-             "trace": list(trace)}
+             "trace": list(trace),
+             "registry": list(registry)}
         if provisional:
             d["provisional"] = True
         return d
@@ -367,6 +373,33 @@ def self_test():
              workload=(8, 1000.0, 1)),
          doc([], trace=[trace_row("bench", ceiling=1.02)],
              workload=(64, 4000.0, 1)),
+         1),
+        ("registry overhead under the ceiling passes",
+         doc([], registry=[trace_row("bench", overhead=1.008)]),
+         doc([], registry=[trace_row("bench", ceiling=1.02)]),
+         0),
+        ("registry overhead breach fails even against a provisional baseline",
+         doc([], registry=[trace_row("bench", overhead=1.07)]),
+         doc([], registry=[trace_row("bench", ceiling=1.02)],
+             provisional=True),
+         1),
+        ("baseline registry row without max_overhead is a hard error",
+         doc([], registry=[trace_row("bench", overhead=1.0)]),
+         doc([], registry=[trace_row("bench")]),
+         1),
+        ("registry row missing from the current run is a hard error",
+         doc([], registry=[]),
+         doc([], registry=[trace_row("bench", ceiling=1.02)]),
+         1),
+        ("registry workload drift is a hard error",
+         doc([], registry=[trace_row("bench", overhead=1.0, scenarios=96)]),
+         doc([], registry=[trace_row("bench", ceiling=1.02, scenarios=24)]),
+         1),
+        ("trace and registry ceilings gate independently",
+         doc([], trace=[trace_row("bench", overhead=1.005)],
+             registry=[trace_row("bench", overhead=1.09)]),
+         doc([], trace=[trace_row("bench", ceiling=1.02)],
+             registry=[trace_row("bench", ceiling=1.02)]),
          1),
     ]
     bad = 0

@@ -19,6 +19,25 @@ Checks, per file:
   fast-forward exporter emits retroactively, so they are checked for
   containment in the file's time range instead).
 
+With ``--timeline`` the file is additionally validated as a *serve
+timeline* (``zygarde serve --trace-out`` / ``zygarde simtest
+--trace-out``, rendered by ``telemetry::timeline``):
+
+* a ``thread_name`` metadata event must name tid 0 ``dispatcher``;
+* every ``X`` event is a lease span: named ``lease <id>``, on a worker
+  track (tid >= 100 with ``worker <w>`` metadata), with ``args``
+  carrying numeric ``lease``/``start``/``end``/``cells`` (id matching
+  the name, ``end >= start``) and an ``outcome`` in
+  {``done``, ``gone``, ``unresolved``};
+* instants are confined to their track's vocabulary — dispatcher:
+  {``spill-run``, ``done``}; journal (tid 1): {``recover``,
+  ``run-adopted``, ``finalize``} with ``recover`` carrying
+  ``intact_len``/``torn_bytes``/``runs``/``n_received`` args; faults
+  (tid 2): {``crash``, ``partition``, ``dcrash``, ``heal``, ``kick``,
+  ``relief``}; workers: {``connect``, ``gone``, ``cells``};
+* any track that carries events must also carry its ``thread_name``
+  metadata (the exporter only names used tracks).
+
 Exit status is nonzero if any file fails; errors name the file, the
 event index, and the violated rule, so a CI failure pinpoints the
 exporter bug. ``--self-test`` validates built-in synthetic documents —
@@ -32,6 +51,18 @@ import sys
 
 VALID_PH = {"B", "E", "X", "i", "M"}
 VALID_SCOPES = {"g", "p", "t"}
+
+# Serve-timeline track layout (telemetry::timeline constants).
+TID_DISPATCH = 0
+TID_JOURNAL = 1
+TID_FAULTS = 2
+TID_WORKER_BASE = 100
+LEASE_OUTCOMES = {"done", "gone", "unresolved"}
+FAULT_KINDS = {"crash", "partition", "dcrash", "heal", "kick", "relief"}
+DISPATCH_INSTANTS = {"spill-run", "done"}
+JOURNAL_INSTANTS = {"recover", "run-adopted", "finalize"}
+WORKER_INSTANTS = {"connect", "gone", "cells"}
+RECOVER_ARG_KEYS = ("intact_len", "torn_bytes", "runs", "n_received")
 
 
 def check_doc(doc, label="<doc>"):
@@ -102,13 +133,112 @@ def check_doc(doc, label="<doc>"):
     return errors
 
 
-def check_file(path):
+def _is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_timeline(doc, label="<doc>"):
+    """Serve-timeline checks layered on top of `check_doc` (the caller
+    runs both). Returns a list of errors."""
+    errors = []
+
+    def err(i, msg):
+        errors.append(f"{label}: event {i}: {msg}")
+
+    if not isinstance(doc, dict):
+        return []  # check_doc already reported it
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return []
+
+    track_names = {}  # tid -> thread_name
+    used_tids = set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            continue
+        ph, name, tid = ev.get("ph"), ev.get("name"), ev.get("tid")
+        args = ev.get("args")
+        if ph == "M":
+            if name == "thread_name" and isinstance(args, dict):
+                track_names[tid] = args.get("name")
+            continue
+        used_tids.add(tid)
+        if ph == "X":
+            if not isinstance(tid, (int, float)) or tid < TID_WORKER_BASE:
+                err(i, f"X span on non-worker track tid {tid!r} — only "
+                       f"lease spans are X, and leases live on workers")
+                continue
+            if not isinstance(args, dict):
+                err(i, f"lease span {name!r} without args")
+                continue
+            for k in ("lease", "start", "end", "cells"):
+                if not _is_num(args.get(k)):
+                    err(i, f"lease span {name!r} args lack numeric {k!r}")
+            if _is_num(args.get("lease")) and \
+                    name != f"lease {int(args['lease'])}":
+                err(i, f"span name {name!r} does not match args.lease "
+                       f"{args.get('lease')!r}")
+            if _is_num(args.get("start")) and _is_num(args.get("end")) \
+                    and args["end"] < args["start"]:
+                err(i, f"lease span {name!r} has end < start")
+            if args.get("outcome") not in LEASE_OUTCOMES:
+                err(i, f"lease span {name!r} outcome "
+                       f"{args.get('outcome')!r} not in "
+                       f"{sorted(LEASE_OUTCOMES)}")
+        elif ph == "i":
+            if tid == TID_DISPATCH:
+                if name not in DISPATCH_INSTANTS:
+                    err(i, f"dispatcher instant {name!r} not in "
+                           f"{sorted(DISPATCH_INSTANTS)}")
+            elif tid == TID_JOURNAL:
+                if name not in JOURNAL_INSTANTS:
+                    err(i, f"journal instant {name!r} not in "
+                           f"{sorted(JOURNAL_INSTANTS)}")
+                elif name == "recover":
+                    missing = [k for k in RECOVER_ARG_KEYS
+                               if not (isinstance(args, dict)
+                                       and _is_num(args.get(k)))]
+                    if missing:
+                        err(i, f"recover instant lacks numeric args "
+                               f"{missing}")
+            elif tid == TID_FAULTS:
+                if name not in FAULT_KINDS:
+                    err(i, f"fault marker {name!r} not in "
+                           f"{sorted(FAULT_KINDS)}")
+            elif isinstance(tid, (int, float)) and tid >= TID_WORKER_BASE:
+                if name not in WORKER_INSTANTS:
+                    err(i, f"worker instant {name!r} not in "
+                           f"{sorted(WORKER_INSTANTS)}")
+            else:
+                err(i, f"instant {name!r} on unknown track tid {tid!r}")
+
+    if track_names.get(TID_DISPATCH) != "dispatcher":
+        errors.append(f"{label}: no thread_name metadata naming tid "
+                      f"{TID_DISPATCH} 'dispatcher'")
+    for tid in sorted(t for t in used_tids if isinstance(t, (int, float))):
+        want = None
+        if tid == TID_JOURNAL:
+            want = "journal"
+        elif tid == TID_FAULTS:
+            want = "faults"
+        elif tid >= TID_WORKER_BASE:
+            want = f"worker {int(tid - TID_WORKER_BASE)}"
+        if want is not None and track_names.get(tid) != want:
+            errors.append(f"{label}: track tid {tid} carries events but "
+                          f"lacks thread_name metadata {want!r}")
+    return errors
+
+
+def check_file(path, timeline=False):
     try:
         with open(path) as f:
             doc = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         return [f"{path}: unreadable or not JSON: {e}"]
-    return check_doc(doc, label=path)
+    errors = check_doc(doc, label=path)
+    if timeline:
+        errors += check_timeline(doc, label=path)
+    return errors
 
 
 def self_test():
@@ -160,6 +290,92 @@ def self_test():
         ("X out of stream order passes (retroactive spans)",
          doc([ev("i", "a", 100, s="t"), ev("X", "ff", 0, dur=50)]), True),
     ]
+
+    # --- serve-timeline mode -------------------------------------------
+    def meta(tid, name):
+        return {"ph": "M", "name": "thread_name", "pid": 0, "tid": tid,
+                "args": {"name": name}}
+
+    def lease_span(lid=7, tid=103, start=0, end=4, cells=4,
+                   outcome="done", ts=2000, dur=7000, **arg_over):
+        e = {"ph": "X", "name": f"lease {lid}", "pid": 0, "tid": tid,
+             "ts": ts, "dur": dur,
+             "args": {"lease": lid, "start": start, "end": end,
+                      "cells": cells, "outcome": outcome}}
+        e["args"].update(arg_over)
+        return e
+
+    def tev(ph, name, tid, ts=0, args=None):
+        e = {"ph": ph, "name": name, "pid": 0, "tid": tid, "ts": ts}
+        if ph == "i":
+            e["s"] = "t"
+        if args is not None:
+            e["args"] = args
+        return e
+
+    base_meta = [meta(0, "dispatcher")]
+    recover_args = {"intact_len": 96, "torn_bytes": 3, "runs": 2,
+                    "n_received": 16}
+    timeline_cases = [
+        ("minimal timeline (dispatcher named) passes",
+         doc(base_meta + [tev("i", "done", 0, 9,
+                              args={"cells": 24})]), True),
+        ("full timeline with lease span, journal, faults, worker passes",
+         doc(base_meta + [meta(1, "journal"), meta(2, "faults"),
+                          meta(103, "worker 3"),
+                          tev("i", "connect", 103, 1),
+                          tev("i", "cells", 103, 5,
+                              args={"lease": 7, "n": 2}),
+                          lease_span(),
+                          tev("i", "recover", 1, 3, args=recover_args),
+                          tev("i", "run-adopted", 1, 4, args={"cells": 8}),
+                          tev("i", "finalize", 1, 8,
+                              args={"n_scenarios": 16}),
+                          tev("i", "dcrash", 2, 2,
+                              args={"detail": "#0"}),
+                          tev("i", "done", 0, 9, args={"cells": 16})]),
+         True),
+        ("missing dispatcher metadata fails",
+         doc([tev("i", "done", 0, 9, args={"cells": 24})]), False),
+        ("lease span on a non-worker track fails",
+         doc(base_meta + [lease_span(tid=0)]), False),
+        ("lease span without outcome fails",
+         doc(base_meta + [meta(103, "worker 3"),
+                          lease_span(outcome=None)]), False),
+        ("lease span with unknown outcome fails",
+         doc(base_meta + [meta(103, "worker 3"),
+                          lease_span(outcome="maybe")]), False),
+        ("lease span name/args.lease mismatch fails",
+         doc(base_meta + [meta(103, "worker 3"),
+                          lease_span(**{"lease": 8})]), False),
+        ("lease span with end < start fails",
+         doc(base_meta + [meta(103, "worker 3"),
+                          lease_span(start=8, end=4)]), False),
+        ("unknown fault marker fails",
+         doc(base_meta + [meta(2, "faults"),
+                          tev("i", "meteor", 2, 1)]), False),
+        ("every accepted fault marker passes",
+         doc(base_meta + [meta(2, "faults")] +
+             [tev("i", k, 2, j) for j, k in
+              enumerate(sorted(FAULT_KINDS))]), True),
+        ("recover instant without args fails",
+         doc(base_meta + [meta(1, "journal"),
+                          tev("i", "recover", 1, 3)]), False),
+        ("unknown journal instant fails",
+         doc(base_meta + [meta(1, "journal"),
+                          tev("i", "compact", 1, 3)]), False),
+        ("unknown worker instant fails",
+         doc(base_meta + [meta(103, "worker 3"),
+                          tev("i", "naptime", 103, 1)]), False),
+        ("events on an unnamed worker track fail",
+         doc(base_meta + [tev("i", "connect", 103, 1)]), False),
+        ("misnamed worker track fails",
+         doc(base_meta + [meta(103, "worker 9"),
+                          tev("i", "connect", 103, 1)]), False),
+        ("instant on an unknown low tid fails",
+         doc(base_meta + [tev("i", "done", 5, 1)]), False),
+    ]
+
     bad = 0
     for name, d, want_ok in cases:
         errors = check_doc(d, label=name)
@@ -170,17 +386,31 @@ def self_test():
                   f"(wanted {'pass' if want_ok else 'fail'})",
                   file=sys.stderr)
             bad += 1
+    for name, d, want_ok in timeline_cases:
+        errors = check_doc(d, label=name) + check_timeline(d, label=name)
+        ok = not errors
+        if ok != want_ok:
+            detail = "; ".join(errors) if errors else "no errors"
+            print(f"self-test FAILED (timeline): `{name}` -> {detail} "
+                  f"(wanted {'pass' if want_ok else 'fail'})",
+                  file=sys.stderr)
+            bad += 1
+    total = len(cases) + len(timeline_cases)
     if bad:
-        print(f"trace-check --self-test: {bad}/{len(cases)} cases FAILED",
+        print(f"trace-check --self-test: {bad}/{total} cases FAILED",
               file=sys.stderr)
         return 1
-    print(f"trace-check --self-test: all {len(cases)} cases passed")
+    print(f"trace-check --self-test: all {total} cases passed")
     return 0
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("files", nargs="*", help="Chrome trace JSON files")
+    ap.add_argument("--timeline", action="store_true",
+                    help="additionally validate the files as serve "
+                         "timelines (lease spans, track vocabularies, "
+                         "track metadata)")
     ap.add_argument("--self-test", action="store_true",
                     help="validate built-in synthetic documents and verify "
                          "every verdict")
@@ -193,7 +423,7 @@ def main():
 
     bad = 0
     for path in args.files:
-        errors = check_file(path)
+        errors = check_file(path, timeline=args.timeline)
         if errors:
             bad += 1
             for e in errors:
